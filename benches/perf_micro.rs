@@ -1,0 +1,167 @@
+//! Performance microbenchmarks for the §Perf pass: every hot path on the
+//! request loop, with items/s so regressions are obvious.
+//!
+//!     cargo bench --bench perf_micro
+
+use std::sync::Arc;
+
+use coedge_rag::bench_harness::bench;
+use coedge_rag::corpus::{build_dataset, domainqa_spec};
+use coedge_rag::metrics::Evaluator;
+use coedge_rag::policy::mlp;
+use coedge_rag::policy::params::{PolicyParams, EMBED_DIM};
+use coedge_rag::runtime::{PolicyRuntime, UpdateBatch};
+use coedge_rag::text::embed::{l2_normalize, Embedder};
+use coedge_rag::util::rng::Rng;
+use coedge_rag::vecdb::{FlatIndex, IvfIndex, VectorIndex};
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let embedder = Embedder::default();
+    let ds = build_dataset(&domainqa_spec(60, 200), 3);
+
+    // --- embedding ---
+    let texts: Vec<String> = ds.qa_pairs.iter().take(256).map(|q| q.query.clone()).collect();
+    let r = bench("embed 256 queries", 3, 20, || {
+        for t in &texts {
+            std::hint::black_box(embedder.embed(t));
+        }
+    });
+    println!("{}", r.throughput_line(256.0));
+
+    // --- vector search (flat vs ivf), 1200-chunk node corpus ---
+    let vecs: Vec<Vec<f32>> = ds.documents.iter().map(|d| embedder.embed(&d.text())).collect();
+    let mut flat = FlatIndex::new(EMBED_DIM);
+    let mut ivf = IvfIndex::new(EMBED_DIM, 24, 6);
+    for (i, v) in vecs.iter().enumerate() {
+        flat.add(i, v);
+        ivf.add(i, v);
+    }
+    ivf.train(7);
+    let queries: Vec<Vec<f32>> = (0..256)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..EMBED_DIM).map(|_| rng.normal() as f32).collect();
+            l2_normalize(&mut v);
+            v
+        })
+        .collect();
+    let r = bench(&format!("flat top-5 over {} chunks x256", flat.len()), 3, 20, || {
+        for q in &queries {
+            std::hint::black_box(flat.search(q, 5));
+        }
+    });
+    println!("{}", r.throughput_line(256.0));
+    let r = bench(&format!("ivf  top-5 over {} chunks x256", ivf.len()), 3, 20, || {
+        for q in &queries {
+            std::hint::black_box(ivf.search(q, 5));
+        }
+    });
+    println!("{}", r.throughput_line(256.0));
+
+    // --- metrics suite ---
+    let ev = Evaluator::default();
+    let pairs: Vec<(Vec<String>, Vec<String>)> = ds
+        .qa_pairs
+        .iter()
+        .take(128)
+        .map(|qa| (qa.answer_tokens.clone(), ds.qa_pairs[(qa.id + 7) % ds.qa_pairs.len()].answer_tokens.clone()))
+        .collect();
+    let r = bench("full metric suite x128 pairs", 2, 15, || {
+        for (g, rf) in &pairs {
+            std::hint::black_box(ev.score_tokens(g, rf));
+        }
+    });
+    println!("{}", r.throughput_line(128.0));
+    let r = bench("feedback (LCS+BERT) x128 pairs", 2, 15, || {
+        for (g, rf) in &pairs {
+            std::hint::black_box(ev.feedback(g, rf, 1.0, 0.5));
+        }
+    });
+    println!("{}", r.throughput_line(128.0));
+
+    // --- policy forward: rust vs PJRT ---
+    let params = PolicyParams::init(4, 5);
+    let x: Vec<f32> = (0..64 * EMBED_DIM).map(|_| rng.normal() as f32 * 0.3).collect();
+    let r = bench("rust mlp fwd b=64", 3, 30, || {
+        std::hint::black_box(mlp::forward(&params, &x, 64));
+    });
+    println!("{}", r.throughput_line(64.0));
+    if let Ok(rt) = PolicyRuntime::load(&PolicyRuntime::default_dir()) {
+        let rt = Arc::new(rt);
+        let r = bench("pjrt policy fwd b=64", 3, 30, || {
+            std::hint::black_box(rt.forward(&params, &x, 64).unwrap());
+        });
+        println!("{}", r.throughput_line(64.0));
+        // ppo update (b=256)
+        let xb: Vec<f32> = (0..256 * EMBED_DIM).map(|_| rng.normal() as f32 * 0.3).collect();
+        let probs = mlp::forward(&params, &xb, 256);
+        let mut batch = UpdateBatch::default();
+        batch.x = xb;
+        for i in 0..256 {
+            let a = i % 4;
+            batch.actions.push(a);
+            batch.old_logp.push(probs[i * 4 + a].max(1e-12).ln());
+            batch.rewards.push(if a == 0 { 1.0 } else { -0.3 });
+        }
+        let mut p2 = params.clone();
+        let r = bench("pjrt ppo update b=256", 2, 15, || {
+            std::hint::black_box(rt.update(&mut p2, &batch).unwrap());
+        });
+        println!("{}  ({:.1} ms / 1000 queries; paper: 30 ms)", r.throughput_line(256.0), r.mean_s * 1e3 / 256.0 * 1000.0);
+        let mut p3 = params.clone();
+        let r = bench("rust ppo update b=256", 2, 15, || {
+            std::hint::black_box(coedge_rag::policy::grad::update_host(&mut p3, &batch));
+        });
+        println!("{}", r.throughput_line(256.0));
+    } else {
+        println!("(pjrt benches skipped: run `make artifacts`)");
+    }
+
+    // --- intra-node solver ---
+    use coedge_rag::intranode::latfit::LatencyProfiler;
+    use coedge_rag::intranode::solver::{solve_node, SolverInput};
+    use coedge_rag::llmsim::gpu::GpuState;
+    use coedge_rag::llmsim::latency::LatencyGroundTruth;
+    use coedge_rag::llmsim::model::standard_pool;
+    let pool = standard_pool();
+    let gt = LatencyGroundTruth::default();
+    let prof = LatencyProfiler::default();
+    let fits: Vec<Vec<_>> = pool
+        .iter()
+        .map(|m| (0..2).map(|g| prof.fit_production(&gt, m, 3 + g as u64)).collect())
+        .collect();
+    let gpus = vec![GpuState::new(1.0), GpuState::new(1.1)];
+    let quality = vec![1.2, 1.37, 1.5];
+    let r = bench("intra-node solve (2 GPUs, 3 models)", 3, 30, || {
+        std::hint::black_box(solve_node(&SolverInput {
+            pool: &pool,
+            gpus: &gpus,
+            fits: &fits,
+            quality: &quality,
+            queries: 500,
+            budget_s: 12.0,
+        }));
+    });
+    println!("{}", r.throughput_line(1.0));
+
+    // --- end-to-end slot ---
+    use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+    use coedge_rag::coordinator::Coordinator;
+    use coedge_rag::policy::ppo::Backend;
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.qa_per_domain = 60;
+    cfg.docs_per_domain = 80;
+    cfg.queries_per_slot = 1000;
+    cfg.allocator = AllocatorKind::Ppo;
+    // production path: PJRT backend when artifacts exist
+    let be = match PolicyRuntime::load(&PolicyRuntime::default_dir()) {
+        Ok(rt) => Backend::Pjrt(Arc::new(rt)),
+        Err(_) => Backend::Reference,
+    };
+    let mut co = Coordinator::build(cfg, be).unwrap();
+    let r = bench("e2e slot (1000 queries, 4 nodes)", 1, 8, || {
+        let qids = co.sample_queries(1000);
+        std::hint::black_box(co.run_slot(&qids).unwrap());
+    });
+    println!("{}", r.throughput_line(1000.0));
+}

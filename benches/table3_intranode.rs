@@ -1,0 +1,69 @@
+//! Reproduces Table III: intra-node scheduling vs Small/Mid/Mixed.1/
+//! Mixed.2 fixed deployments across latency SLOs L ∈ {5, 10, 15} s on
+//! DomainQA (500 q) and PPC (400 q), reporting all six quality metrics +
+//! DropRate.
+//!
+//!     cargo bench --bench table3_intranode
+
+use coedge_rag::bench_harness::Table;
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IntraStrategy};
+use coedge_rag::coordinator::Coordinator;
+use coedge_rag::policy::ppo::Backend;
+
+fn strategies(gpus: usize) -> Vec<(&'static str, IntraStrategy)> {
+    vec![
+        ("Small-Param", IntraStrategy::small_param(gpus)),
+        ("Mid-Param", IntraStrategy::mid_param(gpus)),
+        ("Mixed-Param.1", IntraStrategy::mixed1(gpus)),
+        ("Mixed-Param.2", IntraStrategy::mixed2(gpus)),
+        ("Intra-node", IntraStrategy::Solver),
+    ]
+}
+
+fn main() {
+    println!("===== Table III — intra-node scheduling vs fixed deployments =====");
+    println!("paper highlights: L=5 Mid/Mixed.2 drop 44–67% catastrophically while");
+    println!("Small & Intra stay <4%; L=10/15 Intra leads every metric with ~0 drops\n");
+    for (ds, name, queries) in [
+        (DatasetKind::DomainQa, "DomainQA", 500usize),
+        (DatasetKind::Ppc, "PPC", 400usize),
+    ] {
+        for slo in [5.0, 10.0, 15.0] {
+            println!("--- {name}, L = {slo} s ---");
+            let mut t = Table::new(&[
+                "strategy", "R-1", "R-2", "R-L", "BLEU-4", "METEOR", "BERT", "Drop%",
+            ]);
+            for (label, strat) in strategies(2) {
+                let mut cfg = ExperimentConfig::paper_cluster(ds);
+                cfg.allocator = AllocatorKind::Ppo;
+                cfg.qa_per_domain = 80;
+                cfg.docs_per_domain = 100;
+                cfg.queries_per_slot = queries;
+                cfg.slo_s = slo;
+                cfg.intra = strat;
+                for n in cfg.nodes.iter_mut() {
+                    n.corpus_docs = 200;
+                }
+                let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+                let reports = co.run(6).unwrap();
+                let m = Coordinator::tail_mean(&reports, 4);
+                let drop = reports.iter().rev().take(4).map(|r| r.drop_rate).sum::<f64>() / 4.0;
+                t.row(vec![
+                    label.into(),
+                    format!("{:.3}", m.rouge1),
+                    format!("{:.3}", m.rouge2),
+                    format!("{:.3}", m.rouge_l),
+                    format!("{:.3}", m.bleu4),
+                    format!("{:.3}", m.meteor),
+                    format!("{:.3}", m.bert_score),
+                    format!("{:.2}", drop * 100.0),
+                ]);
+                eprintln!("{name} L={slo} {label} done");
+            }
+            t.print();
+            println!();
+        }
+    }
+    println!("shape check: Intra-node in the top-2 everywhere; Mid/Mixed.2 collapse at L=5;");
+    println!("Small plateaus as L relaxes while Intra keeps improving.");
+}

@@ -1,0 +1,55 @@
+//! The paper's motivating scenario (§I): multiple "hospital" nodes host
+//! domain-specialized corpora (internal medicine / pediatrics / cardiology
+//! stand-ins) and a flu-season surge concentrates queries on one domain.
+//! CoEdge-RAG routes overflow to sub-optimal-but-capable nodes that share
+//! overlapping knowledge, keeping latency bounded at a small quality cost.
+//!
+//!     cargo run --release --example healthcare_triage
+
+use coedge_rag::bench_harness::Table;
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+use coedge_rag::coordinator::Coordinator;
+use coedge_rag::policy::ppo::Backend;
+use coedge_rag::workload::SkewPattern;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.qa_per_domain = 60;
+    cfg.docs_per_domain = 80;
+    cfg.queries_per_slot = 600;
+    cfg.slo_s = 10.0;
+    cfg.allocator = AllocatorKind::Ppo;
+    cfg.s_iid = 0.3; // overlapping knowledge (e.g. cold symptoms)
+    cfg.overlap = 0.3;
+    let mut co = Coordinator::build(cfg, Backend::Reference)?;
+
+    println!("phase 1 — normal operations (balanced case mix), 6 slots");
+    co.cfg.skew = SkewPattern::Balanced;
+    let normal = co.run(6)?;
+
+    println!("phase 2 — flu season: 80% of queries hit domain 0, 6 slots");
+    co.cfg.skew = SkewPattern::Primary { domain: 0, frac: 0.8 };
+    let surge = co.run(6)?;
+
+    let mut t = Table::new(&["phase", "R-L", "BERT", "drop%", "makespan(s)", "node load p_j"]);
+    for (name, reports) in [("normal", &normal), ("flu surge", &surge)] {
+        let n = reports.len() as f64;
+        let rl: f64 = reports.iter().map(|r| r.mean_scores.rouge_l).sum::<f64>() / n;
+        let bs: f64 = reports.iter().map(|r| r.mean_scores.bert_score).sum::<f64>() / n;
+        let dr: f64 = reports.iter().map(|r| r.drop_rate).sum::<f64>() / n * 100.0;
+        let mk: f64 = reports.iter().map(|r| r.latency_s).fold(0.0, f64::max);
+        let last = reports.last().unwrap();
+        t.row(vec![
+            name.into(),
+            format!("{rl:.3}"),
+            format!("{bs:.3}"),
+            format!("{dr:.2}"),
+            format!("{mk:.2}"),
+            last.proportions.iter().map(|p| format!("{p:.2}")).collect::<Vec<_>>().join("/"),
+        ]);
+    }
+    t.print();
+    println!("\nDuring the surge the router spreads domain-0 load across nodes");
+    println!("with overlapping corpora instead of overloading its home node.");
+    Ok(())
+}

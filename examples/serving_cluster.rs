@@ -1,0 +1,115 @@
+//! END-TO-END SERVING DRIVER (the repo's headline validation run).
+//!
+//! Boots the full three-layer stack: AOT policy artifacts through PJRT
+//! (when built), the 4-node paper cluster, and the TCP serving front-end
+//! with dynamic batching — then drives it with concurrent clients
+//! replaying a skewed query trace, and reports wall-clock
+//! latency/throughput plus generation quality. Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//!     make artifacts && cargo run --release --example serving_cluster
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use coedge_rag::config::{DatasetKind, ExperimentConfig};
+use coedge_rag::coordinator::Coordinator;
+use coedge_rag::policy::ppo::Backend;
+use coedge_rag::runtime::PolicyRuntime;
+use coedge_rag::server::{serve, Client, ServerConfig};
+use coedge_rag::util::stats::{mean, percentile};
+
+const CLIENTS: usize = 8;
+const REQS_PER_CLIENT: usize = 150;
+
+fn main() -> anyhow::Result<()> {
+    let backend = match PolicyRuntime::load(&PolicyRuntime::default_dir()) {
+        Ok(rt) => {
+            println!("backend: PJRT (AOT artifacts)");
+            Backend::Pjrt(Arc::new(rt))
+        }
+        Err(_) => {
+            println!("backend: pure-Rust reference (run `make artifacts` for the PJRT path)");
+            Backend::Reference
+        }
+    };
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.qa_per_domain = 80;
+    cfg.docs_per_domain = 100;
+    cfg.slo_s = 15.0;
+    let n_qa = cfg.qa_per_domain * 6;
+    let co = Coordinator::build(cfg, backend)?;
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = Arc::clone(&shutdown);
+    let (addr_tx, addr_rx) = channel();
+    let server = std::thread::spawn(move || {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        addr_tx.send(addr).unwrap();
+        serve(
+            co,
+            ServerConfig { addr: addr.to_string(), batch_window_ms: 15, max_batch: 128 },
+            sd,
+        )
+        .unwrap();
+    });
+    let addr = addr_rx.recv()?.to_string();
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    println!("server up at {addr}; {CLIENTS} clients × {REQS_PER_CLIENT} requests");
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> anyhow::Result<(Vec<f64>, Vec<f64>, usize)> {
+                let mut client = Client::connect(&addr)?;
+                let mut lat = Vec::new();
+                let mut rl = Vec::new();
+                let mut dropped = 0usize;
+                // skewed replay: client c favours domain c % 6
+                for i in 0..REQS_PER_CLIENT {
+                    let dom = if i % 10 < 7 { c % 6 } else { (c + i) % 6 };
+                    let qa_id = (dom * (n_qa / 6) + (i * 13) % (n_qa / 6)) % n_qa;
+                    let t = Instant::now();
+                    let resp = client.request(i as u64, qa_id)?;
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    if resp.get("dropped").and_then(|v| v.as_bool()).unwrap_or(false) {
+                        dropped += 1;
+                    } else if let Some(r) = resp.get("rouge_l").and_then(|v| v.as_f64()) {
+                        rl.push(r);
+                    }
+                }
+                Ok((lat, rl, dropped))
+            })
+        })
+        .collect();
+
+    let mut all_lat = Vec::new();
+    let mut all_rl = Vec::new();
+    let mut all_drop = 0usize;
+    for h in handles {
+        let (lat, rl, dropped) = h.join().unwrap()?;
+        all_lat.extend(lat);
+        all_rl.extend(rl);
+        all_drop += dropped;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = CLIENTS * REQS_PER_CLIENT;
+
+    println!("\n== end-to-end serving results ==");
+    println!("requests          : {total}");
+    println!("wall time         : {wall:.2} s");
+    println!("throughput        : {:.1} req/s", total as f64 / wall);
+    println!("latency mean      : {:.1} ms", mean(&all_lat));
+    println!("latency p50 / p95 : {:.1} / {:.1} ms", percentile(&all_lat, 50.0), percentile(&all_lat, 95.0));
+    println!("drop rate         : {:.2}%", all_drop as f64 / total as f64 * 100.0);
+    println!("mean Rouge-L      : {:.3}", mean(&all_rl));
+
+    shutdown.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT compilation: lower the Layer-2 JAX graphs to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (per node count N in --nodes, default 3,4,6):
+    artifacts/policy_fwd_n{N}_b{B}.hlo.txt     (B = 1 and 64)
+    artifacts/ppo_update_n{N}_b{B}.hlo.txt     (B = 256)
+    artifacts/manifest.json                    (shapes + hyperparams)
+
+Python runs ONLY here (``make artifacts``); the Rust coordinator loads
+these artifacts at startup and executes them via PJRT on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+FWD_BATCHES = (1, 64)
+UPD_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_policy_fwd(n_actions: int, batch: int) -> str:
+    params = [_spec(s) for s in model.param_shapes(n_actions)]
+    x = _spec((batch, model.EMBED_DIM))
+    lowered = jax.jit(model.policy_fwd).lower(params, x)
+    return to_hlo_text(lowered)
+
+
+def lower_ppo_update(n_actions: int, batch: int) -> str:
+    params = [_spec(s) for s in model.param_shapes(n_actions)]
+    adam_m = [_spec(s) for s in model.param_shapes(n_actions)]
+    adam_v = [_spec(s) for s in model.param_shapes(n_actions)]
+    step = _spec(())
+    x = _spec((batch, model.EMBED_DIM))
+    onehot = _spec((batch, n_actions))
+    reward = _spec((batch,))
+    old_logp = _spec((batch,))
+    mask = _spec((batch,))
+    lowered = jax.jit(model.ppo_update).lower(
+        params, adam_m, adam_v, step, x, onehot, reward, old_logp, mask
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--nodes", default="3,4,6",
+                    help="comma-separated node counts to compile for")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    node_counts = [int(s) for s in args.nodes.split(",") if s]
+
+    manifest = {
+        "embed_dim": model.EMBED_DIM,
+        "hidden": list(model.HIDDEN),
+        "param_names": list(model.PARAM_NAMES),
+        "hyperparams": {
+            "learning_rate": model.LEARNING_RATE,
+            "clip_eps": model.CLIP_EPS,
+            "entropy_beta": model.ENTROPY_BETA,
+            "adam_b1": model.ADAM_B1,
+            "adam_b2": model.ADAM_B2,
+            "adam_eps": model.ADAM_EPS,
+            "ln_eps": model.LN_EPS,
+        },
+        "artifacts": [],
+    }
+
+    for n in node_counts:
+        shapes = [list(s) for s in model.param_shapes(n)]
+        for b in FWD_BATCHES:
+            name = f"policy_fwd_n{n}_b{b}"
+            text = lower_policy_fwd(n, b)
+            path = os.path.join(args.out, name + ".hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append({
+                "name": name, "kind": "policy_fwd", "n_actions": n,
+                "batch": b, "file": name + ".hlo.txt",
+                "param_shapes": shapes,
+            })
+            print(f"wrote {path} ({len(text)} chars)")
+        name = f"ppo_update_n{n}_b{UPD_BATCH}"
+        text = lower_ppo_update(n, UPD_BATCH)
+        path = os.path.join(args.out, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name, "kind": "ppo_update", "n_actions": n,
+            "batch": UPD_BATCH, "file": name + ".hlo.txt",
+            "param_shapes": shapes,
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # manifest written LAST: it is the Makefile's freshness sentinel.
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for the CoEdge-RAG policy network.
+
+All kernels run with ``interpret=True``: the CPU PJRT backend cannot
+execute Mosaic custom-calls, and interpret mode lowers the kernels to plain
+HLO ops that round-trip through the HLO-text AOT path (see aot.py).
+"""
+
+from .policy_mlp import dense, layer_norm, row_softmax  # noqa: F401

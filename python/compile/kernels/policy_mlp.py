@@ -1,0 +1,110 @@
+"""Pallas kernels: fused dense+bias+ReLU, layer norm, row softmax.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's policy
+network runs on an RTX 4090; here the kernels are written TPU-style —
+BlockSpec tiles sized for VMEM, matmuls shaped for the 128×128 MXU
+(block sizes are multiples of 128 where the model dims allow), and the
+HBM↔VMEM schedule expressed through the grid/BlockSpec instead of CUDA
+threadblocks. On CPU we execute under ``interpret=True`` for correctness;
+TPU perf is estimated analytically in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: MXU-friendly where possible. The policy net is small
+# (256-256-128-64-N), so K is never tiled — a full K-slab of activations
+# plus a (K × BLOCK_N) weight tile fits comfortably in VMEM
+# (256×256 fp32 = 256 KiB « 16 MiB).
+BLOCK_B = 128
+BLOCK_N = 128
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One (BLOCK_B × BLOCK_N) output tile: o = act(x @ w + b)."""
+    x = x_ref[...]  # (bb, K)
+    w = w_ref[...]  # (K, bn)
+    b = b_ref[...]  # (1, bn)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def dense(x, w, b, relu: bool = True):
+    """Fused ``act(x @ w + b)`` via a Pallas grid over (batch, out) tiles.
+
+    x: (B, K), w: (K, N), b: (N,) -> (B, N).
+    Works for any B, N (grid cells are ceil-divided; Pallas pads/masks the
+    ragged edge tiles).
+    """
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2, f"inner dims mismatch: {K} vs {K2}"
+    assert b.shape == (N,)
+    bb = min(BLOCK_B, B)
+    bn = min(BLOCK_N, N)
+    grid = (pl.cdiv(B, bb), pl.cdiv(N, bn))
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=True,
+    )(x, w, b.reshape(1, N))
+
+
+def _layer_norm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]  # (bb, D)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    """Row-wise layer norm with affine params. x: (B, D)."""
+    B, D = x.shape
+    assert gamma.shape == (D,) and beta.shape == (D,)
+    bb = min(BLOCK_B, B)
+    return pl.pallas_call(
+        functools.partial(_layer_norm_kernel, eps=eps),
+        grid=(pl.cdiv(B, bb),),
+        in_specs=[
+            pl.BlockSpec((bb, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), x.dtype),
+        interpret=True,
+    )(x, gamma.reshape(1, D), beta.reshape(1, D))
+
+
+def _row_softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def row_softmax(x):
+    """Numerically-stable row softmax. x: (B, N)."""
+    B, N = x.shape
+    bb = min(BLOCK_B, B)
+    return pl.pallas_call(
+        _row_softmax_kernel,
+        grid=(pl.cdiv(B, bb),),
+        in_specs=[pl.BlockSpec((bb, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in policy_mlp.py must match these references to
+float32 tolerance across shapes — enforced by python/tests/test_kernels.py
+(hypothesis sweeps) and reused by the Layer-2 PPO update graph, which
+differentiates through this jnp path (identical math to the kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, relu: bool = True):
+    """act(x @ w + b) — reference for kernels.dense."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.reshape(1, -1)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def layer_norm_ref(x, gamma, beta, eps: float = 1e-5):
+    """Row-wise layer norm — reference for kernels.layer_norm."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * gamma.reshape(1, -1) + beta.reshape(1, -1)
+
+
+def row_softmax_ref(x):
+    """Numerically-stable row softmax — reference for kernels.row_softmax."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

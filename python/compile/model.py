@@ -1,0 +1,153 @@
+"""Layer-2: the CoEdge-RAG PPO policy network and its update step, in JAX.
+
+Architecture (paper §V-A "Implementation Settings"): four fully-connected
+layers 256-128-64-N over the 256-d query embedding, with a residual
+connection and layer normalization on the equal-width first layer.
+
+Two graphs are AOT-lowered for the Rust coordinator (aot.py):
+
+* ``policy_fwd``  — the request-path graph. Uses the Layer-1 **Pallas**
+  kernels (fused dense+ReLU, layer norm, row softmax).
+* ``ppo_update``  — the training-path graph: clipped policy-only PPO
+  surrogate (paper Eq. 11) + entropy bonus, differentiated with
+  ``jax.grad`` and applied with an inlined Adam step. The forward math is
+  the jnp reference path, which python/tests assert is numerically
+  identical to the Pallas path — so the gradients match the serving
+  forward.
+
+Rust owns the parameters: both graphs are pure functions
+``(params, ...) -> outputs`` with parameters passed as flat input lists in
+``PARAM_NAMES`` order and returned in the same order by the update.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense, layer_norm, row_softmax
+from .kernels.ref import dense_ref, layer_norm_ref, row_softmax_ref
+
+# Model dimensions. EMBED_DIM must match rust/src/text/embed.rs::EMBED_DIM.
+EMBED_DIM = 256
+HIDDEN = (256, 128, 64)
+
+# PPO hyper-parameters (paper §V-A): Adam lr 3e-4, clip eps 0.02.
+LEARNING_RATE = 3e-4
+CLIP_EPS = 0.02
+ENTROPY_BETA = 0.01
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+LN_EPS = 1e-5
+
+# Flat parameter ordering shared with the Rust runtime.
+PARAM_NAMES = (
+    "w1", "b1", "ln_g", "ln_b",
+    "w2", "b2",
+    "w3", "b3",
+    "w4", "b4",
+)
+
+
+def param_shapes(n_actions: int):
+    """Shapes in PARAM_NAMES order."""
+    h1, h2, h3 = HIDDEN
+    return (
+        (EMBED_DIM, h1), (h1,), (h1,), (h1,),
+        (h1, h2), (h2,),
+        (h2, h3), (h3,),
+        (h3, n_actions), (n_actions,),
+    )
+
+
+def init_params(key, n_actions: int):
+    """He-uniform init, biases zero; returns the flat param list."""
+    shapes = param_shapes(n_actions)
+    params = []
+    for name, shape in zip(PARAM_NAMES, shapes):
+        if name.startswith("w"):
+            key, sub = jax.random.split(key)
+            fan_in = shape[0]
+            lim = (6.0 / fan_in) ** 0.5
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -lim, lim))
+        elif name == "ln_g":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def _forward(params, x, *, pallas: bool):
+    """Logits of the policy network; pallas=True uses Layer-1 kernels."""
+    w1, b1, ln_g, ln_b, w2, b2, w3, b3, w4, b4 = params
+    d = dense if pallas else dense_ref
+    ln = layer_norm if pallas else layer_norm_ref
+    h = d(x, w1, b1, relu=True)
+    h = ln(h + x, ln_g, ln_b, eps=LN_EPS)  # residual on the 256-wide layer
+    h = d(h, w2, b2, relu=True)
+    h = d(h, w3, b3, relu=True)
+    return d(h, w4, b4, relu=False)
+
+
+def policy_fwd(params, x):
+    """Request-path forward: action probabilities, via Pallas kernels.
+
+    x: (B, EMBED_DIM) float32 -> probs: (B, N) float32.
+    """
+    logits = _forward(params, x, pallas=True)
+    return (row_softmax(logits),)
+
+
+def policy_fwd_ref(params, x):
+    """jnp-only forward (used by tests and by the update's gradient path)."""
+    logits = _forward(params, x, pallas=False)
+    return (row_softmax_ref(logits),)
+
+
+def _log_softmax(logits):
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    s = logits - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+def ppo_loss(params, x, action_onehot, reward, old_logp, mask):
+    """Policy-only clipped PPO objective with entropy bonus (Eq. 11).
+
+    reward is the batch-standardized feedback f̄ (Eq. 10), computed by the
+    Rust coordinator. Returns scalar loss (to minimize) and mean entropy.
+    """
+    logits = _forward(params, x, pallas=False)
+    logp = _log_softmax(logits)
+    chosen_logp = jnp.sum(logp * action_onehot, axis=-1)
+    ratio = jnp.exp(chosen_logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - CLIP_EPS, 1.0 + CLIP_EPS)
+    surrogate = jnp.minimum(ratio * reward, clipped * reward)
+    probs = jnp.exp(logp)
+    entropy = -jnp.sum(probs * logp, axis=-1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    j = jnp.sum(surrogate * mask) / denom + ENTROPY_BETA * jnp.sum(entropy * mask) / denom
+    return -j, jnp.sum(entropy * mask) / denom
+
+
+def ppo_update(params, adam_m, adam_v, step, x, action_onehot, reward, old_logp, mask):
+    """One Adam step on the PPO loss.
+
+    All state is explicit: returns (new_params…, new_m…, new_v…, loss,
+    entropy) as a flat tuple so the AOT artifact is a pure function the
+    Rust runtime can thread state through.
+
+    step: float32 scalar, 1-based Adam timestep.
+    """
+    (loss, entropy), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        params, x, action_onehot, reward, old_logp, mask
+    )
+    t = step
+    new_params, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, adam_m, adam_v):
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * jnp.square(g)
+        mhat = m2 / (1.0 - ADAM_B1 ** t)
+        vhat = v2 / (1.0 - ADAM_B2 ** t)
+        new_params.append(p - LEARNING_RATE * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_params) + tuple(new_m) + tuple(new_v) + (loss, entropy)

@@ -1,0 +1,55 @@
+"""AOT pipeline: artifacts lower, parse as HLO text, and manifest is sane."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "..", "artifacts")
+
+
+def test_lower_policy_fwd_produces_hlo_text():
+    text = aot.lower_policy_fwd(n_actions=3, batch=4)
+    assert "HloModule" in text
+    assert "f32[4,256]" in text  # input batch
+    assert "f32[4,3]" in text    # output probs
+
+
+def test_lower_ppo_update_produces_hlo_text():
+    text = aot.lower_ppo_update(n_actions=3, batch=8)
+    assert "HloModule" in text
+    assert "f32[8,256]" in text
+    # gradients of w1 appear as its shape somewhere in the update
+    assert "f32[256,256]" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_consistent_with_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["embed_dim"] == model.EMBED_DIM
+    assert man["param_names"] == list(model.PARAM_NAMES)
+    assert len(man["artifacts"]) > 0
+    for art in man["artifacts"]:
+        path = os.path.join(ART, art["file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head
+        shapes = [tuple(s) for s in art["param_shapes"]]
+        assert shapes == list(model.param_shapes(art["n_actions"]))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_hyperparams_match_model():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    hp = man["hyperparams"]
+    assert hp["learning_rate"] == model.LEARNING_RATE
+    assert hp["clip_eps"] == model.CLIP_EPS
+    assert hp["entropy_beta"] == model.ENTROPY_BETA

@@ -1,0 +1,105 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including ragged tile edges around the 128-wide
+blocks) and value scales; every kernel must match ref.py to fp32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, layer_norm, row_softmax
+from compile.kernels.ref import dense_ref, layer_norm_ref, row_softmax_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+dims = st.sampled_from([1, 2, 3, 5, 16, 64, 127, 128, 129, 200, 256])
+small_dims = st.sampled_from([1, 2, 3, 4, 6, 8, 64, 128])
+scales = st.sampled_from([1e-2, 1.0, 10.0])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=dims, k=small_dims, n=small_dims, scale=scales, seed=seeds)
+def test_dense_relu_matches_ref(b, k, n, scale, seed):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k0, (b, k), scale)
+    w = _rand(k1, (k, n), scale)
+    bias = _rand(k2, (n,), scale)
+    got = dense(x, w, bias, relu=True)
+    want = dense_ref(x, w, bias, relu=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=dims, k=small_dims, n=small_dims, seed=seeds)
+def test_dense_linear_matches_ref(b, k, n, seed):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k0, (b, k), 1.0)
+    w = _rand(k1, (k, n), 1.0)
+    bias = _rand(k2, (n,), 1.0)
+    got = dense(x, w, bias, relu=False)
+    want = dense_ref(x, w, bias, relu=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=dims, d=st.sampled_from([2, 3, 64, 128, 256]), scale=scales, seed=seeds)
+def test_layer_norm_matches_ref(b, d, scale, seed):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k0, (b, d), scale)
+    g = 1.0 + 0.1 * jax.random.normal(k1, (d,), jnp.float32)
+    be = _rand(k2, (d,), 0.5)
+    got = layer_norm(x, g, be)
+    want = layer_norm_ref(x, g, be)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=dims, n=st.sampled_from([2, 3, 4, 6, 8, 33]), scale=scales, seed=seeds)
+def test_row_softmax_matches_ref(b, n, scale, seed):
+    x = _rand(jax.random.PRNGKey(seed), (b, n), scale)
+    got = np.asarray(row_softmax(x))
+    want = np.asarray(row_softmax_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got.sum(axis=-1), np.ones(b), rtol=1e-5)
+    assert (got >= 0).all()
+
+
+def test_layer_norm_row_stats():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 256), jnp.float32) * 5 + 3
+    y = np.asarray(layer_norm(x, jnp.ones(256), jnp.zeros(256)))
+    np.testing.assert_allclose(y.mean(axis=-1), np.zeros(16), atol=1e-5)
+    np.testing.assert_allclose(y.std(axis=-1), np.ones(16), atol=1e-3)
+
+
+def test_softmax_extreme_logits_stable():
+    x = jnp.array([[1000.0, 0.0, -1000.0], [-1e6, -1e6, -1e6]], jnp.float32)
+    y = np.asarray(row_softmax(x))
+    assert np.isfinite(y).all()
+    np.testing.assert_allclose(y.sum(axis=-1), [1.0, 1.0], rtol=1e-6)
+    assert y[0, 0] > 0.999
+    np.testing.assert_allclose(y[1], [1 / 3] * 3, rtol=1e-5)
+
+
+def test_dense_relu_clamps_negative():
+    x = -jnp.ones((4, 8), jnp.float32)
+    w = jnp.eye(8, dtype=jnp.float32)
+    b = jnp.zeros(8, jnp.float32)
+    y = np.asarray(dense(x, w, b, relu=True))
+    assert (y == 0).all()
+
+
+def test_dense_shape_mismatch_raises():
+    x = jnp.zeros((4, 8), jnp.float32)
+    w = jnp.zeros((9, 3), jnp.float32)
+    b = jnp.zeros(3, jnp.float32)
+    with pytest.raises(AssertionError):
+        dense(x, w, b)

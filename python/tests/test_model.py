@@ -1,0 +1,136 @@
+"""Layer-2 correctness: policy forward invariants and PPO update behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+N = 4
+B = 16
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(42), N)
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(7), (B, model.EMBED_DIM), jnp.float32)
+
+
+def test_param_shapes_order(params):
+    shapes = model.param_shapes(N)
+    assert len(params) == len(model.PARAM_NAMES) == len(shapes)
+    for p, s in zip(params, shapes):
+        assert p.shape == s
+
+
+def test_fwd_probs_simplex(params, x):
+    probs = np.asarray(model.policy_fwd(params, x)[0])
+    assert probs.shape == (B, N)
+    assert (probs >= 0).all()
+    np.testing.assert_allclose(probs.sum(axis=-1), np.ones(B), rtol=1e-5)
+
+
+def test_fwd_pallas_matches_ref(params, x):
+    a = np.asarray(model.policy_fwd(params, x)[0])
+    b = np.asarray(model.policy_fwd_ref(params, x)[0])
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_fwd_depends_on_input(params):
+    x1 = jnp.ones((1, model.EMBED_DIM), jnp.float32) * 0.1
+    x2 = -x1
+    p1 = np.asarray(model.policy_fwd_ref(params, x1)[0])
+    p2 = np.asarray(model.policy_fwd_ref(params, x2)[0])
+    assert np.abs(p1 - p2).max() > 1e-4
+
+
+def _update_args(params, x, actions, rewards):
+    onehot = jax.nn.one_hot(actions, N, dtype=jnp.float32)
+    probs = model.policy_fwd_ref(params, x)[0]
+    old_logp = jnp.log(jnp.sum(probs * onehot, axis=-1) + 1e-12)
+    mask = jnp.ones(x.shape[0], jnp.float32)
+    zeros = [jnp.zeros_like(p) for p in params]
+    return zeros, old_logp, onehot, mask
+
+
+def test_ppo_update_shapes_and_state(params, x):
+    actions = jnp.zeros(B, jnp.int32)
+    rewards = jnp.ones(B, jnp.float32)
+    zeros, old_logp, onehot, mask = _update_args(params, x, actions, rewards)
+    out = model.ppo_update(params, zeros, [jnp.zeros_like(p) for p in params],
+                           jnp.float32(1.0), x, onehot, rewards, old_logp, mask)
+    npar = len(params)
+    assert len(out) == 3 * npar + 2
+    for p, q in zip(params, out[:npar]):
+        assert p.shape == q.shape
+    loss, entropy = out[-2], out[-1]
+    assert np.isfinite(float(loss))
+    assert float(entropy) > 0.0
+
+
+def test_ppo_increases_rewarded_action_probability(params):
+    """Repeatedly rewarding action 0 must raise its probability."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (B, model.EMBED_DIM), jnp.float32)
+    p = [jnp.array(q) for q in params]
+    m = [jnp.zeros_like(q) for q in p]
+    v = [jnp.zeros_like(q) for q in p]
+    actions = jnp.zeros(B, jnp.int32)
+    rewards = jnp.ones(B, jnp.float32)  # standardized positive reward
+    onehot = jax.nn.one_hot(actions, N, dtype=jnp.float32)
+    mask = jnp.ones(B, jnp.float32)
+    before = float(np.asarray(model.policy_fwd_ref(p, x)[0])[:, 0].mean())
+    upd = jax.jit(model.ppo_update)
+    for t in range(1, 60):
+        probs = model.policy_fwd_ref(p, x)[0]
+        old_logp = jnp.log(jnp.sum(probs * onehot, axis=-1) + 1e-12)
+        out = upd(p, m, v, jnp.float32(t), x, onehot, rewards, old_logp, mask)
+        npar = len(p)
+        p = list(out[:npar])
+        m = list(out[npar:2 * npar])
+        v = list(out[2 * npar:3 * npar])
+    after = float(np.asarray(model.policy_fwd_ref(p, x)[0])[:, 0].mean())
+    assert after > before + 0.02, f"before={before:.4f} after={after:.4f}"
+
+
+def test_ppo_clip_bounds_update_when_ratio_far(params, x):
+    """With old_logp far from current, the clipped surrogate caps gradients:
+    loss must stay finite and params move only slightly."""
+    actions = jnp.zeros(B, jnp.int32)
+    rewards = jnp.ones(B, jnp.float32)
+    onehot = jax.nn.one_hot(actions, N, dtype=jnp.float32)
+    old_logp = jnp.full((B,), -10.0, jnp.float32)  # ratio >> 1+eps
+    mask = jnp.ones(B, jnp.float32)
+    zeros = [jnp.zeros_like(q) for q in params]
+    out = model.ppo_update(params, zeros, [jnp.zeros_like(q) for q in params],
+                           jnp.float32(1.0), x, onehot, rewards, old_logp, mask)
+    assert np.isfinite(float(out[-2]))
+
+
+def test_mask_excludes_padding(params, x):
+    """Masked-out rows must not affect the loss."""
+    actions = jnp.zeros(B, jnp.int32)
+    onehot = jax.nn.one_hot(actions, N, dtype=jnp.float32)
+    probs = model.policy_fwd_ref(params, x)[0]
+    old_logp = jnp.log(jnp.sum(probs * onehot, axis=-1) + 1e-12)
+    rewards = jnp.ones(B, jnp.float32)
+    half = jnp.concatenate([jnp.ones(B // 2), jnp.zeros(B // 2)]).astype(jnp.float32)
+    # corrupt the masked rows' rewards wildly; loss must be unchanged
+    r2 = rewards.at[B // 2:].set(1e6)
+    l1, _ = model.ppo_loss(params, x, onehot, rewards, old_logp, half)
+    l2, _ = model.ppo_loss(params, x, onehot, r2, old_logp, half)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_entropy_max_at_uniform():
+    logits_uniform = jnp.zeros((1, N), jnp.float32)
+    probs = jax.nn.softmax(logits_uniform)
+    h = -jnp.sum(probs * jnp.log(probs))
+    np.testing.assert_allclose(float(h), np.log(N), rtol=1e-6)

@@ -1,0 +1,9 @@
+//! Contextual-bandit baseline for query allocation.
+//!
+//! The paper's "MAB-based Allocation" baseline uses LinUCB (Li et al.,
+//! 2010) over historical performance + uncertainty, without neural feature
+//! extraction — implemented here from scratch.
+
+pub mod linucb;
+
+pub use linucb::LinUcb;

@@ -1,0 +1,142 @@
+//! Benchmark harness (criterion is unavailable offline): warmup +
+//! repeated timing with mean/std/percentiles, plus table and series
+//! printers shared by the paper-reproduction benches.
+
+use crate::util::stats::{mean, percentile, std};
+use crate::util::timer::Timer;
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_line(&self, items_per_iter: f64) -> String {
+        format!(
+            "{:<36} {:>10.3} ms/iter  (p50 {:.3}, p95 {:.3})  {:>12.0} items/s",
+            self.name,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            items_per_iter / self.mean_s
+        )
+    }
+}
+
+/// Time `f` with warmup; chooses iteration count so total time ≈ budget.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean(&samples),
+        std_s: std(&samples),
+        p50_s: percentile(&samples, 50.0),
+        p95_s: percentile(&samples, 95.0),
+    }
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len().max(8)).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(&cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells);
+    }
+
+    pub fn row_f(&mut self, label: &str, values: &[f64], decimals: usize) {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format!("{v:.decimals$}")));
+        self.row(cells);
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("| {c:<w$} "));
+            }
+            s.push('|');
+            s
+        };
+        let header = line(&self.headers, &self.widths);
+        println!("{header}");
+        println!("{}", "-".repeat(header.len()));
+        for r in &self.rows {
+            println!("{}", line(r, &self.widths));
+        }
+    }
+}
+
+/// Print an (x, series...) block for figure-style outputs, one line per x.
+pub fn print_series(title: &str, x_label: &str, xs: &[f64], series: &[(&str, Vec<f64>)]) {
+    println!("\n== {title} ==");
+    let mut t = Table::new(
+        &std::iter::once(x_label)
+            .chain(series.iter().map(|(n, _)| *n))
+            .collect::<Vec<_>>(),
+    );
+    for (i, &x) in xs.iter().enumerate() {
+        let mut cells = vec![format!("{x}")];
+        for (_, ys) in series {
+            cells.push(format!("{:.4}", ys[i]));
+        }
+        t.row(cells);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let r = bench("noop-ish", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p95_s >= r.p50_s);
+    }
+
+    #[test]
+    fn table_rows_align() {
+        let mut t = Table::new(&["metric", "a", "b"]);
+        t.row_f("rouge", &[0.5, 0.61234], 3);
+        t.row(vec!["x".into(), "yy".into(), "zzz".into()]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][2], "0.612");
+        t.print();
+    }
+}

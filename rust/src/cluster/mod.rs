@@ -1,0 +1,6 @@
+//! Edge cluster: nodes (corpus + vector index + GPUs + model pool +
+//! fitted predictors) and per-slot serving simulation.
+
+pub mod node;
+
+pub use node::{EdgeNode, NodeSlotReport, QueryOutcome};

@@ -1,0 +1,402 @@
+//! An edge node: local corpus, vector index, GPUs, model pool, fitted
+//! latency surrogates, static quality scores, and the per-slot serving
+//! path (retrieve → generate → score), including drop accounting.
+
+use std::collections::BTreeMap;
+
+use crate::config::{IntraStrategy, NodeConfig};
+use crate::corpus::synth::SyntheticDataset;
+use crate::intranode::latfit::{LatencyFit, LatencyProfiler};
+use crate::intranode::quality::quality_table;
+use crate::intranode::solver::{solve_node, NodePlan, SolverInput};
+use crate::llmsim::gen::generate;
+use crate::llmsim::gpu::GpuState;
+use crate::llmsim::latency::{LatencyGroundTruth, SearchTimeModel};
+use crate::llmsim::model::{pool_of, ModelSpec};
+use crate::metrics::{Evaluator, QualityScores};
+use crate::text::embed::{cosine, Embedder};
+use crate::vecdb::{FlatIndex, VectorIndex};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Per-query serving outcome.
+#[derive(Clone, Debug)]
+pub struct QueryOutcome {
+    pub qa_id: usize,
+    pub node: usize,
+    /// Model size label index into the node pool; None if dropped before
+    /// being served.
+    pub model_idx: Option<usize>,
+    pub dropped: bool,
+    /// Retrieval relevance achieved.
+    pub rel: f64,
+    /// Quality metrics (zeros when dropped — "invalid" per the paper).
+    pub scores: QualityScores,
+    /// Composite feedback f_i (Eq. 9); 0 when dropped.
+    pub feedback: f64,
+    /// Simulated completion latency (s, within the slot).
+    pub latency_s: f64,
+}
+
+/// Slot-level summary for one node.
+#[derive(Clone, Debug, Default)]
+pub struct NodeSlotReport {
+    pub outcomes: Vec<QueryOutcome>,
+    /// TS_n^t — vector search time.
+    pub search_time_s: f64,
+    /// Max model completion time incl. reloads (Eq. 4 LHS).
+    pub makespan_s: f64,
+    /// Queries per model idx.
+    pub per_model_queries: Vec<usize>,
+    /// Memory fraction per model idx (summed over GPUs).
+    pub per_model_mem: Vec<f64>,
+}
+
+/// An edge node.
+pub struct EdgeNode {
+    pub id: usize,
+    pub name: String,
+    /// Sorted doc ids stored locally.
+    pub doc_ids: Vec<usize>,
+    pub index: FlatIndex,
+    pub pool: Vec<ModelSpec>,
+    pub gpus: Vec<GpuState>,
+    /// Ground-truth latency per GPU (the "hardware").
+    pub gts: Vec<LatencyGroundTruth>,
+    /// Fitted surrogate per (model idx, gpu idx).
+    pub fits: Vec<Vec<LatencyFit>>,
+    /// Static open-book quality Q_mn per model idx.
+    pub quality: Vec<f64>,
+    pub search_model: SearchTimeModel,
+    pub strategy: IntraStrategy,
+    pub top_k: usize,
+    /// Shared cache of document embeddings (indexed by doc id), built once
+    /// by the coordinator.
+    pub doc_embs: Arc<Vec<Vec<f32>>>,
+    rng: Rng,
+}
+
+impl EdgeNode {
+    /// Build a node: embed + index its corpus, profile latency surrogates,
+    /// compute Q_mn from local QA pairs ("node-specific data").
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        id: usize,
+        cfg: &NodeConfig,
+        ds: &SyntheticDataset,
+        doc_ids: Vec<usize>,
+        doc_embs: Arc<Vec<Vec<f32>>>,
+        ev: &Evaluator,
+        strategy: IntraStrategy,
+        top_k: usize,
+        seed: u64,
+    ) -> Self {
+        let mut index = FlatIndex::new(crate::text::embed::EMBED_DIM);
+        for &d in &doc_ids {
+            index.add(d, &doc_embs[d]);
+        }
+        let pool = pool_of(&cfg.pool);
+        let gpus: Vec<GpuState> = cfg.gpu_speeds.iter().map(|&s| GpuState::new(s)).collect();
+        let gts: Vec<LatencyGroundTruth> =
+            cfg.gpu_speeds.iter().map(|&s| LatencyGroundTruth::new(s)).collect();
+        let prof = LatencyProfiler::default();
+        let mut rng = Rng::new(seed ^ (id as u64).wrapping_mul(0x1234567));
+        let fits: Vec<Vec<LatencyFit>> = pool
+            .iter()
+            .map(|m| {
+                gts.iter()
+                    .map(|gt| {
+                        let s = rng.next_u64();
+                        let mut prng = Rng::new(s);
+                        let samples = prof.collect(gt, m, &mut prng);
+                        prof.fit(crate::intranode::latfit::FitFamily::Quadratic, &samples)
+                            .expect("quadratic fit")
+                    })
+                    .collect()
+            })
+            .collect();
+        // Q_mn from QA pairs whose gold doc is local (node-specific data).
+        let local: std::collections::HashSet<usize> = doc_ids.iter().copied().collect();
+        let qa_sample: Vec<usize> = ds
+            .qa_pairs
+            .iter()
+            .filter(|qa| local.contains(&qa.gold_doc))
+            .map(|qa| qa.id)
+            .take(60)
+            .collect();
+        let quality = quality_table(ds, &qa_sample, &pool, ev, seed ^ 0xAB5);
+        EdgeNode {
+            id,
+            name: cfg.name.clone(),
+            doc_ids,
+            index,
+            pool,
+            gpus,
+            gts,
+            fits,
+            quality,
+            search_model: SearchTimeModel::default(),
+            strategy,
+            top_k,
+            doc_embs,
+            rng,
+        }
+    }
+
+    /// Corpus size in chunks.
+    pub fn corpus_size(&self) -> usize {
+        self.doc_ids.len()
+    }
+
+    /// Compute the slot plan for `n_queries` within `budget_s`
+    /// (Solver strategy runs Eq. 25–29; Fixed splits evenly).
+    pub fn plan_slot(&self, n_queries: usize, budget_s: f64) -> NodePlan {
+        match &self.strategy {
+            IntraStrategy::Solver => solve_node(&SolverInput {
+                pool: &self.pool,
+                gpus: &self.gpus,
+                fits: &self.fits,
+                quality: &self.quality,
+                queries: n_queries,
+                budget_s,
+            }),
+            IntraStrategy::Fixed(plans) => self.fixed_plan(plans, n_queries, budget_s),
+        }
+    }
+
+    fn fixed_plan(
+        &self,
+        plans: &[Vec<(crate::llmsim::model::ModelSize, f64)>],
+        n_queries: usize,
+        budget_s: f64,
+    ) -> NodePlan {
+        use crate::intranode::solver::{GpuPlan, ModelAssignment};
+        // resolve (size -> pool idx), count deployed slots
+        let mut slots: Vec<(usize, usize, f64)> = Vec::new(); // (gpu, model_idx, mem)
+        for (k, plan) in plans.iter().enumerate().take(self.gpus.len()) {
+            for &(size, mem) in plan {
+                if let Some(mi) = self.pool.iter().position(|m| m.size == size) {
+                    slots.push((k, mi, mem));
+                }
+            }
+        }
+        let per = if slots.is_empty() { 0 } else { n_queries / slots.len() };
+        let mut rem = n_queries.saturating_sub(per * slots.len());
+        let mut gpus: Vec<GpuPlan> = (0..self.gpus.len()).map(|_| GpuPlan::default()).collect();
+        for &(k, mi, mem) in &slots {
+            let extra = if rem > 0 {
+                rem -= 1;
+                1
+            } else {
+                0
+            };
+            gpus[k].assignments.push(ModelAssignment {
+                model_idx: mi,
+                mem,
+                queries: per + extra,
+            });
+        }
+        // reload accounting for fixed plans too
+        for (k, g) in gpus.iter_mut().enumerate() {
+            let target: BTreeMap<String, f64> = g
+                .assignments
+                .iter()
+                .map(|a| (self.pool[a.model_idx].name.clone(), a.mem))
+                .collect();
+            g.reload_s = self.gpus[k].reconfig_time(&target, &|name| {
+                self.pool
+                    .iter()
+                    .find(|m| m.name == name)
+                    .map(|m| m.load_time_s)
+                    .unwrap_or(0.0)
+            });
+        }
+        let _ = budget_s;
+        NodePlan { gpus, objective: 0.0, overflow: 0 }
+    }
+
+    /// Latency/drop-only dry run (used by capacity profiling). Returns the
+    /// drop rate for `n_queries` within SLO `l_s`.
+    pub fn dry_run_drop_rate(&self, n_queries: usize, l_s: f64) -> f64 {
+        if n_queries == 0 {
+            return 0.0;
+        }
+        let ts = self.search_model.search_time(n_queries, self.corpus_size());
+        let budget = l_s - ts;
+        if budget <= 0.0 {
+            return 1.0;
+        }
+        let plan = self.plan_slot(n_queries, budget);
+        let mut dropped = plan.overflow;
+        let mut served_counted = 0usize;
+        for (k, g) in plan.gpus.iter().enumerate() {
+            for a in &g.assignments {
+                if a.queries == 0 {
+                    continue;
+                }
+                served_counted += a.queries;
+                let m = &self.pool[a.model_idx];
+                let lat = self.gts[k].latency(m, a.queries as f64, a.mem);
+                let total = g.reload_s + lat;
+                if total > budget {
+                    // queries complete uniformly across the batch; the tail
+                    // beyond the budget is dropped
+                    let frac_ok = ((budget - g.reload_s).max(0.0) / lat).min(1.0);
+                    dropped += a.queries - (a.queries as f64 * frac_ok).floor() as usize;
+                }
+            }
+        }
+        let total = served_counted + plan.overflow;
+        if total == 0 {
+            return 1.0;
+        }
+        dropped as f64 / total as f64
+    }
+
+    /// Serve one slot: the full retrieve → generate → score path.
+    ///
+    /// `queries` are QA ids routed to this node; `slo_s` is L^t.
+    pub fn serve_slot(
+        &mut self,
+        ds: &SyntheticDataset,
+        ev: &Evaluator,
+        embedder: &Embedder,
+        query_embs: Option<&[Vec<f32>]>,
+        queries: &[usize],
+        slo_s: f64,
+    ) -> NodeSlotReport {
+        let n = queries.len();
+        let ts = self.search_model.search_time(n, self.corpus_size());
+        let budget = slo_s - ts;
+        let mut report = NodeSlotReport {
+            search_time_s: ts,
+            per_model_queries: vec![0; self.pool.len()],
+            per_model_mem: vec![0.0; self.pool.len()],
+            ..Default::default()
+        };
+        if n == 0 {
+            return report;
+        }
+        if budget <= 0.0 {
+            // everything is dropped before inference
+            for &q in queries {
+                report.outcomes.push(QueryOutcome {
+                    qa_id: q,
+                    node: self.id,
+                    model_idx: None,
+                    dropped: true,
+                    rel: 0.0,
+                    scores: QualityScores::zeros(),
+                    feedback: 0.0,
+                    latency_s: slo_s,
+                });
+            }
+            return report;
+        }
+
+        let plan = self.plan_slot(n, budget);
+        // apply deployments
+        let targets = plan.target_maps(&self.pool);
+        for (gpu, target) in self.gpus.iter_mut().zip(targets) {
+            gpu.apply(target);
+        }
+        for g in &plan.gpus {
+            for a in &g.assignments {
+                report.per_model_queries[a.model_idx] += a.queries;
+                report.per_model_mem[a.model_idx] += a.mem;
+            }
+        }
+
+        // assign query list positions to (gpu, assignment) in plan order
+        let mut cursor = 0usize;
+        for (k, g) in plan.gpus.iter().enumerate() {
+            for a in &g.assignments {
+                if a.queries == 0 {
+                    continue;
+                }
+                let m = &self.pool[a.model_idx];
+                let lat = self.gts[k].measure(m, a.queries as f64, a.mem, &mut self.rng);
+                let makespan = g.reload_s + lat;
+                report.makespan_s = report.makespan_s.max(makespan + ts);
+                let take = a.queries.min(n - cursor);
+                for j in 0..take {
+                    let qa_id = queries[cursor + j];
+                    let qa = &ds.qa_pairs[qa_id];
+                    // completion of the j-th query in this batch
+                    let done = g.reload_s + lat * (j + 1) as f64 / a.queries as f64;
+                    if done > budget {
+                        report.outcomes.push(QueryOutcome {
+                            qa_id,
+                            node: self.id,
+                            model_idx: Some(a.model_idx),
+                            dropped: true,
+                            rel: 0.0,
+                            scores: QualityScores::zeros(),
+                            feedback: 0.0,
+                            latency_s: slo_s,
+                        });
+                        continue;
+                    }
+                    // retrieval (for real, over the node's index)
+                    let emb_storage;
+                    let emb: &[f32] = match query_embs {
+                        Some(embs) => &embs[cursor + j],
+                        None => {
+                            emb_storage = embedder.embed(&qa.query);
+                            &emb_storage
+                        }
+                    };
+                    let rel = self.retrieval_relevance(emb, qa.gold_doc);
+                    let mut qrng = self.rng.fork(qa_id as u64);
+                    let gen = generate(ds, qa, m, rel, &mut qrng);
+                    let scores = ev.score_tokens(&gen, &qa.answer_tokens);
+                    let feedback = ev.feedback(&gen, &qa.answer_tokens, 1.0, 0.5);
+                    report.outcomes.push(QueryOutcome {
+                        qa_id,
+                        node: self.id,
+                        model_idx: Some(a.model_idx),
+                        dropped: false,
+                        rel,
+                        scores,
+                        feedback,
+                        latency_s: ts + done,
+                    });
+                }
+                cursor += take;
+            }
+        }
+        // overflow beyond plan capacity: dropped
+        while cursor < n {
+            report.outcomes.push(QueryOutcome {
+                qa_id: queries[cursor],
+                node: self.id,
+                model_idx: None,
+                dropped: true,
+                rel: 0.0,
+                scores: QualityScores::zeros(),
+                feedback: 0.0,
+                latency_s: slo_s,
+            });
+            cursor += 1;
+        }
+        report
+    }
+
+    /// Top-k retrieval relevance for a query embedding against the gold
+    /// document: 1.0 when the gold chunk is retrieved, otherwise partial
+    /// credit proportional to the best retrieved chunk's similarity to the
+    /// gold chunk (cross-domain documents still help a little).
+    pub fn retrieval_relevance(&self, query_emb: &[f32], gold_doc: usize) -> f64 {
+        let hits = self.index.search(query_emb, self.top_k);
+        if hits.iter().any(|h| h.id == gold_doc) {
+            return 1.0;
+        }
+        // partial credit: similarity of best retrieved doc to the gold doc
+        let gold_emb = &self.doc_embs[gold_doc];
+        let best = hits
+            .iter()
+            .map(|h| cosine(&self.doc_embs[h.id], gold_emb) as f64)
+            .fold(0.0, f64::max);
+        (0.55 * best.clamp(0.0, 1.0)).clamp(0.0, 0.95)
+    }
+}

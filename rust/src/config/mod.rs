@@ -1,0 +1,361 @@
+//! Experiment / cluster configuration.
+//!
+//! Typed configuration with paper-testbed presets, loadable from the
+//! TOML-subset parser (`configs/*.toml`) so deployments are declarative
+//! like vLLM/MaxText config files.
+
+use crate::llmsim::model::ModelSize;
+use crate::util::toml::TomlDoc;
+use crate::workload::SkewPattern;
+use anyhow::{anyhow, Result};
+
+/// Which dataset family an experiment uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    DomainQa,
+    Ppc,
+}
+
+/// Per-node static configuration.
+#[derive(Clone, Debug)]
+pub struct NodeConfig {
+    pub name: String,
+    /// One entry per GPU: relative speed factor.
+    pub gpu_speeds: Vec<f64>,
+    /// Model size classes available in this node's pool.
+    pub pool: Vec<ModelSize>,
+    /// Primary domains for the dual-distribution partition.
+    pub primary_domains: Vec<usize>,
+    /// Documents stored (before overlap scaling).
+    pub corpus_docs: usize,
+}
+
+/// Intra-node scheduling strategy (Table III rows).
+#[derive(Clone, Debug, PartialEq)]
+pub enum IntraStrategy {
+    /// The paper's solver (Eq. 25–29).
+    Solver,
+    /// Fixed deployment: per GPU, a list of (size, memory fraction);
+    /// queries split evenly among deployed models.
+    Fixed(Vec<Vec<(ModelSize, f64)>>),
+}
+
+impl IntraStrategy {
+    /// Table III baseline: small models only, full memory.
+    pub fn small_param(gpus: usize) -> Self {
+        IntraStrategy::Fixed(vec![vec![(ModelSize::Small, 1.0)]; gpus])
+    }
+    /// Mid models only.
+    pub fn mid_param(gpus: usize) -> Self {
+        IntraStrategy::Fixed(vec![vec![(ModelSize::Mid, 1.0)]; gpus])
+    }
+    /// Mixed-Param.1: small+mid on every GPU with fixed split.
+    pub fn mixed1(gpus: usize) -> Self {
+        IntraStrategy::Fixed(vec![
+            vec![(ModelSize::Small, 0.35), (ModelSize::Mid, 0.65)];
+            gpus
+        ])
+    }
+    /// Mixed-Param.2: GPU0 small+mid; further GPUs large-only.
+    pub fn mixed2(gpus: usize) -> Self {
+        let mut plans = vec![vec![(ModelSize::Small, 0.35), (ModelSize::Mid, 0.65)]];
+        for _ in 1..gpus {
+            plans.push(vec![(ModelSize::Large, 1.0)]);
+        }
+        IntraStrategy::Fixed(plans)
+    }
+}
+
+/// Query-allocation strategy at the coordinator (Table II rows + ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocatorKind {
+    Random,
+    /// Route by the query's true domain to the node owning it.
+    Domain,
+    /// Perfect knowledge of gold-document locations.
+    Oracle,
+    /// LinUCB contextual bandit.
+    Mab,
+    /// The paper's PPO online query identification.
+    Ppo,
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    pub dataset: DatasetKind,
+    pub qa_per_domain: usize,
+    pub docs_per_domain: usize,
+    /// i.i.d. share s of the dual-distribution partition.
+    pub s_iid: f64,
+    /// Overlap factor scaling node corpora.
+    pub overlap: f64,
+    pub nodes: Vec<NodeConfig>,
+    /// Latency SLO per slot (seconds).
+    pub slo_s: f64,
+    pub queries_per_slot: usize,
+    pub slots: usize,
+    pub skew: SkewPattern,
+    /// Retrieval depth (paper: top-5).
+    pub top_k: usize,
+    pub allocator: AllocatorKind,
+    pub intra: IntraStrategy,
+    /// Enable Algorithm-1 capacity-aware reassignment (Fig. 5 ablation).
+    pub inter_enabled: bool,
+    /// PPO buffer threshold / epochs.
+    pub ppo_buffer: usize,
+    pub ppo_epochs: usize,
+}
+
+impl ExperimentConfig {
+    /// The paper's testbed: 4 nodes — two with a single GPU, two with dual
+    /// GPUs (§V-A), six domains split 3+3 across node groups.
+    pub fn paper_cluster(dataset: DatasetKind) -> Self {
+        let nodes = vec![
+            NodeConfig {
+                name: "edge-a".into(),
+                gpu_speeds: vec![1.0],
+                pool: vec![ModelSize::Small, ModelSize::Mid, ModelSize::Large],
+                primary_domains: vec![0, 1, 2],
+                corpus_docs: 260,
+            },
+            NodeConfig {
+                name: "edge-b".into(),
+                gpu_speeds: vec![0.95],
+                pool: vec![ModelSize::Small, ModelSize::Mid, ModelSize::Large],
+                primary_domains: vec![3, 4, 5],
+                corpus_docs: 260,
+            },
+            NodeConfig {
+                name: "edge-c".into(),
+                gpu_speeds: vec![1.05, 1.0],
+                pool: vec![ModelSize::Small, ModelSize::Mid, ModelSize::Large],
+                primary_domains: vec![1, 3, 5],
+                corpus_docs: 300,
+            },
+            NodeConfig {
+                name: "edge-d".into(),
+                gpu_speeds: vec![1.0, 0.9],
+                pool: vec![ModelSize::Small, ModelSize::Mid, ModelSize::Large],
+                primary_domains: vec![0, 2, 4],
+                corpus_docs: 300,
+            },
+        ];
+        ExperimentConfig {
+            seed: 42,
+            dataset,
+            qa_per_domain: 120,
+            docs_per_domain: 150,
+            s_iid: 0.2,
+            overlap: 0.15,
+            nodes,
+            slo_s: 15.0,
+            queries_per_slot: 1000,
+            slots: 12,
+            skew: SkewPattern::Dirichlet { alpha: 0.6 },
+            top_k: 5,
+            allocator: AllocatorKind::Ppo,
+            intra: IntraStrategy::Solver,
+            inter_enabled: true,
+            ppo_buffer: 256,
+            ppo_epochs: 8,
+        }
+    }
+
+    /// The §II motivation testbed: 3 single-GPU nodes, one primary domain
+    /// each (60/20/20 corpus mix), LLaMA-3B only.
+    pub fn motivation_cluster() -> Self {
+        let mk = |i: usize, name: &str| NodeConfig {
+            name: name.into(),
+            gpu_speeds: vec![1.0],
+            pool: vec![ModelSize::Mid],
+            primary_domains: vec![i],
+            corpus_docs: 220,
+        };
+        ExperimentConfig {
+            seed: 7,
+            dataset: DatasetKind::DomainQa,
+            qa_per_domain: 150,
+            docs_per_domain: 150,
+            s_iid: 0.4, // 60% primary + 40% spread over the other two
+            overlap: 0.0,
+            nodes: vec![mk(3, "sports"), mk(2, "law"), mk(1, "finance")],
+            slo_s: 30.0,
+            queries_per_slot: 500,
+            slots: 3,
+            skew: SkewPattern::Balanced,
+            top_k: 5,
+            allocator: AllocatorKind::Oracle,
+            intra: IntraStrategy::Solver,
+            inter_enabled: true,
+            ppo_buffer: 128,
+            ppo_epochs: 6,
+        }
+    }
+
+    /// Load from a TOML file (see configs/paper.toml for the schema).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("toml: {e}"))?;
+        let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+        let root = &doc.root;
+        if let Some(v) = root.get("seed").and_then(|v| v.as_i64()) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = root.get("dataset").and_then(|v| v.as_str()) {
+            cfg.dataset = match v {
+                "ppc" | "PPC" => DatasetKind::Ppc,
+                _ => DatasetKind::DomainQa,
+            };
+        }
+        for (key, field) in [
+            ("qa_per_domain", &mut cfg.qa_per_domain as *mut usize),
+            ("docs_per_domain", &mut cfg.docs_per_domain as *mut usize),
+            ("queries_per_slot", &mut cfg.queries_per_slot as *mut usize),
+            ("slots", &mut cfg.slots as *mut usize),
+            ("top_k", &mut cfg.top_k as *mut usize),
+            ("ppo_buffer", &mut cfg.ppo_buffer as *mut usize),
+            ("ppo_epochs", &mut cfg.ppo_epochs as *mut usize),
+        ] {
+            if let Some(v) = root.get(key).and_then(|v| v.as_usize()) {
+                unsafe { *field = v };
+            }
+        }
+        if let Some(v) = root.get("slo_s").and_then(|v| v.as_f64()) {
+            cfg.slo_s = v;
+        }
+        if let Some(v) = root.get("s_iid").and_then(|v| v.as_f64()) {
+            cfg.s_iid = v;
+        }
+        if let Some(v) = root.get("overlap").and_then(|v| v.as_f64()) {
+            cfg.overlap = v;
+        }
+        if let Some(v) = root.get("allocator").and_then(|v| v.as_str()) {
+            cfg.allocator = match v {
+                "random" => AllocatorKind::Random,
+                "domain" => AllocatorKind::Domain,
+                "oracle" => AllocatorKind::Oracle,
+                "mab" => AllocatorKind::Mab,
+                _ => AllocatorKind::Ppo,
+            };
+        }
+        if let Some(v) = root.get("inter_enabled").and_then(|v| v.as_bool()) {
+            cfg.inter_enabled = v;
+        }
+        if let Some(nodes) = doc.arrays.get("nodes") {
+            cfg.nodes = nodes
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    let pool = t
+                        .get("pool")
+                        .and_then(|v| v.as_str_vec())
+                        .unwrap_or_else(|| vec!["small".into(), "mid".into(), "large".into()])
+                        .iter()
+                        .map(|s| match s.as_str() {
+                            "small" => ModelSize::Small,
+                            "mid" => ModelSize::Mid,
+                            _ => ModelSize::Large,
+                        })
+                        .collect();
+                    NodeConfig {
+                        name: t
+                            .get("name")
+                            .and_then(|v| v.as_str())
+                            .map(|s| s.to_string())
+                            .unwrap_or_else(|| format!("node-{i}")),
+                        gpu_speeds: t
+                            .get("gpu_speeds")
+                            .and_then(|v| v.as_f64_vec())
+                            .unwrap_or_else(|| vec![1.0]),
+                        pool,
+                        primary_domains: t
+                            .get("primary_domains")
+                            .and_then(|v| v.as_f64_vec())
+                            .map(|v| v.iter().map(|&x| x as usize).collect())
+                            .unwrap_or_default(),
+                        corpus_docs: t
+                            .get("corpus_docs")
+                            .and_then(|v| v.as_usize())
+                            .unwrap_or(250),
+                    }
+                })
+                .collect();
+        }
+        Ok(cfg)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_shape() {
+        let cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+        assert_eq!(cfg.nodes.len(), 4);
+        let gpus: Vec<usize> = cfg.nodes.iter().map(|n| n.gpu_speeds.len()).collect();
+        assert_eq!(gpus, vec![1, 1, 2, 2]);
+        // all six domains covered as primaries
+        let mut all: Vec<usize> =
+            cfg.nodes.iter().flat_map(|n| n.primary_domains.clone()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn motivation_cluster_shape() {
+        let cfg = ExperimentConfig::motivation_cluster();
+        assert_eq!(cfg.nodes.len(), 3);
+        assert!(cfg.nodes.iter().all(|n| n.pool == vec![ModelSize::Mid]));
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let text = r#"
+seed = 9
+dataset = "ppc"
+slo_s = 5.0
+queries_per_slot = 400
+allocator = "mab"
+inter_enabled = false
+
+[[nodes]]
+name = "n0"
+gpu_speeds = [1.0, 1.5]
+pool = ["small", "mid"]
+primary_domains = [0, 1, 2]
+corpus_docs = 100
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.dataset, DatasetKind::Ppc);
+        assert_eq!(cfg.slo_s, 5.0);
+        assert_eq!(cfg.allocator, AllocatorKind::Mab);
+        assert!(!cfg.inter_enabled);
+        assert_eq!(cfg.nodes.len(), 1);
+        assert_eq!(cfg.nodes[0].gpu_speeds, vec![1.0, 1.5]);
+        assert_eq!(cfg.nodes[0].pool, vec![ModelSize::Small, ModelSize::Mid]);
+    }
+
+    #[test]
+    fn fixed_strategies_shapes() {
+        match IntraStrategy::mixed2(2) {
+            IntraStrategy::Fixed(plans) => {
+                assert_eq!(plans.len(), 2);
+                assert_eq!(plans[0].len(), 2);
+                assert_eq!(plans[1][0].0, ModelSize::Large);
+            }
+            _ => panic!(),
+        }
+        match IntraStrategy::small_param(1) {
+            IntraStrategy::Fixed(plans) => assert_eq!(plans[0][0].0, ModelSize::Small),
+            _ => panic!(),
+        }
+    }
+}

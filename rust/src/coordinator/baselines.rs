@@ -1,0 +1,133 @@
+//! Baseline query allocators (paper §V-B):
+//! Random, Domain (static domain→node routing), Oracle (perfect knowledge
+//! of gold-document locations), and MAB (LinUCB).
+
+use crate::bandit::LinUcb;
+use crate::cluster::node::QueryOutcome;
+use crate::config::{AllocatorKind, ExperimentConfig};
+use crate::corpus::synth::SyntheticDataset;
+use crate::util::rng::Rng;
+
+/// A non-PPO allocator.
+pub struct BaselineAllocator {
+    pub kind: AllocatorKind,
+    /// domain -> preferred node (for Domain allocation).
+    domain_to_node: Vec<usize>,
+    /// QA id -> nodes holding its gold doc (for Oracle).
+    gold_locs: Vec<Vec<usize>>,
+    mab: Option<LinUcb>,
+    n_nodes: usize,
+}
+
+impl BaselineAllocator {
+    pub fn new(
+        kind: AllocatorKind,
+        cfg: &ExperimentConfig,
+        gold_locs: &[Vec<usize>],
+        seed: u64,
+    ) -> Self {
+        // Domain routing table: a domain goes to the first node listing it
+        // as primary (ties broken by order, like a static registry).
+        let nd = 6;
+        let mut domain_to_node = vec![0usize; nd];
+        for d in 0..nd {
+            domain_to_node[d] = cfg
+                .nodes
+                .iter()
+                .position(|n| n.primary_domains.contains(&d))
+                .unwrap_or(d % cfg.nodes.len());
+        }
+        let mab = if kind == AllocatorKind::Mab {
+            Some(LinUcb::new(cfg.num_nodes(), 0.6, seed))
+        } else {
+            None
+        };
+        BaselineAllocator {
+            kind,
+            domain_to_node,
+            gold_locs: gold_locs.to_vec(),
+            mab,
+            n_nodes: cfg.num_nodes(),
+        }
+    }
+
+    /// Assign each query to a node.
+    pub fn assign(
+        &mut self,
+        ds: &SyntheticDataset,
+        qa_ids: &[usize],
+        embs: &[Vec<f32>],
+        capacities: &[f64],
+        capacity_aware: bool,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_nodes];
+        // overload scaling as in Algorithm 1 for fairness
+        let total_cap: f64 = capacities.iter().sum();
+        let caps: Vec<f64> = if (qa_ids.len() as f64) > total_cap && total_cap > 0.0 {
+            let excess = qa_ids.len() as f64 - total_cap;
+            capacities.iter().map(|&c| c + c / total_cap * excess).collect()
+        } else if total_cap <= 0.0 {
+            vec![f64::INFINITY; self.n_nodes]
+        } else {
+            capacities.to_vec()
+        };
+        qa_ids
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| {
+                let prefer = match self.kind {
+                    AllocatorKind::Random => rng.below(self.n_nodes),
+                    AllocatorKind::Domain => self.domain_to_node[ds.qa_pairs[q].domain],
+                    AllocatorKind::Oracle => {
+                        // least-loaded node (relative to capacity) holding
+                        // the gold doc; falls back to global least-loaded
+                        let locs = &self.gold_locs[q];
+                        let pick_least = |cands: &[usize], counts: &[usize]| {
+                            *cands
+                                .iter()
+                                .min_by(|&&a, &&b| {
+                                    let la = counts[a] as f64 / caps[a].max(1.0);
+                                    let lb = counts[b] as f64 / caps[b].max(1.0);
+                                    la.partial_cmp(&lb).unwrap()
+                                })
+                                .unwrap()
+                        };
+                        if locs.is_empty() {
+                            let all: Vec<usize> = (0..self.n_nodes).collect();
+                            pick_least(&all, &counts)
+                        } else {
+                            pick_least(locs, &counts)
+                        }
+                    }
+                    AllocatorKind::Mab => self.mab.as_ref().unwrap().choose(&embs[i]),
+                    AllocatorKind::Ppo => unreachable!(),
+                };
+                let a = if capacity_aware && (counts[prefer] as f64) >= caps[prefer] {
+                    // spill to the least-loaded node with residual capacity
+                    (0..self.n_nodes)
+                        .filter(|&j| (counts[j] as f64) < caps[j])
+                        .min_by(|&a, &b| {
+                            let la = counts[a] as f64 / caps[a].max(1.0);
+                            let lb = counts[b] as f64 / caps[b].max(1.0);
+                            la.partial_cmp(&lb).unwrap()
+                        })
+                        .unwrap_or(prefer)
+                } else {
+                    prefer
+                };
+                counts[a] += 1;
+                a
+            })
+            .collect()
+    }
+
+    /// Post-slot learning signal (MAB only).
+    pub fn observe(&mut self, embs: &[Vec<f32>], assignment: &[usize], outcomes: &[QueryOutcome]) {
+        if let Some(mab) = &mut self.mab {
+            for ((emb, &a), out) in embs.iter().zip(assignment).zip(outcomes) {
+                mab.update(emb, a, out.feedback);
+            }
+        }
+    }
+}

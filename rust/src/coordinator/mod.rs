@@ -1,0 +1,348 @@
+//! The global coordinator (paper Fig. 4): per slot it ① encodes queries
+//! and computes matching probabilities via the online identifier,
+//! routes them with the inter-node scheduler, ② lets nodes retrieve and
+//! ③ serve with their intra-node plans, then ④ feeds quality metrics back
+//! into the PPO policy — the full closed loop.
+//!
+//! [`baselines`] hosts the alternative allocators (Random / Domain /
+//! Oracle / MAB) used across the paper's comparisons.
+
+pub mod baselines;
+
+use std::sync::Arc;
+
+use crate::cluster::node::{EdgeNode, QueryOutcome};
+use crate::config::{AllocatorKind, DatasetKind, ExperimentConfig, IntraStrategy};
+use crate::corpus::partition::{gold_locations, partition_corpus, NodeCorpusSpec};
+use crate::corpus::synth::SyntheticDataset;
+use crate::corpus::{build_dataset, domainqa_spec, ppc_spec};
+use crate::metrics::{Evaluator, QualityScores};
+use crate::policy::ppo::{Backend, OnlinePolicy, PpoConfig};
+use crate::router::capacity::{profile_capacity, CapacityModel};
+use crate::router::inter::inter_node_schedule;
+use crate::text::embed::{Embedder, EMBED_DIM};
+use crate::util::rng::Rng;
+use crate::workload::trace::{domain_mix, sample_slot_queries};
+use crate::Result;
+use baselines::BaselineAllocator;
+
+/// Aggregated result of one slot.
+#[derive(Clone, Debug, Default)]
+pub struct SlotReport {
+    pub queries: usize,
+    pub mean_scores: QualityScores,
+    pub drop_rate: f64,
+    /// Makespan across nodes (max node completion time, Eq. 4 LHS).
+    pub latency_s: f64,
+    /// p_j^t per node.
+    pub proportions: Vec<f64>,
+    /// Per model-size (small/mid/large): query share and memory share.
+    pub size_query_share: [f64; 3],
+    pub size_mem_share: [f64; 3],
+    /// All individual outcomes (for fine-grained analysis).
+    pub outcomes: Vec<QueryOutcome>,
+    /// PPO update stats if an update ran this slot.
+    pub ppo_updates: usize,
+}
+
+/// The CoEdge-RAG coordinator.
+pub struct Coordinator {
+    pub cfg: ExperimentConfig,
+    pub ds: SyntheticDataset,
+    pub nodes: Vec<EdgeNode>,
+    pub capacities: Vec<CapacityModel>,
+    pub embedder: Embedder,
+    pub evaluator: Evaluator,
+    /// Gold-doc locations per QA id (Oracle + diagnostics).
+    pub gold_locs: Vec<Vec<usize>>,
+    pub policy: Option<OnlinePolicy>,
+    pub baseline: Option<BaselineAllocator>,
+    rng: Rng,
+    slot_idx: usize,
+}
+
+impl Coordinator {
+    /// Build the full system from a config: dataset, partition, nodes,
+    /// capacity profiles, and the selected allocator.
+    pub fn build(cfg: ExperimentConfig, backend: Backend) -> Result<Coordinator> {
+        let spec = match cfg.dataset {
+            DatasetKind::DomainQa => domainqa_spec(cfg.qa_per_domain, cfg.docs_per_domain),
+            DatasetKind::Ppc => ppc_spec(cfg.qa_per_domain, cfg.docs_per_domain),
+        };
+        let ds = build_dataset(&spec, cfg.seed);
+        let embedder = Embedder::default();
+        let evaluator = Evaluator::default();
+        let nd = ds.num_domains();
+
+        // partition corpora (dual-distribution, paper §V-A)
+        let specs: Vec<NodeCorpusSpec> = cfg
+            .nodes
+            .iter()
+            .map(|n| NodeCorpusSpec::dual(n.corpus_docs, nd, &n.primary_domains, cfg.s_iid))
+            .collect();
+        let parts = partition_corpus(&ds, &specs, cfg.overlap, cfg.seed ^ 0x9A87);
+        let gold_locs = gold_locations(&ds, &parts);
+
+        // embed all documents once (shared cache)
+        let doc_embs: Arc<Vec<Vec<f32>>> = Arc::new(
+            ds.documents.iter().map(|d| embedder.embed(&d.text())).collect(),
+        );
+
+        let mut nodes: Vec<EdgeNode> = cfg
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, ncfg)| {
+                EdgeNode::build(
+                    i,
+                    ncfg,
+                    &ds,
+                    parts[i].clone(),
+                    Arc::clone(&doc_embs),
+                    &evaluator,
+                    cfg.intra.clone(),
+                    cfg.top_k,
+                    cfg.seed ^ 0x0D0E ^ i as u64,
+                )
+            })
+            .collect();
+
+        // capacity profiling (initialization phase, §IV-B)
+        let capacities: Vec<CapacityModel> = nodes
+            .iter()
+            .map(|n| profile_capacity(|q, l| n.dry_run_drop_rate(q, l), 0.01))
+            .collect();
+
+        // allocator
+        let mut policy = None;
+        let mut baseline = None;
+        match cfg.allocator {
+            AllocatorKind::Ppo => {
+                let pcfg = PpoConfig {
+                    buffer_threshold: cfg.ppo_buffer,
+                    epochs: cfg.ppo_epochs,
+                    seed: cfg.seed ^ 0x9090,
+                    ..Default::default()
+                };
+                policy = Some(OnlinePolicy::new(cfg.num_nodes(), pcfg, backend));
+            }
+            kind => {
+                baseline = Some(BaselineAllocator::new(kind, &cfg, &gold_locs, cfg.seed ^ 0xBA5E));
+            }
+        }
+        // nudge node rngs apart
+        for n in nodes.iter_mut() {
+            let _ = n.corpus_size();
+        }
+        Ok(Coordinator {
+            rng: Rng::new(cfg.seed ^ 0xC00D),
+            cfg,
+            ds,
+            nodes,
+            capacities,
+            embedder,
+            evaluator,
+            gold_locs,
+            policy,
+            baseline,
+            slot_idx: 0,
+        })
+    }
+
+    /// Sample one slot's queries per the configured skew pattern.
+    pub fn sample_queries(&mut self, count: usize) -> Vec<usize> {
+        let mix = domain_mix(&self.cfg.skew, self.ds.num_domains(), &mut self.rng);
+        sample_slot_queries(&self.ds, &mix, count, &mut self.rng)
+    }
+
+    /// Run one complete slot for the given QA ids.
+    pub fn run_slot(&mut self, qa_ids: &[usize]) -> Result<SlotReport> {
+        let slo = self.cfg.slo_s;
+        let n_nodes = self.nodes.len();
+        let b = qa_ids.len();
+        self.slot_idx += 1;
+
+        // ① encode queries
+        let embs: Vec<Vec<f32>> = qa_ids
+            .iter()
+            .map(|&q| self.embedder.embed(&self.ds.qa_pairs[q].query))
+            .collect();
+
+        // identification + inter-node routing
+        let caps: Vec<f64> = self.capacities.iter().map(|c| c.eval(slo)).collect();
+        let (assignment, old_logps, probs_flat) = match (&mut self.policy, &mut self.baseline) {
+            (Some(policy), _) => {
+                let mut flat = Vec::with_capacity(b * EMBED_DIM);
+                for e in &embs {
+                    flat.extend_from_slice(e);
+                }
+                let probs = policy.probs(&flat, b)?;
+                if self.cfg.inter_enabled {
+                    let res = inter_node_schedule(&probs, n_nodes, &caps, &mut self.rng);
+                    // behavior logp for PPO: probability of the final node
+                    let logps: Vec<f32> = res
+                        .assignment
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &a)| probs[i * n_nodes + a].max(1e-12).ln())
+                        .collect();
+                    (res.assignment, logps, probs)
+                } else {
+                    // ablation: pure probability sampling, no capacity check
+                    let mut assignment = Vec::with_capacity(b);
+                    let mut logps = Vec::with_capacity(b);
+                    for i in 0..b {
+                        let row = &probs[i * n_nodes..(i + 1) * n_nodes];
+                        let (a, lp) = policy.sample_action(row);
+                        assignment.push(a);
+                        logps.push(lp);
+                    }
+                    (assignment, logps, probs)
+                }
+            }
+            (None, Some(base)) => {
+                let assignment = base.assign(
+                    &self.ds,
+                    qa_ids,
+                    &embs,
+                    &caps,
+                    self.cfg.inter_enabled,
+                    &mut self.rng,
+                );
+                (assignment, Vec::new(), Vec::new())
+            }
+            _ => unreachable!("coordinator without allocator"),
+        };
+        let _ = probs_flat;
+
+        // dispatch per node (preserving query order within node)
+        let mut per_node: Vec<Vec<usize>> = vec![Vec::new(); n_nodes]; // indices into qa_ids
+        for (i, &a) in assignment.iter().enumerate() {
+            per_node[a].push(i);
+        }
+
+        // ②③ serve at each node — nodes are independent, so they serve
+        // in parallel on scoped threads (§Perf: ~2.5× on the 4-node slot)
+        let inputs: Vec<(Vec<usize>, Vec<Vec<f32>>)> = per_node
+            .iter()
+            .map(|idxs| {
+                (
+                    idxs.iter().map(|&i| qa_ids[i]).collect(),
+                    idxs.iter().map(|&i| embs[i].clone()).collect(),
+                )
+            })
+            .collect();
+        let node_reports: Vec<crate::cluster::node::NodeSlotReport> = {
+            let ds = &self.ds;
+            let ev = &self.evaluator;
+            let em = &self.embedder;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .nodes
+                    .iter_mut()
+                    .zip(&inputs)
+                    .map(|(node, (qids, nembs))| {
+                        scope.spawn(move || {
+                            node.serve_slot(ds, ev, em, Some(nembs), qids, slo)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("node thread")).collect()
+            })
+        };
+        let mut outcomes_by_pos: Vec<Option<QueryOutcome>> = vec![None; b];
+        let mut latency_s = 0.0f64;
+        let mut size_queries = [0usize; 3];
+        let mut size_mem = [0.0f64; 3];
+        for (nid, (idxs, report)) in per_node.iter().zip(node_reports).enumerate() {
+            latency_s = latency_s.max(report.makespan_s);
+            for (mi, m) in self.nodes[nid].pool.iter().enumerate() {
+                let si = m.size as usize;
+                size_queries[si] += report.per_model_queries[mi];
+                size_mem[si] += report.per_model_mem[mi];
+            }
+            for (pos_in_node, out) in report.outcomes.into_iter().enumerate() {
+                let orig = idxs[pos_in_node];
+                outcomes_by_pos[orig] = Some(out);
+            }
+        }
+        let outcomes: Vec<QueryOutcome> =
+            outcomes_by_pos.into_iter().map(|o| o.expect("outcome")).collect();
+
+        // ④ feedback
+        let mut ppo_updates = 0;
+        if let Some(policy) = &mut self.policy {
+            for (i, out) in outcomes.iter().enumerate() {
+                let fb = out.feedback;
+                if policy
+                    .record(&embs[i], assignment[i], old_logps[i], fb)?
+                    .is_some()
+                {
+                    ppo_updates += 1;
+                }
+            }
+        }
+        if let Some(base) = &mut self.baseline {
+            base.observe(&embs, &assignment, &outcomes);
+        }
+
+        // aggregate
+        let drop_rate =
+            outcomes.iter().filter(|o| o.dropped).count() as f64 / b.max(1) as f64;
+        let all_scores: Vec<QualityScores> = outcomes.iter().map(|o| o.scores).collect();
+        let total_q: usize = size_queries.iter().sum();
+        let total_m: f64 = size_mem.iter().sum();
+        let proportions = (0..n_nodes)
+            .map(|nid| per_node[nid].len() as f64 / b.max(1) as f64)
+            .collect();
+        Ok(SlotReport {
+            queries: b,
+            mean_scores: QualityScores::mean(&all_scores),
+            drop_rate,
+            latency_s,
+            proportions,
+            size_query_share: std::array::from_fn(|i| {
+                if total_q == 0 { 0.0 } else { size_queries[i] as f64 / total_q as f64 }
+            }),
+            size_mem_share: std::array::from_fn(|i| {
+                if total_m == 0.0 { 0.0 } else { size_mem[i] / total_m }
+            }),
+            outcomes,
+            ppo_updates,
+        })
+    }
+
+    /// Run `slots` slots of `queries_per_slot`, returning all reports.
+    pub fn run(&mut self, slots: usize) -> Result<Vec<SlotReport>> {
+        let mut reports = Vec::with_capacity(slots);
+        for _ in 0..slots {
+            let qids = self.sample_queries(self.cfg.queries_per_slot);
+            reports.push(self.run_slot(&qids)?);
+        }
+        Ok(reports)
+    }
+
+    /// Mean scores over the last `k` reports (post-warmup evaluation).
+    pub fn tail_mean(reports: &[SlotReport], k: usize) -> QualityScores {
+        let tail: Vec<QualityScores> = reports
+            .iter()
+            .rev()
+            .take(k)
+            .map(|r| r.mean_scores)
+            .collect();
+        QualityScores::mean(&tail)
+    }
+}
+
+/// Swap the intra-node strategy on all nodes (used by Table III benches).
+impl Coordinator {
+    pub fn set_intra_strategy(&mut self, s: IntraStrategy) {
+        self.cfg.intra = s.clone();
+        for n in self.nodes.iter_mut() {
+            n.strategy = s.clone();
+        }
+    }
+    pub fn set_slo(&mut self, slo_s: f64) {
+        self.cfg.slo_s = slo_s;
+    }
+}

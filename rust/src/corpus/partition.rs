@@ -1,0 +1,212 @@
+//! Edge-data partitioning (paper §V-A "Edge-data Partition").
+//!
+//! Dual-distribution paradigm: s% of each node's corpus is i.i.d. across
+//! all domains, the remaining (100−s)% comes from the node's primary
+//! domains; an overlap factor scales both portions, creating controlled
+//! dataset intersections between nodes (cross-node knowledge sharing).
+
+use super::synth::SyntheticDataset;
+use crate::util::rng::Rng;
+
+/// Per-node corpus specification.
+#[derive(Clone, Debug)]
+pub struct NodeCorpusSpec {
+    /// Number of documents the node stores (before overlap scaling).
+    pub docs: usize,
+    /// Mixture weights over domains (need not be normalized).
+    pub domain_weights: Vec<f64>,
+}
+
+impl NodeCorpusSpec {
+    /// The paper's dual-distribution mixture: `s_iid` uniform over all
+    /// domains + (1−s_iid) uniform over `primaries`.
+    pub fn dual(docs: usize, num_domains: usize, primaries: &[usize], s_iid: f64) -> Self {
+        let mut w = vec![s_iid / num_domains as f64; num_domains];
+        for &p in primaries {
+            w[p] += (1.0 - s_iid) / primaries.len() as f64;
+        }
+        NodeCorpusSpec { docs, domain_weights: w }
+    }
+
+    /// Motivation-style mixture (§II): one primary domain with fraction
+    /// `primary_frac`, remainder split evenly over the others.
+    pub fn motivation(docs: usize, num_domains: usize, primary: usize, primary_frac: f64) -> Self {
+        let rest = (1.0 - primary_frac) / (num_domains - 1) as f64;
+        let mut w = vec![rest; num_domains];
+        w[primary] = primary_frac;
+        NodeCorpusSpec { docs, domain_weights: w }
+    }
+}
+
+/// Assign documents to nodes. Returns, per node, the list of document ids
+/// it stores. `overlap` ∈ [0, 1] scales every node's corpus size by
+/// (1 + overlap), increasing cross-node intersections.
+///
+/// Sampling is without replacement *within* a node and independent across
+/// nodes, so intersections arise naturally and grow with `overlap`.
+pub fn partition_corpus(
+    ds: &SyntheticDataset,
+    specs: &[NodeCorpusSpec],
+    overlap: f64,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    let nd = ds.num_domains();
+    let by_domain: Vec<Vec<usize>> = (0..nd).map(|d| ds.docs_of_domain(d)).collect();
+
+    let mut result = Vec::with_capacity(specs.len());
+    for (ni, spec) in specs.iter().enumerate() {
+        let mut node_rng = rng.fork(ni as u64 + 101);
+        let budget = ((spec.docs as f64) * (1.0 + overlap)).round() as usize;
+        let wsum: f64 = spec.domain_weights.iter().sum();
+        let mut docs: Vec<usize> = Vec::with_capacity(budget);
+        for d in 0..nd {
+            let share = spec.domain_weights[d] / wsum;
+            let want = ((budget as f64) * share).round() as usize;
+            let pool = &by_domain[d];
+            if pool.is_empty() || want == 0 {
+                continue;
+            }
+            // sample `want` distinct docs (or the whole pool if smaller)
+            let take = want.min(pool.len());
+            let mut idx: Vec<usize> = (0..pool.len()).collect();
+            node_rng.shuffle(&mut idx);
+            docs.extend(idx[..take].iter().map(|&i| pool[i]));
+        }
+        docs.sort_unstable();
+        docs.dedup();
+        result.push(docs);
+    }
+    result
+}
+
+/// For each QA pair, the set of nodes whose corpus contains its gold doc.
+/// (Used by the Oracle allocator and by tests.)
+pub fn gold_locations(ds: &SyntheticDataset, node_docs: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    let mut membership: Vec<Vec<bool>> = node_docs
+        .iter()
+        .map(|docs| {
+            let mut m = vec![false; ds.documents.len()];
+            for &d in docs {
+                m[d] = true;
+            }
+            m
+        })
+        .collect();
+    // (avoid realloc in loop)
+    let out = ds
+        .qa_pairs
+        .iter()
+        .map(|qa| {
+            (0..node_docs.len())
+                .filter(|&n| membership[n][qa.gold_doc])
+                .collect()
+        })
+        .collect();
+    membership.clear();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{build_dataset, domainqa_spec};
+
+    fn dataset() -> SyntheticDataset {
+        build_dataset(&domainqa_spec(30, 60), 3)
+    }
+
+    #[test]
+    fn dual_weights_sum_to_one() {
+        let s = NodeCorpusSpec::dual(100, 6, &[0, 1, 2], 0.3);
+        let sum: f64 = s.domain_weights.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        // primaries get the non-iid share
+        assert!(s.domain_weights[0] > s.domain_weights[5]);
+        assert!((s.domain_weights[0] - (0.05 + 0.7 / 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn motivation_weights() {
+        let s = NodeCorpusSpec::motivation(100, 3, 1, 0.6);
+        assert!((s.domain_weights[1] - 0.6).abs() < 1e-9);
+        assert!((s.domain_weights[0] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partition_respects_mixture() {
+        let ds = dataset();
+        let specs = vec![
+            NodeCorpusSpec::dual(200, 6, &[0, 1, 2], 0.2),
+            NodeCorpusSpec::dual(200, 6, &[3, 4, 5], 0.2),
+        ];
+        let parts = partition_corpus(&ds, &specs, 0.0, 11);
+        assert_eq!(parts.len(), 2);
+        // node 0 should hold many more docs from domains 0-2 than 3-5
+        let count = |docs: &[usize], lo: usize, hi: usize| {
+            docs.iter()
+                .filter(|&&d| {
+                    let dom = ds.documents[d].domain;
+                    dom >= lo && dom <= hi
+                })
+                .count()
+        };
+        assert!(count(&parts[0], 0, 2) > 3 * count(&parts[0], 3, 5));
+        assert!(count(&parts[1], 3, 5) > 3 * count(&parts[1], 0, 2));
+    }
+
+    #[test]
+    fn overlap_increases_intersection() {
+        let ds = dataset();
+        let specs = vec![
+            NodeCorpusSpec::dual(150, 6, &[0, 1, 2], 0.4),
+            NodeCorpusSpec::dual(150, 6, &[0, 1, 2], 0.4),
+        ];
+        let inter = |parts: &[Vec<usize>]| {
+            parts[0]
+                .iter()
+                .filter(|d| parts[1].binary_search(d).is_ok())
+                .count()
+        };
+        let lo = inter(&partition_corpus(&ds, &specs, 0.0, 13));
+        let hi = inter(&partition_corpus(&ds, &specs, 0.8, 13));
+        assert!(hi > lo, "overlap 0.8 ({hi}) should exceed 0.0 ({lo})");
+    }
+
+    #[test]
+    fn gold_locations_correct() {
+        let ds = dataset();
+        let specs = vec![
+            NodeCorpusSpec::dual(250, 6, &[0, 1, 2], 0.3),
+            NodeCorpusSpec::dual(250, 6, &[3, 4, 5], 0.3),
+        ];
+        let parts = partition_corpus(&ds, &specs, 0.2, 17);
+        let locs = gold_locations(&ds, &parts);
+        assert_eq!(locs.len(), ds.qa_pairs.len());
+        for (qa, nodes) in ds.qa_pairs.iter().zip(&locs) {
+            for &n in nodes {
+                assert!(parts[n].binary_search(&qa.gold_doc).is_ok());
+            }
+        }
+        // most gold docs of domains 0-2 should live on node 0
+        let d0_hits = ds
+            .qa_pairs
+            .iter()
+            .zip(&locs)
+            .filter(|(qa, nodes)| qa.domain < 3 && nodes.contains(&0))
+            .count();
+        let d0_total = ds.qa_pairs.iter().filter(|qa| qa.domain < 3).count();
+        assert!(d0_hits as f64 / d0_total as f64 > 0.5);
+    }
+
+    #[test]
+    fn no_duplicate_docs_within_node() {
+        let ds = dataset();
+        let specs = vec![NodeCorpusSpec::dual(300, 6, &[0, 1, 2], 0.5)];
+        let parts = partition_corpus(&ds, &specs, 0.5, 19);
+        let mut seen = std::collections::HashSet::new();
+        for &d in &parts[0] {
+            assert!(seen.insert(d), "duplicate doc {d}");
+        }
+    }
+}

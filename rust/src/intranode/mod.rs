@@ -1,0 +1,18 @@
+//! Adaptive intra-node scheduling (paper §IV-C).
+//!
+//! - [`latfit`]: fits the four candidate latency surrogates
+//!   (linear/quadratic/exponential/cubic) to measured (Q, R, latency)
+//!   samples and selects by held-out RMSE — Table I. The quadratic form is
+//!   the paper's Eq. 13.
+//! - [`quality`]: the offline "open-book" evaluation producing the static
+//!   per-(model, node) quality score Q_mn.
+//! - [`solver`]: deployment enumeration + memory-grid / greedy query
+//!   allocation solving the convex program Eq. 25–29, including the
+//!   LD/RLD/ULD reload accounting of Eq. 19–24.
+
+pub mod latfit;
+pub mod quality;
+pub mod solver;
+
+pub use latfit::{FitFamily, LatencyFit, LatencyProfiler};
+pub use solver::{solve_node, GpuPlan, ModelAssignment, NodePlan, SolverInput};

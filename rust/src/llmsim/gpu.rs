@@ -1,0 +1,129 @@
+//! GPU deployment state + reconfiguration cost accounting (paper Eq. 1–2
+//! and the LD/RLD/ULD decomposition of §IV-C).
+//!
+//! Unloading is free; loading a previously-undeployed model costs l_m;
+//! changing a persistent model's memory allocation forces a reload, also
+//! l_m. Loads are serialized per GPU, so the slot's reconfiguration cost
+//! is the sum over (re)loaded models — exactly Eq. 2 / Eq. 24.
+
+use std::collections::BTreeMap;
+
+/// Threshold below which a memory change is "no change" (the paper's ε₁).
+pub const RESOURCE_EPS: f64 = 0.01;
+
+/// A GPU's deployment state: model name → memory fraction.
+#[derive(Clone, Debug, Default)]
+pub struct GpuState {
+    /// Relative speed factor (heterogeneity).
+    pub speed: f64,
+    /// Deployed models: name → memory fraction R ∈ (0, 1].
+    pub deployed: BTreeMap<String, f64>,
+}
+
+impl GpuState {
+    pub fn new(speed: f64) -> Self {
+        GpuState { speed, deployed: BTreeMap::new() }
+    }
+
+    /// Total memory in use.
+    pub fn used_mem(&self) -> f64 {
+        self.deployed.values().sum()
+    }
+
+    /// Reconfiguration time to move to `target` given per-model load
+    /// times. Implements:
+    ///   ULD (unload):          free
+    ///   LD  (fresh load):      l_m
+    ///   RLD (resource change): l_m
+    pub fn reconfig_time(
+        &self,
+        target: &BTreeMap<String, f64>,
+        load_time: &dyn Fn(&str) -> f64,
+    ) -> f64 {
+        let mut t = 0.0;
+        for (name, &r_new) in target {
+            match self.deployed.get(name) {
+                None => t += load_time(name), // LD
+                Some(&r_old) => {
+                    if (r_new - r_old).abs() > RESOURCE_EPS {
+                        t += load_time(name); // RLD
+                    }
+                }
+            }
+        }
+        // unloads (in self but not target) are free
+        t
+    }
+
+    /// Apply a new deployment.
+    pub fn apply(&mut self, target: BTreeMap<String, f64>) {
+        self.deployed = target;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lt(name: &str) -> f64 {
+        match name {
+            "small" => 1.0,
+            "mid" => 2.0,
+            "large" => 4.0,
+            _ => 0.0,
+        }
+    }
+
+    fn map(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(n, r)| (n.to_string(), *r)).collect()
+    }
+
+    #[test]
+    fn fresh_loads_charged() {
+        let gpu = GpuState::new(1.0);
+        let t = gpu.reconfig_time(&map(&[("small", 0.3), ("mid", 0.5)]), &lt);
+        assert_eq!(t, 3.0);
+    }
+
+    #[test]
+    fn unload_free() {
+        let mut gpu = GpuState::new(1.0);
+        gpu.apply(map(&[("small", 0.3), ("mid", 0.5)]));
+        // drop mid entirely, keep small unchanged
+        let t = gpu.reconfig_time(&map(&[("small", 0.3)]), &lt);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn resource_change_reloads() {
+        let mut gpu = GpuState::new(1.0);
+        gpu.apply(map(&[("small", 0.3), ("mid", 0.5)]));
+        // grow small beyond eps, shrink mid beyond eps
+        let t = gpu.reconfig_time(&map(&[("small", 0.5), ("mid", 0.4)]), &lt);
+        assert_eq!(t, 3.0);
+    }
+
+    #[test]
+    fn tiny_changes_ignored() {
+        let mut gpu = GpuState::new(1.0);
+        gpu.apply(map(&[("small", 0.3)]));
+        let t = gpu.reconfig_time(&map(&[("small", 0.3 + RESOURCE_EPS * 0.5)]), &lt);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn swap_charges_only_load() {
+        let mut gpu = GpuState::new(1.0);
+        gpu.apply(map(&[("small", 1.0)]));
+        // replace small with large: unload free + load large
+        let t = gpu.reconfig_time(&map(&[("large", 1.0)]), &lt);
+        assert_eq!(t, 4.0);
+    }
+
+    #[test]
+    fn used_mem_sums() {
+        let mut gpu = GpuState::new(1.0);
+        gpu.apply(map(&[("a", 0.25), ("b", 0.5)]));
+        assert!((gpu.used_mem() - 0.75).abs() < 1e-12);
+    }
+}

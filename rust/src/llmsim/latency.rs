@@ -1,0 +1,197 @@
+//! Ground-truth latency model (what the paper measures on real GPUs; the
+//! intra-node scheduler only sees *samples* of it and fits the Eq. 13
+//! quadratic surrogate).
+//!
+//! Throughput saturates in memory; batch latency adds a superlinear
+//! contention term that grows when memory is tight — reproducing both
+//! Fig. 3b regimes ("resource starvation in larger models" and
+//! "underutilization of fast-response models").
+
+use super::model::ModelSpec;
+use crate::util::rng::Rng;
+
+/// Ground-truth latency for one (model, GPU) pair.
+#[derive(Clone, Debug)]
+pub struct LatencyGroundTruth {
+    /// GPU relative speed (heterogeneity across nodes).
+    pub gpu_speed: f64,
+    /// Measurement noise std as a fraction of the true latency.
+    pub noise_frac: f64,
+}
+
+impl Default for LatencyGroundTruth {
+    fn default() -> Self {
+        LatencyGroundTruth { gpu_speed: 1.0, noise_frac: 0.02 }
+    }
+}
+
+impl LatencyGroundTruth {
+    pub fn new(gpu_speed: f64) -> Self {
+        LatencyGroundTruth { gpu_speed, noise_frac: 0.02 }
+    }
+
+    /// Effective decode throughput (tokens/s) at memory fraction `r`.
+    /// Saturating: ~45% of peak at min memory (weights resident, little KV
+    /// headroom), ~100% at full memory — the response range vLLM shows
+    /// between tight and generous gpu_memory_utilization settings.
+    pub fn throughput(&self, m: &ModelSpec, r: f64) -> f64 {
+        let r = r.clamp(m.min_mem, 1.0);
+        let u = (r - m.min_mem) / (1.0 - m.min_mem);
+        let sat = (1.0 - (-3.0 * u).exp()) / (1.0 - (-3.0f64).exp());
+        m.tau_max * self.gpu_speed * (0.45 + 0.55 * sat)
+    }
+
+    /// True batch latency (seconds) for `q` queries at memory fraction `r`
+    /// (noise-free).
+    pub fn latency(&self, m: &ModelSpec, q: f64, r: f64) -> f64 {
+        if q <= 0.0 {
+            return 0.0;
+        }
+        let tau = self.throughput(m, r);
+        let service = q * m.tokens_per_query / tau;
+        // contention: superlinear in load, worse when memory is tight
+        let contention = m.gamma * (q * m.tokens_per_query / tau / 10.0).powi(2) * (1.1 - r);
+        0.05 + service + contention
+    }
+
+    /// Noisy measurement of the true latency.
+    pub fn measure(&self, m: &ModelSpec, q: f64, r: f64, rng: &mut Rng) -> f64 {
+        let l = self.latency(m, q, r);
+        (l * (1.0 + self.noise_frac * rng.normal())).max(0.0)
+    }
+
+    /// Largest query count servable within `budget_s` at memory `r`
+    /// (bisection on the monotone latency function).
+    pub fn max_queries(&self, m: &ModelSpec, r: f64, budget_s: f64) -> f64 {
+        if self.latency(m, 1.0, r) > budget_s {
+            return 0.0;
+        }
+        let (mut lo, mut hi) = (1.0, 10.0);
+        while self.latency(m, hi, r) < budget_s && hi < 1e7 {
+            hi *= 2.0;
+        }
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.latency(m, mid, r) <= budget_s {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+/// Vector-search time model TS_n^t: proportional to queries × log-ish
+/// corpus size (flat exact search is linear, but per-query cost is tiny;
+/// calibrated to ~0.2 ms per query per 1k chunks).
+#[derive(Clone, Copy, Debug)]
+pub struct SearchTimeModel {
+    pub per_query_per_kchunk_s: f64,
+}
+
+impl Default for SearchTimeModel {
+    fn default() -> Self {
+        SearchTimeModel { per_query_per_kchunk_s: 2e-4 }
+    }
+}
+
+impl SearchTimeModel {
+    pub fn search_time(&self, queries: usize, corpus_chunks: usize) -> f64 {
+        queries as f64 * self.per_query_per_kchunk_s * (corpus_chunks as f64 / 1000.0).max(0.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llmsim::model::standard_pool;
+
+    #[test]
+    fn latency_monotone_in_load() {
+        let gt = LatencyGroundTruth::default();
+        let pool = standard_pool();
+        for m in &pool {
+            let mut prev = 0.0;
+            for q in [10.0, 50.0, 100.0, 200.0, 400.0] {
+                let l = gt.latency(m, q, 0.8);
+                assert!(l > prev, "{} q={q}", m.name);
+                prev = l;
+            }
+        }
+    }
+
+    #[test]
+    fn latency_decreasing_in_memory() {
+        let gt = LatencyGroundTruth::default();
+        let m = &standard_pool()[1];
+        let l_lo = gt.latency(m, 200.0, m.min_mem + 0.05);
+        let l_hi = gt.latency(m, 200.0, 0.95);
+        assert!(l_lo > l_hi * 1.2, "{l_lo} vs {l_hi}");
+    }
+
+    #[test]
+    fn bigger_models_slower() {
+        let gt = LatencyGroundTruth::default();
+        let pool = standard_pool();
+        let l_small = gt.latency(&pool[0], 100.0, 0.9);
+        let l_mid = gt.latency(&pool[1], 100.0, 0.9);
+        let l_large = gt.latency(&pool[2], 100.0, 0.9);
+        assert!(l_small < l_mid && l_mid < l_large);
+    }
+
+    #[test]
+    fn per_query_scale_plausible() {
+        // small model ~20-30 ms/query at moderate memory, large ~150-250 ms
+        let gt = LatencyGroundTruth::default();
+        let pool = standard_pool();
+        let s = gt.latency(&pool[0], 100.0, 0.8) / 100.0;
+        let l = gt.latency(&pool[2], 50.0, 0.8) / 50.0;
+        assert!(s > 0.01 && s < 0.05, "small per-query {s}");
+        assert!(l > 0.1 && l < 0.4, "large per-query {l}");
+    }
+
+    #[test]
+    fn max_queries_respects_budget() {
+        let gt = LatencyGroundTruth::default();
+        let m = &standard_pool()[1];
+        for budget in [2.0, 5.0, 10.0] {
+            let q = gt.max_queries(m, 0.7, budget);
+            assert!(gt.latency(m, q, 0.7) <= budget + 1e-6);
+            assert!(gt.latency(m, q + 2.0, 0.7) > budget);
+        }
+    }
+
+    #[test]
+    fn max_queries_zero_when_budget_tiny() {
+        let gt = LatencyGroundTruth::default();
+        let m = &standard_pool()[2];
+        assert_eq!(gt.max_queries(m, 0.5, 0.01), 0.0);
+    }
+
+    #[test]
+    fn faster_gpu_lower_latency() {
+        let m = &standard_pool()[1];
+        let slow = LatencyGroundTruth::new(1.0);
+        let fast = LatencyGroundTruth::new(1.5);
+        assert!(fast.latency(m, 100.0, 0.8) < slow.latency(m, 100.0, 0.8));
+    }
+
+    #[test]
+    fn measurement_noise_bounded() {
+        let gt = LatencyGroundTruth::default();
+        let m = &standard_pool()[0];
+        let mut rng = Rng::new(3);
+        let truth = gt.latency(m, 100.0, 0.8);
+        let n = 200;
+        let mean: f64 = (0..n).map(|_| gt.measure(m, 100.0, 0.8, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - truth).abs() / truth < 0.01);
+    }
+
+    #[test]
+    fn search_time_scales() {
+        let st = SearchTimeModel::default();
+        assert!(st.search_time(1000, 2000) > st.search_time(1000, 1000));
+        assert!(st.search_time(2000, 1000) > st.search_time(1000, 1000));
+    }
+}

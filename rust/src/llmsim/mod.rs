@@ -1,0 +1,21 @@
+//! Edge-LLM serving simulator (substitute for vLLM + LLaMA/Qwen/Falcon on
+//! RTX 4090s — DESIGN.md §5).
+//!
+//! The scheduler only ever observes (generated tokens, latency, drops);
+//! this module produces all three with the monotonicities the paper
+//! measures:
+//! - bigger models ⇒ higher-fidelity generations but lower throughput,
+//! - more GPU memory ⇒ higher throughput, saturating (Fig. 3b),
+//! - overload ⇒ superlinear latency growth (Fig. 2, Fig. 3b),
+//! - irrelevant retrieval ⇒ quality collapse (Fig. 1),
+//! - model load/reload costs charged per Eq. 1–2 / 19–24 semantics.
+
+pub mod model;
+pub mod latency;
+pub mod gen;
+pub mod gpu;
+
+pub use gen::generate;
+pub use gpu::GpuState;
+pub use latency::{LatencyGroundTruth, SearchTimeModel};
+pub use model::{standard_pool, ModelSize, ModelSpec};

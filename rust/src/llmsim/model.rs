@@ -1,0 +1,119 @@
+//! Model catalog: parameter-efficient variants of LLaMA / Qwen / Falcon
+//! (paper §V-A "Edge LLMs": 1B/1.5B, 3B, 7B/8B classes).
+
+/// Size class of an edge LLM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelSize {
+    /// 1B–1.5B parameters.
+    Small,
+    /// ~3B parameters.
+    Mid,
+    /// 7B–8B parameters.
+    Large,
+}
+
+impl ModelSize {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModelSize::Small => "small",
+            ModelSize::Mid => "mid",
+            ModelSize::Large => "large",
+        }
+    }
+}
+
+/// A deployable model variant.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub size: ModelSize,
+    /// Billions of parameters (for reporting).
+    pub params_b: f64,
+    /// Intrinsic generation capability q_m ∈ (0,1]: the per-token copy
+    /// fidelity multiplier under ideal retrieval.
+    pub quality: f64,
+    /// Minimum GPU memory fraction to start (paper's r_m).
+    pub min_mem: f64,
+    /// Model loading time l_m in seconds (unloading is ~free).
+    pub load_time_s: f64,
+    /// Peak decode throughput (tokens/s) at full memory on a reference GPU.
+    pub tau_max: f64,
+    /// Decode tokens generated per query (fixed-length chunks & answers).
+    pub tokens_per_query: f64,
+    /// Contention coefficient for the superlinear overload term.
+    pub gamma: f64,
+}
+
+/// The standard heterogeneous pool used across experiments: one model per
+/// size class (per-node pools may subset this, emulating different series).
+pub fn standard_pool() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "llama-1b".into(),
+            size: ModelSize::Small,
+            params_b: 1.2,
+            quality: 0.78,
+            min_mem: 0.10,
+            load_time_s: 0.8,
+            tau_max: 1200.0,
+            tokens_per_query: 24.0,
+            gamma: 0.8,
+        },
+        ModelSpec {
+            name: "llama-3b".into(),
+            size: ModelSize::Mid,
+            params_b: 3.2,
+            quality: 0.90,
+            min_mem: 0.25,
+            load_time_s: 1.8,
+            tau_max: 240.0,
+            tokens_per_query: 24.0,
+            gamma: 1.6,
+        },
+        ModelSpec {
+            name: "llama-8b".into(),
+            size: ModelSize::Large,
+            params_b: 8.0,
+            quality: 1.0,
+            min_mem: 0.45,
+            load_time_s: 4.0,
+            tau_max: 100.0,
+            tokens_per_query: 24.0,
+            gamma: 3.0,
+        },
+    ]
+}
+
+/// Pool of only the given size classes.
+pub fn pool_of(sizes: &[ModelSize]) -> Vec<ModelSpec> {
+    standard_pool()
+        .into_iter()
+        .filter(|m| sizes.contains(&m.size))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_ordering_invariants() {
+        let pool = standard_pool();
+        assert_eq!(pool.len(), 3);
+        // quality increases with size; throughput decreases; memory+load grow
+        for w in pool.windows(2) {
+            assert!(w[0].size < w[1].size);
+            assert!(w[0].quality < w[1].quality);
+            assert!(w[0].tau_max > w[1].tau_max);
+            assert!(w[0].min_mem < w[1].min_mem);
+            assert!(w[0].load_time_s < w[1].load_time_s);
+        }
+    }
+
+    #[test]
+    fn pool_of_filters() {
+        let p = pool_of(&[ModelSize::Small, ModelSize::Mid]);
+        assert_eq!(p.len(), 2);
+        assert!(p.iter().all(|m| m.size != ModelSize::Large));
+    }
+}

@@ -1,0 +1,179 @@
+//! `coedge` — CLI launcher for the CoEdge-RAG framework.
+//!
+//! Subcommands:
+//!   run      [--config FILE] [--slots N] [--allocator KIND] [--slo S]
+//!            run a full experiment and print per-slot results
+//!   serve    [--addr A] [--config FILE]      start the TCP serving front-end
+//!   profile  [--config FILE]                 print per-node capacity models
+//!   info                                     artifact/runtime diagnostics
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use coedge_rag::bench_harness::Table;
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+use coedge_rag::coordinator::Coordinator;
+use coedge_rag::policy::ppo::Backend;
+use coedge_rag::runtime::PolicyRuntime;
+use coedge_rag::server::{serve, ServerConfig};
+use coedge_rag::util::logging;
+
+fn parse_flags(args: &[String]) -> std::collections::HashMap<String, String> {
+    let mut m = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn load_config(flags: &std::collections::HashMap<String, String>) -> ExperimentConfig {
+    let mut cfg = match flags.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).expect("read config");
+            ExperimentConfig::from_toml(&text).expect("parse config")
+        }
+        None => ExperimentConfig::paper_cluster(DatasetKind::DomainQa),
+    };
+    if let Some(v) = flags.get("slots") {
+        cfg.slots = v.parse().expect("--slots");
+    }
+    if let Some(v) = flags.get("slo") {
+        cfg.slo_s = v.parse().expect("--slo");
+    }
+    if let Some(v) = flags.get("queries") {
+        cfg.queries_per_slot = v.parse().expect("--queries");
+    }
+    if let Some(v) = flags.get("allocator") {
+        cfg.allocator = match v.as_str() {
+            "random" => AllocatorKind::Random,
+            "domain" => AllocatorKind::Domain,
+            "oracle" => AllocatorKind::Oracle,
+            "mab" => AllocatorKind::Mab,
+            _ => AllocatorKind::Ppo,
+        };
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse().expect("--seed");
+    }
+    cfg
+}
+
+fn backend() -> Backend {
+    match PolicyRuntime::load(&PolicyRuntime::default_dir()) {
+        Ok(rt) => {
+            eprintln!("[coedge] PJRT runtime loaded ({} artifacts)", rt.manifest().artifacts.len());
+            Backend::Pjrt(Arc::new(rt))
+        }
+        Err(e) => {
+            eprintln!("[coedge] no artifacts ({e}); using the pure-Rust reference backend");
+            Backend::Reference
+        }
+    }
+}
+
+fn cmd_run(flags: std::collections::HashMap<String, String>) {
+    let cfg = load_config(&flags);
+    let slots = cfg.slots;
+    eprintln!(
+        "[coedge] running {slots} slots × {} queries, SLO {}s, allocator {:?}",
+        cfg.queries_per_slot, cfg.slo_s, cfg.allocator
+    );
+    let mut co = Coordinator::build(cfg, backend()).expect("build coordinator");
+    let mut table = Table::new(&[
+        "slot", "queries", "R-L", "BERT", "drop%", "latency(s)", "p_j", "ppo_upd",
+    ]);
+    for t in 0..slots {
+        let qids = co.sample_queries(co.cfg.queries_per_slot);
+        let r = co.run_slot(&qids).expect("slot");
+        table.row(vec![
+            format!("{t}"),
+            format!("{}", r.queries),
+            format!("{:.3}", r.mean_scores.rouge_l),
+            format!("{:.3}", r.mean_scores.bert_score),
+            format!("{:.2}", r.drop_rate * 100.0),
+            format!("{:.2}", r.latency_s),
+            r.proportions.iter().map(|p| format!("{p:.2}")).collect::<Vec<_>>().join("/"),
+            format!("{}", r.ppo_updates),
+        ]);
+    }
+    table.print();
+}
+
+fn cmd_profile(flags: std::collections::HashMap<String, String>) {
+    let cfg = load_config(&flags);
+    let co = Coordinator::build(cfg, Backend::Reference).expect("build");
+    let mut t = Table::new(&["node", "gpus", "corpus", "C(5s)", "C(15s)", "C(60s)", "k", "b"]);
+    for (n, cap) in co.nodes.iter().zip(&co.capacities) {
+        t.row(vec![
+            n.name.clone(),
+            format!("{}", n.gpus.len()),
+            format!("{}", n.corpus_size()),
+            format!("{:.0}", cap.eval(5.0)),
+            format!("{:.0}", cap.eval(15.0)),
+            format!("{:.0}", cap.eval(60.0)),
+            format!("{:.1}", cap.k),
+            format!("{:.1}", cap.b),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_serve(flags: std::collections::HashMap<String, String>) {
+    let cfg = load_config(&flags);
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7717".into());
+    let co = Coordinator::build(cfg, backend()).expect("build coordinator");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    eprintln!("[coedge] serving on {addr} (line-JSON; send {{\"id\":1,\"qa_id\":0}})");
+    serve(co, ServerConfig { addr, ..Default::default() }, shutdown).expect("serve");
+}
+
+fn cmd_info() {
+    match PolicyRuntime::load(&PolicyRuntime::default_dir()) {
+        Ok(rt) => {
+            let m = rt.manifest();
+            println!("artifacts dir : {:?}", PolicyRuntime::default_dir());
+            println!("embed_dim     : {}", m.embed_dim);
+            println!("lr / clip / β : {} / {} / {}", m.learning_rate, m.clip_eps, m.entropy_beta);
+            let mut t = Table::new(&["name", "kind", "n", "batch"]);
+            for a in &m.artifacts {
+                t.row(vec![
+                    a.name.clone(),
+                    a.kind.clone(),
+                    a.n_actions.to_string(),
+                    a.batch.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        Err(e) => println!("no artifacts: {e}\nrun `make artifacts` first"),
+    }
+}
+
+fn main() {
+    logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    match cmd {
+        "run" => cmd_run(flags),
+        "profile" => cmd_profile(flags),
+        "serve" => cmd_serve(flags),
+        "info" => cmd_info(),
+        _ => {
+            println!("coedge — CoEdge-RAG launcher");
+            println!("usage: coedge <run|serve|profile|info> [--config FILE] [--slots N]");
+            println!("              [--queries N] [--slo S] [--allocator ppo|random|domain|oracle|mab]");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! BERTScore (Zhang et al., 2020) over deterministic contextual token
+//! embeddings (see `text::embed::Embedder::token_embeddings`).
+//!
+//! Greedy matching, exactly the paper's Eq. for Prec/Rec:
+//!   Prec = 1/|GEN| Σ_k max_j sim(E(GEN)_k, E(REF)_j)
+//!   Rec  = 1/|REF| Σ_j max_k sim(E(REF)_j, E(GEN)_k)
+//!   F    = 2·Prec·Rec/(Prec+Rec)
+//!
+//! Raw cosine similarities of random token pairs are near 0 here (unlike
+//! RoBERTa's ~0.4 baseline), so scores are *rescaled-like* by construction;
+//! absolute values differ from HuggingFace BERTScore but the ordering and
+//! monotonicity in generation fidelity are preserved (DESIGN.md §5).
+
+use crate::text::embed::{dot, Embedder};
+
+/// BERTScore F1 between token sequences.
+pub fn bert_score(embedder: &Embedder, gen: &[String], refr: &[String]) -> f64 {
+    if gen.is_empty() || refr.is_empty() {
+        return 0.0;
+    }
+    let ge = embedder.token_embeddings(gen);
+    let re = embedder.token_embeddings(refr);
+    let (p, r) = precision_recall(&ge, &re);
+    if p + r <= 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// (Prec over gen, Rec over ref) from embedding matrices.
+pub fn precision_recall(ge: &[Vec<f32>], re: &[Vec<f32>]) -> (f64, f64) {
+    // single pass over the similarity matrix, tracking row & col maxima
+    let mut row_max = vec![f32::NEG_INFINITY; ge.len()];
+    let mut col_max = vec![f32::NEG_INFINITY; re.len()];
+    for (i, g) in ge.iter().enumerate() {
+        for (j, r) in re.iter().enumerate() {
+            let s = dot(g, r);
+            if s > row_max[i] {
+                row_max[i] = s;
+            }
+            if s > col_max[j] {
+                col_max[j] = s;
+            }
+        }
+    }
+    let p = row_max.iter().map(|&x| x.max(0.0) as f64).sum::<f64>() / ge.len() as f64;
+    let r = col_max.iter().map(|&x| x.max(0.0) as f64).sum::<f64>() / re.len() as f64;
+    (p, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::tokenizer::tokenize;
+
+    fn t(s: &str) -> Vec<String> {
+        tokenize(s)
+    }
+
+    #[test]
+    fn identical_near_one() {
+        let e = Embedder::default();
+        let x = t("alpha beta gamma delta epsilon");
+        let s = bert_score(&e, &x, &x);
+        assert!(s > 0.999, "s={s}");
+    }
+
+    #[test]
+    fn unrelated_low() {
+        let e = Embedder::default();
+        let s = bert_score(&e, &t("qqq www eee rrr"), &t("zzz xxx ccc vvv"));
+        assert!(s < 0.5, "s={s}");
+    }
+
+    #[test]
+    fn monotone_in_token_overlap() {
+        let e = Embedder::default();
+        let r = t("one two three four five six seven eight");
+        let s25 = bert_score(&e, &t("one two junk1 junk2 junk3 junk4 junk5 junk6"), &r);
+        let s50 = bert_score(&e, &t("one two three four junk1 junk2 junk3 junk4"), &r);
+        let s75 = bert_score(&e, &t("one two three four five six junk1 junk2"), &r);
+        assert!(s25 < s50 && s50 < s75, "{s25} {s50} {s75}");
+    }
+
+    #[test]
+    fn symmetric_f1() {
+        let e = Embedder::default();
+        let a = t("a b c d e");
+        let b = t("a b x y z");
+        let s1 = bert_score(&e, &a, &b);
+        let s2 = bert_score(&e, &b, &a);
+        assert!((s1 - s2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let e = Embedder::default();
+        assert_eq!(bert_score(&e, &t(""), &t("a")), 0.0);
+        assert_eq!(bert_score(&e, &t("a"), &t("")), 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! BLEU-4 (Papineni et al., 2002) with uniform 1–4-gram weights, clipped
+//! precision, brevity penalty and "+1" smoothing on higher-order n-grams
+//! (Lin & Och smoothing method 1 style) so short texts don't zero out.
+
+use std::collections::HashMap;
+
+fn ngram_counts(toks: &[String], n: usize) -> HashMap<&[String], usize> {
+    let mut m: HashMap<&[String], usize> = HashMap::new();
+    if toks.len() >= n && n > 0 {
+        for i in 0..=toks.len() - n {
+            *m.entry(&toks[i..i + n]).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// BLEU with max order 4 against a single reference.
+pub fn bleu4(gen: &[String], refr: &[String]) -> f64 {
+    bleu(gen, refr, 4)
+}
+
+/// BLEU with configurable max n-gram order.
+pub fn bleu(gen: &[String], refr: &[String], max_n: usize) -> f64 {
+    if gen.is_empty() || refr.is_empty() {
+        return 0.0;
+    }
+    let mut log_sum = 0.0;
+    for n in 1..=max_n {
+        let gc = ngram_counts(gen, n);
+        let rc = ngram_counts(refr, n);
+        let total: usize = gc.values().sum();
+        let clipped: usize = gc
+            .iter()
+            .map(|(k, &v)| v.min(rc.get(k).copied().unwrap_or(0)))
+            .sum();
+        // smoothing: add 1 to numerator & denominator for n>1 when the
+        // raw precision would be 0 (method-1-like); hard zero for n=1.
+        let p = if n == 1 {
+            if total == 0 || clipped == 0 {
+                return 0.0;
+            }
+            clipped as f64 / total as f64
+        } else {
+            (clipped as f64 + if clipped == 0 { 1.0 } else { 0.0 })
+                / (total as f64 + if clipped == 0 { 1.0 } else { 0.0 }).max(1.0)
+        };
+        log_sum += p.ln() / max_n as f64;
+    }
+    let bp = if gen.len() >= refr.len() {
+        1.0
+    } else {
+        (1.0 - refr.len() as f64 / gen.len() as f64).exp()
+    };
+    bp * log_sum.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::tokenizer::tokenize;
+
+    fn t(s: &str) -> Vec<String> {
+        tokenize(s)
+    }
+
+    #[test]
+    fn identical_is_one() {
+        let x = t("the quick brown fox jumps over the lazy dog today");
+        assert!((bleu4(&x, &x) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        assert_eq!(bleu4(&t("a b c d e"), &t("v w x y z")), 0.0);
+    }
+
+    #[test]
+    fn brevity_penalty_applies() {
+        let r = t("a b c d e f g h i j");
+        let long_sub = t("a b c d e f g h");
+        let short_sub = t("a b c d");
+        let b_long = bleu4(&long_sub, &r);
+        let b_short = bleu4(&short_sub, &r);
+        assert!(b_long > b_short, "{b_long} vs {b_short}");
+    }
+
+    #[test]
+    fn partial_overlap_between_zero_and_one() {
+        let b = bleu4(&t("a b c d junk1 junk2"), &t("a b c d e f"));
+        assert!(b > 0.0 && b < 1.0, "b={b}");
+    }
+
+    #[test]
+    fn word_order_matters() {
+        let r = t("one two three four five six");
+        let ordered = bleu4(&t("one two three four five six"), &r);
+        let scrambled = bleu4(&t("six four two five three one"), &r);
+        assert!(ordered > scrambled + 0.3);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(bleu4(&t(""), &t("a")), 0.0);
+        assert_eq!(bleu4(&t("a"), &t("")), 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! METEOR (Banerjee & Lavie, 2005) — exact-match unigram variant.
+//!
+//! Full METEOR adds stemming/synonym stages backed by WordNet; offline we
+//! implement the exact-match core, which is the dominant term on our
+//! synthetic vocabulary (there are no inflections to stem). Keeps the
+//! canonical harmonic mean F_α (α = 0.9 ⇒ recall-weighted) and the
+//! fragmentation penalty `0.5·(chunks/matches)³`.
+
+use std::collections::HashMap;
+
+/// METEOR score of a candidate against a single reference.
+pub fn meteor(gen: &[String], refr: &[String]) -> f64 {
+    if gen.is_empty() || refr.is_empty() {
+        return 0.0;
+    }
+    // Greedy left-to-right alignment of exact matches: for each gen token
+    // consume the earliest unused matching ref position (standard first
+    // stage of METEOR's alignment search).
+    let mut ref_positions: HashMap<&String, Vec<usize>> = HashMap::new();
+    for (j, t) in refr.iter().enumerate() {
+        ref_positions.entry(t).or_default().push(j);
+    }
+    let mut used = vec![false; refr.len()];
+    // alignment[i] = matched reference index for gen token i
+    let mut alignment: Vec<Option<usize>> = vec![None; gen.len()];
+    for (i, t) in gen.iter().enumerate() {
+        if let Some(positions) = ref_positions.get(t) {
+            if let Some(&j) = positions.iter().find(|&&j| !used[j]) {
+                used[j] = true;
+                alignment[i] = Some(j);
+            }
+        }
+    }
+    let matches = alignment.iter().flatten().count();
+    if matches == 0 {
+        return 0.0;
+    }
+    let p = matches as f64 / gen.len() as f64;
+    let r = matches as f64 / refr.len() as f64;
+    // METEOR F-mean: 10PR / (R + 9P)
+    let f_mean = 10.0 * p * r / (r + 9.0 * p);
+
+    // Chunks: maximal runs of gen matches whose ref indices are contiguous
+    // and increasing.
+    let mut chunks = 0usize;
+    let mut prev: Option<usize> = None;
+    for a in &alignment {
+        match (a, prev) {
+            (Some(j), Some(pj)) if *j == pj + 1 => {}
+            (Some(_), _) => chunks += 1,
+            (None, _) => {}
+        }
+        prev = *a;
+    }
+    let penalty = 0.5 * (chunks as f64 / matches as f64).powi(3);
+    f_mean * (1.0 - penalty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::tokenizer::tokenize;
+
+    fn t(s: &str) -> Vec<String> {
+        tokenize(s)
+    }
+
+    #[test]
+    fn identical_high() {
+        let x = t("the cat sat on the mat");
+        let m = meteor(&x, &x);
+        // one chunk, penalty = 0.5*(1/6)^3 ~ 0.0023
+        assert!(m > 0.99, "m={m}");
+    }
+
+    #[test]
+    fn disjoint_zero() {
+        assert_eq!(meteor(&t("a b c"), &t("x y z")), 0.0);
+    }
+
+    #[test]
+    fn fragmentation_penalized() {
+        let r = t("one two three four five six");
+        // same tokens, same counts, different order -> more chunks -> lower
+        let contiguous = meteor(&t("one two three four five six"), &r);
+        let fragmented = meteor(&t("two one four three six five"), &r);
+        assert!(contiguous > fragmented, "{contiguous} vs {fragmented}");
+    }
+
+    #[test]
+    fn recall_weighted() {
+        let r = t("a b c d e f g h");
+        // candidate covering more of the reference scores higher even with
+        // the same precision
+        let low_recall = meteor(&t("a b"), &r);
+        let high_recall = meteor(&t("a b c d e f"), &r);
+        assert!(high_recall > low_recall);
+    }
+
+    #[test]
+    fn duplicate_tokens_matched_once() {
+        // gen repeats "a" 3x but ref has one "a": only 1 match
+        let m = meteor(&t("a a a"), &t("a"));
+        let p = 1.0 / 3.0;
+        let r = 1.0;
+        let f = 10.0 * p * r / (r + 9.0 * p);
+        let pen = 0.5; // 1 chunk / 1 match -> 0.5
+        assert!((m - f * (1.0 - pen)).abs() < 1e-9, "m={m}");
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(meteor(&t(""), &t("a")), 0.0);
+        assert_eq!(meteor(&t("a"), &t("")), 0.0);
+    }
+}

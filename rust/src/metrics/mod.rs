@@ -1,0 +1,179 @@
+//! Generation-quality metrics, implemented from scratch:
+//! ROUGE-1/2/L, BLEU-4, METEOR (unigram variant), and BERTScore over the
+//! deterministic contextual token embeddings from [`crate::text::embed`].
+//!
+//! Also provides the paper's composite feedback signal
+//! `f_i = α₁·f_R + α₂·f_B` (Eq. 9) with the paper's LCS-based lexical term
+//! `f_R = LCS(REF,GEN)/max(|REF|,|GEN|)`.
+
+pub mod rouge;
+pub mod bleu;
+pub mod meteor;
+pub mod bertscore;
+
+pub use bertscore::bert_score;
+pub use bleu::bleu4;
+pub use meteor::meteor;
+pub use rouge::{lcs_len, rouge_l, rouge_n};
+
+use crate::text::embed::Embedder;
+use crate::text::tokenizer::tokenize;
+
+/// All six quality metrics for one (generated, reference) pair.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QualityScores {
+    pub rouge1: f64,
+    pub rouge2: f64,
+    pub rouge_l: f64,
+    pub bleu4: f64,
+    pub meteor: f64,
+    pub bert_score: f64,
+}
+
+impl QualityScores {
+    pub fn zeros() -> Self {
+        Self::default()
+    }
+
+    /// Component-wise mean over a set of scores (drops nothing; dropped
+    /// queries should be included as zeros per the paper's "invalid"
+    /// handling).
+    pub fn mean(scores: &[QualityScores]) -> QualityScores {
+        if scores.is_empty() {
+            return QualityScores::default();
+        }
+        let n = scores.len() as f64;
+        let mut acc = QualityScores::default();
+        for s in scores {
+            acc.rouge1 += s.rouge1;
+            acc.rouge2 += s.rouge2;
+            acc.rouge_l += s.rouge_l;
+            acc.bleu4 += s.bleu4;
+            acc.meteor += s.meteor;
+            acc.bert_score += s.bert_score;
+        }
+        QualityScores {
+            rouge1: acc.rouge1 / n,
+            rouge2: acc.rouge2 / n,
+            rouge_l: acc.rouge_l / n,
+            bleu4: acc.bleu4 / n,
+            meteor: acc.meteor / n,
+            bert_score: acc.bert_score / n,
+        }
+    }
+}
+
+/// Metric evaluator bundling the shared tokenizer + embedder.
+#[derive(Clone, Debug, Default)]
+pub struct Evaluator {
+    embedder: Embedder,
+}
+
+impl Evaluator {
+    pub fn new(embedder: Embedder) -> Self {
+        Evaluator { embedder }
+    }
+
+    /// Score a generated text against a reference (both raw strings).
+    pub fn score(&self, generated: &str, reference: &str) -> QualityScores {
+        let gen = tokenize(generated);
+        let refr = tokenize(reference);
+        self.score_tokens(&gen, &refr)
+    }
+
+    /// Score pre-tokenized texts.
+    pub fn score_tokens(&self, gen: &[String], refr: &[String]) -> QualityScores {
+        QualityScores {
+            rouge1: rouge_n(gen, refr, 1),
+            rouge2: rouge_n(gen, refr, 2),
+            rouge_l: rouge_l(gen, refr),
+            bleu4: bleu4(gen, refr),
+            meteor: meteor(gen, refr),
+            bert_score: bert_score(&self.embedder, gen, refr),
+        }
+    }
+
+    /// The paper's composite feedback (Eq. 9):
+    /// `f = α₁·LCS/max(|REF|,|GEN|) + α₂·BERTScore`, with the paper's
+    /// weights α₁=1, α₂=0.5 by default.
+    pub fn feedback(&self, gen: &[String], refr: &[String], a1: f64, a2: f64) -> f64 {
+        let f_r = if gen.is_empty() || refr.is_empty() {
+            0.0
+        } else {
+            lcs_len(gen, refr) as f64 / gen.len().max(refr.len()) as f64
+        };
+        let f_b = bert_score(&self.embedder, gen, refr);
+        a1 * f_r + a2 * f_b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        tokenize(s)
+    }
+
+    #[test]
+    fn perfect_match_scores_high() {
+        let ev = Evaluator::default();
+        let s = ev.score("alpha beta gamma delta", "alpha beta gamma delta");
+        assert!((s.rouge1 - 1.0).abs() < 1e-9);
+        assert!((s.rouge2 - 1.0).abs() < 1e-9);
+        assert!((s.rouge_l - 1.0).abs() < 1e-9);
+        assert!(s.bleu4 > 0.99);
+        assert!(s.meteor > 0.99);
+        assert!(s.bert_score > 0.99);
+    }
+
+    #[test]
+    fn disjoint_scores_low() {
+        let ev = Evaluator::default();
+        let s = ev.score("aaa bbb ccc ddd", "www xxx yyy zzz");
+        assert!(s.rouge1 < 1e-9);
+        assert!(s.rouge_l < 1e-9);
+        assert!(s.bleu4 < 0.05);
+        assert!(s.meteor < 1e-9);
+        assert!(s.bert_score < 0.5);
+    }
+
+    #[test]
+    fn monotone_in_overlap() {
+        let ev = Evaluator::default();
+        let r = "one two three four five six seven eight";
+        let half = ev.score("one two three four junk1 junk2 junk3 junk4", r);
+        let full = ev.score(r, r);
+        let none = ev.score("a b c d e f g h", r);
+        for (lo, mid, hi) in [
+            (none.rouge1, half.rouge1, full.rouge1),
+            (none.rouge_l, half.rouge_l, full.rouge_l),
+            (none.bert_score, half.bert_score, full.bert_score),
+            (none.meteor, half.meteor, full.meteor),
+        ] {
+            assert!(lo < mid && mid < hi, "{lo} {mid} {hi}");
+        }
+    }
+
+    #[test]
+    fn feedback_matches_paper_form() {
+        let ev = Evaluator::default();
+        let g = toks("a b c d");
+        let r = toks("a b x y");
+        // LCS = 2, max len = 4 -> f_R = 0.5
+        let f = ev.feedback(&g, &r, 1.0, 0.0);
+        assert!((f - 0.5).abs() < 1e-9);
+        // adding BERT term increases it
+        let f2 = ev.feedback(&g, &r, 1.0, 0.5);
+        assert!(f2 > f);
+    }
+
+    #[test]
+    fn mean_aggregation() {
+        let a = QualityScores { rouge1: 1.0, ..Default::default() };
+        let b = QualityScores { rouge1: 0.0, ..Default::default() };
+        let m = QualityScores::mean(&[a, b]);
+        assert!((m.rouge1 - 0.5).abs() < 1e-12);
+        assert_eq!(QualityScores::mean(&[]), QualityScores::default());
+    }
+}

@@ -1,0 +1,140 @@
+//! ROUGE-N and ROUGE-L (Lin, 2004).
+//!
+//! ROUGE-N here is the F1 variant over clipped n-gram counts (the common
+//! modern convention, e.g. google-research rouge_scorer). ROUGE-L is the
+//! LCS-based F-measure.
+
+use std::collections::HashMap;
+
+/// Clipped n-gram overlap F1 between candidate and reference.
+pub fn rouge_n(gen: &[String], refr: &[String], n: usize) -> f64 {
+    if gen.len() < n || refr.len() < n || n == 0 {
+        return 0.0;
+    }
+    fn count<'a>(toks: &'a [String], n: usize) -> HashMap<&'a [String], usize> {
+        let mut m: HashMap<&[String], usize> = HashMap::new();
+        for i in 0..=toks.len() - n {
+            *m.entry(&toks[i..i + n]).or_insert(0) += 1;
+        }
+        m
+    }
+    let gc = count(gen, n);
+    let rc = count(refr, n);
+    let overlap: usize = gc
+        .iter()
+        .map(|(k, &v)| v.min(rc.get(k).copied().unwrap_or(0)))
+        .sum();
+    let gen_total = gen.len() - n + 1;
+    let ref_total = refr.len() - n + 1;
+    let p = overlap as f64 / gen_total as f64;
+    let r = overlap as f64 / ref_total as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// Longest common subsequence length, O(|a|·|b|) time, O(min) memory
+/// (rolling single row — hot path for both ROUGE-L and the PPO feedback).
+pub fn lcs_len(a: &[String], b: &[String]) -> usize {
+    let (short, long) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    if short.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; short.len() + 1];
+    let mut cur = vec![0usize; short.len() + 1];
+    for lt in long {
+        for (j, st) in short.iter().enumerate() {
+            cur[j + 1] = if lt == st {
+                prev[j] + 1
+            } else {
+                cur[j].max(prev[j + 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[short.len()]
+}
+
+/// ROUGE-L F-measure (β=1): `2PR/(P+R)` with `P = LCS/|gen|`,
+/// `R = LCS/|ref|`.
+pub fn rouge_l(gen: &[String], refr: &[String]) -> f64 {
+    if gen.is_empty() || refr.is_empty() {
+        return 0.0;
+    }
+    let l = lcs_len(gen, refr) as f64;
+    if l == 0.0 {
+        return 0.0;
+    }
+    let p = l / gen.len() as f64;
+    let r = l / refr.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::tokenizer::tokenize;
+
+    fn t(s: &str) -> Vec<String> {
+        tokenize(s)
+    }
+
+    #[test]
+    fn lcs_known_values() {
+        assert_eq!(lcs_len(&t("a b c d"), &t("a c d")), 3);
+        assert_eq!(lcs_len(&t("a b c"), &t("x y z")), 0);
+        assert_eq!(lcs_len(&t("a b c"), &t("a b c")), 3);
+        assert_eq!(lcs_len(&t(""), &t("a")), 0);
+        // classic: ABCBDAB vs BDCABA -> 4 (BDAB / BCAB / BCBA)
+        let a: Vec<String> = "A B C B D A B".split(' ').map(|s| s.into()).collect();
+        let b: Vec<String> = "B D C A B A".split(' ').map(|s| s.into()).collect();
+        assert_eq!(lcs_len(&a, &b), 4);
+    }
+
+    #[test]
+    fn lcs_symmetric() {
+        let a = t("p q r s t u");
+        let b = t("q s u w");
+        assert_eq!(lcs_len(&a, &b), lcs_len(&b, &a));
+    }
+
+    #[test]
+    fn rouge1_hand_computed() {
+        // gen: [a b c], ref: [a b d]; overlap 2, P=2/3, R=2/3 -> F1=2/3
+        let f = rouge_n(&t("a b c"), &t("a b d"), 1);
+        assert!((f - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge2_hand_computed() {
+        // gen bigrams: [a b, b c]; ref: [a b, b d] -> overlap 1, P=R=1/2
+        let f = rouge_n(&t("a b c"), &t("a b d"), 2);
+        assert!((f - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_n_clipping() {
+        // "a a a" vs "a": unclipped would give overlap 3; clipped = 1
+        let f = rouge_n(&t("a a a"), &t("a"), 1);
+        let p = 1.0 / 3.0;
+        let r = 1.0;
+        assert!((f - 2.0 * p * r / (p + r)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_l_hand_computed() {
+        // gen: [the cat sat], ref: [the cat on the mat]; LCS=2
+        // P=2/3, R=2/5 -> F=2*P*R/(P+R)=0.5
+        let f = rouge_l(&t("the cat sat"), &t("the cat on the mat"));
+        assert!((f - 0.5) < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(rouge_n(&t(""), &t("a b"), 1), 0.0);
+        assert_eq!(rouge_l(&t(""), &t("a b")), 0.0);
+        assert_eq!(rouge_n(&t("a"), &t("a b"), 2), 0.0); // too short for bigrams
+    }
+}

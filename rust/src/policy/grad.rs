@@ -1,0 +1,456 @@
+//! Pure-Rust PPO backward pass + Adam — the host-side mirror of the AOT
+//! `ppo_update` artifact (python/compile/model.py::ppo_update).
+//!
+//! Exists for three reasons: (1) a no-artifact fallback backend so unit
+//! tests and tools run without `make artifacts`; (2) an independent
+//! numerical cross-check of the HLO update (rust/tests/runtime_bridge.rs);
+//! (3) finite-difference-validated gradients (see tests below), which
+//! transitively validate the JAX graph through (2).
+//!
+//! The math must match model.py exactly: same loss (clipped policy-only
+//! surrogate + entropy bonus, Eq. 11), same LayerNorm/residual forward,
+//! same Adam update and hyper-parameters.
+
+use super::params::{PolicyParams, EMBED_DIM, HIDDEN, NUM_TENSORS};
+use crate::runtime::{UpdateBatch, UpdateStats};
+
+// Hyper-parameters — keep in sync with python/compile/model.py.
+pub const LEARNING_RATE: f32 = 3e-4;
+pub const CLIP_EPS: f32 = 0.02;
+pub const ENTROPY_BETA: f32 = 0.01;
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+pub const LN_EPS: f32 = 1e-5;
+
+/// Dense forward into `out`, returning pre-activation copy if `relu`.
+fn dense_fwd(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    relu: bool,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(rows * n, 0.0);
+    for r in 0..rows {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        orow.copy_from_slice(&b[..n]);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * n..(i + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        if relu {
+            for o in orow.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Backward through `y = relu?(x @ w + b)`.
+/// `y_post` is the post-activation output (for the ReLU mask).
+/// Accumulates dW, dB; writes dX.
+#[allow(clippy::too_many_arguments)]
+fn dense_bwd(
+    x: &[f32],
+    y_post: &[f32],
+    dy: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    w: &[f32],
+    relu: bool,
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: &mut [f32],
+) {
+    if relu {
+        for (g, &y) in dy.iter_mut().zip(y_post) {
+            if y <= 0.0 {
+                *g = 0.0;
+            }
+        }
+    }
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    for r in 0..rows {
+        let xrow = &x[r * k..(r + 1) * k];
+        let dyrow = &dy[r * n..(r + 1) * n];
+        let dxrow = &mut dx[r * k..(r + 1) * k];
+        for (j, &g) in dyrow.iter().enumerate() {
+            db[j] += g;
+        }
+        for i in 0..k {
+            let wrow = &w[i * n..(i + 1) * n];
+            let dwrow = &mut dw[i * n..(i + 1) * n];
+            let xv = xrow[i];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                dwrow[j] += xv * dyrow[j];
+                acc += wrow[j] * dyrow[j];
+            }
+            dxrow[i] = acc;
+        }
+    }
+}
+
+/// Backward for the input layer: accumulates dW/dB only (no dX needed —
+/// the layer's input is the query embedding, not a parameter).
+#[allow(clippy::too_many_arguments)]
+fn dense_bwd_params_only(
+    x: &[f32],
+    y_post: &[f32],
+    dy: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    for (g, &y) in dy.iter_mut().zip(y_post) {
+        if y <= 0.0 {
+            *g = 0.0;
+        }
+    }
+    for r in 0..rows {
+        let xrow = &x[r * k..(r + 1) * k];
+        let dyrow = &dy[r * n..(r + 1) * n];
+        for (j, &g) in dyrow.iter().enumerate() {
+            db[j] += g;
+        }
+        for i in 0..k {
+            let xv = xrow[i];
+            if xv == 0.0 {
+                continue;
+            }
+            let dwrow = &mut dw[i * n..(i + 1) * n];
+            for j in 0..n {
+                dwrow[j] += xv * dyrow[j];
+            }
+        }
+    }
+}
+
+/// PPO loss + gradients for a (already masked/padded-free) batch.
+/// Returns (grads in PARAM_NAMES order, loss, mean entropy).
+pub fn ppo_grads(
+    params: &PolicyParams,
+    batch: &UpdateBatch,
+) -> (Vec<Vec<f32>>, f32, f32) {
+    let rows = batch.rows();
+    let [h1, h2, h3] = HIDDEN;
+    let n = params.n_actions;
+    let t = &params.tensors;
+    let (w1, b1, ln_g, ln_b) = (&t[0], &t[1], &t[2], &t[3]);
+    let (w2, b2, w3, b3, w4, b4) = (&t[4], &t[5], &t[6], &t[7], &t[8], &t[9]);
+    let x = &batch.x;
+
+    // ---- forward with caches ----
+    let mut a1 = Vec::new(); // relu(x@w1+b1)
+    dense_fwd(x, rows, EMBED_DIM, w1, b1, h1, true, &mut a1);
+    // residual
+    let mut res = a1.clone();
+    for (o, &xv) in res.iter_mut().zip(x.iter()) {
+        *o += xv;
+    }
+    // layer norm caches
+    let mut xhat = vec![0f32; rows * h1];
+    let mut inv_std = vec![0f32; rows];
+    let mut ln_out = vec![0f32; rows * h1];
+    for r in 0..rows {
+        let row = &res[r * h1..(r + 1) * h1];
+        let mean = row.iter().sum::<f32>() / h1 as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / h1 as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        inv_std[r] = inv;
+        for i in 0..h1 {
+            let xh = (row[i] - mean) * inv;
+            xhat[r * h1 + i] = xh;
+            ln_out[r * h1 + i] = ln_g[i] * xh + ln_b[i];
+        }
+    }
+    let mut a2 = Vec::new();
+    dense_fwd(&ln_out, rows, h1, w2, b2, h2, true, &mut a2);
+    let mut a3 = Vec::new();
+    dense_fwd(&a2, rows, h2, w3, b3, h3, true, &mut a3);
+    let mut logits = Vec::new();
+    dense_fwd(&a3, rows, h3, w4, b4, n, false, &mut logits);
+
+    // log-softmax, probs
+    let mut logp = vec![0f32; rows * n];
+    let mut probs = vec![0f32; rows * n];
+    for r in 0..rows {
+        let lrow = &logits[r * n..(r + 1) * n];
+        let m = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = m + lrow.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+        for i in 0..n {
+            let lp = lrow[i] - lse;
+            logp[r * n + i] = lp;
+            probs[r * n + i] = lp.exp();
+        }
+    }
+
+    // ---- loss + dJ/dlogits ----
+    let denom = rows as f32;
+    let mut dlogits = vec![0f32; rows * n];
+    let mut loss_sum = 0.0f32;
+    let mut ent_sum = 0.0f32;
+    for r in 0..rows {
+        let a = batch.actions[r];
+        let rwd = batch.rewards[r];
+        let chosen_logp = logp[r * n + a];
+        let ratio = (chosen_logp - batch.old_logp[r]).exp();
+        let clipped = ratio.clamp(1.0 - CLIP_EPS, 1.0 + CLIP_EPS);
+        let s1 = ratio * rwd;
+        let s2 = clipped * rwd;
+        let surr = s1.min(s2);
+        // subgradient of min: branch-1 active (or tie) -> d(surr)/d(ratio)=rwd;
+        // branch-2 active -> rwd inside the clip band, else 0.
+        let g_ratio = if s1 <= s2 {
+            rwd
+        } else if (1.0 - CLIP_EPS..=1.0 + CLIP_EPS).contains(&ratio) {
+            rwd
+        } else {
+            0.0
+        };
+        let h: f32 = -(0..n).map(|i| probs[r * n + i] * logp[r * n + i]).sum::<f32>();
+        loss_sum += surr + ENTROPY_BETA * h;
+        ent_sum += h;
+        // dJ/dz = g_ratio*ratio*(onehot - p) + beta * (-p ⊙ (logp + H))
+        for i in 0..n {
+            let onehot = if i == a { 1.0 } else { 0.0 };
+            let p = probs[r * n + i];
+            let dsurr = g_ratio * ratio * (onehot - p);
+            let dent = -p * (logp[r * n + i] + h);
+            // loss = -J  ->  dloss/dz = -(dsurr + beta*dent)/denom
+            dlogits[r * n + i] = -(dsurr + ENTROPY_BETA * dent) / denom;
+        }
+    }
+    let loss = -loss_sum / denom;
+    let entropy = ent_sum / denom;
+
+    // ---- backward ----
+    let shapes = params.shapes();
+    let mut grads: Vec<Vec<f32>> = shapes.iter().map(|&(r, c)| vec![0f32; r * c]).collect();
+    let mut d_a3 = vec![0f32; rows * h3];
+    {
+        let (gw4, gb4) = (8usize, 9usize);
+        let mut dw = std::mem::take(&mut grads[gw4]);
+        let mut db = std::mem::take(&mut grads[gb4]);
+        dense_bwd(&a3, &logits, &mut dlogits, rows, h3, n, w4, false, &mut dw, &mut db, &mut d_a3);
+        grads[gw4] = dw;
+        grads[gb4] = db;
+    }
+    let mut d_a2 = vec![0f32; rows * h2];
+    {
+        let mut dw = std::mem::take(&mut grads[6]);
+        let mut db = std::mem::take(&mut grads[7]);
+        dense_bwd(&a2, &a3, &mut d_a3, rows, h2, h3, w3, true, &mut dw, &mut db, &mut d_a2);
+        grads[6] = dw;
+        grads[7] = db;
+    }
+    let mut d_ln_out = vec![0f32; rows * h1];
+    {
+        let mut dw = std::mem::take(&mut grads[4]);
+        let mut db = std::mem::take(&mut grads[5]);
+        dense_bwd(&ln_out, &a2, &mut d_a2, rows, h1, h2, w2, true, &mut dw, &mut db, &mut d_ln_out);
+        grads[4] = dw;
+        grads[5] = db;
+    }
+    // layernorm backward -> d_res; accumulate d gamma/beta
+    let mut d_res = vec![0f32; rows * h1];
+    for r in 0..rows {
+        let dy = &d_ln_out[r * h1..(r + 1) * h1];
+        let xh = &xhat[r * h1..(r + 1) * h1];
+        let inv = inv_std[r];
+        let mut sum_dxhat = 0.0f32;
+        let mut sum_dxhat_xhat = 0.0f32;
+        for i in 0..h1 {
+            grads[2][i] += dy[i] * xh[i]; // d gamma
+            grads[3][i] += dy[i]; // d beta
+            let dxh = dy[i] * ln_g[i];
+            sum_dxhat += dxh;
+            sum_dxhat_xhat += dxh * xh[i];
+        }
+        let dcount = h1 as f32;
+        for i in 0..h1 {
+            let dxh = dy[i] * ln_g[i];
+            d_res[r * h1 + i] =
+                inv * (dxh - sum_dxhat / dcount - xh[i] * sum_dxhat_xhat / dcount);
+        }
+    }
+    // residual: d_a1 = d_res (x-branch gradient stops at the input, so dX
+    // is not needed — skipping it saves a rows·256·256 pass, §Perf)
+    {
+        let mut dw = std::mem::take(&mut grads[0]);
+        let mut db = std::mem::take(&mut grads[1]);
+        dense_bwd_params_only(x, &a1, &mut d_res, rows, EMBED_DIM, h1, &mut dw, &mut db);
+        grads[0] = dw;
+        grads[1] = db;
+    }
+    (grads, loss, entropy)
+}
+
+/// In-place Adam step (mirrors model.py::ppo_update's optimizer).
+pub fn adam_apply(params: &mut PolicyParams, grads: &[Vec<f32>]) {
+    params.step += 1;
+    let t = params.step as f32;
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    for i in 0..NUM_TENSORS {
+        let (p, g, m, v) = (
+            &mut params.tensors[i],
+            &grads[i],
+            &mut params.adam_m[i],
+            &mut params.adam_v[i],
+        );
+        for j in 0..p.len() {
+            m[j] = ADAM_B1 * m[j] + (1.0 - ADAM_B1) * g[j];
+            v[j] = ADAM_B2 * v[j] + (1.0 - ADAM_B2) * g[j] * g[j];
+            let mhat = m[j] / bc1;
+            let vhat = v[j] / bc2;
+            p[j] -= LEARNING_RATE * mhat / (vhat.sqrt() + ADAM_EPS);
+        }
+    }
+}
+
+/// Full host-side PPO update — the reference twin of
+/// [`crate::runtime::PolicyRuntime::update`].
+pub fn update_host(params: &mut PolicyParams, batch: &UpdateBatch) -> UpdateStats {
+    let (grads, loss, entropy) = ppo_grads(params, batch);
+    adam_apply(params, &grads);
+    UpdateStats { loss, entropy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::mlp;
+    use crate::util::rng::Rng;
+
+    fn make_batch(params: &PolicyParams, rows: usize, seed: u64) -> UpdateBatch {
+        let mut rng = Rng::new(seed);
+        let n = params.n_actions;
+        let x: Vec<f32> = (0..rows * EMBED_DIM).map(|_| rng.normal() as f32 * 0.4).collect();
+        let probs = mlp::forward(params, &x, rows);
+        let mut actions = Vec::new();
+        let mut old_logp = Vec::new();
+        let mut rewards = Vec::new();
+        for r in 0..rows {
+            let row: Vec<f64> = probs[r * n..(r + 1) * n].iter().map(|&p| p as f64).collect();
+            let a = rng.sample_weighted(&row);
+            actions.push(a);
+            old_logp.push((probs[r * n + a].max(1e-12)).ln());
+            rewards.push(rng.normal() as f32);
+        }
+        UpdateBatch { x, actions, rewards, old_logp }
+    }
+
+    /// Recompute the loss only (for finite differences).
+    fn loss_of(params: &PolicyParams, batch: &UpdateBatch) -> f32 {
+        let (_, loss, _) = ppo_grads(params, batch);
+        loss
+    }
+
+    #[test]
+    fn finite_difference_gradcheck() {
+        let mut params = PolicyParams::init(4, 11);
+        let batch = make_batch(&params, 6, 12);
+        let (grads, _, _) = ppo_grads(&params, &batch);
+        let mut rng = Rng::new(13);
+        let mut checked = 0;
+        let mut max_rel = 0.0f64;
+        for ti in 0..NUM_TENSORS {
+            for _ in 0..4 {
+                let j = rng.below(params.tensors[ti].len());
+                let h = 2e-3f32;
+                let orig = params.tensors[ti][j];
+                params.tensors[ti][j] = orig + h;
+                let lp = loss_of(&params, &batch);
+                params.tensors[ti][j] = orig - h;
+                let lm = loss_of(&params, &batch);
+                params.tensors[ti][j] = orig;
+                let num = ((lp - lm) / (2.0 * h)) as f64;
+                let ana = grads[ti][j] as f64;
+                let denom = num.abs().max(ana.abs());
+                if denom > 5e-3 {
+                    let rel = (num - ana).abs() / denom;
+                    max_rel = max_rel.max(rel);
+                    assert!(rel < 0.08, "tensor {ti} idx {j}: num={num:.5} ana={ana:.5}");
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked >= 8, "too few informative gradcheck points ({checked})");
+        assert!(max_rel < 0.08);
+    }
+
+    #[test]
+    fn update_moves_toward_rewarded_action() {
+        let mut params = PolicyParams::init(3, 21);
+        let mut rng = Rng::new(22);
+        let x: Vec<f32> = (0..4 * EMBED_DIM).map(|_| rng.normal() as f32 * 0.4).collect();
+        let probs0 = mlp::forward(&params, &x, 4);
+        let p_before: f32 = (0..4).map(|r| probs0[r * 3]).sum::<f32>() / 4.0;
+        // always reward action 0 with +1 (standardized reward)
+        for step in 0..80 {
+            let probs = mlp::forward(&params, &x, 4);
+            let batch = UpdateBatch {
+                x: x.clone(),
+                actions: vec![0; 4],
+                rewards: vec![1.0; 4],
+                old_logp: (0..4).map(|r| probs[r * 3].max(1e-12).ln()).collect(),
+            };
+            let stats = update_host(&mut params, &batch);
+            assert!(stats.loss.is_finite(), "step {step}");
+        }
+        let probs1 = mlp::forward(&params, &x, 4);
+        let p_after: f32 = (0..4).map(|r| probs1[r * 3]).sum::<f32>() / 4.0;
+        assert!(
+            p_after > p_before + 0.05,
+            "before={p_before:.4} after={p_after:.4}"
+        );
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        // with zero adam state and gradient g, first step ≈ -lr * sign(g)
+        let mut params = PolicyParams::init(3, 31);
+        let g0 = 0.01f32;
+        let mut grads: Vec<Vec<f32>> = params
+            .tensors
+            .iter()
+            .map(|t| vec![0.0; t.len()])
+            .collect();
+        grads[0][0] = g0;
+        let before = params.tensors[0][0];
+        adam_apply(&mut params, &grads);
+        let delta = params.tensors[0][0] - before;
+        assert!(
+            (delta + LEARNING_RATE).abs() < LEARNING_RATE * 0.01,
+            "delta={delta}"
+        );
+        // untouched coords unchanged
+        assert_eq!(params.tensors[1][0], 0.0);
+    }
+
+    #[test]
+    fn entropy_positive_and_bounded() {
+        let params = PolicyParams::init(5, 41);
+        let batch = make_batch(&params, 8, 42);
+        let (_, _, entropy) = ppo_grads(&params, &batch);
+        assert!(entropy > 0.0);
+        assert!(entropy <= (5.0f32).ln() + 1e-4);
+    }
+}

@@ -1,0 +1,170 @@
+//! Pure-Rust reference forward pass of the policy network.
+//!
+//! Bit-faithful re-implementation of python/compile/model.py::_forward
+//! (dense+ReLU → residual → layer norm → dense+ReLU ×2 → dense → softmax).
+//! Used to (a) cross-check the AOT HLO numerics in integration tests and
+//! (b) serve as a no-artifact fallback for unit tests and CLI tooling.
+
+use super::params::{PolicyParams, EMBED_DIM, HIDDEN};
+
+const LN_EPS: f32 = 1e-5;
+
+/// `y[rows×n] = relu?(x[rows×k] @ w[k×n] + b[n])`
+fn dense(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    relu: bool,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(rows * n, 0.0);
+    for r in 0..rows {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        orow.copy_from_slice(&b[..n]);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * n..(i + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        if relu {
+            for o in orow.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+}
+
+fn layer_norm(x: &mut [f32], rows: usize, d: usize, gamma: &[f32], beta: &[f32]) {
+    for r in 0..rows {
+        let row = &mut x[r * d..(r + 1) * d];
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = gamma[i] * (*v - mean) * inv + beta[i];
+        }
+    }
+}
+
+fn softmax_rows(x: &mut [f32], rows: usize, n: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * n..(r + 1) * n];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Forward pass: `x` is row-major `[rows × EMBED_DIM]`; returns row-major
+/// `[rows × n_actions]` probabilities.
+pub fn forward(params: &PolicyParams, x: &[f32], rows: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * EMBED_DIM);
+    let [h1, h2, h3] = HIDDEN;
+    let n = params.n_actions;
+    let t = &params.tensors;
+    let (w1, b1, ln_g, ln_b) = (&t[0], &t[1], &t[2], &t[3]);
+    let (w2, b2, w3, b3, w4, b4) = (&t[4], &t[5], &t[6], &t[7], &t[8], &t[9]);
+
+    let mut buf1 = Vec::new();
+    dense(x, rows, EMBED_DIM, w1, b1, h1, true, &mut buf1);
+    // residual (EMBED_DIM == h1)
+    for (o, &xv) in buf1.iter_mut().zip(x) {
+        *o += xv;
+    }
+    layer_norm(&mut buf1, rows, h1, ln_g, ln_b);
+
+    let mut buf2 = Vec::new();
+    dense(&buf1, rows, h1, w2, b2, h2, true, &mut buf2);
+    dense(&buf2, rows, h2, w3, b3, h3, true, &mut buf1);
+    dense(&buf1, rows, h3, w4, b4, n, false, &mut buf2);
+    softmax_rows(&mut buf2, rows, n);
+    buf2
+}
+
+/// Convenience: probabilities for a single embedding.
+pub fn forward_one(params: &PolicyParams, x: &[f32]) -> Vec<f32> {
+    forward(params, x, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_x(rng: &mut Rng, rows: usize) -> Vec<f32> {
+        (0..rows * EMBED_DIM).map(|_| rng.normal() as f32 * 0.3).collect()
+    }
+
+    #[test]
+    fn output_is_simplex() {
+        let p = PolicyParams::init(5, 3);
+        let mut rng = Rng::new(4);
+        let x = rand_x(&mut rng, 7);
+        let probs = forward(&p, &x, 7);
+        assert_eq!(probs.len(), 7 * 5);
+        for r in 0..7 {
+            let row = &probs[r * 5..(r + 1) * 5];
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+            assert!(row.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn batch_equals_single() {
+        let p = PolicyParams::init(4, 5);
+        let mut rng = Rng::new(6);
+        let x = rand_x(&mut rng, 3);
+        let batch = forward(&p, &x, 3);
+        for r in 0..3 {
+            let single = forward_one(&p, &x[r * EMBED_DIM..(r + 1) * EMBED_DIM]);
+            for (a, b) in batch[r * 4..(r + 1) * 4].iter().zip(&single) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn input_sensitivity() {
+        let p = PolicyParams::init(4, 7);
+        let mut rng = Rng::new(8);
+        let x1 = rand_x(&mut rng, 1);
+        let x2 = rand_x(&mut rng, 1);
+        let p1 = forward_one(&p, &x1);
+        let p2 = forward_one(&p, &x2);
+        let diff: f32 = p1.iter().zip(&p2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-4, "diff={diff}");
+    }
+
+    #[test]
+    fn layer_norm_stats() {
+        let mut x: Vec<f32> = (0..512).map(|i| i as f32).collect();
+        let g = vec![1.0; 256];
+        let b = vec![0.0; 256];
+        layer_norm(&mut x, 2, 256, &g, &b);
+        for r in 0..2 {
+            let row = &x[r * 256..(r + 1) * 256];
+            let mean: f32 = row.iter().sum::<f32>() / 256.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 256.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+}

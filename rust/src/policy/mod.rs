@@ -1,0 +1,19 @@
+//! Online query identification (paper §IV-A).
+//!
+//! The policy network maps a 256-d query embedding to a probability vector
+//! over edge nodes (the matching degrees `s_i^t`). Training is policy-only
+//! PPO with batch-standardized feedback (Eq. 9–11), executed through the
+//! AOT-compiled `ppo_update` artifact; inference through `policy_fwd`.
+//!
+//! - [`params`]: host-side parameter/Adam state (Rust owns the weights),
+//! - [`mlp`]: pure-Rust reference forward (numerics cross-check + tests),
+//! - [`ppo`]: the online learner — feedback buffer, reward
+//!   standardization, update triggering.
+
+pub mod params;
+pub mod mlp;
+pub mod ppo;
+pub mod grad;
+
+pub use params::PolicyParams;
+pub use ppo::{OnlinePolicy, PpoConfig};

@@ -1,0 +1,133 @@
+//! Host-side policy parameters + Adam state.
+//!
+//! Rust owns the weights: the AOT graphs are pure functions, so parameters
+//! live here as flat `Vec<f32>` tensors (in the `PARAM_NAMES` order shared
+//! with python/compile/model.py) and are shipped to PJRT per call.
+
+use crate::util::rng::Rng;
+
+/// Hidden layer widths — must match python/compile/model.py::HIDDEN.
+pub const HIDDEN: [usize; 3] = [256, 128, 64];
+/// Embedding dim — must match model.py::EMBED_DIM and text::embed::EMBED_DIM.
+pub const EMBED_DIM: usize = 256;
+/// Number of parameter tensors (w1,b1,ln_g,ln_b,w2,b2,w3,b3,w4,b4).
+pub const NUM_TENSORS: usize = 10;
+
+/// Parameter tensor shapes for `n_actions`, in PARAM_NAMES order.
+pub fn param_shapes(n_actions: usize) -> [(usize, usize); NUM_TENSORS] {
+    let [h1, h2, h3] = HIDDEN;
+    [
+        (EMBED_DIM, h1),
+        (1, h1),
+        (1, h1),
+        (1, h1),
+        (h1, h2),
+        (1, h2),
+        (h2, h3),
+        (1, h3),
+        (h3, n_actions),
+        (1, n_actions),
+    ]
+}
+
+/// Policy parameters + Adam optimizer state.
+#[derive(Clone, Debug)]
+pub struct PolicyParams {
+    pub n_actions: usize,
+    /// Flat tensors in PARAM_NAMES order (row-major).
+    pub tensors: Vec<Vec<f32>>,
+    pub adam_m: Vec<Vec<f32>>,
+    pub adam_v: Vec<Vec<f32>>,
+    /// 1-based Adam timestep (incremented per update call).
+    pub step: u64,
+}
+
+impl PolicyParams {
+    /// He-uniform init for weights, zeros for biases, ones for ln gamma —
+    /// mirrors model.py::init_params (different RNG, same distribution).
+    pub fn init(n_actions: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let shapes = param_shapes(n_actions);
+        let names = [
+            "w1", "b1", "ln_g", "ln_b", "w2", "b2", "w3", "b3", "w4", "b4",
+        ];
+        let tensors = names
+            .iter()
+            .zip(shapes.iter())
+            .map(|(name, &(r, c))| {
+                let len = r * c;
+                match *name {
+                    n if n.starts_with('w') => {
+                        let lim = (6.0 / r as f64).sqrt();
+                        (0..len).map(|_| rng.range_f64(-lim, lim) as f32).collect()
+                    }
+                    "ln_g" => vec![1.0; len],
+                    _ => vec![0.0; len],
+                }
+            })
+            .collect::<Vec<_>>();
+        let adam_m = tensors.iter().map(|t| vec![0.0; t.len()]).collect();
+        let adam_v = tensors.iter().map(|t| vec![0.0; t.len()]).collect();
+        PolicyParams { n_actions, tensors, adam_m, adam_v, step: 0 }
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Shapes as (rows, cols) pairs.
+    pub fn shapes(&self) -> [(usize, usize); NUM_TENSORS] {
+        param_shapes(self.n_actions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_sizes() {
+        let p = PolicyParams::init(4, 1);
+        let shapes = p.shapes();
+        assert_eq!(p.tensors.len(), NUM_TENSORS);
+        for (t, &(r, c)) in p.tensors.iter().zip(shapes.iter()) {
+            assert_eq!(t.len(), r * c);
+        }
+        // 256*256 + 256*3 + 256*128 + 128 + 128*64 + 64 + 64*4 + 4
+        let expect: usize = 256 * 256
+            + 3 * 256
+            + 256 * 128
+            + 128
+            + 128 * 64
+            + 64
+            + 64 * 4
+            + 4;
+        assert_eq!(p.num_params(), expect);
+    }
+
+    #[test]
+    fn init_distributions() {
+        let p = PolicyParams::init(3, 2);
+        // ln_g all ones, biases zero
+        assert!(p.tensors[2].iter().all(|&x| x == 1.0));
+        assert!(p.tensors[1].iter().all(|&x| x == 0.0));
+        assert!(p.tensors[9].iter().all(|&x| x == 0.0));
+        // w1 within He-uniform bounds and not all zero
+        let lim = (6.0 / 256.0f64).sqrt() as f32;
+        assert!(p.tensors[0].iter().all(|&x| x.abs() <= lim));
+        assert!(p.tensors[0].iter().any(|&x| x.abs() > 1e-4));
+        // adam state zeroed
+        assert!(p.adam_m[0].iter().all(|&x| x == 0.0));
+        assert_eq!(p.step, 0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = PolicyParams::init(4, 9);
+        let b = PolicyParams::init(4, 9);
+        let c = PolicyParams::init(4, 10);
+        assert_eq!(a.tensors[0], b.tensors[0]);
+        assert_ne!(a.tensors[0], c.tensors[0]);
+    }
+}

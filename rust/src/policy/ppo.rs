@@ -1,0 +1,287 @@
+//! The online query-identification learner (paper §IV-A).
+//!
+//! Wraps the policy parameters with: action sampling from the probability
+//! vector `s_i^t`, a feedback memory buffer, batch-standardized rewards
+//! (Eq. 10), and threshold-triggered PPO updates (the paper's
+//! "memory buffer … triggers batched policy updates only when the
+//! accumulated queries exceed a predetermined threshold").
+//!
+//! Two interchangeable backends:
+//! - [`Backend::Pjrt`] — executes the AOT HLO artifacts via PJRT
+//!   (the production path; Python never runs here),
+//! - [`Backend::Reference`] — the pure-Rust twin (tests / no artifacts).
+
+use std::sync::Arc;
+
+use crate::policy::grad;
+use crate::policy::mlp;
+use crate::policy::params::{PolicyParams, EMBED_DIM};
+use crate::runtime::{PolicyRuntime, UpdateBatch, UpdateStats};
+use crate::util::rng::Rng;
+use crate::util::stats::standardize;
+use crate::Result;
+
+/// Which engine executes forward/update.
+#[derive(Clone)]
+pub enum Backend {
+    /// AOT HLO artifacts through PJRT.
+    Pjrt(Arc<PolicyRuntime>),
+    /// Pure-Rust mirror implementation.
+    Reference,
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Pjrt(_) => write!(f, "Backend::Pjrt"),
+            Backend::Reference => write!(f, "Backend::Reference"),
+        }
+    }
+}
+
+/// PPO learner configuration.
+#[derive(Clone, Debug)]
+pub struct PpoConfig {
+    /// Buffer size that triggers an update (the paper's threshold).
+    pub buffer_threshold: usize,
+    /// Optimization epochs per triggered batch (re-uses the batch with
+    /// fixed behavior policy — standard PPO batch reuse).
+    pub epochs: usize,
+    /// Feedback weights α₁ (ROUGE/LCS term) and α₂ (BERTScore term), Eq. 9.
+    pub alpha1: f64,
+    pub alpha2: f64,
+    /// Exploration floor: actions are sampled from
+    /// `(1−ε)·π + ε·uniform` to guarantee continued data collection.
+    pub explore_eps: f64,
+    pub seed: u64,
+}
+
+impl Default for PpoConfig {
+    fn default() -> Self {
+        PpoConfig {
+            buffer_threshold: 256,
+            epochs: 8,
+            alpha1: 1.0,
+            alpha2: 0.5,
+            explore_eps: 0.05,
+            seed: 0xC0ED6E,
+        }
+    }
+}
+
+/// One buffered experience.
+#[derive(Clone, Debug)]
+struct Experience {
+    x: Vec<f32>,
+    action: usize,
+    old_logp: f32,
+    feedback: f64,
+}
+
+/// The online policy: parameters + buffer + backend.
+pub struct OnlinePolicy {
+    pub params: PolicyParams,
+    pub cfg: PpoConfig,
+    backend: Backend,
+    buffer: Vec<Experience>,
+    rng: Rng,
+    /// Number of completed update rounds (each = cfg.epochs PPO steps).
+    pub updates: usize,
+    /// Last update's stats, if any.
+    pub last_stats: Option<UpdateStats>,
+}
+
+impl OnlinePolicy {
+    pub fn new(n_actions: usize, cfg: PpoConfig, backend: Backend) -> Self {
+        let rng = Rng::new(cfg.seed);
+        OnlinePolicy {
+            params: PolicyParams::init(n_actions, cfg.seed ^ 0x9E37),
+            cfg,
+            backend,
+            buffer: Vec::new(),
+            rng,
+            updates: 0,
+            last_stats: None,
+        }
+    }
+
+    pub fn n_actions(&self) -> usize {
+        self.params.n_actions
+    }
+
+    /// Probability vectors `s_i^t` for a batch of embeddings
+    /// (row-major `[rows × EMBED_DIM]` → `[rows × n_actions]`).
+    pub fn probs(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        match &self.backend {
+            Backend::Pjrt(rt) => rt.forward(&self.params, x, rows),
+            Backend::Reference => Ok(mlp::forward(&self.params, x, rows)),
+        }
+    }
+
+    /// Sample an action from a probability row with the exploration floor;
+    /// returns (action, log π_behavior(action)).
+    pub fn sample_action(&mut self, prob_row: &[f32]) -> (usize, f32) {
+        let n = prob_row.len();
+        let eps = self.cfg.explore_eps;
+        let mixed: Vec<f64> = prob_row
+            .iter()
+            .map(|&p| (1.0 - eps) * p as f64 + eps / n as f64)
+            .collect();
+        let a = self.rng.sample_weighted(&mixed);
+        // old_logp is the *policy* logp (importance ratios are computed
+        // against π_θ_old, which is what the update graph recomputes).
+        let logp = (prob_row[a].max(1e-12)).ln();
+        (a, logp)
+    }
+
+    /// Record feedback for one served query (Eq. 9 composite score is
+    /// computed by the caller via `metrics::Evaluator::feedback`).
+    /// Triggers an update when the buffer reaches the threshold.
+    pub fn record(
+        &mut self,
+        x: &[f32],
+        action: usize,
+        old_logp: f32,
+        feedback: f64,
+    ) -> Result<Option<UpdateStats>> {
+        debug_assert_eq!(x.len(), EMBED_DIM);
+        self.buffer.push(Experience { x: x.to_vec(), action, old_logp, feedback });
+        if self.buffer.len() >= self.cfg.buffer_threshold {
+            let stats = self.flush()?;
+            return Ok(stats);
+        }
+        Ok(None)
+    }
+
+    /// Force an update on whatever is buffered (e.g. at slot end).
+    pub fn flush(&mut self) -> Result<Option<UpdateStats>> {
+        if self.buffer.len() < 2 {
+            return Ok(None);
+        }
+        let exps = std::mem::take(&mut self.buffer);
+        // Eq. 10: batch standardization of the feedback signal.
+        let raw: Vec<f64> = exps.iter().map(|e| e.feedback).collect();
+        let std_rewards = standardize(&raw);
+        let rows = exps.len();
+        let mut batch = UpdateBatch {
+            x: Vec::with_capacity(rows * EMBED_DIM),
+            actions: Vec::with_capacity(rows),
+            rewards: std_rewards.iter().map(|&r| r as f32).collect(),
+            old_logp: exps.iter().map(|e| e.old_logp).collect(),
+        };
+        for e in &exps {
+            batch.x.extend_from_slice(&e.x);
+            batch.actions.push(e.action);
+        }
+        let mut last = UpdateStats { loss: 0.0, entropy: 0.0 };
+        for _ in 0..self.cfg.epochs {
+            last = match &self.backend {
+                Backend::Pjrt(rt) => rt.update(&mut self.params, &batch)?,
+                Backend::Reference => grad::update_host(&mut self.params, &batch),
+            };
+        }
+        self.updates += 1;
+        self.last_stats = Some(last);
+        Ok(Some(last))
+    }
+
+    /// Buffered-but-unflushed experience count.
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build an embedding that is a one-hot-ish cluster marker: queries of
+    /// "domain d" share a direction, so a linear policy can separate them.
+    fn cluster_embedding(rng: &mut Rng, cluster: usize, n_clusters: usize) -> Vec<f32> {
+        let mut x = vec![0f32; EMBED_DIM];
+        let span = EMBED_DIM / n_clusters;
+        for i in 0..span {
+            x[cluster * span + i] = 1.0 + 0.1 * rng.normal() as f32;
+        }
+        for v in x.iter_mut() {
+            *v += 0.05 * rng.normal() as f32;
+        }
+        crate::text::embed::l2_normalize(&mut x);
+        x
+    }
+
+    #[test]
+    fn learns_cluster_to_node_mapping() {
+        // 3 clusters, 3 nodes; reward +1 when action == cluster else -1.
+        let n = 3;
+        let cfg = PpoConfig {
+            buffer_threshold: 64,
+            epochs: 6,
+            explore_eps: 0.1,
+            ..Default::default()
+        };
+        let mut pol = OnlinePolicy::new(n, cfg, Backend::Reference);
+        let mut rng = Rng::new(99);
+        let mut correct_recent = 0usize;
+        let mut total_recent = 0usize;
+        for step in 0..3000 {
+            let c = rng.below(n);
+            let x = cluster_embedding(&mut rng, c, n);
+            let probs = pol.probs(&x, 1).unwrap();
+            let (a, logp) = pol.sample_action(&probs);
+            let fb = if a == c { 1.0 } else { -1.0 };
+            pol.record(&x, a, logp, fb).unwrap();
+            if step >= 2500 {
+                total_recent += 1;
+                if a == c {
+                    correct_recent += 1;
+                }
+            }
+        }
+        assert!(pol.updates >= 10, "updates={}", pol.updates);
+        let acc = correct_recent as f64 / total_recent as f64;
+        assert!(acc > 0.6, "final routing accuracy={acc:.3}");
+    }
+
+    #[test]
+    fn buffer_threshold_triggers_update() {
+        let cfg = PpoConfig { buffer_threshold: 8, epochs: 1, ..Default::default() };
+        let mut pol = OnlinePolicy::new(3, cfg, Backend::Reference);
+        let mut rng = Rng::new(5);
+        for i in 0..7 {
+            let x = cluster_embedding(&mut rng, i % 3, 3);
+            let out = pol.record(&x, 0, -1.0, 0.5).unwrap();
+            assert!(out.is_none());
+        }
+        assert_eq!(pol.buffered(), 7);
+        let x = cluster_embedding(&mut rng, 0, 3);
+        let out = pol.record(&x, 0, -1.0, 0.5).unwrap();
+        assert!(out.is_some());
+        assert_eq!(pol.buffered(), 0);
+        assert_eq!(pol.updates, 1);
+    }
+
+    #[test]
+    fn flush_on_tiny_buffer_is_noop() {
+        let mut pol = OnlinePolicy::new(3, PpoConfig::default(), Backend::Reference);
+        assert!(pol.flush().unwrap().is_none());
+        let mut rng = Rng::new(1);
+        let x = cluster_embedding(&mut rng, 0, 3);
+        pol.record(&x, 0, -1.0, 0.1).unwrap();
+        assert!(pol.flush().unwrap().is_none()); // 1 sample: skip (std undefined)
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let mut pol = OnlinePolicy::new(3, PpoConfig { explore_eps: 0.0, ..Default::default() }, Backend::Reference);
+        let probs = [0.8f32, 0.15, 0.05];
+        let mut counts = [0usize; 3];
+        for _ in 0..5000 {
+            let (a, logp) = pol.sample_action(&probs);
+            counts[a] += 1;
+            assert!((logp - probs[a].ln()).abs() < 1e-6);
+        }
+        let f0 = counts[0] as f64 / 5000.0;
+        assert!((f0 - 0.8).abs() < 0.05, "f0={f0}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Algorithm 1: Inter-Node Scheduling.
+//!
+//! Each query samples a node from its probability vector s_i^t; if the
+//! sampled node is at capacity, it re-samples from the renormalized
+//! probabilities of nodes with residual capacity. If the batch exceeds
+//! total cluster capacity, all capacities are scaled proportionally
+//! (lines 5–8). Outputs the per-query assignment a_i^t and per-node
+//! proportions p_j^t = q_j / B^t.
+
+use crate::util::rng::Rng;
+
+/// Result of one inter-node scheduling round.
+#[derive(Clone, Debug)]
+pub struct InterScheduleResult {
+    /// Node index per query.
+    pub assignment: Vec<usize>,
+    /// Queries per node.
+    pub counts: Vec<usize>,
+    /// Proportions p_j^t (sum to 1 when B > 0).
+    pub proportions: Vec<f64>,
+    /// Effective capacities after overload scaling.
+    pub capacities: Vec<f64>,
+}
+
+/// Run Algorithm 1.
+///
+/// `probs` is row-major `[B × N]` (each row sums to 1);
+/// `capacities` is C_n(L^t) per node.
+pub fn inter_node_schedule(
+    probs: &[f32],
+    n_nodes: usize,
+    capacities: &[f64],
+    rng: &mut Rng,
+) -> InterScheduleResult {
+    assert_eq!(capacities.len(), n_nodes);
+    assert!(n_nodes > 0);
+    let b = if n_nodes == 0 { 0 } else { probs.len() / n_nodes };
+    assert_eq!(probs.len(), b * n_nodes);
+
+    // Lines 5–8: proportional scaling under cluster overload.
+    let total_cap: f64 = capacities.iter().sum();
+    let mut caps: Vec<f64> = capacities.to_vec();
+    if b as f64 > total_cap && total_cap > 0.0 {
+        let excess = b as f64 - total_cap;
+        for c in caps.iter_mut() {
+            *c += (*c / total_cap) * excess;
+        }
+    } else if total_cap <= 0.0 {
+        // degenerate: no capacity anywhere — split evenly
+        caps = vec![(b as f64 / n_nodes as f64).ceil(); n_nodes];
+    }
+
+    let mut counts = vec![0usize; n_nodes];
+    let mut assignment = Vec::with_capacity(b);
+    let mut weights = vec![0f64; n_nodes];
+    for i in 0..b {
+        let row = &probs[i * n_nodes..(i + 1) * n_nodes];
+        for (w, &p) in weights.iter_mut().zip(row) {
+            *w = p as f64;
+        }
+        let mut a = rng.sample_weighted(&weights);
+        // Line 11: capacity-aware validation + renormalized reassignment.
+        if (counts[a] as f64) >= caps[a] {
+            let mut any = false;
+            for j in 0..n_nodes {
+                if (counts[j] as f64) < caps[j] {
+                    any = true;
+                } else {
+                    weights[j] = 0.0;
+                }
+            }
+            if any {
+                a = rng.sample_weighted(&weights);
+            }
+            // else: every node saturated (can only happen from rounding;
+            // keep the original sample)
+        }
+        counts[a] += 1;
+        assignment.push(a);
+    }
+
+    let proportions = counts
+        .iter()
+        .map(|&q| if b > 0 { q as f64 / b as f64 } else { 0.0 })
+        .collect();
+    InterScheduleResult { assignment, counts, proportions, capacities: caps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_probs(b: usize, n: usize) -> Vec<f32> {
+        vec![1.0 / n as f32; b * n]
+    }
+
+    /// Rows concentrated on node `fav`.
+    fn skewed_probs(b: usize, n: usize, fav: usize, p: f32) -> Vec<f32> {
+        let mut v = vec![(1.0 - p) / (n - 1) as f32; b * n];
+        for i in 0..b {
+            v[i * n + fav] = p;
+        }
+        v
+    }
+
+    #[test]
+    fn conserves_queries_and_proportions() {
+        let mut rng = Rng::new(3);
+        let res = inter_node_schedule(&uniform_probs(500, 4), 4, &[200.0; 4], &mut rng);
+        assert_eq!(res.assignment.len(), 500);
+        assert_eq!(res.counts.iter().sum::<usize>(), 500);
+        let psum: f64 = res.proportions.iter().sum();
+        assert!((psum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_capacity_limits() {
+        let mut rng = Rng::new(5);
+        // all queries love node 0, but it can only take 50
+        let res =
+            inter_node_schedule(&skewed_probs(300, 3, 0, 0.9), 3, &[50.0, 200.0, 200.0], &mut rng);
+        assert!(res.counts[0] <= 51, "node0={}", res.counts[0]);
+        assert_eq!(res.counts.iter().sum::<usize>(), 300);
+    }
+
+    #[test]
+    fn overload_scales_proportionally() {
+        let mut rng = Rng::new(7);
+        // total capacity 100 < 400 queries -> scaled capacities keep ratios
+        let res = inter_node_schedule(&uniform_probs(400, 2), 2, &[75.0, 25.0], &mut rng);
+        assert_eq!(res.counts.iter().sum::<usize>(), 400);
+        let ratio = res.capacities[0] / res.capacities[1];
+        assert!((ratio - 3.0).abs() < 1e-9);
+        // assignment roughly follows scaled capacity, not uniform
+        assert!(res.counts[0] > res.counts[1]);
+    }
+
+    #[test]
+    fn follows_probabilities_when_capacity_free() {
+        let mut rng = Rng::new(9);
+        let res = inter_node_schedule(&skewed_probs(1000, 3, 2, 0.8), 3, &[2000.0; 3], &mut rng);
+        let f2 = res.counts[2] as f64 / 1000.0;
+        assert!((f2 - 0.8).abs() < 0.05, "f2={f2}");
+    }
+
+    #[test]
+    fn zero_queries() {
+        let mut rng = Rng::new(1);
+        let res = inter_node_schedule(&[], 3, &[10.0; 3], &mut rng);
+        assert!(res.assignment.is_empty());
+        assert_eq!(res.proportions, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn zero_capacity_degenerates_to_even_split() {
+        let mut rng = Rng::new(2);
+        let res = inter_node_schedule(&uniform_probs(90, 3), 3, &[0.0; 3], &mut rng);
+        assert_eq!(res.counts.iter().sum::<usize>(), 90);
+        for &c in &res.counts {
+            assert!(c >= 20 && c <= 40, "{:?}", res.counts);
+        }
+    }
+}

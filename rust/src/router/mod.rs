@@ -1,0 +1,14 @@
+//! Load-balancing inter-node scheduling (paper §IV-B).
+//!
+//! - [`capacity`]: the initialization-phase profiling that estimates each
+//!   node's capacity function C_n(L) = k_n·L + b_n (Eq. 12) via controlled
+//!   query bursts and a 1% drop-rate threshold.
+//! - [`inter`]: Algorithm 1 — probability-driven assignment with
+//!   capacity-aware reassignment and proportional capacity scaling under
+//!   cluster-wide overload.
+
+pub mod capacity;
+pub mod inter;
+
+pub use capacity::{profile_capacity, CapacityModel};
+pub use inter::{inter_node_schedule, InterScheduleResult};

@@ -1,0 +1,360 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`). The artifacts are produced once by
+//! `make artifacts` (python/compile/aot.py); this module is the only place
+//! where the Layer-3 coordinator touches XLA.
+//!
+//! Executables are compiled lazily per (kind, n_actions, batch) and cached.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::policy::params::{param_shapes, PolicyParams, EMBED_DIM, NUM_TENSORS};
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json` entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: String,
+    pub n_actions: usize,
+    pub batch: usize,
+    pub file: String,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub embed_dim: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub learning_rate: f64,
+    pub clip_eps: f64,
+    pub entropy_beta: f64,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let hp = v.get("hyperparams").ok_or_else(|| anyhow!("no hyperparams"))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("no artifacts[]"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactInfo {
+                    name: a.get("name").and_then(|x| x.as_str()).unwrap_or_default().into(),
+                    kind: a.get("kind").and_then(|x| x.as_str()).unwrap_or_default().into(),
+                    n_actions: a.get("n_actions").and_then(|x| x.as_usize()).unwrap_or(0),
+                    batch: a.get("batch").and_then(|x| x.as_usize()).unwrap_or(0),
+                    file: a.get("file").and_then(|x| x.as_str()).unwrap_or_default().into(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            embed_dim: v.get("embed_dim").and_then(|x| x.as_usize()).unwrap_or(0),
+            artifacts: arts,
+            learning_rate: hp.get("learning_rate").and_then(|x| x.as_f64()).unwrap_or(3e-4),
+            clip_eps: hp.get("clip_eps").and_then(|x| x.as_f64()).unwrap_or(0.02),
+            entropy_beta: hp.get("entropy_beta").and_then(|x| x.as_f64()).unwrap_or(0.01),
+        })
+    }
+}
+
+/// The PPO update batch the runtime executes (padded to the artifact's
+/// compiled batch size internally).
+#[derive(Clone, Debug, Default)]
+pub struct UpdateBatch {
+    /// Row-major [rows × EMBED_DIM] embeddings.
+    pub x: Vec<f32>,
+    /// Chosen node per row.
+    pub actions: Vec<usize>,
+    /// Batch-standardized rewards (Eq. 10).
+    pub rewards: Vec<f32>,
+    /// log π_old(a|s) recorded at decision time.
+    pub old_logp: Vec<f32>,
+}
+
+impl UpdateBatch {
+    pub fn rows(&self) -> usize {
+        self.actions.len()
+    }
+}
+
+/// Result of one update execution.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateStats {
+    pub loss: f32,
+    pub entropy: f32,
+}
+
+/// PJRT-backed policy runtime.
+///
+/// All PJRT objects (client, executables, buffers) are touched only while
+/// holding `pjrt` — the `xla` crate wraps them in non-atomic `Rc`s, so the
+/// mutex guarantees no concurrent refcount mutation. Host-side state
+/// (`manifest`, `dir`) is immutable after construction. Under that
+/// invariant the type is safe to share across threads:
+pub struct PolicyRuntime {
+    dir: PathBuf,
+    manifest: Manifest,
+    pjrt: Mutex<PjrtState>,
+}
+
+struct PjrtState {
+    client: xla::PjRtClient,
+    // (kind, n, batch) -> compiled executable
+    cache: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: see the struct docs — every access to the Rc-backed PJRT
+// wrappers goes through the `pjrt` mutex and no Rc handle escapes a
+// locked section (outputs are converted to host `Vec<f32>` before the
+// guard drops). The underlying PJRT CPU client is itself thread-safe.
+unsafe impl Send for PolicyRuntime {}
+unsafe impl Sync for PolicyRuntime {}
+
+impl PolicyRuntime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn load(dir: &Path) -> Result<PolicyRuntime> {
+        let manifest = Manifest::load(dir)?;
+        if manifest.embed_dim != EMBED_DIM {
+            bail!(
+                "artifact embed_dim {} != runtime EMBED_DIM {}",
+                manifest.embed_dim,
+                EMBED_DIM
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(PolicyRuntime {
+            dir: dir.to_path_buf(),
+            manifest,
+            pjrt: Mutex::new(PjrtState { client, cache: HashMap::new() }),
+        })
+    }
+
+    /// Default artifact directory (`$COEDGE_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("COEDGE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Pick the best-fitting compiled forward batch size for `rows`.
+    fn pick_fwd_batch(&self, n: usize, rows: usize) -> Result<usize> {
+        let mut batches: Vec<usize> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "policy_fwd" && a.n_actions == n)
+            .map(|a| a.batch)
+            .collect();
+        if batches.is_empty() {
+            bail!("no policy_fwd artifact for n_actions={n} (have: {:?})",
+                  self.manifest.artifacts.iter().map(|a| a.n_actions).collect::<Vec<_>>());
+        }
+        batches.sort_unstable();
+        // smallest batch >= rows, else the largest available
+        Ok(*batches.iter().find(|&&b| b >= rows).unwrap_or(batches.last().unwrap()))
+    }
+
+    /// Look up (or lazily compile) an executable. Must be called with the
+    /// `pjrt` guard held; the returned reference lives inside the guard.
+    fn executable<'a>(
+        state: &'a mut PjrtState,
+        manifest: &Manifest,
+        dir: &Path,
+        kind: &str,
+        n: usize,
+        batch: usize,
+    ) -> Result<&'a xla::PjRtLoadedExecutable> {
+        let key = (kind.to_string(), n, batch);
+        if !state.cache.contains_key(&key) {
+            let info = manifest
+                .artifacts
+                .iter()
+                .find(|a| a.kind == kind && a.n_actions == n && a.batch == batch)
+                .ok_or_else(|| anyhow!("no artifact {kind} n={n} b={batch}"))?;
+            let path = dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("load {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = state
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", info.name))?;
+            state.cache.insert(key.clone(), exe);
+        }
+        Ok(state.cache.get(&key).unwrap())
+    }
+
+    /// Convert host parameters to literals in artifact input order.
+    fn param_literals(params: &PolicyParams, tensors: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+        let shapes = param_shapes(params.n_actions);
+        tensors
+            .iter()
+            .zip(shapes.iter())
+            .map(|(t, &(r, c))| {
+                let lit = xla::Literal::vec1(t);
+                let dims: Vec<i64> = if r == 1 {
+                    vec![c as i64] // rank-1 tensors (biases, ln params)
+                } else {
+                    vec![r as i64, c as i64]
+                };
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Forward pass: returns row-major `[rows × n_actions]` probabilities.
+    /// Pads to the compiled batch and slices the result; for large inputs
+    /// runs multiple executions.
+    pub fn forward(&self, params: &PolicyParams, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), rows * EMBED_DIM);
+        let n = params.n_actions;
+        if rows == 0 {
+            return Ok(Vec::new());
+        }
+        let batch = self.pick_fwd_batch(n, rows)?;
+        let mut guard = self.pjrt.lock().unwrap();
+        let exe = Self::executable(&mut guard, &self.manifest, &self.dir, "policy_fwd", n, batch)?;
+        let plits = Self::param_literals(params, &params.tensors)?;
+
+        let mut out = Vec::with_capacity(rows * n);
+        let mut done = 0;
+        while done < rows {
+            let take = (rows - done).min(batch);
+            let mut chunk = vec![0f32; batch * EMBED_DIM];
+            chunk[..take * EMBED_DIM]
+                .copy_from_slice(&x[done * EMBED_DIM..(done + take) * EMBED_DIM]);
+            let xlit = xla::Literal::vec1(&chunk)
+                .reshape(&[batch as i64, EMBED_DIM as i64])
+                .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+            let mut inputs: Vec<&xla::Literal> = plits.iter().collect();
+            inputs.push(&xlit);
+            let result = exe
+                .execute::<&xla::Literal>(&inputs)
+                .map_err(|e| anyhow!("execute fwd: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let probs_lit = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            let probs: Vec<f32> = probs_lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            out.extend_from_slice(&probs[..take * n]);
+            done += take;
+        }
+        Ok(out)
+    }
+
+    /// Execute one PPO update (paper Eq. 10–11) in place on `params`.
+    ///
+    /// Batches larger than the compiled size are split into chained
+    /// updates; smaller ones are zero-padded with mask=0.
+    pub fn update(&self, params: &mut PolicyParams, batch: &UpdateBatch) -> Result<UpdateStats> {
+        let n = params.n_actions;
+        let rows = batch.rows();
+        assert_eq!(batch.x.len(), rows * EMBED_DIM);
+        let info_batch = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == "ppo_update" && a.n_actions == n)
+            .map(|a| a.batch)
+            .ok_or_else(|| anyhow!("no ppo_update artifact for n={n}"))?;
+        let mut guard = self.pjrt.lock().unwrap();
+        let exe =
+            Self::executable(&mut guard, &self.manifest, &self.dir, "ppo_update", n, info_batch)?;
+
+        let mut stats = UpdateStats { loss: 0.0, entropy: 0.0 };
+        let mut done = 0;
+        let mut chunks = 0;
+        while done < rows {
+            let take = (rows - done).min(info_batch);
+            let b = info_batch;
+            let mut x = vec![0f32; b * EMBED_DIM];
+            x[..take * EMBED_DIM]
+                .copy_from_slice(&batch.x[done * EMBED_DIM..(done + take) * EMBED_DIM]);
+            let mut onehot = vec![0f32; b * n];
+            let mut reward = vec![0f32; b];
+            let mut old_logp = vec![0f32; b];
+            let mut mask = vec![0f32; b];
+            for i in 0..take {
+                onehot[i * n + batch.actions[done + i]] = 1.0;
+                reward[i] = batch.rewards[done + i];
+                old_logp[i] = batch.old_logp[done + i];
+                mask[i] = 1.0;
+            }
+            params.step += 1;
+
+            let plits = Self::param_literals(params, &params.tensors)?;
+            let mlits = Self::param_literals(params, &params.adam_m)?;
+            let vlits = Self::param_literals(params, &params.adam_v)?;
+            let step_lit = xla::Literal::scalar(params.step as f32);
+            let xlit = xla::Literal::vec1(&x)
+                .reshape(&[b as i64, EMBED_DIM as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let ohlit = xla::Literal::vec1(&onehot)
+                .reshape(&[b as i64, n as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let rlit = xla::Literal::vec1(&reward);
+            let ollit = xla::Literal::vec1(&old_logp);
+            let mklit = xla::Literal::vec1(&mask);
+
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * NUM_TENSORS + 6);
+            inputs.extend(plits.iter());
+            inputs.extend(mlits.iter());
+            inputs.extend(vlits.iter());
+            inputs.push(&step_lit);
+            inputs.push(&xlit);
+            inputs.push(&ohlit);
+            inputs.push(&rlit);
+            inputs.push(&ollit);
+            inputs.push(&mklit);
+
+            let result = exe
+                .execute::<&xla::Literal>(&inputs)
+                .map_err(|e| anyhow!("execute update: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let parts = lit.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            if parts.len() != 3 * NUM_TENSORS + 2 {
+                bail!("update returned {} parts, expected {}", parts.len(), 3 * NUM_TENSORS + 2);
+            }
+            for (i, part) in parts.iter().take(NUM_TENSORS).enumerate() {
+                params.tensors[i] = part.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            }
+            for i in 0..NUM_TENSORS {
+                params.adam_m[i] =
+                    parts[NUM_TENSORS + i].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                params.adam_v[i] =
+                    parts[2 * NUM_TENSORS + i].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            }
+            stats.loss += parts[3 * NUM_TENSORS]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            stats.entropy += parts[3 * NUM_TENSORS + 1]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            chunks += 1;
+            done += take;
+        }
+        if chunks > 0 {
+            stats.loss /= chunks as f32;
+            stats.entropy /= chunks as f32;
+        }
+        Ok(stats)
+    }
+}

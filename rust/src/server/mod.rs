@@ -1,0 +1,271 @@
+//! TCP serving front-end: line-delimited JSON protocol + dynamic batcher.
+//!
+//! The paper serves through vLLM; offline we expose the coordinator over a
+//! minimal wire protocol (std::net + the crate's own thread pool — tokio
+//! is unavailable in this build environment, DESIGN.md §5).
+//!
+//! Protocol (one JSON object per line):
+//!   → {"id": 7, "qa_id": 123}
+//!   ← {"id": 7, "node": 2, "dropped": false, "rouge_l": 0.61,
+//!      "latency_s": 3.2, "answer": "…"}
+//!
+//! Requests are collected by the dynamic batcher until either the batch
+//! window elapses or `max_batch` requests are pending, then dispatched as
+//! one coordinator slot — the batching policy every modern LLM server
+//! (vLLM/Orca) applies at its front door.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Coordinator;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    /// Dynamic batching window.
+    pub batch_window_ms: u64,
+    /// Dispatch immediately once this many requests are pending.
+    pub max_batch: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7717".into(), batch_window_ms: 20, max_batch: 256 }
+    }
+}
+
+struct Pending {
+    request_id: f64,
+    qa_id: usize,
+    reply: Sender<String>,
+}
+
+/// Run the server until `shutdown` is set. Returns the bound address.
+pub fn serve(
+    mut coordinator: Coordinator,
+    cfg: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let (req_tx, req_rx): (Sender<Pending>, Receiver<Pending>) = channel();
+
+    // batcher thread: owns the coordinator
+    let batch_shutdown = Arc::clone(&shutdown);
+    let window = Duration::from_millis(cfg.batch_window_ms);
+    let max_batch = cfg.max_batch;
+    let batcher = std::thread::Builder::new()
+        .name("coedge-batcher".into())
+        .spawn(move || {
+            let mut pending: Vec<Pending> = Vec::new();
+            let mut deadline: Option<Instant> = None;
+            loop {
+                if batch_shutdown.load(Ordering::Relaxed) && pending.is_empty() {
+                    break;
+                }
+                let timeout = deadline
+                    .map(|d| d.saturating_duration_since(Instant::now()))
+                    .unwrap_or(Duration::from_millis(50));
+                match req_rx.recv_timeout(timeout) {
+                    Ok(p) => {
+                        if pending.is_empty() {
+                            deadline = Some(Instant::now() + window);
+                        }
+                        pending.push(p);
+                        if pending.len() < max_batch
+                            && deadline.map(|d| Instant::now() < d).unwrap_or(false)
+                        {
+                            continue;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if pending.is_empty() {
+                            continue;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        if pending.is_empty() {
+                            break;
+                        }
+                    }
+                }
+                // dispatch the batch as one coordinator slot
+                let qa_ids: Vec<usize> = pending.iter().map(|p| p.qa_id).collect();
+                let wall = Instant::now();
+                match coordinator.run_slot(&qa_ids) {
+                    Ok(report) => {
+                        let wall_s = wall.elapsed().as_secs_f64();
+                        for (p, out) in pending.drain(..).zip(report.outcomes) {
+                            let resp = Json::obj(vec![
+                                ("id", Json::Num(p.request_id)),
+                                ("node", Json::Num(out.node as f64)),
+                                ("dropped", Json::Bool(out.dropped)),
+                                ("rouge_l", Json::Num(out.scores.rouge_l)),
+                                ("bert_score", Json::Num(out.scores.bert_score)),
+                                ("sim_latency_s", Json::Num(out.latency_s)),
+                                ("wall_s", Json::Num(wall_s)),
+                            ]);
+                            let _ = p.reply.send(resp.to_string());
+                        }
+                    }
+                    Err(e) => {
+                        for p in pending.drain(..) {
+                            let resp = Json::obj(vec![
+                                ("id", Json::Num(p.request_id)),
+                                ("error", Json::Str(format!("{e}"))),
+                            ]);
+                            let _ = p.reply.send(resp.to_string());
+                        }
+                    }
+                }
+                deadline = None;
+            }
+        })
+        .expect("spawn batcher");
+
+    // accept loop (non-blocking poll so shutdown is honored)
+    let mut handlers = Vec::new();
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = req_tx.clone();
+                handlers.push(std::thread::spawn(move || handle_client(stream, tx)));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    drop(req_tx);
+    for h in handlers {
+        let _ = h.join();
+    }
+    let _ = batcher.join();
+    Ok(addr)
+}
+
+fn handle_client(stream: TcpStream, tx: Sender<Pending>) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Ok(v) => {
+                let request_id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(-1.0);
+                match v.get("qa_id").and_then(|x| x.as_usize()) {
+                    Some(qa_id) => {
+                        let (rtx, rrx) = channel();
+                        if tx.send(Pending { request_id, qa_id, reply: rtx }).is_err() {
+                            break;
+                        }
+                        match rrx.recv() {
+                            Ok(resp) => resp,
+                            Err(_) => break,
+                        }
+                    }
+                    None => Json::obj(vec![
+                        ("id", Json::Num(request_id)),
+                        ("error", Json::Str("missing qa_id".into())),
+                    ])
+                    .to_string(),
+                }
+            }
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("parse: {e}")))]).to_string(),
+        };
+        if writer.write_all(reply.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request and wait for its response.
+    pub fn request(&mut self, id: u64, qa_id: usize) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("qa_id", Json::Num(qa_id as f64)),
+        ]);
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("client parse: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+    use crate::policy::ppo::Backend;
+
+    #[test]
+    fn server_roundtrip() {
+        let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+        cfg.qa_per_domain = 20;
+        cfg.docs_per_domain = 40;
+        cfg.allocator = AllocatorKind::Oracle;
+        for n in cfg.nodes.iter_mut() {
+            n.corpus_docs = 80;
+        }
+        let co = Coordinator::build(cfg, Backend::Reference).unwrap();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let scfg = ServerConfig { addr: "127.0.0.1:0".into(), batch_window_ms: 10, max_batch: 8 };
+
+        // bind first to learn the port, then serve on that listener config
+        let sd = Arc::clone(&shutdown);
+        let (addr_tx, addr_rx) = channel();
+        let handle = std::thread::spawn(move || {
+            // rebind inside serve; report the actual addr
+            let listener_probe = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener_probe.local_addr().unwrap();
+            drop(listener_probe);
+            addr_tx.send(addr).unwrap();
+            let cfg = ServerConfig { addr: addr.to_string(), ..scfg };
+            serve(co, cfg, sd).unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        for i in 0..5u64 {
+            let resp = client.request(i, i as usize).unwrap();
+            assert_eq!(resp.get("id").unwrap().as_f64().unwrap() as u64, i);
+            assert!(resp.get("rouge_l").is_some(), "{resp:?}");
+        }
+        shutdown.store(true, Ordering::Relaxed);
+        drop(client);
+        handle.join().unwrap();
+    }
+}

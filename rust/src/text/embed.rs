@@ -1,0 +1,263 @@
+//! Deterministic text embeddings (BGE substitute, see DESIGN.md §5).
+//!
+//! Sentence embedding: each token (and token bigram) is FNV-hashed to a
+//! bucket with a deterministic ±1 sign ("feature hashing" / signed random
+//! projection). The accumulated vector is L2-normalized. Same-domain texts
+//! share topical vocabulary, so their embeddings cluster — the property the
+//! PPO identifier, retrieval, and BERTScore need.
+//!
+//! Token embeddings (for BERTScore): the token hash seeds a small
+//! pseudo-random Gaussian vector, mixed with the hashes of its left/right
+//! neighbors so that the embedding is mildly *contextual* like a
+//! transformer token embedding.
+
+use crate::text::tokenizer::tokenize;
+
+/// Sentence-embedding dimensionality. Matches the policy network's input
+/// width compiled into the AOT artifacts (python/compile/model.py).
+pub const EMBED_DIM: usize = 256;
+
+/// Token-embedding dimensionality for BERTScore.
+pub const TOKEN_DIM: usize = 64;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a hash of a byte string, with a seed mixed in.
+#[inline]
+pub fn fnv1a(bytes: &[u8], seed: u64) -> u64 {
+    let mut h = FNV_OFFSET ^ seed.wrapping_mul(0x9E3779B97F4A7C15);
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    // final avalanche (splitmix-style)
+    let mut z = h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic embedder. Cloneable and thread-safe (stateless).
+#[derive(Clone, Debug)]
+pub struct Embedder {
+    seed: u64,
+}
+
+impl Default for Embedder {
+    fn default() -> Self {
+        Embedder::new(0x0C0EDCE_u64)
+    }
+}
+
+impl Embedder {
+    pub fn new(seed: u64) -> Self {
+        Embedder { seed }
+    }
+
+    /// Embed raw text into a unit-norm `EMBED_DIM` vector.
+    pub fn embed(&self, text: &str) -> Vec<f32> {
+        let tokens = tokenize(text);
+        self.embed_tokens(&tokens)
+    }
+
+    /// Embed a pre-tokenized text.
+    pub fn embed_tokens(&self, tokens: &[String]) -> Vec<f32> {
+        let mut v = vec![0f32; EMBED_DIM];
+        // Unigrams: weight 1.0. Each token contributes to 4 buckets to
+        // reduce hash-collision variance (like multiple hash functions).
+        for tok in tokens {
+            for probe in 0..4u64 {
+                let h = fnv1a(tok.as_bytes(), self.seed ^ (probe.wrapping_mul(0xA5A5A5A5)));
+                let bucket = (h as usize >> 1) % EMBED_DIM;
+                let sign = if h & 1 == 0 { 1.0 } else { -1.0 };
+                v[bucket] += sign;
+            }
+        }
+        // Bigrams: weight 0.5 — adds phrase-level signal.
+        for w in tokens.windows(2) {
+            let key = format!("{} {}", w[0], w[1]);
+            for probe in 0..2u64 {
+                let h = fnv1a(key.as_bytes(), self.seed ^ 0xB16B00B5 ^ probe);
+                let bucket = (h as usize >> 1) % EMBED_DIM;
+                let sign = if h & 1 == 0 { 0.5 } else { -0.5 };
+                v[bucket] += sign;
+            }
+        }
+        l2_normalize(&mut v);
+        v
+    }
+
+    /// Contextual token embeddings for BERTScore: each token's vector is a
+    /// mix of its own hash-seeded Gaussian direction (weight 0.7) and its
+    /// neighbors' (0.15 each).
+    ///
+    /// Base directions are deterministic per token hash, so they are
+    /// memoized in a process-wide cache (§Perf: regenerating the Gaussian
+    /// draws dominated BERTScore cost before this cache, ~2.5 µs/token).
+    pub fn token_embeddings(&self, tokens: &[String]) -> Vec<Vec<f32>> {
+        let base: Vec<std::sync::Arc<Vec<f32>>> = tokens
+            .iter()
+            .map(|t| cached_gaussian(fnv1a(t.as_bytes(), self.seed ^ 0x7E57)))
+            .collect();
+        let n = tokens.len();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut v = vec![0f32; TOKEN_DIM];
+            for (w, j) in [
+                (0.7f32, i as isize),
+                (0.15, i as isize - 1),
+                (0.15, i as isize + 1),
+            ] {
+                if j >= 0 && (j as usize) < n {
+                    for (o, b) in v.iter_mut().zip(base[j as usize].iter()) {
+                        *o += w * b;
+                    }
+                }
+            }
+            l2_normalize(&mut v);
+            out.push(v);
+        }
+        out
+    }
+}
+
+/// Process-wide memo for token base directions (bounded; cleared when it
+/// exceeds ~200k entries to cap memory on unbounded vocabularies).
+fn cached_gaussian(seed: u64) -> std::sync::Arc<Vec<f32>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, OnceLock, RwLock};
+    static CACHE: OnceLock<RwLock<HashMap<u64, Arc<Vec<f32>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
+    if let Some(v) = cache.read().unwrap().get(&seed) {
+        return v.clone();
+    }
+    let v = Arc::new(gaussian_vec(seed, TOKEN_DIM));
+    let mut w = cache.write().unwrap();
+    if w.len() > 200_000 {
+        w.clear();
+    }
+    w.insert(seed, v.clone());
+    v
+}
+
+/// Seeded pseudo-Gaussian unit vector (deterministic per seed).
+fn gaussian_vec(seed: u64, dim: usize) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    l2_normalize(&mut v);
+    v
+}
+
+/// In-place L2 normalization (no-op on zero vectors).
+pub fn l2_normalize(v: &mut [f32]) {
+    let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 1e-12 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+}
+
+/// Dense cosine similarity (assumes same length).
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let mut dot = 0f32;
+    let mut na = 0f32;
+    let mut nb = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na <= 1e-12 || nb <= 1e-12 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+/// Dot product of two unit vectors (cosine for pre-normalized inputs).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    // 4-way unrolled accumulation — hot path for retrieval.
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let k = i * 4;
+        s0 += a[k] * b[k];
+        s1 += a[k + 1] * b[k + 1];
+        s2 += a[k + 2] * b[k + 2];
+        s3 += a[k + 3] * b[k + 3];
+    }
+    for k in chunks * 4..a.len() {
+        acc += a[k] * b[k];
+    }
+    acc + s0 + s1 + s2 + s3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedding_unit_norm_and_deterministic() {
+        let e = Embedder::default();
+        let v1 = e.embed("the market closed higher on strong earnings");
+        let v2 = e.embed("the market closed higher on strong earnings");
+        assert_eq!(v1, v2);
+        let n: f32 = v1.iter().map(|x| x * x).sum();
+        assert!((n - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn similar_texts_closer_than_different() {
+        let e = Embedder::default();
+        let a = e.embed("stock market equity dividend portfolio earnings");
+        let b = e.embed("market earnings dividend stock price equity");
+        let c = e.embed("tennis football championship goal referee match");
+        assert!(cosine(&a, &b) > cosine(&a, &c) + 0.2);
+    }
+
+    #[test]
+    fn empty_text_is_zero_vector() {
+        let e = Embedder::default();
+        let v = e.embed("");
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn token_embeddings_contextual() {
+        let e = Embedder::default();
+        let t1: Vec<String> = ["bank", "river", "water"].iter().map(|s| s.to_string()).collect();
+        let t2: Vec<String> = ["bank", "money", "loan"].iter().map(|s| s.to_string()).collect();
+        let e1 = e.token_embeddings(&t1);
+        let e2 = e.token_embeddings(&t2);
+        // same token in different contexts -> similar but not identical
+        let sim = cosine(&e1[0], &e2[0]);
+        assert!(sim > 0.5, "sim={sim}");
+        assert!(sim < 0.9999, "sim={sim}");
+        // unit norms
+        for v in e1.iter().chain(e2.iter()) {
+            let n: f32 = v.iter().map(|x| x * x).sum();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut r = crate::util::rng::Rng::new(77);
+        let a: Vec<f32> = (0..103).map(|_| r.normal() as f32).collect();
+        let b: Vec<f32> = (0..103).map(|_| r.normal() as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fnv_seed_sensitivity() {
+        assert_ne!(fnv1a(b"hello", 1), fnv1a(b"hello", 2));
+        assert_ne!(fnv1a(b"hello", 1), fnv1a(b"hellp", 1));
+    }
+}

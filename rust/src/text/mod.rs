@@ -1,0 +1,14 @@
+//! Text processing: tokenization and deterministic embeddings.
+//!
+//! The paper encodes queries with BGE-base-en-v1.5; offline we substitute a
+//! dependency-free, deterministic embedding — hashed word/character-n-gram
+//! features folded through a signed random projection (see DESIGN.md §5).
+//! The only property the PPO identifier and vector retrieval need is that
+//! same-domain texts land near each other and cross-domain texts separate,
+//! which hashing of shared domain vocabulary provides.
+
+pub mod tokenizer;
+pub mod embed;
+
+pub use embed::{Embedder, EMBED_DIM};
+pub use tokenizer::tokenize;

@@ -1,0 +1,67 @@
+//! Whitespace/punctuation tokenizer with lowercasing.
+//!
+//! All metrics (ROUGE/BLEU/METEOR/BERTScore) and the embedder share this
+//! tokenization so lexical and semantic scores are computed over the same
+//! token stream, as in the paper's evaluation pipeline.
+
+/// Tokenize: lowercase, split on non-alphanumeric, drop empties.
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut tokens = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        if c.is_alphanumeric() {
+            for lc in c.to_lowercase() {
+                cur.push(lc);
+            }
+        } else if !cur.is_empty() {
+            tokens.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        tokens.push(cur);
+    }
+    tokens
+}
+
+/// N-gram iterator over a token slice (as joined strings).
+pub fn ngrams(tokens: &[String], n: usize) -> Vec<String> {
+    if tokens.len() < n || n == 0 {
+        return Vec::new();
+    }
+    (0..=tokens.len() - n)
+        .map(|i| tokens[i..i + n].join(" "))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_tokenize() {
+        assert_eq!(
+            tokenize("Hello, World! 42x"),
+            vec!["hello", "world", "42x"]
+        );
+    }
+
+    #[test]
+    fn empty_and_punct_only() {
+        assert!(tokenize("").is_empty());
+        assert!(tokenize("?!., --").is_empty());
+    }
+
+    #[test]
+    fn unicode_lowercase() {
+        assert_eq!(tokenize("Größe MATTERS"), vec!["größe", "matters"]);
+    }
+
+    #[test]
+    fn ngram_windows() {
+        let t: Vec<String> = ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(ngrams(&t, 2), vec!["a b", "b c"]);
+        assert_eq!(ngrams(&t, 3), vec!["a b c"]);
+        assert!(ngrams(&t, 4).is_empty());
+        assert!(ngrams(&t, 0).is_empty());
+    }
+}

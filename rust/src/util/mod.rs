@@ -1,0 +1,17 @@
+//! Hand-rolled substrates: RNG, statistics, JSON, TOML-subset config
+//! parsing, logging, thread pool and timing utilities.
+//!
+//! The build environment is fully offline (only `xla` + `anyhow` are
+//! vendored), so everything a production serving stack would normally pull
+//! from crates.io lives here instead.
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod toml;
+pub mod logging;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

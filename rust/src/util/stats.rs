@@ -1,0 +1,303 @@
+//! Statistics and regression utilities.
+//!
+//! Provides the numeric machinery the schedulers rely on:
+//! - descriptive stats (mean/std/percentiles) for latency reporting,
+//! - ordinary least squares (capacity function `C_n(L) = k_n·L + b_n`,
+//!   paper Eq. 12),
+//! - multivariate linear least squares via normal equations + Gaussian
+//!   elimination (latency surrogate fitting, paper Eq. 13 / Table I),
+//! - RMSE / NRMSE model-selection criteria.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0 for empty input.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile in [0, 100] by linear interpolation (like numpy's default).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Root mean square error between predictions and targets.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    (pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| (p - t).powi(2))
+        .sum::<f64>()
+        / pred.len() as f64)
+        .sqrt()
+}
+
+/// RMSE normalized by the target range (the paper reports NRMSE %).
+pub fn nrmse(pred: &[f64], target: &[f64]) -> f64 {
+    let lo = target.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = target.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if hi <= lo {
+        return 0.0;
+    }
+    rmse(pred, target) / (hi - lo)
+}
+
+/// Simple linear regression `y = k·x + b`; returns (k, b).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+    }
+    if sxx < 1e-12 * n {
+        return (0.0, my);
+    }
+    let k = sxy / sxx;
+    (k, my - k * mx)
+}
+
+/// Solve the square linear system `A·x = b` in place by Gaussian
+/// elimination with partial pivoting. Returns None if singular.
+pub fn solve_linear(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    assert!(a.len() == n && a.iter().all(|r| r.len() == n));
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for row in col + 1..n {
+            if a[row][col].abs() > a[piv][col].abs() {
+                piv = row;
+            }
+        }
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        // eliminate
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // back-substitute
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut s = b[row];
+        for k in row + 1..n {
+            s -= a[row][k] * x[k];
+        }
+        x[row] = s / a[row][row];
+    }
+    Some(x)
+}
+
+/// Linear least squares: find `w` minimizing ||X·w − y||² via the normal
+/// equations `XᵀX·w = Xᵀy` with a small ridge term for conditioning.
+///
+/// `rows` are the feature vectors (one per sample).
+pub fn least_squares(rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let n = rows.len();
+    assert_eq!(n, y.len());
+    if n == 0 {
+        return None;
+    }
+    let d = rows[0].len();
+    let mut xtx = vec![vec![0.0; d]; d];
+    let mut xty = vec![0.0; d];
+    for (row, &yi) in rows.iter().zip(y) {
+        assert_eq!(row.len(), d);
+        for i in 0..d {
+            xty[i] += row[i] * yi;
+            for j in i..d {
+                xtx[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            xtx[i][j] = xtx[j][i];
+        }
+        xtx[i][i] += 1e-9; // ridge
+    }
+    solve_linear(&mut xtx, &mut xty)
+}
+
+/// Evaluate a fitted linear model on a feature row.
+pub fn predict_linear(w: &[f64], row: &[f64]) -> f64 {
+    w.iter().zip(row).map(|(a, b)| a * b).sum()
+}
+
+/// Exponential-moving-average smoother.
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Online batch standardizer: `(x − μ)/(σ + c)` (paper Eq. 10).
+pub fn standardize(xs: &[f64]) -> Vec<f64> {
+    let m = mean(xs);
+    let s = std(xs);
+    let c = 1e-8;
+    xs.iter().map(|x| (x - m) / (s + c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.5 * x - 2.0).collect();
+        let (k, b) = linreg(&xs, &ys);
+        assert!((k - 3.5).abs() < 1e-9);
+        assert!((b + 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn linreg_noisy() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..500).map(|i| i as f64 / 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0 + r.normal() * 0.1).collect();
+        let (k, b) = linreg(&xs, &ys);
+        assert!((k - 2.0).abs() < 0.01, "k={k}");
+        assert!((b - 1.0).abs() < 0.05, "b={b}");
+    }
+
+    #[test]
+    fn solve_linear_3x3() {
+        let mut a = vec![
+            vec![2.0, 1.0, -1.0],
+            vec![-3.0, -1.0, 2.0],
+            vec![-2.0, 1.0, 2.0],
+        ];
+        let mut b = vec![8.0, -11.0, -3.0];
+        let x = solve_linear(&mut a, &mut b).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-9);
+        assert!((x[1] - 3.0).abs() < 1e-9);
+        assert!((x[2] + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solve_linear_singular() {
+        let mut a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve_linear(&mut a, &mut b).is_none());
+    }
+
+    #[test]
+    fn least_squares_recovers_quadratic() {
+        let mut r = Rng::new(5);
+        // y = 1.5 x^2 - 2 x + 0.5 with noise
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..300 {
+            let x = r.range_f64(0.0, 5.0);
+            rows.push(vec![x * x, x, 1.0]);
+            ys.push(1.5 * x * x - 2.0 * x + 0.5 + 0.01 * r.normal());
+        }
+        let w = least_squares(&rows, &ys).unwrap();
+        assert!((w[0] - 1.5).abs() < 0.01, "{w:?}");
+        assert!((w[1] + 2.0).abs() < 0.05, "{w:?}");
+        assert!((w[2] - 0.5).abs() < 0.05, "{w:?}");
+    }
+
+    #[test]
+    fn rmse_nrmse() {
+        let p = [1.0, 2.0, 3.0];
+        let t = [1.0, 2.0, 5.0];
+        assert!((rmse(&p, &t) - (4.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!((nrmse(&p, &t) - (4.0f64 / 3.0).sqrt() / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn standardize_unit_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 10.0];
+        let z = standardize(&xs);
+        assert!(mean(&z).abs() < 1e-9);
+        assert!((std(&z) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..40 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+}

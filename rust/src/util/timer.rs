@@ -1,0 +1,54 @@
+//! Wall-clock timing helpers for benches and the perf pass.
+
+use std::time::Instant;
+
+/// A simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    /// Elapsed milliseconds.
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+    /// Elapsed microseconds.
+    pub fn us(&self) -> f64 {
+        self.secs() * 1e6
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+        assert!(t.ms() >= 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

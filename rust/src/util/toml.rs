@@ -1,0 +1,327 @@
+//! TOML-subset parser for the config system.
+//!
+//! Supports the subset used by `configs/*.toml`: top-level key/values,
+//! `[table]` and `[[array-of-tables]]` headers, strings, integers, floats,
+//! booleans, and homogeneous inline arrays (including arrays of strings).
+//! Comments (`#`) and blank lines are ignored. This intentionally mirrors
+//! the config style of frameworks like MaxText/vLLM without an external
+//! dependency (offline build).
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().map(|x| x as usize)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+    }
+    pub fn as_str_vec(&self) -> Option<Vec<String>> {
+        self.as_arr().map(|a| {
+            a.iter()
+                .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                .collect()
+        })
+    }
+}
+
+/// One table: key → value.
+pub type Table = BTreeMap<String, TomlValue>;
+
+/// A parsed TOML document.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    /// Top-level (header-less) keys.
+    pub root: Table,
+    /// `[name]` tables.
+    pub tables: BTreeMap<String, Table>,
+    /// `[[name]]` arrays of tables, in file order.
+    pub arrays: BTreeMap<String, Vec<Table>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        // Where new key/values currently land.
+        enum Cursor {
+            Root,
+            Table(String),
+            Array(String),
+        }
+        let mut cur = Cursor::Root;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                doc.arrays.entry(name.clone()).or_default().push(Table::new());
+                cur = Cursor::Array(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                doc.tables.entry(name.clone()).or_default();
+                cur = Cursor::Table(name);
+            } else if let Some(eq) = find_top_level_eq(&line) {
+                let key = line[..eq].trim().to_string();
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                let table = match &cur {
+                    Cursor::Root => &mut doc.root,
+                    Cursor::Table(name) => doc.tables.get_mut(name).unwrap(),
+                    Cursor::Array(name) => doc.arrays.get_mut(name).unwrap().last_mut().unwrap(),
+                };
+                table.insert(key, val);
+            } else {
+                return Err(format!("line {}: cannot parse '{line}'", lineno + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// `table.key` lookup with root fallback.
+    pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
+        if table.is_empty() {
+            self.root.get(key)
+        } else {
+            self.tables.get(table).and_then(|t| t.get(key))
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(unescape(inner)));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    // number: int if it parses as i64 and has no '.', 'e'
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster config
+seed = 42
+name = "edge-cluster"  # inline comment
+latency_slo_s = 15.0
+
+[workload]
+queries_per_slot = 2000
+domains = ["sports", "law", "finance"]
+dirichlet_alpha = 0.3
+
+[[nodes]]
+name = "node-a"
+gpus = 1
+primary_domains = [0, 1, 2]
+
+[[nodes]]
+name = "node-b"
+gpus = 2
+primary_domains = [3, 4, 5]
+"#;
+
+    #[test]
+    fn parse_full_document() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.root["seed"].as_i64(), Some(42));
+        assert_eq!(doc.root["name"].as_str(), Some("edge-cluster"));
+        assert_eq!(doc.root["latency_slo_s"].as_f64(), Some(15.0));
+        assert_eq!(doc.get("workload", "queries_per_slot").unwrap().as_usize(), Some(2000));
+        assert_eq!(
+            doc.get("workload", "domains").unwrap().as_str_vec().unwrap(),
+            vec!["sports", "law", "finance"]
+        );
+        let nodes = &doc.arrays["nodes"];
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0]["name"].as_str(), Some("node-a"));
+        assert_eq!(nodes[1]["gpus"].as_i64(), Some(2));
+        assert_eq!(
+            nodes[1]["primary_domains"].as_f64_vec().unwrap(),
+            vec![3.0, 4.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn ints_vs_floats() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.5\nc = 1e-2\n").unwrap();
+        assert_eq!(doc.root["a"], TomlValue::Int(3));
+        assert_eq!(doc.root["b"], TomlValue::Float(3.5));
+        assert_eq!(doc.root["c"], TomlValue::Float(0.01));
+    }
+
+    #[test]
+    fn string_with_hash_and_escape() {
+        let doc = TomlDoc::parse(r#"s = "a # not comment \n b""#).unwrap();
+        assert_eq!(doc.root["s"].as_str(), Some("a # not comment \n b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("this is not toml").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("m = [[1, 2], [3, 4]]").unwrap();
+        let outer = doc.root["m"].as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_f64_vec().unwrap(), vec![3.0, 4.0]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Exact flat index — brute-force top-k inner product over a contiguous
+//! matrix. This is the paper's retrieval configuration ("Faiss-based vector
+//! database with a flat index for exact similarity search, top-5").
+
+use super::{Hit, TopK, VectorIndex};
+use crate::text::embed::dot;
+
+/// Exact flat index with contiguous storage.
+#[derive(Clone, Debug, Default)]
+pub struct FlatIndex {
+    dim: usize,
+    ids: Vec<usize>,
+    data: Vec<f32>, // row-major [len x dim]
+}
+
+impl FlatIndex {
+    pub fn new(dim: usize) -> Self {
+        FlatIndex { dim, ids: Vec::new(), data: Vec::new() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row view.
+    #[inline]
+    fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Similarity of the query against a *stored id* (linear scan for the
+    /// id — used by tests/oracle paths, not the hot path).
+    pub fn score_of(&self, query: &[f32], id: usize) -> Option<f32> {
+        let i = self.ids.iter().position(|&x| x == id)?;
+        Some(dot(query, self.row(i)))
+    }
+}
+
+impl VectorIndex for FlatIndex {
+    fn add(&mut self, id: usize, vector: &[f32]) {
+        assert_eq!(vector.len(), self.dim, "dim mismatch");
+        self.ids.push(id);
+        self.data.extend_from_slice(vector);
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim, "dim mismatch");
+        let mut top = TopK::new(k);
+        for i in 0..self.ids.len() {
+            let score = dot(query, self.row(i));
+            top.push(Hit { id: self.ids[i], score });
+        }
+        top.into_vec()
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::embed::l2_normalize;
+    use crate::util::rng::Rng;
+
+    fn random_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn search_matches_bruteforce() {
+        let mut rng = Rng::new(31);
+        let dim = 32;
+        let mut idx = FlatIndex::new(dim);
+        let vectors: Vec<Vec<f32>> = (0..200).map(|_| random_unit(&mut rng, dim)).collect();
+        for (i, v) in vectors.iter().enumerate() {
+            idx.add(i + 1000, v);
+        }
+        let q = random_unit(&mut rng, dim);
+        let hits = idx.search(&q, 5);
+        assert_eq!(hits.len(), 5);
+        // brute force
+        let mut scores: Vec<(usize, f32)> = vectors
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (i + 1000, dot(&q, v)))
+            .collect();
+        scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for (hit, (id, score)) in hits.iter().zip(scores.iter()) {
+            assert_eq!(hit.id, *id);
+            assert!((hit.score - score).abs() < 1e-6);
+        }
+        // descending
+        for w in hits.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn self_query_is_top_hit() {
+        let mut rng = Rng::new(37);
+        let dim = 16;
+        let mut idx = FlatIndex::new(dim);
+        let vecs: Vec<Vec<f32>> = (0..50).map(|_| random_unit(&mut rng, dim)).collect();
+        for (i, v) in vecs.iter().enumerate() {
+            idx.add(i, v);
+        }
+        for (i, v) in vecs.iter().enumerate().take(10) {
+            let hits = idx.search(v, 1);
+            assert_eq!(hits[0].id, i);
+            assert!((hits[0].score - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn k_larger_than_len() {
+        let mut idx = FlatIndex::new(4);
+        idx.add(7, &[1.0, 0.0, 0.0, 0.0]);
+        let hits = idx.search(&[1.0, 0.0, 0.0, 0.0], 10);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].id, 7);
+    }
+
+    #[test]
+    fn empty_index() {
+        let idx = FlatIndex::new(8);
+        assert!(idx.is_empty());
+        assert!(idx.search(&[0.0; 8], 3).is_empty());
+    }
+}

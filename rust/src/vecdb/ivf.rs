@@ -1,0 +1,223 @@
+//! IVF (inverted-file) approximate index: k-means coarse quantizer +
+//! per-centroid posting lists, probing the `nprobe` nearest lists.
+//!
+//! Not used by the paper's configuration (which is exact flat search) but
+//! included for the perf study: at edge-node corpus sizes the flat index
+//! is often faster; IVF wins once corpora grow past ~100k chunks. The
+//! `perf_micro` bench quantifies the crossover.
+
+use super::{Hit, TopK, VectorIndex};
+use crate::text::embed::{dot, l2_normalize};
+use crate::util::rng::Rng;
+
+/// IVF index with k-means-trained centroids.
+#[derive(Clone, Debug)]
+pub struct IvfIndex {
+    dim: usize,
+    nlist: usize,
+    nprobe: usize,
+    centroids: Vec<f32>, // [nlist x dim]
+    lists: Vec<Vec<(usize, Vec<f32>)>>,
+    len: usize,
+    trained: bool,
+    pending: Vec<(usize, Vec<f32>)>,
+}
+
+impl IvfIndex {
+    pub fn new(dim: usize, nlist: usize, nprobe: usize) -> Self {
+        IvfIndex {
+            dim,
+            nlist: nlist.max(1),
+            nprobe: nprobe.max(1),
+            centroids: Vec::new(),
+            lists: Vec::new(),
+            len: 0,
+            trained: false,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Train the coarse quantizer on the pending vectors (k-means, few
+    /// iterations — enough for routing quality) and build posting lists.
+    pub fn train(&mut self, seed: u64) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let n = self.pending.len();
+        let k = self.nlist.min(n);
+        let mut rng = Rng::new(seed);
+
+        // init: random distinct points
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut centroids: Vec<Vec<f32>> = order[..k]
+            .iter()
+            .map(|&i| self.pending[i].1.clone())
+            .collect();
+
+        let mut assign = vec![0usize; n];
+        for _iter in 0..8 {
+            // assignment
+            for (i, (_, v)) in self.pending.iter().enumerate() {
+                let mut best = 0;
+                let mut best_s = f32::NEG_INFINITY;
+                for (c, cv) in centroids.iter().enumerate() {
+                    let s = dot(v, cv);
+                    if s > best_s {
+                        best_s = s;
+                        best = c;
+                    }
+                }
+                assign[i] = best;
+            }
+            // update
+            let mut sums = vec![vec![0f32; self.dim]; k];
+            let mut counts = vec![0usize; k];
+            for (i, (_, v)) in self.pending.iter().enumerate() {
+                counts[assign[i]] += 1;
+                for (s, x) in sums[assign[i]].iter_mut().zip(v) {
+                    *s += x;
+                }
+            }
+            for c in 0..k {
+                if counts[c] > 0 {
+                    let mut v = sums[c].clone();
+                    l2_normalize(&mut v);
+                    centroids[c] = v;
+                } else {
+                    // re-seed empty cluster
+                    centroids[c] = self.pending[rng.below(n)].1.clone();
+                }
+            }
+        }
+
+        self.centroids = centroids.concat();
+        self.lists = vec![Vec::new(); k];
+        self.nlist = k;
+        let pending = std::mem::take(&mut self.pending);
+        for (i, (id, v)) in pending.into_iter().enumerate() {
+            self.lists[assign[i]].push((id, v));
+        }
+        self.trained = true;
+    }
+
+    fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn add(&mut self, id: usize, vector: &[f32]) {
+        assert_eq!(vector.len(), self.dim);
+        self.len += 1;
+        if self.trained {
+            // route to nearest centroid online
+            let mut best = 0;
+            let mut best_s = f32::NEG_INFINITY;
+            for c in 0..self.nlist {
+                let s = dot(vector, self.centroid(c));
+                if s > best_s {
+                    best_s = s;
+                    best = c;
+                }
+            }
+            self.lists[best].push((id, vector.to_vec()));
+        } else {
+            self.pending.push((id, vector.to_vec()));
+        }
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert!(self.trained, "IvfIndex::train must be called before search");
+        // rank centroids
+        let mut cs: Vec<(usize, f32)> = (0..self.nlist)
+            .map(|c| (c, dot(query, self.centroid(c))))
+            .collect();
+        cs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut top = TopK::new(k);
+        for &(c, _) in cs.iter().take(self.nprobe) {
+            for (id, v) in &self.lists[c] {
+                top.push(Hit { id: *id, score: dot(query, v) });
+            }
+        }
+        top.into_vec()
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdb::FlatIndex;
+
+    fn random_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn ivf_recall_vs_flat() {
+        let mut rng = Rng::new(41);
+        let dim = 32;
+        let n = 2000;
+        let vecs: Vec<Vec<f32>> = (0..n).map(|_| random_unit(&mut rng, dim)).collect();
+        let mut flat = FlatIndex::new(dim);
+        let mut ivf = IvfIndex::new(dim, 16, 6);
+        for (i, v) in vecs.iter().enumerate() {
+            flat.add(i, v);
+            ivf.add(i, v);
+        }
+        ivf.train(42);
+        // recall@5 of IVF vs exact
+        let mut recall_sum = 0.0;
+        let queries = 50;
+        for _ in 0..queries {
+            let q = random_unit(&mut rng, dim);
+            let exact: std::collections::HashSet<usize> =
+                flat.search(&q, 5).into_iter().map(|h| h.id).collect();
+            let approx = ivf.search(&q, 5);
+            let hits = approx.iter().filter(|h| exact.contains(&h.id)).count();
+            recall_sum += hits as f64 / 5.0;
+        }
+        let recall = recall_sum / queries as f64;
+        assert!(recall > 0.55, "recall@5={recall}");
+    }
+
+    #[test]
+    fn ivf_exact_when_probing_all_lists() {
+        let mut rng = Rng::new(43);
+        let dim = 16;
+        let vecs: Vec<Vec<f32>> = (0..300).map(|_| random_unit(&mut rng, dim)).collect();
+        let mut flat = FlatIndex::new(dim);
+        let mut ivf = IvfIndex::new(dim, 8, 8); // probe all
+        for (i, v) in vecs.iter().enumerate() {
+            flat.add(i, v);
+            ivf.add(i, v);
+        }
+        ivf.train(7);
+        let q = random_unit(&mut rng, dim);
+        let e: Vec<usize> = flat.search(&q, 5).into_iter().map(|h| h.id).collect();
+        let a: Vec<usize> = ivf.search(&q, 5).into_iter().map(|h| h.id).collect();
+        assert_eq!(e, a);
+    }
+
+    #[test]
+    fn add_after_train_routes_online() {
+        let mut rng = Rng::new(47);
+        let dim = 8;
+        let mut ivf = IvfIndex::new(dim, 4, 4);
+        for i in 0..100 {
+            ivf.add(i, &random_unit(&mut rng, dim));
+        }
+        ivf.train(1);
+        let v = random_unit(&mut rng, dim);
+        ivf.add(999, &v);
+        let hits = ivf.search(&v, 1);
+        assert_eq!(hits[0].id, 999);
+        assert_eq!(ivf.len(), 101);
+    }
+}

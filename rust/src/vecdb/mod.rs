@@ -1,0 +1,102 @@
+//! Vector database: exact flat index (the paper's Faiss flat setup) and an
+//! IVF approximate index for the performance study.
+//!
+//! Stores unit-normalized embeddings contiguously (SoA) and returns top-k
+//! by inner product (== cosine for unit vectors).
+
+pub mod flat;
+pub mod ivf;
+
+pub use flat::FlatIndex;
+pub use ivf::IvfIndex;
+
+/// A search hit: external id + similarity score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub id: usize,
+    pub score: f32,
+}
+
+/// Common interface over index kinds.
+pub trait VectorIndex: Send + Sync {
+    /// Add a vector with an external id. Vectors must share the index dim.
+    fn add(&mut self, id: usize, vector: &[f32]);
+    /// Exact or approximate top-k by cosine similarity.
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit>;
+    /// Number of stored vectors.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Bounded max-k collector (min-heap semantics via sorted insertion —
+/// k is small [top-5 in the paper], so linear insertion beats a heap).
+#[derive(Clone, Debug)]
+pub(crate) struct TopK {
+    k: usize,
+    hits: Vec<Hit>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k, hits: Vec::with_capacity(k + 1) }
+    }
+
+    #[inline]
+    pub fn worst(&self) -> f32 {
+        if self.hits.len() < self.k {
+            f32::NEG_INFINITY
+        } else {
+            self.hits.last().map(|h| h.score).unwrap_or(f32::NEG_INFINITY)
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, hit: Hit) {
+        if self.hits.len() == self.k && hit.score <= self.worst() {
+            return;
+        }
+        let pos = self
+            .hits
+            .iter()
+            .position(|h| h.score < hit.score)
+            .unwrap_or(self.hits.len());
+        self.hits.insert(pos, hit);
+        if self.hits.len() > self.k {
+            self.hits.pop();
+        }
+    }
+
+    pub fn into_vec(self) -> Vec<Hit> {
+        self.hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_keeps_best() {
+        let mut t = TopK::new(3);
+        for (i, s) in [0.1f32, 0.9, 0.5, 0.7, 0.3, 0.8].iter().enumerate() {
+            t.push(Hit { id: i, score: *s });
+        }
+        let v = t.into_vec();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].id, 1); // 0.9
+        assert_eq!(v[1].id, 5); // 0.8
+        assert_eq!(v[2].id, 3); // 0.7
+    }
+
+    #[test]
+    fn topk_fewer_than_k() {
+        let mut t = TopK::new(5);
+        t.push(Hit { id: 0, score: 0.2 });
+        t.push(Hit { id: 1, score: 0.4 });
+        let v = t.into_vec();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].id, 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload synthesis: arrival traces and per-slot query streams.
+//!
+//! Substitutes the ECW-New-App request trace with a diurnal + burst
+//! arrival process, and implements the paper's Dirichlet-sampled per-slot
+//! domain skew (§V-A "Dynamic query patterns").
+
+pub mod trace;
+
+pub use trace::{arrival_trace, domain_mix, sample_slot_queries, SkewPattern, TraceConfig};

@@ -1,0 +1,154 @@
+//! Arrival-trace and query-stream generation.
+
+use crate::corpus::synth::SyntheticDataset;
+use crate::util::rng::Rng;
+
+/// Arrival-trace parameters (ECW-like diurnal load with bursts).
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub slots: usize,
+    /// Mean queries per slot.
+    pub base: usize,
+    /// Diurnal amplitude as a fraction of base (0 = flat).
+    pub diurnal_amp: f64,
+    /// Slots per diurnal period.
+    pub period: usize,
+    /// Per-slot probability of a burst.
+    pub burst_prob: f64,
+    /// Burst multiplier.
+    pub burst_mult: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            slots: 24,
+            base: 1000,
+            diurnal_amp: 0.4,
+            period: 12,
+            burst_prob: 0.08,
+            burst_mult: 1.8,
+            seed: 7,
+        }
+    }
+}
+
+/// Queries per slot.
+pub fn arrival_trace(cfg: &TraceConfig) -> Vec<usize> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.slots)
+        .map(|t| {
+            let phase = std::f64::consts::TAU * t as f64 / cfg.period.max(1) as f64;
+            let mut q = cfg.base as f64 * (1.0 + cfg.diurnal_amp * phase.sin());
+            q *= 1.0 + 0.08 * rng.normal(); // jitter
+            if rng.chance(cfg.burst_prob) {
+                q *= cfg.burst_mult;
+            }
+            q.round().max(1.0) as usize
+        })
+        .collect()
+}
+
+/// Per-slot domain-mix patterns (paper §II-B / §V-B skew setups).
+#[derive(Clone, Debug)]
+pub enum SkewPattern {
+    /// Even across all domains.
+    Balanced,
+    /// One primary domain takes `frac`, the rest split evenly
+    /// (Fig. 5's x-axis: frac ∈ 0.5..0.9; Fig. 2's moderate=0.5/high≈0.67).
+    Primary { domain: usize, frac: f64 },
+    /// Dirichlet(alpha) resampled per slot (the paper's synthetic bias).
+    Dirichlet { alpha: f64 },
+}
+
+/// Realize a mixture over `nd` domains for one slot.
+pub fn domain_mix(pattern: &SkewPattern, nd: usize, rng: &mut Rng) -> Vec<f64> {
+    match pattern {
+        SkewPattern::Balanced => vec![1.0 / nd as f64; nd],
+        SkewPattern::Primary { domain, frac } => {
+            let rest = (1.0 - frac) / (nd - 1) as f64;
+            let mut w = vec![rest; nd];
+            w[*domain] = *frac;
+            w
+        }
+        SkewPattern::Dirichlet { alpha } => rng.dirichlet(&vec![*alpha; nd]),
+    }
+}
+
+/// Sample `count` QA ids for one slot according to a domain mixture.
+pub fn sample_slot_queries(
+    ds: &SyntheticDataset,
+    mix: &[f64],
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let by_domain: Vec<Vec<usize>> = (0..ds.num_domains()).map(|d| ds.qa_of_domain(d)).collect();
+    (0..count)
+        .map(|_| {
+            let d = rng.sample_weighted(mix);
+            let pool = &by_domain[d];
+            pool[rng.below(pool.len())]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{build_dataset, domainqa_spec};
+
+    #[test]
+    fn trace_length_and_positivity() {
+        let cfg = TraceConfig::default();
+        let t = arrival_trace(&cfg);
+        assert_eq!(t.len(), cfg.slots);
+        assert!(t.iter().all(|&q| q > 0));
+    }
+
+    #[test]
+    fn trace_diurnal_variation() {
+        let cfg = TraceConfig { diurnal_amp: 0.5, burst_prob: 0.0, slots: 24, ..Default::default() };
+        let t = arrival_trace(&cfg);
+        let max = *t.iter().max().unwrap() as f64;
+        let min = *t.iter().min().unwrap() as f64;
+        assert!(max / min > 1.5, "max={max} min={min}");
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let cfg = TraceConfig::default();
+        assert_eq!(arrival_trace(&cfg), arrival_trace(&cfg));
+    }
+
+    #[test]
+    fn primary_mix_shapes() {
+        let mut rng = Rng::new(1);
+        let w = domain_mix(&SkewPattern::Primary { domain: 2, frac: 0.75 }, 6, &mut rng);
+        assert!((w[2] - 0.75).abs() < 1e-12);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((w[0] - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_queries_follow_mix() {
+        let ds = build_dataset(&domainqa_spec(50, 20), 3);
+        let mut rng = Rng::new(2);
+        let mix = domain_mix(&SkewPattern::Primary { domain: 1, frac: 0.8 }, 6, &mut rng);
+        let qs = sample_slot_queries(&ds, &mix, 2000, &mut rng);
+        assert_eq!(qs.len(), 2000);
+        let d1 = qs.iter().filter(|&&q| ds.qa_pairs[q].domain == 1).count();
+        let f = d1 as f64 / 2000.0;
+        assert!((f - 0.8).abs() < 0.04, "f={f}");
+    }
+
+    #[test]
+    fn dirichlet_mix_valid() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let w = domain_mix(&SkewPattern::Dirichlet { alpha: 0.3 }, 6, &mut rng);
+            assert_eq!(w.len(), 6);
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+}

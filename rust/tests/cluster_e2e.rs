@@ -1,0 +1,93 @@
+//! End-to-end integration: the full coordinator loop on a small cluster.
+//! Uses the Reference policy backend (no artifacts needed) so it runs in
+//! any environment; the PJRT path is covered by runtime_bridge.rs.
+
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+use coedge_rag::coordinator::Coordinator;
+use coedge_rag::policy::ppo::Backend;
+
+fn small_cfg(allocator: AllocatorKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.qa_per_domain = 40;
+    cfg.docs_per_domain = 60;
+    cfg.queries_per_slot = 200;
+    cfg.slots = 3;
+    cfg.slo_s = 20.0;
+    cfg.allocator = allocator;
+    for n in cfg.nodes.iter_mut() {
+        n.corpus_docs = 120;
+    }
+    cfg
+}
+
+#[test]
+fn coordinator_runs_and_conserves_queries() {
+    let mut co = Coordinator::build(small_cfg(AllocatorKind::Ppo), Backend::Reference).unwrap();
+    let reports = co.run(3).unwrap();
+    assert_eq!(reports.len(), 3);
+    for r in &reports {
+        assert_eq!(r.queries, 200);
+        assert_eq!(r.outcomes.len(), 200);
+        let psum: f64 = r.proportions.iter().sum();
+        assert!((psum - 1.0).abs() < 1e-9, "proportions {:?}", r.proportions);
+        assert!(r.drop_rate >= 0.0 && r.drop_rate <= 1.0);
+        assert!(r.mean_scores.rouge_l >= 0.0 && r.mean_scores.rouge_l <= 1.0);
+        // generous SLO: low drops
+        assert!(r.drop_rate < 0.2, "drop_rate={}", r.drop_rate);
+    }
+}
+
+#[test]
+fn oracle_beats_random_quality() {
+    let mut co_o =
+        Coordinator::build(small_cfg(AllocatorKind::Oracle), Backend::Reference).unwrap();
+    let mut co_r =
+        Coordinator::build(small_cfg(AllocatorKind::Random), Backend::Reference).unwrap();
+    let ro = co_o.run(3).unwrap();
+    let rr = co_r.run(3).unwrap();
+    let qo = Coordinator::tail_mean(&ro, 3);
+    let qr = Coordinator::tail_mean(&rr, 3);
+    assert!(
+        qo.rouge_l > qr.rouge_l + 0.03,
+        "oracle R-L {} vs random {}",
+        qo.rouge_l,
+        qr.rouge_l
+    );
+    assert!(qo.bert_score > qr.bert_score, "bert {} vs {}", qo.bert_score, qr.bert_score);
+}
+
+#[test]
+fn ppo_improves_over_time_and_beats_random() {
+    let mut cfg = small_cfg(AllocatorKind::Ppo);
+    cfg.slots = 14;
+    cfg.ppo_buffer = 128;
+    let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+    let reports = co.run(14).unwrap();
+    let early: f64 = reports[..3].iter().map(|r| r.mean_scores.rouge_l).sum::<f64>() / 3.0;
+    let late: f64 =
+        reports[reports.len() - 3..].iter().map(|r| r.mean_scores.rouge_l).sum::<f64>() / 3.0;
+    assert!(
+        late > early - 0.02,
+        "PPO should not regress: early={early:.3} late={late:.3}"
+    );
+    // against a fresh random allocator over the same horizon
+    let mut co_r =
+        Coordinator::build(small_cfg(AllocatorKind::Random), Backend::Reference).unwrap();
+    let rr = co_r.run(6).unwrap();
+    let qr = Coordinator::tail_mean(&rr, 3).rouge_l;
+    assert!(late > qr, "ppo late {late:.3} vs random {qr:.3}");
+}
+
+#[test]
+fn tight_slo_increases_drops() {
+    let mut cfg = small_cfg(AllocatorKind::Oracle);
+    cfg.queries_per_slot = 600;
+    let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+    co.set_slo(20.0);
+    let relaxed = co.run(2).unwrap();
+    co.set_slo(1.0);
+    let strict = co.run(2).unwrap();
+    let d_rel: f64 = relaxed.iter().map(|r| r.drop_rate).sum::<f64>() / 2.0;
+    let d_str: f64 = strict.iter().map(|r| r.drop_rate).sum::<f64>() / 2.0;
+    assert!(d_str > d_rel, "strict {d_str} vs relaxed {d_rel}");
+}

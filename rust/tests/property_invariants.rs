@@ -1,0 +1,238 @@
+//! Randomized property tests over scheduler + metric invariants.
+//!
+//! proptest is not available offline; these tests implement the same
+//! discipline with the crate's own deterministic RNG: hundreds of random
+//! cases per property, with the failing seed printed on assertion failure.
+
+use coedge_rag::corpus::partition::{partition_corpus, NodeCorpusSpec};
+use coedge_rag::corpus::{build_dataset, domainqa_spec};
+use coedge_rag::intranode::latfit::LatencyProfiler;
+use coedge_rag::intranode::solver::{solve_node, SolverInput};
+use coedge_rag::llmsim::gpu::GpuState;
+use coedge_rag::llmsim::latency::LatencyGroundTruth;
+use coedge_rag::llmsim::model::standard_pool;
+use coedge_rag::metrics::Evaluator;
+use coedge_rag::router::inter::inter_node_schedule;
+use coedge_rag::text::tokenizer::tokenize;
+use coedge_rag::util::rng::Rng;
+
+/// Random probability rows (each sums to 1).
+fn random_probs(rng: &mut Rng, b: usize, n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(b * n);
+    for _ in 0..b {
+        let row = rng.dirichlet(&vec![0.5; n]);
+        out.extend(row.iter().map(|&x| x as f32));
+    }
+    out
+}
+
+#[test]
+fn prop_inter_node_conservation_and_capacity() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..300 {
+        let n = 2 + rng.below(5);
+        let b = rng.below(400);
+        let probs = random_probs(&mut rng, b, n);
+        let caps: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 200.0)).collect();
+        let res = inter_node_schedule(&probs, n, &caps, &mut rng);
+
+        // conservation
+        assert_eq!(res.assignment.len(), b, "case {case}");
+        assert_eq!(res.counts.iter().sum::<usize>(), b, "case {case}");
+        // proportions form a distribution (when b > 0)
+        if b > 0 {
+            let s: f64 = res.proportions.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "case {case}: sum={s}");
+        }
+        // assignments in range
+        assert!(res.assignment.iter().all(|&a| a < n), "case {case}");
+        // per-node counts never exceed the (scaled) capacity by more
+        // than 1 (the final sample when all nodes saturate)
+        for (j, &c) in res.counts.iter().enumerate() {
+            assert!(
+                (c as f64) <= res.capacities[j] + 1.0,
+                "case {case}: node {j} count {c} > cap {}",
+                res.capacities[j]
+            );
+        }
+        // scaled capacities preserve ratios under overload
+        let total: f64 = caps.iter().sum();
+        if b as f64 > total && total > 0.0 {
+            for j in 0..n {
+                for k in 0..n {
+                    if caps[k] > 1e-9 && res.capacities[k] > 1e-9 {
+                        let r1 = caps[j] / caps[k];
+                        let r2 = res.capacities[j] / res.capacities[k];
+                        assert!((r1 - r2).abs() < 1e-6, "case {case}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_solver_feasibility() {
+    let pool = standard_pool();
+    let prof = LatencyProfiler::default();
+    let mut rng = Rng::new(0x50CCE5);
+    // fits are expensive; build once per gpu-speed class
+    let gt1 = LatencyGroundTruth::new(1.0);
+    let gt2 = LatencyGroundTruth::new(1.3);
+    let fits: Vec<Vec<_>> = pool
+        .iter()
+        .map(|m| vec![prof.fit_production(&gt1, m, 1), prof.fit_production(&gt2, m, 2)])
+        .collect();
+    for case in 0..60 {
+        let gpus: Vec<GpuState> = (0..1 + rng.below(2)).map(|_| GpuState::new(1.0)).collect();
+        let queries = rng.below(3000);
+        let budget = rng.range_f64(0.5, 40.0);
+        let quality: Vec<f64> = (0..3).map(|_| rng.range_f64(0.5, 1.5)).collect();
+        let plan = solve_node(&SolverInput {
+            pool: &pool,
+            gpus: &gpus,
+            fits: &fits,
+            quality: &quality,
+            queries,
+            budget_s: budget,
+        });
+        // every query accounted for
+        assert_eq!(plan.total_assigned() + plan.overflow, queries, "case {case}");
+        for (k, g) in plan.gpus.iter().enumerate() {
+            // memory feasible
+            let mem: f64 = g.assignments.iter().map(|a| a.mem).sum();
+            assert!(mem <= 1.0 + 1e-9, "case {case} gpu {k}: mem {mem}");
+            for a in &g.assignments {
+                assert!(
+                    a.mem >= pool[a.model_idx].min_mem - 1e-9,
+                    "case {case}: below min mem"
+                );
+            }
+            // reload time consistent with the GPU's (empty) prior state:
+            // every deployed model is a fresh load
+            assert!(g.reload_s >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_partition_no_dups_and_domain_bias() {
+    let ds = build_dataset(&domainqa_spec(10, 50), 9);
+    let mut rng = Rng::new(0xBADD);
+    for case in 0..40 {
+        let n_nodes = 2 + rng.below(3);
+        let specs: Vec<NodeCorpusSpec> = (0..n_nodes)
+            .map(|i| {
+                let primaries: Vec<usize> = vec![i % 6, (i + 1) % 6, (i + 2) % 6];
+                NodeCorpusSpec::dual(80 + rng.below(120), 6, &primaries, rng.range_f64(0.05, 0.6))
+            })
+            .collect();
+        let overlap = rng.range_f64(0.0, 0.8);
+        let parts = partition_corpus(&ds, &specs, overlap, case as u64);
+        for (ni, docs) in parts.iter().enumerate() {
+            let mut seen = std::collections::HashSet::new();
+            for &d in docs {
+                assert!(d < ds.documents.len());
+                assert!(seen.insert(d), "case {case} node {ni}: dup doc");
+            }
+            // primaries hold more docs than non-primaries on average
+            let primaries = &specs[ni];
+            let in_primary = docs
+                .iter()
+                .filter(|&&d| {
+                    let dom = ds.documents[d].domain;
+                    primaries.domain_weights[dom] > primaries.domain_weights.iter().sum::<f64>() / 8.0
+                })
+                .count();
+            assert!(in_primary * 2 >= docs.len(), "case {case} node {ni}");
+        }
+    }
+}
+
+#[test]
+fn prop_metric_ranges_and_identity() {
+    let ev = Evaluator::default();
+    let mut rng = Rng::new(0x3E7);
+    let vocab: Vec<String> = (0..40).map(|i| format!("tok{i}")).collect();
+    for case in 0..200 {
+        let len_a = 1 + rng.below(40);
+        let len_b = 1 + rng.below(40);
+        let a: Vec<String> = (0..len_a).map(|_| vocab[rng.below(vocab.len())].clone()).collect();
+        let b: Vec<String> = (0..len_b).map(|_| vocab[rng.below(vocab.len())].clone()).collect();
+        let s = ev.score_tokens(&a, &b);
+        for (name, v) in [
+            ("rouge1", s.rouge1),
+            ("rouge2", s.rouge2),
+            ("rougeL", s.rouge_l),
+            ("bleu4", s.bleu4),
+            ("meteor", s.meteor),
+            ("bert", s.bert_score),
+        ] {
+            assert!((0.0..=1.0 + 1e-9).contains(&v), "case {case} {name}={v}");
+        }
+        // identity scores dominate
+        let id = ev.score_tokens(&a, &a);
+        assert!(id.rouge_l >= s.rouge_l - 1e-9, "case {case}");
+        assert!(id.rouge_l > 0.999);
+        // rouge-L bounded by rouge-1 (LCS is a common subsequence)
+        assert!(s.rouge_l <= s.rouge1 + 1e-9, "case {case}");
+        // feedback is monotone in its weights
+        let f1 = ev.feedback(&a, &b, 1.0, 0.0);
+        let f2 = ev.feedback(&a, &b, 1.0, 0.5);
+        assert!(f2 >= f1 - 1e-9, "case {case}");
+    }
+}
+
+#[test]
+fn prop_tokenize_idempotent_on_own_output() {
+    let mut rng = Rng::new(0x70CE);
+    let corpus = build_dataset(&domainqa_spec(5, 10), 4);
+    for _ in 0..50 {
+        let doc = &corpus.documents[rng.below(corpus.documents.len())];
+        let text = doc.text();
+        let t1 = tokenize(&text);
+        let t2 = tokenize(&t1.join(" "));
+        assert_eq!(t1, t2);
+    }
+}
+
+#[test]
+fn prop_gpu_reconfig_properties() {
+    let mut rng = Rng::new(0x96);
+    let names = ["a", "b", "c"];
+    let lt = |n: &str| match n {
+        "a" => 1.0,
+        "b" => 2.0,
+        _ => 3.0,
+    };
+    for case in 0..200 {
+        let mut gpu = GpuState::new(1.0);
+        let mut config = std::collections::BTreeMap::new();
+        for &n in &names {
+            if rng.chance(0.6) {
+                config.insert(n.to_string(), rng.range_f64(0.1, 0.5));
+            }
+        }
+        gpu.apply(config.clone());
+        // same config -> zero reconfig time
+        assert_eq!(gpu.reconfig_time(&config, &lt), 0.0, "case {case}");
+        // a pure unload is free
+        let mut smaller = config.clone();
+        let removed = smaller.keys().next().cloned();
+        if let Some(k) = removed {
+            smaller.remove(&k);
+            assert_eq!(gpu.reconfig_time(&smaller, &lt), 0.0, "case {case}");
+        }
+        // cost is bounded by total load time of the target set
+        let mut target = std::collections::BTreeMap::new();
+        for &n in &names {
+            if rng.chance(0.5) {
+                target.insert(n.to_string(), rng.range_f64(0.1, 0.9));
+            }
+        }
+        let cost = gpu.reconfig_time(&target, &lt);
+        let bound: f64 = target.keys().map(|k| lt(k)).sum();
+        assert!(cost <= bound + 1e-9, "case {case}");
+        assert!(cost >= 0.0);
+    }
+}

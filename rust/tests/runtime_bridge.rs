@@ -1,0 +1,169 @@
+//! Integration: the AOT HLO artifacts (JAX/Pallas-authored, PJRT-executed)
+//! must match the pure-Rust mirror numerically.
+//!
+//! Requires `make artifacts`. These tests validate the whole three-layer
+//! bridge: Pallas kernel → JAX graph → HLO text → PJRT execute ≡ Rust ref.
+
+use coedge_rag::policy::grad;
+use coedge_rag::policy::mlp;
+use coedge_rag::policy::params::{PolicyParams, EMBED_DIM};
+use coedge_rag::runtime::{PolicyRuntime, UpdateBatch};
+use coedge_rag::util::rng::Rng;
+
+fn runtime() -> Option<PolicyRuntime> {
+    let dir = PolicyRuntime::default_dir();
+    match PolicyRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping (no artifacts: {e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn rand_x(rng: &mut Rng, rows: usize) -> Vec<f32> {
+    (0..rows * EMBED_DIM).map(|_| rng.normal() as f32 * 0.4).collect()
+}
+
+#[test]
+fn hlo_forward_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    for &n in &[3usize, 4, 6] {
+        let params = PolicyParams::init(n, 1234 + n as u64);
+        let mut rng = Rng::new(55 + n as u64);
+        for &rows in &[1usize, 5, 64, 100] {
+            let x = rand_x(&mut rng, rows);
+            let hlo = rt.forward(&params, &x, rows).expect("hlo fwd");
+            let refr = mlp::forward(&params, &x, rows);
+            assert_eq!(hlo.len(), refr.len());
+            for (i, (a, b)) in hlo.iter().zip(&refr).enumerate() {
+                assert!(
+                    (a - b).abs() < 2e-4,
+                    "n={n} rows={rows} idx={i}: hlo={a} rust={b}"
+                );
+            }
+            // rows are valid simplexes
+            for r in 0..rows {
+                let s: f32 = hlo[r * n..(r + 1) * n].iter().sum();
+                assert!((s - 1.0).abs() < 1e-4);
+            }
+        }
+    }
+}
+
+#[test]
+fn hlo_update_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let n = 4usize;
+    let mut rng = Rng::new(77);
+    let rows = 256; // exactly the compiled update batch
+    let x = rand_x(&mut rng, rows);
+
+    let mut p_hlo = PolicyParams::init(n, 999);
+    let mut p_ref = p_hlo.clone();
+
+    let probs = mlp::forward(&p_ref, &x, rows);
+    let mut batch = UpdateBatch::default();
+    batch.x = x.clone();
+    for r in 0..rows {
+        let row: Vec<f64> = probs[r * n..(r + 1) * n].iter().map(|&v| v as f64).collect();
+        let a = rng.sample_weighted(&row);
+        batch.actions.push(a);
+        batch.old_logp.push(probs[r * n + a].max(1e-12).ln());
+        batch.rewards.push(rng.normal() as f32);
+    }
+
+    let s_hlo = rt.update(&mut p_hlo, &batch).expect("hlo update");
+    let s_ref = grad::update_host(&mut p_ref, &batch);
+
+    assert!(
+        (s_hlo.loss - s_ref.loss).abs() < 5e-4,
+        "loss hlo={} ref={}",
+        s_hlo.loss,
+        s_ref.loss
+    );
+    assert!(
+        (s_hlo.entropy - s_ref.entropy).abs() < 5e-4,
+        "entropy hlo={} ref={}",
+        s_hlo.entropy,
+        s_ref.entropy
+    );
+    // parameters after one Adam step must agree elementwise
+    for ti in 0..p_hlo.tensors.len() {
+        for (j, (a, b)) in p_hlo.tensors[ti].iter().zip(&p_ref.tensors[ti]).enumerate() {
+            assert!(
+                (a - b).abs() < 5e-4,
+                "tensor {ti} idx {j}: hlo={a} ref={b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hlo_update_with_padding_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let n = 3usize;
+    let mut rng = Rng::new(88);
+    let rows = 100; // < compiled batch 256 -> exercises masking
+    let x = rand_x(&mut rng, rows);
+    let mut p_hlo = PolicyParams::init(n, 31);
+    let mut p_ref = p_hlo.clone();
+    let probs = mlp::forward(&p_ref, &x, rows);
+    let mut batch = UpdateBatch::default();
+    batch.x = x;
+    for r in 0..rows {
+        let a = r % n;
+        batch.actions.push(a);
+        batch.old_logp.push(probs[r * n + a].max(1e-12).ln());
+        batch.rewards.push(if a == 0 { 1.0 } else { -0.5 });
+    }
+    let s_hlo = rt.update(&mut p_hlo, &batch).expect("hlo update");
+    let s_ref = grad::update_host(&mut p_ref, &batch);
+    assert!(
+        (s_hlo.loss - s_ref.loss).abs() < 1e-3,
+        "loss hlo={} ref={}",
+        s_hlo.loss,
+        s_ref.loss
+    );
+    for ti in 0..p_hlo.tensors.len() {
+        for (a, b) in p_hlo.tensors[ti].iter().zip(&p_ref.tensors[ti]) {
+            assert!((a - b).abs() < 1e-3, "tensor {ti}: hlo={a} ref={b}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_policy_learns_online() {
+    // End-to-end sanity: PPO through the PJRT backend learns a separable
+    // cluster→node mapping (the same task the Reference backend passes).
+    use coedge_rag::policy::ppo::{Backend, OnlinePolicy, PpoConfig};
+    let Some(rt) = runtime() else { return };
+    let rt = std::sync::Arc::new(rt);
+    let n = 3;
+    let cfg = PpoConfig { buffer_threshold: 64, epochs: 6, explore_eps: 0.1, ..Default::default() };
+    let mut pol = OnlinePolicy::new(n, cfg, Backend::Pjrt(rt));
+    let mut rng = Rng::new(7);
+    let span = EMBED_DIM / n;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for step in 0..1200 {
+        let c = rng.below(n);
+        let mut x = vec![0f32; EMBED_DIM];
+        for i in 0..span {
+            x[c * span + i] = 1.0 + 0.1 * rng.normal() as f32;
+        }
+        coedge_rag::text::embed::l2_normalize(&mut x);
+        let probs = pol.probs(&x, 1).unwrap();
+        let (a, logp) = pol.sample_action(&probs);
+        let fb = if a == c { 1.0 } else { -1.0 };
+        pol.record(&x, a, logp, fb).unwrap();
+        if step >= 900 {
+            total += 1;
+            if a == c {
+                correct += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / total as f64;
+    assert!(acc > 0.55, "pjrt online accuracy={acc:.3}");
+}
