@@ -6,8 +6,7 @@
 
 use coedge_rag::bench_harness::print_series;
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
-use coedge_rag::coordinator::Coordinator;
-use coedge_rag::policy::ppo::Backend;
+use coedge_rag::coordinator::{Coordinator, CoordinatorBuilder};
 use coedge_rag::workload::SkewPattern;
 
 fn build(dataset: DatasetKind, inter: bool) -> Coordinator {
@@ -27,14 +26,12 @@ fn build(dataset: DatasetKind, inter: bool) -> Coordinator {
     for n in cfg.nodes.iter_mut() {
         n.corpus_docs = 180;
     }
-    let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+    let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
     co.cfg.skew = SkewPattern::Balanced;
     co.run(8).unwrap(); // online warmup of the identifier
     // Freeze learning for the measurement sweep: the x-axis must vary only
     // the skew, not the identifier's training progress.
-    if let Some(p) = co.policy.as_mut() {
-        p.cfg.buffer_threshold = usize::MAX;
-    }
+    co.freeze_learning();
     co
 }
 

@@ -5,8 +5,7 @@
 
 use coedge_rag::bench_harness::Table;
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
-use coedge_rag::coordinator::Coordinator;
-use coedge_rag::policy::ppo::Backend;
+use coedge_rag::coordinator::CoordinatorBuilder;
 
 fn main() {
     println!("===== Fig. 6 — query/resource proportions per model size =====");
@@ -30,7 +29,7 @@ fn main() {
             for n in cfg.nodes.iter_mut() {
                 n.corpus_docs = 200;
             }
-            let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+            let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
             let reports = co.run(6).unwrap();
             let mut q = [0.0f64; 3];
             let mut m = [0.0f64; 3];

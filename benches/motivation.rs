@@ -7,10 +7,9 @@
 
 use coedge_rag::bench_harness::{print_series, Table};
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IntraStrategy};
-use coedge_rag::coordinator::Coordinator;
+use coedge_rag::coordinator::{Coordinator, CoordinatorBuilder};
 use coedge_rag::llmsim::latency::LatencyGroundTruth;
 use coedge_rag::llmsim::model::{standard_pool, ModelSize};
-use coedge_rag::policy::ppo::Backend;
 use coedge_rag::workload::SkewPattern;
 
 fn motivation_cfg(allocator: AllocatorKind) -> ExperimentConfig {
@@ -37,7 +36,7 @@ fn fig1() {
         ("Domain", AllocatorKind::Domain),
         ("Oracle", AllocatorKind::Oracle),
     ] {
-        let mut co = Coordinator::build(motivation_cfg(kind), Backend::Reference).unwrap();
+        let mut co = CoordinatorBuilder::new(motivation_cfg(kind)).build().unwrap();
         let reports = co.run(3).unwrap(); // 3 × 500 = 1500 queries
         let m = Coordinator::tail_mean(&reports, 3);
         if name == "Oracle" {
@@ -76,7 +75,7 @@ fn fig2() {
             cfg.queries_per_slot = 1500;
             cfg.slo_s = 600.0; // §II measures raw end-to-end latency, no hard SLO
             cfg.skew = skew.clone();
-            let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+            let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
             let reports = co.run(2).unwrap();
             reports.iter().map(|r| r.latency_s).sum::<f64>() / 2.0
         };
@@ -122,7 +121,7 @@ fn fig3a() {
             cfg.queries_per_slot = 1000;
             cfg.slo_s = budget;
             cfg.intra = strat.clone();
-            let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+            let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
             let reports = co.run(1).unwrap();
             ys.push(reports[0].mean_scores.rouge_l);
         }

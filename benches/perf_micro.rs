@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use coedge_rag::bench_harness::bench;
+use coedge_rag::bench_harness::{bench, PhaseBreakdown};
 use coedge_rag::corpus::{build_dataset, domainqa_spec};
 use coedge_rag::metrics::Evaluator;
 use coedge_rag::policy::mlp;
@@ -146,7 +146,7 @@ fn main() {
 
     // --- end-to-end slot ---
     use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
-    use coedge_rag::coordinator::Coordinator;
+    use coedge_rag::coordinator::CoordinatorBuilder;
     use coedge_rag::policy::ppo::Backend;
     let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
     cfg.qa_per_domain = 60;
@@ -158,10 +158,17 @@ fn main() {
         Ok(rt) => Backend::Pjrt(Arc::new(rt)),
         Err(_) => Backend::Reference,
     };
-    let mut co = Coordinator::build(cfg, be).unwrap();
+    // live per-phase accounting through the SlotObserver hook
+    let phases = PhaseBreakdown::new();
+    let mut co = CoordinatorBuilder::new(cfg)
+        .backend(be)
+        .observer(Box::new(phases.clone()))
+        .build()
+        .unwrap();
     let r = bench("e2e slot (1000 queries, 4 nodes)", 1, 8, || {
         let qids = co.sample_queries(1000);
         std::hint::black_box(co.run_slot(&qids).unwrap());
     });
     println!("{}", r.throughput_line(1000.0));
+    phases.print();
 }

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use coedge_rag::bench_harness::Table;
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
-use coedge_rag::coordinator::Coordinator;
+use coedge_rag::coordinator::{Coordinator, CoordinatorBuilder};
 use coedge_rag::metrics::QualityScores;
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
@@ -36,7 +36,7 @@ fn run(dataset: DatasetKind, kind: AllocatorKind) -> QualityScores {
         n.corpus_docs = 220;
     }
     let be = if kind == AllocatorKind::Ppo { backend() } else { Backend::Reference };
-    let mut co = Coordinator::build(cfg, be).unwrap();
+    let mut co = CoordinatorBuilder::new(cfg).backend(be).build().unwrap();
     let slots = if matches!(kind, AllocatorKind::Ppo | AllocatorKind::Mab) { 16 } else { 5 };
     let reports = co.run(slots).unwrap();
     Coordinator::tail_mean(&reports, 4)

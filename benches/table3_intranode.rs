@@ -7,8 +7,7 @@
 
 use coedge_rag::bench_harness::Table;
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IntraStrategy};
-use coedge_rag::coordinator::Coordinator;
-use coedge_rag::policy::ppo::Backend;
+use coedge_rag::coordinator::{Coordinator, CoordinatorBuilder};
 
 fn strategies(gpus: usize) -> Vec<(&'static str, IntraStrategy)> {
     vec![
@@ -44,7 +43,7 @@ fn main() {
                 for n in cfg.nodes.iter_mut() {
                     n.corpus_docs = 200;
                 }
-                let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+                let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
                 let reports = co.run(6).unwrap();
                 let m = Coordinator::tail_mean(&reports, 4);
                 let drop = reports.iter().rev().take(4).map(|r| r.drop_rate).sum::<f64>() / 4.0;

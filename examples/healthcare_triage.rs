@@ -8,8 +8,7 @@
 
 use coedge_rag::bench_harness::Table;
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
-use coedge_rag::coordinator::Coordinator;
-use coedge_rag::policy::ppo::Backend;
+use coedge_rag::coordinator::CoordinatorBuilder;
 use coedge_rag::workload::SkewPattern;
 
 fn main() -> anyhow::Result<()> {
@@ -21,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     cfg.allocator = AllocatorKind::Ppo;
     cfg.s_iid = 0.3; // overlapping knowledge (e.g. cold symptoms)
     cfg.overlap = 0.3;
-    let mut co = Coordinator::build(cfg, Backend::Reference)?;
+    let mut co = CoordinatorBuilder::new(cfg).build()?;
 
     println!("phase 1 — normal operations (balanced case mix), 6 slots");
     co.cfg.skew = SkewPattern::Balanced;

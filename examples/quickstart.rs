@@ -6,9 +6,9 @@
 
 use std::sync::Arc;
 
-use coedge_rag::bench_harness::Table;
+use coedge_rag::bench_harness::{PhaseBreakdown, Table};
 use coedge_rag::config::{DatasetKind, ExperimentConfig};
-use coedge_rag::coordinator::Coordinator;
+use coedge_rag::coordinator::CoordinatorBuilder;
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
 
@@ -33,7 +33,11 @@ fn main() -> anyhow::Result<()> {
     cfg.slo_s = 15.0;
     let slots = 8;
 
-    let mut co = Coordinator::build(cfg, backend)?;
+    let phases = PhaseBreakdown::new();
+    let mut co = CoordinatorBuilder::new(cfg)
+        .backend(backend)
+        .observer(Box::new(phases.clone()))
+        .build()?;
     println!("\ncluster:");
     for (n, cap) in co.nodes.iter().zip(&co.capacities) {
         println!(
@@ -59,6 +63,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!();
     table.print();
+    println!();
+    phases.print();
     println!("\nThe R-L/BERT columns should trend upward as the PPO identifier");
     println!("learns the corpus distribution across nodes (paper Fig. 4 loop).");
     Ok(())

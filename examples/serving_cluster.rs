@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use coedge_rag::config::{DatasetKind, ExperimentConfig};
-use coedge_rag::coordinator::Coordinator;
+use coedge_rag::coordinator::CoordinatorBuilder;
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
 use coedge_rag::server::{serve, Client, ServerConfig};
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     cfg.docs_per_domain = 100;
     cfg.slo_s = 15.0;
     let n_qa = cfg.qa_per_domain * 6;
-    let co = Coordinator::build(cfg, backend)?;
+    let co = CoordinatorBuilder::new(cfg).backend(backend).build()?;
 
     let shutdown = Arc::new(AtomicBool::new(false));
     let sd = Arc::clone(&shutdown);

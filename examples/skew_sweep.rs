@@ -9,8 +9,7 @@
 
 use coedge_rag::bench_harness::print_series;
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
-use coedge_rag::coordinator::Coordinator;
-use coedge_rag::policy::ppo::Backend;
+use coedge_rag::coordinator::{Coordinator, CoordinatorBuilder};
 use coedge_rag::workload::SkewPattern;
 
 fn build(inter: bool) -> anyhow::Result<Coordinator> {
@@ -24,7 +23,7 @@ fn build(inter: bool) -> anyhow::Result<Coordinator> {
     for n in cfg.nodes.iter_mut() {
         n.corpus_docs = 140;
     }
-    let mut co = Coordinator::build(cfg, Backend::Reference)?;
+    let mut co = CoordinatorBuilder::new(cfg).build()?;
     // warmup: let the identifier learn the corpus distribution
     co.cfg.skew = SkewPattern::Balanced;
     co.run(6)?;

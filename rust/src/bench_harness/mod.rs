@@ -1,7 +1,12 @@
 //! Benchmark harness (criterion is unavailable offline): warmup +
-//! repeated timing with mean/std/percentiles, plus table and series
-//! printers shared by the paper-reproduction benches.
+//! repeated timing with mean/std/percentiles, table and series printers
+//! shared by the paper-reproduction benches, and [`PhaseBreakdown`] — a
+//! [`SlotObserver`] that accounts coordinator wall-time per phase live
+//! instead of scraping `SlotReport`s afterwards.
 
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::observer::{SlotEvent, SlotObserver};
 use crate::util::stats::{mean, percentile, std};
 use crate::util::timer::Timer;
 
@@ -116,9 +121,94 @@ pub fn print_series(title: &str, x_label: &str, xs: &[f64], series: &[(&str, Vec
     t.print();
 }
 
+#[derive(Clone, Copy, Debug, Default)]
+struct PhaseAccum {
+    slots: usize,
+    queries: usize,
+    encode_s: f64,
+    route_s: f64,
+    serve_s: f64,
+    feedback_s: f64,
+}
+
+/// Live per-phase wall-time accounting for the coordinator loop.
+///
+/// Clone one handle into the coordinator (`.observer(Box::new(pb.clone()))`)
+/// and keep the other to [`print`](PhaseBreakdown::print) after the run —
+/// both share the same accumulator.
+#[derive(Clone, Default)]
+pub struct PhaseBreakdown {
+    inner: Arc<Mutex<PhaseAccum>>,
+}
+
+impl PhaseBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (slots, queries) observed so far.
+    pub fn totals(&self) -> (usize, usize) {
+        let a = self.inner.lock().unwrap();
+        (a.slots, a.queries)
+    }
+
+    /// Print mean per-slot phase timings as a table.
+    pub fn print(&self) {
+        let a = *self.inner.lock().unwrap();
+        if a.slots == 0 {
+            println!("(no slots observed)");
+            return;
+        }
+        let n = a.slots as f64;
+        let mut t = Table::new(&["phase", "mean ms/slot", "share %"]);
+        let total = a.encode_s + a.route_s + a.serve_s + a.feedback_s;
+        for (name, s) in [
+            ("encode", a.encode_s),
+            ("route", a.route_s),
+            ("serve", a.serve_s),
+            ("feedback", a.feedback_s),
+        ] {
+            t.row(vec![
+                name.into(),
+                format!("{:.3}", s / n * 1e3),
+                format!("{:.1}", if total > 0.0 { s / total * 100.0 } else { 0.0 }),
+            ]);
+        }
+        println!("phase breakdown over {} slots ({} queries):", a.slots, a.queries);
+        t.print();
+    }
+}
+
+impl SlotObserver for PhaseBreakdown {
+    fn on_event(&mut self, event: &SlotEvent) {
+        let mut a = self.inner.lock().unwrap();
+        match event {
+            SlotEvent::Encoded { elapsed_s, .. } => a.encode_s += elapsed_s,
+            SlotEvent::Routed { elapsed_s, .. } => a.route_s += elapsed_s,
+            SlotEvent::Served { elapsed_s, .. } => a.serve_s += elapsed_s,
+            SlotEvent::Feedback { elapsed_s, .. } => a.feedback_s += elapsed_s,
+            SlotEvent::SlotEnd { report, .. } => {
+                a.slots += 1;
+                a.queries += report.queries;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn phase_breakdown_accumulates() {
+        let pb = PhaseBreakdown::new();
+        let mut handle = pb.clone();
+        handle.on_event(&SlotEvent::Encoded { slot: 0, queries: 4, elapsed_s: 0.5 });
+        let report = crate::coordinator::SlotReport { queries: 4, ..Default::default() };
+        handle.on_event(&SlotEvent::SlotEnd { slot: 0, report: &report });
+        assert_eq!(pb.totals(), (1, 4));
+        pb.print();
+    }
 
     #[test]
     fn bench_returns_sane_stats() {

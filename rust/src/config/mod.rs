@@ -80,6 +80,51 @@ pub enum AllocatorKind {
     Ppo,
 }
 
+impl AllocatorKind {
+    /// Every built-in kind (also the coordinator registry's built-in keys).
+    pub const ALL: [AllocatorKind; 5] = [
+        AllocatorKind::Random,
+        AllocatorKind::Domain,
+        AllocatorKind::Oracle,
+        AllocatorKind::Mab,
+        AllocatorKind::Ppo,
+    ];
+
+    /// Stable string key (CLI flag values, TOML, registry keys).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AllocatorKind::Random => "random",
+            AllocatorKind::Domain => "domain",
+            AllocatorKind::Oracle => "oracle",
+            AllocatorKind::Mab => "mab",
+            AllocatorKind::Ppo => "ppo",
+        }
+    }
+}
+
+impl std::fmt::Display for AllocatorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for AllocatorKind {
+    type Err = anyhow::Error;
+
+    /// Exhaustive over [`AllocatorKind::ALL`]; the error lists every
+    /// valid kind.
+    fn from_str(s: &str) -> Result<Self> {
+        AllocatorKind::ALL
+            .iter()
+            .find(|k| k.as_str() == s)
+            .copied()
+            .ok_or_else(|| {
+                let valid: Vec<&str> = AllocatorKind::ALL.iter().map(|k| k.as_str()).collect();
+                anyhow!("unknown allocator {s:?}; valid kinds: {}", valid.join(", "))
+            })
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -231,13 +276,7 @@ impl ExperimentConfig {
             cfg.overlap = v;
         }
         if let Some(v) = root.get("allocator").and_then(|v| v.as_str()) {
-            cfg.allocator = match v {
-                "random" => AllocatorKind::Random,
-                "domain" => AllocatorKind::Domain,
-                "oracle" => AllocatorKind::Oracle,
-                "mab" => AllocatorKind::Mab,
-                _ => AllocatorKind::Ppo,
-            };
+            cfg.allocator = v.parse()?;
         }
         if let Some(v) = root.get("inter_enabled").and_then(|v| v.as_bool()) {
             cfg.inter_enabled = v;
@@ -341,6 +380,16 @@ corpus_docs = 100
         assert_eq!(cfg.nodes.len(), 1);
         assert_eq!(cfg.nodes[0].gpu_speeds, vec![1.0, 1.5]);
         assert_eq!(cfg.nodes[0].pool, vec![ModelSize::Small, ModelSize::Mid]);
+    }
+
+    #[test]
+    fn allocator_kind_roundtrips_and_errors_list_valid() {
+        for k in AllocatorKind::ALL {
+            assert_eq!(k.as_str().parse::<AllocatorKind>().unwrap(), k);
+        }
+        let err = "bogus".parse::<AllocatorKind>().unwrap_err().to_string();
+        assert!(err.contains("valid kinds") && err.contains("ppo"), "{err}");
+        assert!(ExperimentConfig::from_toml("allocator = \"bogus\"").is_err());
     }
 
     #[test]

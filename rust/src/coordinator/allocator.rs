@@ -1,0 +1,300 @@
+//! The unified query-allocation interface (paper §IV-A / Table II rows).
+//!
+//! Every routing policy — the PPO identifier and all baselines — implements
+//! [`Allocator`]: `assign` maps one slot's queries to nodes, `observe`
+//! feeds the served outcomes back into the policy. The coordinator holds
+//! exactly one `Box<dyn Allocator>`; it never branches on the policy kind.
+//!
+//! New policies plug in through [`AllocatorRegistry`]: register a factory
+//! under a string key and select it with
+//! [`CoordinatorBuilder::allocator_kind`](crate::coordinator::CoordinatorBuilder::allocator_kind)
+//! — no coordinator changes required.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::node::QueryOutcome;
+use crate::config::{AllocatorKind, ExperimentConfig};
+use crate::corpus::synth::SyntheticDataset;
+use crate::policy::ppo::{Backend, OnlinePolicy, PpoConfig};
+use crate::router::inter::inter_node_schedule;
+use crate::text::embed::EMBED_DIM;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Everything an allocator may consult when routing one slot.
+pub struct SlotContext<'a> {
+    /// Monotone slot counter (0-based).
+    pub slot_idx: usize,
+    /// QA ids of this slot's queries.
+    pub qa_ids: &'a [usize],
+    /// Query embeddings, one per QA id.
+    pub embs: &'a [Vec<f32>],
+    /// The shared dataset (domains, gold docs, …).
+    pub ds: &'a SyntheticDataset,
+    /// Effective per-node capacities C_n(L) for this slot's SLO.
+    pub capacities: &'a [f64],
+    /// The slot latency SLO (seconds).
+    pub slo_s: f64,
+    /// Whether Algorithm-1 capacity-aware reassignment is enabled.
+    pub inter_enabled: bool,
+}
+
+impl SlotContext<'_> {
+    /// Number of nodes in the cluster.
+    pub fn n_nodes(&self) -> usize {
+        self.capacities.len()
+    }
+
+    /// Number of queries in the slot.
+    pub fn batch(&self) -> usize {
+        self.qa_ids.len()
+    }
+}
+
+/// One slot's routing decision.
+#[derive(Clone, Debug, Default)]
+pub struct Assignment {
+    /// Node index per query (`node_of.len() == batch`).
+    pub node_of: Vec<usize>,
+    /// Behavior log-probabilities per query (policy allocators only;
+    /// empty otherwise).
+    pub logps: Vec<f32>,
+    /// Row-major `[batch × n_nodes]` matching probabilities `s_i^t`, when
+    /// the allocator computes them (surfaced to `SlotObserver`s; empty
+    /// otherwise).
+    pub probs: Vec<f32>,
+}
+
+impl Assignment {
+    /// An assignment from bare node choices (no policy metadata).
+    pub fn from_nodes(node_of: Vec<usize>) -> Self {
+        Assignment { node_of, logps: Vec::new(), probs: Vec::new() }
+    }
+
+    /// Route every query of a `batch`-sized slot to one node.
+    pub fn all_to(batch: usize, node: usize) -> Self {
+        Assignment::from_nodes(vec![node; batch])
+    }
+}
+
+/// What `observe` learned from one slot's outcomes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FeedbackStats {
+    /// Outcomes consumed as learning signal.
+    pub observed: usize,
+    /// Parameter-update rounds triggered this slot.
+    pub updates: usize,
+}
+
+/// A pluggable query-allocation policy.
+///
+/// `assign` is called exactly once per slot, before serving; `observe`
+/// exactly once per slot, after serving, with the same context plus the
+/// outcomes. Stateless allocators only need `assign`.
+pub trait Allocator: Send {
+    /// Short stable identifier (registry key for built-ins).
+    fn name(&self) -> &str;
+
+    /// Route each query in `ctx` to a node.
+    fn assign(&mut self, ctx: &SlotContext) -> Result<Assignment>;
+
+    /// Consume the slot's outcomes as a learning signal.
+    fn observe(
+        &mut self,
+        ctx: &SlotContext,
+        assignment: &Assignment,
+        outcomes: &[QueryOutcome],
+    ) -> Result<FeedbackStats> {
+        let _ = (ctx, assignment, outcomes);
+        Ok(FeedbackStats::default())
+    }
+
+    /// Stop learning (measurement sweeps freeze training progress).
+    fn freeze(&mut self) {}
+}
+
+/// Inputs available to allocator factories at build time.
+pub struct AllocatorBuildCtx<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub ds: &'a SyntheticDataset,
+    /// Per QA id, the nodes holding its gold document.
+    pub gold_locs: &'a [Vec<usize>],
+    /// Policy-network execution backend.
+    pub backend: &'a Backend,
+    /// Base seed for allocator-private RNG streams.
+    pub seed: u64,
+}
+
+/// Factory producing an allocator from the build context.
+pub type AllocatorFactory =
+    Box<dyn Fn(&AllocatorBuildCtx) -> Result<Box<dyn Allocator>> + Send + Sync>;
+
+/// String-keyed allocator registry: built-ins plus custom registrations.
+pub struct AllocatorRegistry {
+    factories: BTreeMap<String, AllocatorFactory>,
+}
+
+impl Default for AllocatorRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+impl AllocatorRegistry {
+    /// A registry with no factories at all (tests).
+    pub fn empty() -> Self {
+        AllocatorRegistry { factories: BTreeMap::new() }
+    }
+
+    /// A registry holding every built-in kind under its
+    /// [`AllocatorKind::as_str`] key.
+    pub fn with_builtins() -> Self {
+        use crate::coordinator::baselines::{
+            DomainAllocator, MabAllocator, OracleAllocator, RandomAllocator,
+        };
+        let mut r = AllocatorRegistry::empty();
+        r.register(AllocatorKind::Ppo.as_str(), |ctx| {
+            Ok(Box::new(PpoAllocator::from_build_ctx(ctx)))
+        });
+        r.register(AllocatorKind::Random.as_str(), |ctx| {
+            Ok(Box::new(RandomAllocator::new(ctx.seed ^ 0xBA5E)))
+        });
+        r.register(AllocatorKind::Domain.as_str(), |ctx| {
+            Ok(Box::new(DomainAllocator::new(ctx.cfg, ctx.ds)))
+        });
+        r.register(AllocatorKind::Oracle.as_str(), |ctx| {
+            Ok(Box::new(OracleAllocator::new(ctx.gold_locs)))
+        });
+        r.register(AllocatorKind::Mab.as_str(), |ctx| {
+            Ok(Box::new(MabAllocator::new(ctx.cfg.num_nodes(), ctx.seed ^ 0xBA5E)))
+        });
+        r
+    }
+
+    /// Register (or replace) a factory under `kind`.
+    pub fn register(
+        &mut self,
+        kind: &str,
+        factory: impl Fn(&AllocatorBuildCtx) -> Result<Box<dyn Allocator>> + Send + Sync + 'static,
+    ) {
+        self.factories.insert(kind.to_string(), Box::new(factory));
+    }
+
+    /// All registered kind keys, sorted.
+    pub fn kinds(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    /// Build the allocator registered under `kind`; unknown kinds error
+    /// with the list of valid ones.
+    pub fn build(&self, kind: &str, ctx: &AllocatorBuildCtx) -> Result<Box<dyn Allocator>> {
+        match self.factories.get(kind) {
+            Some(f) => f(ctx),
+            None => Err(anyhow::anyhow!(
+                "unknown allocator kind {kind:?}; valid kinds: {}",
+                self.kinds().join(", ")
+            )),
+        }
+    }
+}
+
+/// Build a built-in allocator directly from its [`AllocatorKind`].
+pub fn from_kind(kind: AllocatorKind, ctx: &AllocatorBuildCtx) -> Result<Box<dyn Allocator>> {
+    AllocatorRegistry::with_builtins().build(kind.as_str(), ctx)
+}
+
+/// The paper's allocator: PPO online query identification (§IV-A) feeding
+/// Algorithm-1 inter-node scheduling, with per-outcome feedback learning.
+pub struct PpoAllocator {
+    pub policy: OnlinePolicy,
+    /// Private routing-noise stream (Algorithm 1 samples from `s_i^t`).
+    rng: Rng,
+    frozen: bool,
+}
+
+impl PpoAllocator {
+    pub fn new(n_nodes: usize, pcfg: PpoConfig, backend: Backend, route_seed: u64) -> Self {
+        PpoAllocator {
+            policy: OnlinePolicy::new(n_nodes, pcfg, backend),
+            rng: Rng::new(route_seed),
+            frozen: false,
+        }
+    }
+
+    fn from_build_ctx(ctx: &AllocatorBuildCtx) -> Self {
+        let pcfg = PpoConfig {
+            buffer_threshold: ctx.cfg.ppo_buffer,
+            epochs: ctx.cfg.ppo_epochs,
+            seed: ctx.seed ^ 0x9090,
+            ..Default::default()
+        };
+        PpoAllocator::new(ctx.cfg.num_nodes(), pcfg, ctx.backend.clone(), ctx.seed ^ 0x707E)
+    }
+}
+
+impl Allocator for PpoAllocator {
+    fn name(&self) -> &str {
+        AllocatorKind::Ppo.as_str()
+    }
+
+    fn assign(&mut self, ctx: &SlotContext) -> Result<Assignment> {
+        let (b, n_nodes) = (ctx.batch(), ctx.n_nodes());
+        let mut flat = Vec::with_capacity(b * EMBED_DIM);
+        for e in ctx.embs {
+            flat.extend_from_slice(e);
+        }
+        let probs = self.policy.probs(&flat, b)?;
+        if ctx.inter_enabled {
+            let res = inter_node_schedule(&probs, n_nodes, ctx.capacities, &mut self.rng);
+            // behavior logp for PPO: probability of the final node
+            let logps: Vec<f32> = res
+                .assignment
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| probs[i * n_nodes + a].max(1e-12).ln())
+                .collect();
+            Ok(Assignment { node_of: res.assignment, logps, probs })
+        } else {
+            // ablation: pure probability sampling, no capacity check
+            let mut node_of = Vec::with_capacity(b);
+            let mut logps = Vec::with_capacity(b);
+            for i in 0..b {
+                let row = &probs[i * n_nodes..(i + 1) * n_nodes];
+                let (a, lp) = self.policy.sample_action(row);
+                node_of.push(a);
+                logps.push(lp);
+            }
+            Ok(Assignment { node_of, logps, probs })
+        }
+    }
+
+    fn observe(
+        &mut self,
+        ctx: &SlotContext,
+        assignment: &Assignment,
+        outcomes: &[QueryOutcome],
+    ) -> Result<FeedbackStats> {
+        let mut stats = FeedbackStats::default();
+        if self.frozen {
+            return Ok(stats); // frozen: no buffering, no updates
+        }
+        if assignment.logps.len() != outcomes.len() {
+            return Ok(stats); // replayed/foreign assignment: nothing to learn from
+        }
+        for (i, out) in outcomes.iter().enumerate() {
+            if self
+                .policy
+                .record(&ctx.embs[i], assignment.node_of[i], assignment.logps[i], out.feedback)?
+                .is_some()
+            {
+                stats.updates += 1;
+            }
+            stats.observed += 1;
+        }
+        Ok(stats)
+    }
+
+    fn freeze(&mut self) {
+        self.frozen = true;
+    }
+}

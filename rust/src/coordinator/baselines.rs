@@ -1,133 +1,204 @@
-//! Baseline query allocators (paper §V-B):
-//! Random, Domain (static domain→node routing), Oracle (perfect knowledge
-//! of gold-document locations), and MAB (LinUCB).
+//! Baseline query allocators (paper §V-B): [`RandomAllocator`],
+//! [`DomainAllocator`] (static domain→node routing), [`OracleAllocator`]
+//! (perfect knowledge of gold-document locations), and [`MabAllocator`]
+//! (LinUCB). All implement [`Allocator`], so they are interchangeable with
+//! the PPO identifier at the coordinator.
 
 use crate::bandit::LinUcb;
 use crate::cluster::node::QueryOutcome;
 use crate::config::{AllocatorKind, ExperimentConfig};
+use crate::coordinator::allocator::{Allocator, Assignment, FeedbackStats, SlotContext};
 use crate::corpus::synth::SyntheticDataset;
 use crate::util::rng::Rng;
+use crate::Result;
 
-/// A non-PPO allocator.
-pub struct BaselineAllocator {
-    pub kind: AllocatorKind,
-    /// domain -> preferred node (for Domain allocation).
-    domain_to_node: Vec<usize>,
-    /// QA id -> nodes holding its gold doc (for Oracle).
-    gold_locs: Vec<Vec<usize>>,
-    mab: Option<LinUcb>,
-    n_nodes: usize,
+/// Overload scaling as in Algorithm 1 lines 5–8, for fairness with the
+/// capacity-aware PPO path.
+fn effective_caps(batch: usize, capacities: &[f64]) -> Vec<f64> {
+    let total_cap: f64 = capacities.iter().sum();
+    if (batch as f64) > total_cap && total_cap > 0.0 {
+        let excess = batch as f64 - total_cap;
+        capacities.iter().map(|&c| c + c / total_cap * excess).collect()
+    } else if total_cap <= 0.0 {
+        vec![f64::INFINITY; capacities.len()]
+    } else {
+        capacities.to_vec()
+    }
 }
 
-impl BaselineAllocator {
-    pub fn new(
-        kind: AllocatorKind,
-        cfg: &ExperimentConfig,
-        gold_locs: &[Vec<usize>],
-        seed: u64,
-    ) -> Self {
-        // Domain routing table: a domain goes to the first node listing it
-        // as primary (ties broken by order, like a static registry).
-        let nd = 6;
-        let mut domain_to_node = vec![0usize; nd];
-        for d in 0..nd {
-            domain_to_node[d] = cfg
-                .nodes
-                .iter()
-                .position(|n| n.primary_domains.contains(&d))
-                .unwrap_or(d % cfg.nodes.len());
-        }
-        let mab = if kind == AllocatorKind::Mab {
-            Some(LinUcb::new(cfg.num_nodes(), 0.6, seed))
-        } else {
-            None
-        };
-        BaselineAllocator {
-            kind,
-            domain_to_node,
-            gold_locs: gold_locs.to_vec(),
-            mab,
-            n_nodes: cfg.num_nodes(),
-        }
+/// Least-loaded node (relative to capacity) among `cands`.
+fn least_loaded(cands: impl Iterator<Item = usize>, counts: &[usize], caps: &[f64]) -> Option<usize> {
+    cands.min_by(|&a, &b| {
+        let la = counts[a] as f64 / caps[a].max(1.0);
+        let lb = counts[b] as f64 / caps[b].max(1.0);
+        la.partial_cmp(&lb).unwrap()
+    })
+}
+
+/// Shared assignment loop: each query names a preferred node via
+/// `prefer(query_pos, qa_id, counts, caps)`; when capacity-aware routing
+/// is on and the preference is saturated, the query spills to the
+/// least-loaded node with residual capacity.
+fn assign_with_spill(
+    ctx: &SlotContext,
+    mut prefer: impl FnMut(usize, usize, &[usize], &[f64]) -> usize,
+) -> Assignment {
+    let n_nodes = ctx.n_nodes();
+    let caps = effective_caps(ctx.batch(), ctx.capacities);
+    let mut counts = vec![0usize; n_nodes];
+    let node_of = ctx
+        .qa_ids
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| {
+            let p = prefer(i, q, &counts, &caps);
+            let a = if ctx.inter_enabled && (counts[p] as f64) >= caps[p] {
+                least_loaded(
+                    (0..n_nodes).filter(|&j| (counts[j] as f64) < caps[j]),
+                    &counts,
+                    &caps,
+                )
+                .unwrap_or(p)
+            } else {
+                p
+            };
+            counts[a] += 1;
+            a
+        })
+        .collect();
+    Assignment::from_nodes(node_of)
+}
+
+/// Uniform-random routing.
+pub struct RandomAllocator {
+    rng: Rng,
+}
+
+impl RandomAllocator {
+    pub fn new(seed: u64) -> Self {
+        RandomAllocator { rng: Rng::new(seed) }
+    }
+}
+
+impl Allocator for RandomAllocator {
+    fn name(&self) -> &str {
+        AllocatorKind::Random.as_str()
     }
 
-    /// Assign each query to a node.
-    pub fn assign(
-        &mut self,
-        ds: &SyntheticDataset,
-        qa_ids: &[usize],
-        embs: &[Vec<f32>],
-        capacities: &[f64],
-        capacity_aware: bool,
-        rng: &mut Rng,
-    ) -> Vec<usize> {
-        let mut counts = vec![0usize; self.n_nodes];
-        // overload scaling as in Algorithm 1 for fairness
-        let total_cap: f64 = capacities.iter().sum();
-        let caps: Vec<f64> = if (qa_ids.len() as f64) > total_cap && total_cap > 0.0 {
-            let excess = qa_ids.len() as f64 - total_cap;
-            capacities.iter().map(|&c| c + c / total_cap * excess).collect()
-        } else if total_cap <= 0.0 {
-            vec![f64::INFINITY; self.n_nodes]
-        } else {
-            capacities.to_vec()
-        };
-        qa_ids
-            .iter()
-            .enumerate()
-            .map(|(i, &q)| {
-                let prefer = match self.kind {
-                    AllocatorKind::Random => rng.below(self.n_nodes),
-                    AllocatorKind::Domain => self.domain_to_node[ds.qa_pairs[q].domain],
-                    AllocatorKind::Oracle => {
-                        // least-loaded node (relative to capacity) holding
-                        // the gold doc; falls back to global least-loaded
-                        let locs = &self.gold_locs[q];
-                        let pick_least = |cands: &[usize], counts: &[usize]| {
-                            *cands
-                                .iter()
-                                .min_by(|&&a, &&b| {
-                                    let la = counts[a] as f64 / caps[a].max(1.0);
-                                    let lb = counts[b] as f64 / caps[b].max(1.0);
-                                    la.partial_cmp(&lb).unwrap()
-                                })
-                                .unwrap()
-                        };
-                        if locs.is_empty() {
-                            let all: Vec<usize> = (0..self.n_nodes).collect();
-                            pick_least(&all, &counts)
-                        } else {
-                            pick_least(locs, &counts)
-                        }
-                    }
-                    AllocatorKind::Mab => self.mab.as_ref().unwrap().choose(&embs[i]),
-                    AllocatorKind::Ppo => unreachable!(),
-                };
-                let a = if capacity_aware && (counts[prefer] as f64) >= caps[prefer] {
-                    // spill to the least-loaded node with residual capacity
-                    (0..self.n_nodes)
-                        .filter(|&j| (counts[j] as f64) < caps[j])
-                        .min_by(|&a, &b| {
-                            let la = counts[a] as f64 / caps[a].max(1.0);
-                            let lb = counts[b] as f64 / caps[b].max(1.0);
-                            la.partial_cmp(&lb).unwrap()
-                        })
-                        .unwrap_or(prefer)
-                } else {
-                    prefer
-                };
-                counts[a] += 1;
-                a
+    fn assign(&mut self, ctx: &SlotContext) -> Result<Assignment> {
+        let n = ctx.n_nodes();
+        let rng = &mut self.rng;
+        Ok(assign_with_spill(ctx, |_, _, _, _| rng.below(n)))
+    }
+}
+
+/// Static domain→node routing: a domain goes to the first node listing it
+/// as primary (ties broken by order, like a static registry).
+pub struct DomainAllocator {
+    domain_to_node: Vec<usize>,
+}
+
+impl DomainAllocator {
+    /// The domain count comes from the dataset, so routing works for any
+    /// corpus, not just the paper's 6-domain testbed.
+    pub fn new(cfg: &ExperimentConfig, ds: &SyntheticDataset) -> Self {
+        let nd = ds.num_domains();
+        let domain_to_node = (0..nd)
+            .map(|d| {
+                cfg.nodes
+                    .iter()
+                    .position(|n| n.primary_domains.contains(&d))
+                    .unwrap_or(d % cfg.nodes.len())
             })
-            .collect()
+            .collect();
+        DomainAllocator { domain_to_node }
+    }
+}
+
+impl Allocator for DomainAllocator {
+    fn name(&self) -> &str {
+        AllocatorKind::Domain.as_str()
     }
 
-    /// Post-slot learning signal (MAB only).
-    pub fn observe(&mut self, embs: &[Vec<f32>], assignment: &[usize], outcomes: &[QueryOutcome]) {
-        if let Some(mab) = &mut self.mab {
-            for ((emb, &a), out) in embs.iter().zip(assignment).zip(outcomes) {
-                mab.update(emb, a, out.feedback);
+    fn assign(&mut self, ctx: &SlotContext) -> Result<Assignment> {
+        let table = &self.domain_to_node;
+        Ok(assign_with_spill(ctx, |_, q, _, _| table[ctx.ds.qa_pairs[q].domain]))
+    }
+}
+
+/// Perfect-knowledge routing: the least-loaded node holding the query's
+/// gold document, falling back to the global least-loaded node.
+pub struct OracleAllocator {
+    /// QA id -> nodes holding its gold doc.
+    gold_locs: Vec<Vec<usize>>,
+}
+
+impl OracleAllocator {
+    pub fn new(gold_locs: &[Vec<usize>]) -> Self {
+        OracleAllocator { gold_locs: gold_locs.to_vec() }
+    }
+}
+
+impl Allocator for OracleAllocator {
+    fn name(&self) -> &str {
+        AllocatorKind::Oracle.as_str()
+    }
+
+    fn assign(&mut self, ctx: &SlotContext) -> Result<Assignment> {
+        let n_nodes = ctx.n_nodes();
+        let gold = &self.gold_locs;
+        Ok(assign_with_spill(ctx, |_, q, counts, caps| {
+            let locs = &gold[q];
+            if locs.is_empty() {
+                least_loaded(0..n_nodes, counts, caps).unwrap()
+            } else {
+                least_loaded(locs.iter().copied(), counts, caps).unwrap()
             }
+        }))
+    }
+}
+
+/// LinUCB contextual bandit over query embeddings.
+pub struct MabAllocator {
+    mab: LinUcb,
+    frozen: bool,
+}
+
+impl MabAllocator {
+    pub fn new(n_nodes: usize, seed: u64) -> Self {
+        MabAllocator { mab: LinUcb::new(n_nodes, 0.6, seed), frozen: false }
+    }
+}
+
+impl Allocator for MabAllocator {
+    fn name(&self) -> &str {
+        AllocatorKind::Mab.as_str()
+    }
+
+    fn assign(&mut self, ctx: &SlotContext) -> Result<Assignment> {
+        let mab = &self.mab;
+        Ok(assign_with_spill(ctx, |i, _, _, _| mab.choose(&ctx.embs[i])))
+    }
+
+    fn observe(
+        &mut self,
+        ctx: &SlotContext,
+        assignment: &Assignment,
+        outcomes: &[QueryOutcome],
+    ) -> Result<FeedbackStats> {
+        let mut stats = FeedbackStats::default();
+        if self.frozen {
+            return Ok(stats);
         }
+        for ((emb, &a), out) in ctx.embs.iter().zip(&assignment.node_of).zip(outcomes) {
+            self.mab.update(emb, a, out.feedback);
+            stats.observed += 1;
+        }
+        stats.updates = usize::from(stats.observed > 0);
+        Ok(stats)
+    }
+
+    fn freeze(&mut self) {
+        self.frozen = true;
     }
 }

@@ -1,0 +1,279 @@
+//! Staged construction of a [`Coordinator`].
+//!
+//! The pipeline runs dataset → partition → nodes → capacity → allocator;
+//! every stage can be overridden independently (injected datasets,
+//! precomputed partitions, stub capacity models, mock allocators), which
+//! is how the test suites isolate single stages.
+
+use std::sync::Arc;
+
+use crate::cluster::node::EdgeNode;
+use crate::config::{DatasetKind, ExperimentConfig};
+use crate::coordinator::allocator::{Allocator, AllocatorBuildCtx, AllocatorRegistry};
+use crate::coordinator::observer::SlotObserver;
+use crate::coordinator::Coordinator;
+use crate::corpus::partition::{gold_locations, partition_corpus, NodeCorpusSpec};
+use crate::corpus::synth::SyntheticDataset;
+use crate::corpus::{build_dataset, domainqa_spec, ppc_spec};
+use crate::metrics::Evaluator;
+use crate::policy::ppo::Backend;
+use crate::router::capacity::{profile_capacity, CapacityModel};
+use crate::text::embed::Embedder;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Builder for the full CoEdge-RAG system.
+///
+/// Registering a custom allocator requires no coordinator changes:
+///
+/// ```
+/// use coedge_rag::config::{DatasetKind, ExperimentConfig};
+/// use coedge_rag::coordinator::allocator::{Allocator, Assignment, SlotContext};
+/// use coedge_rag::coordinator::CoordinatorBuilder;
+/// use coedge_rag::router::capacity::CapacityModel;
+///
+/// struct FirstNode;
+/// impl Allocator for FirstNode {
+///     fn name(&self) -> &str { "first-node" }
+///     fn assign(&mut self, ctx: &SlotContext) -> coedge_rag::Result<Assignment> {
+///         Ok(Assignment::all_to(ctx.batch(), 0))
+///     }
+/// }
+///
+/// let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+/// cfg.qa_per_domain = 10;
+/// cfg.docs_per_domain = 15;
+/// for n in cfg.nodes.iter_mut() { n.corpus_docs = 20; }
+/// let mut co = CoordinatorBuilder::new(cfg)
+///     .register_allocator("first-node", |_| Ok(Box::new(FirstNode)))
+///     .allocator_kind("first-node")
+///     .capacities(vec![CapacityModel { k: 50.0, b: 0.0 }; 4]) // skip profiling
+///     .build()
+///     .unwrap();
+/// let qids = co.sample_queries(6);
+/// let report = co.run_slot(&qids).unwrap();
+/// assert!(report.outcomes.iter().all(|o| o.node == 0));
+/// ```
+pub struct CoordinatorBuilder {
+    cfg: ExperimentConfig,
+    backend: Backend,
+    registry: AllocatorRegistry,
+    dataset: Option<SyntheticDataset>,
+    partitions: Option<Vec<Vec<usize>>>,
+    capacities: Option<Vec<CapacityModel>>,
+    allocator: Option<Box<dyn Allocator>>,
+    allocator_kind: Option<String>,
+    observers: Vec<Box<dyn SlotObserver>>,
+    embedder: Embedder,
+    evaluator: Evaluator,
+}
+
+impl CoordinatorBuilder {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        CoordinatorBuilder {
+            cfg,
+            backend: Backend::Reference,
+            registry: AllocatorRegistry::with_builtins(),
+            dataset: None,
+            partitions: None,
+            capacities: None,
+            allocator: None,
+            allocator_kind: None,
+            observers: Vec::new(),
+            embedder: Embedder::default(),
+            evaluator: Evaluator::default(),
+        }
+    }
+
+    /// Policy-network execution backend (default: pure-Rust reference).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Inject a dataset instead of synthesizing one from the config.
+    pub fn dataset(mut self, ds: SyntheticDataset) -> Self {
+        self.dataset = Some(ds);
+        self
+    }
+
+    /// Inject per-node document partitions (one doc-id list per node)
+    /// instead of running the dual-distribution partitioner.
+    pub fn partitions(mut self, parts: Vec<Vec<usize>>) -> Self {
+        self.partitions = Some(parts);
+        self
+    }
+
+    /// Inject per-node capacity models, skipping the profiling phase
+    /// (§IV-B) — the big time-saver for unit tests.
+    pub fn capacities(mut self, caps: Vec<CapacityModel>) -> Self {
+        self.capacities = Some(caps);
+        self
+    }
+
+    /// Inject a ready-made allocator (takes precedence over
+    /// [`allocator_kind`](Self::allocator_kind) and the config's kind).
+    pub fn allocator(mut self, allocator: Box<dyn Allocator>) -> Self {
+        self.allocator = Some(allocator);
+        self
+    }
+
+    /// Select the allocator by registry key (built-ins use the
+    /// `AllocatorKind` names; customs whatever was registered).
+    pub fn allocator_kind(mut self, kind: &str) -> Self {
+        self.allocator_kind = Some(kind.to_string());
+        self
+    }
+
+    /// Register a custom allocator factory under `kind`.
+    pub fn register_allocator(
+        mut self,
+        kind: &str,
+        factory: impl Fn(&AllocatorBuildCtx) -> Result<Box<dyn Allocator>> + Send + Sync + 'static,
+    ) -> Self {
+        self.registry.register(kind, factory);
+        self
+    }
+
+    /// Attach a [`SlotObserver`] receiving per-phase events (may be called
+    /// repeatedly; all observers receive every event).
+    pub fn observer(mut self, observer: Box<dyn SlotObserver>) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// Replace the embedder (tests inject deterministic stubs).
+    pub fn embedder(mut self, embedder: Embedder) -> Self {
+        self.embedder = embedder;
+        self
+    }
+
+    /// Replace the evaluator.
+    pub fn evaluator(mut self, evaluator: Evaluator) -> Self {
+        self.evaluator = evaluator;
+        self
+    }
+
+    /// Run the pipeline: dataset → partition → nodes → capacity →
+    /// allocator.
+    pub fn build(self) -> Result<Coordinator> {
+        let CoordinatorBuilder {
+            cfg,
+            backend,
+            registry,
+            dataset,
+            partitions,
+            capacities,
+            allocator,
+            allocator_kind,
+            observers,
+            embedder,
+            evaluator,
+        } = self;
+
+        // stage 1: dataset
+        let ds = match dataset {
+            Some(ds) => ds,
+            None => {
+                let spec = match cfg.dataset {
+                    DatasetKind::DomainQa => domainqa_spec(cfg.qa_per_domain, cfg.docs_per_domain),
+                    DatasetKind::Ppc => ppc_spec(cfg.qa_per_domain, cfg.docs_per_domain),
+                };
+                build_dataset(&spec, cfg.seed)
+            }
+        };
+        let nd = ds.num_domains();
+
+        // stage 2: partition (dual-distribution, paper §V-A)
+        let parts = match partitions {
+            Some(p) => {
+                anyhow::ensure!(
+                    p.len() == cfg.nodes.len(),
+                    "partitions: got {} lists for {} nodes",
+                    p.len(),
+                    cfg.nodes.len()
+                );
+                p
+            }
+            None => {
+                let specs: Vec<NodeCorpusSpec> = cfg
+                    .nodes
+                    .iter()
+                    .map(|n| NodeCorpusSpec::dual(n.corpus_docs, nd, &n.primary_domains, cfg.s_iid))
+                    .collect();
+                partition_corpus(&ds, &specs, cfg.overlap, cfg.seed ^ 0x9A87)
+            }
+        };
+        let gold_locs = gold_locations(&ds, &parts);
+
+        // stage 3: nodes (embed all documents once, shared cache)
+        let doc_embs: Arc<Vec<Vec<f32>>> =
+            Arc::new(ds.documents.iter().map(|d| embedder.embed(&d.text())).collect());
+        let nodes: Vec<EdgeNode> = cfg
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, ncfg)| {
+                EdgeNode::build(
+                    i,
+                    ncfg,
+                    &ds,
+                    parts[i].clone(),
+                    Arc::clone(&doc_embs),
+                    &evaluator,
+                    cfg.intra.clone(),
+                    cfg.top_k,
+                    cfg.seed ^ 0x0D0E ^ i as u64,
+                )
+            })
+            .collect();
+
+        // stage 4: capacity profiling (initialization phase, §IV-B)
+        let capacities: Vec<CapacityModel> = match capacities {
+            Some(c) => {
+                anyhow::ensure!(
+                    c.len() == nodes.len(),
+                    "capacities: got {} models for {} nodes",
+                    c.len(),
+                    nodes.len()
+                );
+                c
+            }
+            None => nodes
+                .iter()
+                .map(|n| profile_capacity(|q, l| n.dry_run_drop_rate(q, l), 0.01))
+                .collect(),
+        };
+
+        // stage 5: allocator
+        let allocator = match allocator {
+            Some(a) => a,
+            None => {
+                let build_ctx = AllocatorBuildCtx {
+                    cfg: &cfg,
+                    ds: &ds,
+                    gold_locs: &gold_locs,
+                    backend: &backend,
+                    seed: cfg.seed,
+                };
+                let kind = allocator_kind
+                    .unwrap_or_else(|| cfg.allocator.as_str().to_string());
+                registry.build(&kind, &build_ctx)?
+            }
+        };
+
+        Ok(Coordinator {
+            rng: Rng::new(cfg.seed ^ 0xC00D),
+            cfg,
+            ds,
+            nodes,
+            capacities,
+            embedder,
+            evaluator,
+            gold_locs,
+            allocator,
+            observers,
+            slot_idx: 0,
+        })
+    }
+}

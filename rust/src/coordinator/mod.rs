@@ -1,30 +1,47 @@
-//! The global coordinator (paper Fig. 4): per slot it ① encodes queries
-//! and computes matching probabilities via the online identifier,
-//! routes them with the inter-node scheduler, ② lets nodes retrieve and
-//! ③ serve with their intra-node plans, then ④ feeds quality metrics back
-//! into the PPO policy — the full closed loop.
+//! The global coordinator (paper Fig. 4) and its public scheduling API.
 //!
-//! [`baselines`] hosts the alternative allocators (Random / Domain /
-//! Oracle / MAB) used across the paper's comparisons.
+//! Per slot the coordinator runs four phases, each a method you can call
+//! individually or together through [`Coordinator::run_slot`]:
+//!
+//! 1. [`encode`](Coordinator::encode) — embed the slot's queries;
+//! 2. [`route`](Coordinator::route) — the pluggable [`Allocator`] maps
+//!    queries to nodes (PPO identification + Algorithm-1 inter-node
+//!    scheduling, or any baseline/custom policy);
+//! 3. [`serve`](Coordinator::serve) — nodes retrieve and generate in
+//!    parallel under their intra-node plans;
+//! 4. [`feedback`](Coordinator::feedback) — outcomes flow back into the
+//!    allocator (PPO updates, bandit rewards, …).
+//!
+//! After each phase a structured [`SlotEvent`](observer::SlotEvent) is
+//! emitted to the optional [`SlotObserver`](observer::SlotObserver) —
+//! live metrics without scraping [`SlotReport`]s.
+//!
+//! Construction goes through [`CoordinatorBuilder`], whose stages
+//! (dataset → partition → nodes → capacity → allocator) are individually
+//! overridable. Routing policies implement the [`Allocator`] trait
+//! ([`allocator`]) and plug in through a string-keyed registry; the
+//! built-in baselines live in [`baselines`].
 
+pub mod allocator;
 pub mod baselines;
+mod builder;
+pub mod observer;
 
-use std::sync::Arc;
+pub use allocator::{Allocator, AllocatorRegistry, Assignment, FeedbackStats, SlotContext};
+pub use builder::CoordinatorBuilder;
 
-use crate::cluster::node::{EdgeNode, QueryOutcome};
-use crate::config::{AllocatorKind, DatasetKind, ExperimentConfig, IntraStrategy};
-use crate::corpus::partition::{gold_locations, partition_corpus, NodeCorpusSpec};
+use crate::cluster::node::{EdgeNode, NodeSlotReport, QueryOutcome};
+use crate::config::{ExperimentConfig, IntraStrategy};
 use crate::corpus::synth::SyntheticDataset;
-use crate::corpus::{build_dataset, domainqa_spec, ppc_spec};
 use crate::metrics::{Evaluator, QualityScores};
-use crate::policy::ppo::{Backend, OnlinePolicy, PpoConfig};
-use crate::router::capacity::{profile_capacity, CapacityModel};
-use crate::router::inter::inter_node_schedule;
-use crate::text::embed::{Embedder, EMBED_DIM};
+use crate::policy::ppo::Backend;
+use crate::router::capacity::CapacityModel;
+use crate::text::embed::Embedder;
 use crate::util::rng::Rng;
+use crate::util::timer::Timer;
 use crate::workload::trace::{domain_mix, sample_slot_queries};
 use crate::Result;
-use baselines::BaselineAllocator;
+use observer::{SlotEvent, SlotObserver};
 
 /// Aggregated result of one slot.
 #[derive(Clone, Debug, Default)]
@@ -41,8 +58,22 @@ pub struct SlotReport {
     pub size_mem_share: [f64; 3],
     /// All individual outcomes (for fine-grained analysis).
     pub outcomes: Vec<QueryOutcome>,
-    /// PPO update stats if an update ran this slot.
+    /// Allocator learning activity this slot.
+    pub feedback: FeedbackStats,
+    /// Parameter-update rounds this slot (alias of `feedback.updates`).
     pub ppo_updates: usize,
+}
+
+/// What the serve phase produced, before aggregation.
+pub struct ServedSlot {
+    /// One outcome per query, in slot order.
+    pub outcomes: Vec<QueryOutcome>,
+    /// Makespan across nodes (s).
+    pub latency_s: f64,
+    /// Queries per model-size class (small/mid/large).
+    pub size_queries: [usize; 3],
+    /// GPU memory per model-size class.
+    pub size_mem: [f64; 3],
 }
 
 /// The CoEdge-RAG coordinator.
@@ -55,98 +86,51 @@ pub struct Coordinator {
     pub evaluator: Evaluator,
     /// Gold-doc locations per QA id (Oracle + diagnostics).
     pub gold_locs: Vec<Vec<usize>>,
-    pub policy: Option<OnlinePolicy>,
-    pub baseline: Option<BaselineAllocator>,
+    allocator: Box<dyn Allocator>,
+    observers: Vec<Box<dyn SlotObserver>>,
     rng: Rng,
     slot_idx: usize,
 }
 
 impl Coordinator {
-    /// Build the full system from a config: dataset, partition, nodes,
-    /// capacity profiles, and the selected allocator.
+    /// Build with the config's allocator kind and an explicit backend.
+    #[deprecated(note = "use CoordinatorBuilder::new(cfg).backend(backend).build()")]
     pub fn build(cfg: ExperimentConfig, backend: Backend) -> Result<Coordinator> {
-        let spec = match cfg.dataset {
-            DatasetKind::DomainQa => domainqa_spec(cfg.qa_per_domain, cfg.docs_per_domain),
-            DatasetKind::Ppc => ppc_spec(cfg.qa_per_domain, cfg.docs_per_domain),
-        };
-        let ds = build_dataset(&spec, cfg.seed);
-        let embedder = Embedder::default();
-        let evaluator = Evaluator::default();
-        let nd = ds.num_domains();
+        CoordinatorBuilder::new(cfg).backend(backend).build()
+    }
 
-        // partition corpora (dual-distribution, paper §V-A)
-        let specs: Vec<NodeCorpusSpec> = cfg
-            .nodes
-            .iter()
-            .map(|n| NodeCorpusSpec::dual(n.corpus_docs, nd, &n.primary_domains, cfg.s_iid))
-            .collect();
-        let parts = partition_corpus(&ds, &specs, cfg.overlap, cfg.seed ^ 0x9A87);
-        let gold_locs = gold_locations(&ds, &parts);
+    /// The active allocator.
+    pub fn allocator(&self) -> &dyn Allocator {
+        self.allocator.as_ref()
+    }
 
-        // embed all documents once (shared cache)
-        let doc_embs: Arc<Vec<Vec<f32>>> = Arc::new(
-            ds.documents.iter().map(|d| embedder.embed(&d.text())).collect(),
-        );
+    /// Mutable access to the active allocator (swap-free tuning).
+    pub fn allocator_mut(&mut self) -> &mut dyn Allocator {
+        self.allocator.as_mut()
+    }
 
-        let mut nodes: Vec<EdgeNode> = cfg
-            .nodes
-            .iter()
-            .enumerate()
-            .map(|(i, ncfg)| {
-                EdgeNode::build(
-                    i,
-                    ncfg,
-                    &ds,
-                    parts[i].clone(),
-                    Arc::clone(&doc_embs),
-                    &evaluator,
-                    cfg.intra.clone(),
-                    cfg.top_k,
-                    cfg.seed ^ 0x0D0E ^ i as u64,
-                )
-            })
-            .collect();
+    /// Freeze allocator learning — measurement sweeps must vary only the
+    /// workload, not the policy's training progress.
+    pub fn freeze_learning(&mut self) {
+        self.allocator.freeze();
+    }
 
-        // capacity profiling (initialization phase, §IV-B)
-        let capacities: Vec<CapacityModel> = nodes
-            .iter()
-            .map(|n| profile_capacity(|q, l| n.dry_run_drop_rate(q, l), 0.01))
-            .collect();
+    /// Attach an additional slot observer (all attached observers receive
+    /// every event, in attachment order).
+    pub fn add_observer(&mut self, observer: Box<dyn SlotObserver>) {
+        self.observers.push(observer);
+    }
 
-        // allocator
-        let mut policy = None;
-        let mut baseline = None;
-        match cfg.allocator {
-            AllocatorKind::Ppo => {
-                let pcfg = PpoConfig {
-                    buffer_threshold: cfg.ppo_buffer,
-                    epochs: cfg.ppo_epochs,
-                    seed: cfg.seed ^ 0x9090,
-                    ..Default::default()
-                };
-                policy = Some(OnlinePolicy::new(cfg.num_nodes(), pcfg, backend));
-            }
-            kind => {
-                baseline = Some(BaselineAllocator::new(kind, &cfg, &gold_locs, cfg.seed ^ 0xBA5E));
-            }
+    /// Drop all attached observers and install `observer` alone.
+    pub fn set_observer(&mut self, observer: Box<dyn SlotObserver>) {
+        self.observers.clear();
+        self.observers.push(observer);
+    }
+
+    fn emit(&mut self, event: &SlotEvent) {
+        for obs in self.observers.iter_mut() {
+            obs.on_event(event);
         }
-        // nudge node rngs apart
-        for n in nodes.iter_mut() {
-            let _ = n.corpus_size();
-        }
-        Ok(Coordinator {
-            rng: Rng::new(cfg.seed ^ 0xC00D),
-            cfg,
-            ds,
-            nodes,
-            capacities,
-            embedder,
-            evaluator,
-            gold_locs,
-            policy,
-            baseline,
-            slot_idx: 0,
-        })
     }
 
     /// Sample one slot's queries per the configured skew pattern.
@@ -155,74 +139,73 @@ impl Coordinator {
         sample_slot_queries(&self.ds, &mix, count, &mut self.rng)
     }
 
-    /// Run one complete slot for the given QA ids.
-    pub fn run_slot(&mut self, qa_ids: &[usize]) -> Result<SlotReport> {
+    /// Phase ①: embed the slot's queries.
+    pub fn encode(&self, qa_ids: &[usize]) -> Vec<Vec<f32>> {
+        qa_ids
+            .iter()
+            .map(|&q| self.embedder.embed(&self.ds.qa_pairs[q].query))
+            .collect()
+    }
+
+    /// Effective per-node capacities C_n(L) at the current SLO.
+    pub fn slot_capacities(&self) -> Vec<f64> {
+        let slo = self.cfg.slo_s;
+        self.capacities.iter().map(|c| c.eval(slo)).collect()
+    }
+
+    /// Phase ②: identification + inter-node routing via the allocator.
+    pub fn route(
+        &mut self,
+        slot: usize,
+        qa_ids: &[usize],
+        embs: &[Vec<f32>],
+        caps: &[f64],
+    ) -> Result<Assignment> {
+        let ctx = SlotContext {
+            slot_idx: slot,
+            qa_ids,
+            embs,
+            ds: &self.ds,
+            capacities: caps,
+            slo_s: self.cfg.slo_s,
+            inter_enabled: self.cfg.inter_enabled,
+        };
+        let assignment = self.allocator.assign(&ctx)?;
+        anyhow::ensure!(
+            assignment.node_of.len() == qa_ids.len(),
+            "allocator {:?} returned {} assignments for {} queries",
+            self.allocator.name(),
+            assignment.node_of.len(),
+            qa_ids.len()
+        );
+        if let Some(&bad) = assignment.node_of.iter().find(|&&a| a >= self.nodes.len()) {
+            anyhow::bail!(
+                "allocator {:?} routed to node {bad} (cluster has {})",
+                self.allocator.name(),
+                self.nodes.len()
+            );
+        }
+        Ok(assignment)
+    }
+
+    /// Phase ③: serve at each node — nodes are independent, so they serve
+    /// in parallel on scoped threads (§Perf: ~2.5× on the 4-node slot).
+    pub fn serve(
+        &mut self,
+        qa_ids: &[usize],
+        embs: &[Vec<f32>],
+        assignment: &Assignment,
+    ) -> ServedSlot {
         let slo = self.cfg.slo_s;
         let n_nodes = self.nodes.len();
         let b = qa_ids.len();
-        self.slot_idx += 1;
-
-        // ① encode queries
-        let embs: Vec<Vec<f32>> = qa_ids
-            .iter()
-            .map(|&q| self.embedder.embed(&self.ds.qa_pairs[q].query))
-            .collect();
-
-        // identification + inter-node routing
-        let caps: Vec<f64> = self.capacities.iter().map(|c| c.eval(slo)).collect();
-        let (assignment, old_logps, probs_flat) = match (&mut self.policy, &mut self.baseline) {
-            (Some(policy), _) => {
-                let mut flat = Vec::with_capacity(b * EMBED_DIM);
-                for e in &embs {
-                    flat.extend_from_slice(e);
-                }
-                let probs = policy.probs(&flat, b)?;
-                if self.cfg.inter_enabled {
-                    let res = inter_node_schedule(&probs, n_nodes, &caps, &mut self.rng);
-                    // behavior logp for PPO: probability of the final node
-                    let logps: Vec<f32> = res
-                        .assignment
-                        .iter()
-                        .enumerate()
-                        .map(|(i, &a)| probs[i * n_nodes + a].max(1e-12).ln())
-                        .collect();
-                    (res.assignment, logps, probs)
-                } else {
-                    // ablation: pure probability sampling, no capacity check
-                    let mut assignment = Vec::with_capacity(b);
-                    let mut logps = Vec::with_capacity(b);
-                    for i in 0..b {
-                        let row = &probs[i * n_nodes..(i + 1) * n_nodes];
-                        let (a, lp) = policy.sample_action(row);
-                        assignment.push(a);
-                        logps.push(lp);
-                    }
-                    (assignment, logps, probs)
-                }
-            }
-            (None, Some(base)) => {
-                let assignment = base.assign(
-                    &self.ds,
-                    qa_ids,
-                    &embs,
-                    &caps,
-                    self.cfg.inter_enabled,
-                    &mut self.rng,
-                );
-                (assignment, Vec::new(), Vec::new())
-            }
-            _ => unreachable!("coordinator without allocator"),
-        };
-        let _ = probs_flat;
 
         // dispatch per node (preserving query order within node)
         let mut per_node: Vec<Vec<usize>> = vec![Vec::new(); n_nodes]; // indices into qa_ids
-        for (i, &a) in assignment.iter().enumerate() {
+        for (i, &a) in assignment.node_of.iter().enumerate() {
             per_node[a].push(i);
         }
 
-        // ②③ serve at each node — nodes are independent, so they serve
-        // in parallel on scoped threads (§Perf: ~2.5× on the 4-node slot)
         let inputs: Vec<(Vec<usize>, Vec<Vec<f32>>)> = per_node
             .iter()
             .map(|idxs| {
@@ -232,7 +215,7 @@ impl Coordinator {
                 )
             })
             .collect();
-        let node_reports: Vec<crate::cluster::node::NodeSlotReport> = {
+        let node_reports: Vec<NodeSlotReport> = {
             let ds = &self.ds;
             let ev = &self.evaluator;
             let em = &self.embedder;
@@ -242,14 +225,13 @@ impl Coordinator {
                     .iter_mut()
                     .zip(&inputs)
                     .map(|(node, (qids, nembs))| {
-                        scope.spawn(move || {
-                            node.serve_slot(ds, ev, em, Some(nembs), qids, slo)
-                        })
+                        scope.spawn(move || node.serve_slot(ds, ev, em, Some(nembs), qids, slo))
                     })
                     .collect();
                 handles.into_iter().map(|h| h.join().expect("node thread")).collect()
             })
         };
+
         let mut outcomes_by_pos: Vec<Option<QueryOutcome>> = vec![None; b];
         let mut latency_s = 0.0f64;
         let mut size_queries = [0usize; 3];
@@ -268,34 +250,73 @@ impl Coordinator {
         }
         let outcomes: Vec<QueryOutcome> =
             outcomes_by_pos.into_iter().map(|o| o.expect("outcome")).collect();
+        ServedSlot { outcomes, latency_s, size_queries, size_mem }
+    }
 
-        // ④ feedback
-        let mut ppo_updates = 0;
-        if let Some(policy) = &mut self.policy {
-            for (i, out) in outcomes.iter().enumerate() {
-                let fb = out.feedback;
-                if policy
-                    .record(&embs[i], assignment[i], old_logps[i], fb)?
-                    .is_some()
-                {
-                    ppo_updates += 1;
-                }
-            }
-        }
-        if let Some(base) = &mut self.baseline {
-            base.observe(&embs, &assignment, &outcomes);
-        }
+    /// Phase ④: feed outcomes back into the allocator.
+    pub fn feedback(
+        &mut self,
+        slot: usize,
+        qa_ids: &[usize],
+        embs: &[Vec<f32>],
+        caps: &[f64],
+        assignment: &Assignment,
+        outcomes: &[QueryOutcome],
+    ) -> Result<FeedbackStats> {
+        let ctx = SlotContext {
+            slot_idx: slot,
+            qa_ids,
+            embs,
+            ds: &self.ds,
+            capacities: caps,
+            slo_s: self.cfg.slo_s,
+            inter_enabled: self.cfg.inter_enabled,
+        };
+        self.allocator.observe(&ctx, assignment, outcomes)
+    }
+
+    /// Run one complete slot for the given QA ids.
+    pub fn run_slot(&mut self, qa_ids: &[usize]) -> Result<SlotReport> {
+        let slot = self.slot_idx;
+        self.slot_idx += 1;
+        let b = qa_ids.len();
+        let n_nodes = self.nodes.len();
+
+        let t = Timer::start();
+        let embs = self.encode(qa_ids);
+        self.emit(&SlotEvent::Encoded { slot, queries: b, elapsed_s: t.secs() });
+
+        let t = Timer::start();
+        let caps = self.slot_capacities();
+        let assignment = self.route(slot, qa_ids, &embs, &caps)?;
+        self.emit(&SlotEvent::Routed { slot, assignment: &assignment, elapsed_s: t.secs() });
+
+        let t = Timer::start();
+        let served = self.serve(qa_ids, &embs, &assignment);
+        self.emit(&SlotEvent::Served {
+            slot,
+            outcomes: &served.outcomes,
+            makespan_s: served.latency_s,
+            elapsed_s: t.secs(),
+        });
+
+        let t = Timer::start();
+        let stats = self.feedback(slot, qa_ids, &embs, &caps, &assignment, &served.outcomes)?;
+        self.emit(&SlotEvent::Feedback { slot, stats, elapsed_s: t.secs() });
 
         // aggregate
-        let drop_rate =
-            outcomes.iter().filter(|o| o.dropped).count() as f64 / b.max(1) as f64;
+        let ServedSlot { outcomes, latency_s, size_queries, size_mem } = served;
+        let drop_rate = outcomes.iter().filter(|o| o.dropped).count() as f64 / b.max(1) as f64;
         let all_scores: Vec<QualityScores> = outcomes.iter().map(|o| o.scores).collect();
         let total_q: usize = size_queries.iter().sum();
         let total_m: f64 = size_mem.iter().sum();
-        let proportions = (0..n_nodes)
-            .map(|nid| per_node[nid].len() as f64 / b.max(1) as f64)
-            .collect();
-        Ok(SlotReport {
+        let mut node_counts = vec![0usize; n_nodes];
+        for &a in &assignment.node_of {
+            node_counts[a] += 1;
+        }
+        let proportions =
+            node_counts.iter().map(|&q| q as f64 / b.max(1) as f64).collect();
+        let report = SlotReport {
             queries: b,
             mean_scores: QualityScores::mean(&all_scores),
             drop_rate,
@@ -308,8 +329,11 @@ impl Coordinator {
                 if total_m == 0.0 { 0.0 } else { size_mem[i] / total_m }
             }),
             outcomes,
-            ppo_updates,
-        })
+            feedback: stats,
+            ppo_updates: stats.updates,
+        };
+        self.emit(&SlotEvent::SlotEnd { slot, report: &report });
+        Ok(report)
     }
 
     /// Run `slots` slots of `queries_per_slot`, returning all reports.
@@ -324,12 +348,8 @@ impl Coordinator {
 
     /// Mean scores over the last `k` reports (post-warmup evaluation).
     pub fn tail_mean(reports: &[SlotReport], k: usize) -> QualityScores {
-        let tail: Vec<QualityScores> = reports
-            .iter()
-            .rev()
-            .take(k)
-            .map(|r| r.mean_scores)
-            .collect();
+        let tail: Vec<QualityScores> =
+            reports.iter().rev().take(k).map(|r| r.mean_scores).collect();
         QualityScores::mean(&tail)
     }
 }

@@ -1,0 +1,46 @@
+//! Structured per-slot events (paper Fig. 4 phases) for live metrics.
+//!
+//! The coordinator emits one event after each of the four `run_slot`
+//! phases — encode, route, serve, feedback — plus a closing `SlotEnd`
+//! carrying the aggregated [`SlotReport`]. Attach a [`SlotObserver`] via
+//! [`CoordinatorBuilder::observer`](crate::coordinator::CoordinatorBuilder::observer)
+//! (or [`Coordinator::set_observer`](crate::coordinator::Coordinator::set_observer))
+//! to stream metrics instead of scraping reports after the fact; the
+//! bench harness's `PhaseBreakdown` and the serving front-end both do.
+
+use crate::cluster::node::QueryOutcome;
+use crate::coordinator::allocator::{Assignment, FeedbackStats};
+use crate::coordinator::SlotReport;
+
+/// One coordinator lifecycle event. All payloads borrow from the running
+/// slot; copy out whatever must outlive the callback.
+#[derive(Debug)]
+pub enum SlotEvent<'a> {
+    /// Phase ① done: queries embedded.
+    Encoded { slot: usize, queries: usize, elapsed_s: f64 },
+    /// Identification + inter-node routing done. `assignment.probs`
+    /// carries the matching probabilities `s_i^t` when the allocator
+    /// computes them.
+    Routed { slot: usize, assignment: &'a Assignment, elapsed_s: f64 },
+    /// Phases ②③ done: retrieval + generation at every node.
+    Served { slot: usize, outcomes: &'a [QueryOutcome], makespan_s: f64, elapsed_s: f64 },
+    /// Phase ④ done: outcomes fed back into the allocator.
+    Feedback { slot: usize, stats: FeedbackStats, elapsed_s: f64 },
+    /// Slot fully aggregated.
+    SlotEnd { slot: usize, report: &'a SlotReport },
+}
+
+/// Receiver for [`SlotEvent`]s. Runs synchronously on the coordinator's
+/// thread — keep callbacks cheap (counters, channels).
+pub trait SlotObserver: Send {
+    fn on_event(&mut self, event: &SlotEvent);
+}
+
+/// Forward events to a closure (the smallest possible observer).
+pub struct FnObserver<F: FnMut(&SlotEvent) + Send>(pub F);
+
+impl<F: FnMut(&SlotEvent) + Send> SlotObserver for FnObserver<F> {
+    fn on_event(&mut self, event: &SlotEvent) {
+        (self.0)(event)
+    }
+}

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use coedge_rag::bench_harness::Table;
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
-use coedge_rag::coordinator::Coordinator;
+use coedge_rag::coordinator::{AllocatorRegistry, CoordinatorBuilder};
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
 use coedge_rag::server::{serve, ServerConfig};
@@ -55,13 +55,11 @@ fn load_config(flags: &std::collections::HashMap<String, String>) -> ExperimentC
         cfg.queries_per_slot = v.parse().expect("--queries");
     }
     if let Some(v) = flags.get("allocator") {
-        cfg.allocator = match v.as_str() {
-            "random" => AllocatorKind::Random,
-            "domain" => AllocatorKind::Domain,
-            "oracle" => AllocatorKind::Oracle,
-            "mab" => AllocatorKind::Mab,
-            _ => AllocatorKind::Ppo,
-        };
+        // exhaustive over AllocatorKind; unknown kinds list the registry keys
+        cfg.allocator = v.parse::<AllocatorKind>().unwrap_or_else(|e| {
+            eprintln!("[coedge] --allocator: {e}");
+            std::process::exit(2);
+        });
     }
     if let Some(v) = flags.get("seed") {
         cfg.seed = v.parse().expect("--seed");
@@ -89,7 +87,8 @@ fn cmd_run(flags: std::collections::HashMap<String, String>) {
         "[coedge] running {slots} slots × {} queries, SLO {}s, allocator {:?}",
         cfg.queries_per_slot, cfg.slo_s, cfg.allocator
     );
-    let mut co = Coordinator::build(cfg, backend()).expect("build coordinator");
+    let mut co =
+        CoordinatorBuilder::new(cfg).backend(backend()).build().expect("build coordinator");
     let mut table = Table::new(&[
         "slot", "queries", "R-L", "BERT", "drop%", "latency(s)", "p_j", "ppo_upd",
     ]);
@@ -112,7 +111,7 @@ fn cmd_run(flags: std::collections::HashMap<String, String>) {
 
 fn cmd_profile(flags: std::collections::HashMap<String, String>) {
     let cfg = load_config(&flags);
-    let co = Coordinator::build(cfg, Backend::Reference).expect("build");
+    let co = CoordinatorBuilder::new(cfg).backend(Backend::Reference).build().expect("build");
     let mut t = Table::new(&["node", "gpus", "corpus", "C(5s)", "C(15s)", "C(60s)", "k", "b"]);
     for (n, cap) in co.nodes.iter().zip(&co.capacities) {
         t.row(vec![
@@ -132,7 +131,8 @@ fn cmd_profile(flags: std::collections::HashMap<String, String>) {
 fn cmd_serve(flags: std::collections::HashMap<String, String>) {
     let cfg = load_config(&flags);
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7717".into());
-    let co = Coordinator::build(cfg, backend()).expect("build coordinator");
+    let co =
+        CoordinatorBuilder::new(cfg).backend(backend()).build().expect("build coordinator");
     let shutdown = Arc::new(AtomicBool::new(false));
     eprintln!("[coedge] serving on {addr} (line-JSON; send {{\"id\":1,\"qa_id\":0}})");
     serve(co, ServerConfig { addr, ..Default::default() }, shutdown).expect("serve");
@@ -173,7 +173,10 @@ fn main() {
         _ => {
             println!("coedge — CoEdge-RAG launcher");
             println!("usage: coedge <run|serve|profile|info> [--config FILE] [--slots N]");
-            println!("              [--queries N] [--slo S] [--allocator ppo|random|domain|oracle|mab]");
+            println!(
+                "              [--queries N] [--slo S] [--allocator {}]",
+                AllocatorRegistry::with_builtins().kinds().join("|")
+            );
         }
     }
 }

@@ -21,7 +21,9 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::observer::{SlotEvent, SlotObserver};
 use crate::coordinator::Coordinator;
+use crate::log_info;
 use crate::util::json::Json;
 use crate::Result;
 
@@ -47,6 +49,65 @@ struct Pending {
     reply: Sender<String>,
 }
 
+#[derive(Clone, Copy, Debug, Default)]
+struct MetricsInner {
+    slots: usize,
+    queries: usize,
+    dropped: usize,
+    updates: usize,
+    makespan_s: f64,
+}
+
+/// Live serving metrics, fed by coordinator [`SlotEvent`]s as batches are
+/// dispatched (no post-hoc report scraping). One clone lives inside the
+/// coordinator; the server keeps another to read totals.
+#[derive(Clone, Default)]
+pub struct ServerMetrics {
+    inner: Arc<std::sync::Mutex<MetricsInner>>,
+}
+
+impl ServerMetrics {
+    /// (slots, queries, dropped) served so far.
+    pub fn totals(&self) -> (usize, usize, usize) {
+        let m = self.inner.lock().unwrap();
+        (m.slots, m.queries, m.dropped)
+    }
+
+    /// One-line summary for shutdown logging.
+    fn summary(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        format!(
+            "served {} queries in {} batches ({} dropped, {} policy updates, peak makespan {:.2}s)",
+            m.queries, m.slots, m.dropped, m.updates, m.makespan_s
+        )
+    }
+}
+
+impl SlotObserver for ServerMetrics {
+    fn on_event(&mut self, event: &SlotEvent) {
+        match event {
+            SlotEvent::Feedback { stats, .. } => {
+                self.inner.lock().unwrap().updates += stats.updates;
+            }
+            SlotEvent::SlotEnd { report, .. } => {
+                let mut m = self.inner.lock().unwrap();
+                m.slots += 1;
+                m.queries += report.queries;
+                m.dropped += report.outcomes.iter().filter(|o| o.dropped).count();
+                m.makespan_s = m.makespan_s.max(report.latency_s);
+                log_info!(
+                    "batch {}: {} queries, drop {:.1}%, makespan {:.2}s",
+                    m.slots,
+                    report.queries,
+                    report.drop_rate * 100.0,
+                    report.latency_s
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
 /// Run the server until `shutdown` is set. Returns the bound address.
 pub fn serve(
     mut coordinator: Coordinator,
@@ -57,6 +118,11 @@ pub fn serve(
     let addr = listener.local_addr()?;
     listener.set_nonblocking(true)?;
     let (req_tx, req_rx): (Sender<Pending>, Receiver<Pending>) = channel();
+
+    // live metrics through the coordinator's observer hook (chained after
+    // any observers the caller attached)
+    let metrics = ServerMetrics::default();
+    coordinator.add_observer(Box::new(metrics.clone()));
 
     // batcher thread: owns the coordinator
     let batch_shutdown = Arc::clone(&shutdown);
@@ -150,6 +216,7 @@ pub fn serve(
         let _ = h.join();
     }
     let _ = batcher.join();
+    log_info!("{}", metrics.summary());
     Ok(addr)
 }
 
@@ -228,7 +295,7 @@ impl Client {
 mod tests {
     use super::*;
     use crate::config::{AllocatorKind, DatasetKind, ExperimentConfig};
-    use crate::policy::ppo::Backend;
+    use crate::coordinator::CoordinatorBuilder;
 
     #[test]
     fn server_roundtrip() {
@@ -239,7 +306,7 @@ mod tests {
         for n in cfg.nodes.iter_mut() {
             n.corpus_docs = 80;
         }
-        let co = Coordinator::build(cfg, Backend::Reference).unwrap();
+        let co = CoordinatorBuilder::new(cfg).build().unwrap();
         let shutdown = Arc::new(AtomicBool::new(false));
         let scfg = ServerConfig { addr: "127.0.0.1:0".into(), batch_window_ms: 10, max_batch: 8 };
 

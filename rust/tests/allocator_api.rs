@@ -1,0 +1,243 @@
+//! Contract tests for the unified `Allocator` trait, the registry, and
+//! the `CoordinatorBuilder` pipeline: call order, stage injection,
+//! inter-node edge cases, and custom-allocator registration.
+
+use std::sync::{Arc, Mutex};
+
+use coedge_rag::cluster::node::QueryOutcome;
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+use coedge_rag::coordinator::allocator::{
+    Allocator, Assignment, FeedbackStats, SlotContext,
+};
+use coedge_rag::coordinator::observer::{FnObserver, SlotEvent};
+use coedge_rag::coordinator::CoordinatorBuilder;
+use coedge_rag::router::capacity::CapacityModel;
+
+/// Small cluster config; pair with `stub_caps` to skip capacity profiling.
+fn tiny_cfg(allocator: AllocatorKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.qa_per_domain = 10;
+    cfg.docs_per_domain = 15;
+    cfg.queries_per_slot = 24;
+    cfg.allocator = allocator;
+    for n in cfg.nodes.iter_mut() {
+        n.corpus_docs = 20;
+    }
+    cfg
+}
+
+fn stub_caps(n: usize) -> Vec<CapacityModel> {
+    vec![CapacityModel { k: 50.0, b: 0.0 }; n]
+}
+
+/// Records every trait call; routes round-robin.
+struct MockAllocator {
+    calls: Arc<Mutex<Vec<String>>>,
+}
+
+impl Allocator for MockAllocator {
+    fn name(&self) -> &str {
+        "mock"
+    }
+
+    fn assign(&mut self, ctx: &SlotContext) -> coedge_rag::Result<Assignment> {
+        assert_eq!(ctx.embs.len(), ctx.batch(), "one embedding per query");
+        self.calls.lock().unwrap().push(format!("assign:{}", ctx.batch()));
+        let n = ctx.n_nodes();
+        Ok(Assignment::from_nodes((0..ctx.batch()).map(|i| i % n).collect()))
+    }
+
+    fn observe(
+        &mut self,
+        ctx: &SlotContext,
+        assignment: &Assignment,
+        outcomes: &[QueryOutcome],
+    ) -> coedge_rag::Result<FeedbackStats> {
+        assert_eq!(assignment.node_of.len(), outcomes.len());
+        assert_eq!(ctx.batch(), outcomes.len());
+        self.calls.lock().unwrap().push(format!("observe:{}", outcomes.len()));
+        Ok(FeedbackStats { observed: outcomes.len(), updates: 0 })
+    }
+}
+
+#[test]
+fn mock_allocator_sees_assign_then_observe_once_per_slot() {
+    let calls: Arc<Mutex<Vec<String>>> = Arc::default();
+    let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Random))
+        .allocator(Box::new(MockAllocator { calls: Arc::clone(&calls) }))
+        .capacities(stub_caps(4))
+        .build()
+        .unwrap();
+    for _ in 0..3 {
+        let qids = co.sample_queries(8);
+        let r = co.run_slot(&qids).unwrap();
+        assert_eq!(r.queries, 8);
+        assert_eq!(r.feedback.observed, 8);
+    }
+    let log = calls.lock().unwrap().clone();
+    assert_eq!(
+        log,
+        vec!["assign:8", "observe:8", "assign:8", "observe:8", "assign:8", "observe:8"],
+        "exactly one assign then one observe per slot"
+    );
+    assert_eq!(co.allocator().name(), "mock");
+}
+
+#[test]
+fn slot_events_fire_in_phase_order_with_probs_for_ppo() {
+    let seen: Arc<Mutex<Vec<String>>> = Arc::default();
+    let handle = Arc::clone(&seen);
+    let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Ppo))
+        .capacities(stub_caps(4))
+        .observer(Box::new(FnObserver(move |ev: &SlotEvent| {
+            let tag = match ev {
+                SlotEvent::Encoded { .. } => "encoded".into(),
+                SlotEvent::Routed { assignment, .. } => {
+                    format!("routed(probs={})", !assignment.probs.is_empty())
+                }
+                SlotEvent::Served { .. } => "served".into(),
+                SlotEvent::Feedback { .. } => "feedback".into(),
+                SlotEvent::SlotEnd { .. } => "end".into(),
+            };
+            handle.lock().unwrap().push(tag);
+        })))
+        .build()
+        .unwrap();
+    let qids = co.sample_queries(12);
+    co.run_slot(&qids).unwrap();
+    assert_eq!(
+        seen.lock().unwrap().clone(),
+        vec!["encoded", "routed(probs=true)", "served", "feedback", "end"],
+        "the four phases + SlotEnd, with s_i^t surfaced to observers"
+    );
+}
+
+#[test]
+fn all_capacities_zero_still_serves_every_query() {
+    let mut cfg = tiny_cfg(AllocatorKind::Random);
+    cfg.slo_s = 30.0;
+    let mut co = CoordinatorBuilder::new(cfg)
+        .capacities(vec![CapacityModel { k: 0.0, b: 0.0 }; 4])
+        .build()
+        .unwrap();
+    let qids = co.sample_queries(40);
+    let r = co.run_slot(&qids).unwrap();
+    assert_eq!(r.outcomes.len(), 40);
+    let psum: f64 = r.proportions.iter().sum();
+    assert!((psum - 1.0).abs() < 1e-9, "{:?}", r.proportions);
+}
+
+#[test]
+fn single_node_cluster_takes_the_whole_slot() {
+    let mut cfg = tiny_cfg(AllocatorKind::Random);
+    cfg.nodes.truncate(1);
+    cfg.nodes[0].primary_domains = vec![0, 1, 2, 3, 4, 5];
+    let mut co =
+        CoordinatorBuilder::new(cfg).capacities(stub_caps(1)).build().unwrap();
+    let qids = co.sample_queries(20);
+    let r = co.run_slot(&qids).unwrap();
+    assert_eq!(r.outcomes.len(), 20);
+    assert!(r.outcomes.iter().all(|o| o.node == 0));
+    assert_eq!(r.proportions, vec![1.0]);
+}
+
+#[test]
+fn inter_disabled_ppo_assigns_by_pure_sampling() {
+    let mut cfg = tiny_cfg(AllocatorKind::Ppo);
+    cfg.inter_enabled = false;
+    let mut co =
+        CoordinatorBuilder::new(cfg).capacities(stub_caps(4)).build().unwrap();
+    let qids = co.sample_queries(30);
+    let r = co.run_slot(&qids).unwrap();
+    assert_eq!(r.outcomes.len(), 30);
+    assert!(r.outcomes.iter().all(|o| o.node < 4));
+    assert_eq!(r.feedback.observed, 30);
+}
+
+#[test]
+fn freeze_learning_stops_observation_for_learning_allocators() {
+    for kind in [AllocatorKind::Ppo, AllocatorKind::Mab] {
+        let mut co = CoordinatorBuilder::new(tiny_cfg(kind))
+            .capacities(stub_caps(4))
+            .build()
+            .unwrap();
+        let qids = co.sample_queries(10);
+        let r = co.run_slot(&qids).unwrap();
+        assert_eq!(r.feedback.observed, 10, "{kind}: learns while unfrozen");
+        co.freeze_learning();
+        let qids = co.sample_queries(10);
+        let r = co.run_slot(&qids).unwrap();
+        assert_eq!(r.feedback.observed, 0, "{kind}: frozen must not learn");
+        assert_eq!(r.feedback.updates, 0);
+    }
+}
+
+#[test]
+fn custom_allocator_registers_without_touching_the_coordinator() {
+    struct AlwaysZero;
+    impl Allocator for AlwaysZero {
+        fn name(&self) -> &str {
+            "always-zero"
+        }
+        fn assign(&mut self, ctx: &SlotContext) -> coedge_rag::Result<Assignment> {
+            Ok(Assignment::all_to(ctx.batch(), 0))
+        }
+    }
+    let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Random))
+        .register_allocator("always-zero", |_| Ok(Box::new(AlwaysZero)))
+        .allocator_kind("always-zero")
+        .capacities(stub_caps(4))
+        .build()
+        .unwrap();
+    assert_eq!(co.allocator().name(), "always-zero");
+    let qids = co.sample_queries(10);
+    let r = co.run_slot(&qids).unwrap();
+    assert!(r.outcomes.iter().all(|o| o.node == 0));
+}
+
+#[test]
+fn unknown_allocator_kind_error_lists_valid_kinds() {
+    let err = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Random))
+        .allocator_kind("nope")
+        .capacities(stub_caps(4))
+        .build()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("valid kinds"), "{err}");
+    for k in AllocatorKind::ALL {
+        assert!(err.contains(k.as_str()), "{err} should list {k}");
+    }
+}
+
+#[test]
+fn misbehaving_allocator_is_rejected_not_panicking() {
+    struct OutOfRange;
+    impl Allocator for OutOfRange {
+        fn name(&self) -> &str {
+            "out-of-range"
+        }
+        fn assign(&mut self, ctx: &SlotContext) -> coedge_rag::Result<Assignment> {
+            Ok(Assignment::all_to(ctx.batch(), 99))
+        }
+    }
+    let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Random))
+        .allocator(Box::new(OutOfRange))
+        .capacities(stub_caps(4))
+        .build()
+        .unwrap();
+    let qids = co.sample_queries(5);
+    let err = co.run_slot(&qids).unwrap_err().to_string();
+    assert!(err.contains("out-of-range"), "{err}");
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_build_shim_still_works() {
+    use coedge_rag::coordinator::Coordinator;
+    use coedge_rag::policy::ppo::Backend;
+    let mut co =
+        Coordinator::build(tiny_cfg(AllocatorKind::Oracle), Backend::Reference).unwrap();
+    let qids = co.sample_queries(10);
+    assert_eq!(co.run_slot(&qids).unwrap().outcomes.len(), 10);
+}

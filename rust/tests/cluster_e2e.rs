@@ -3,8 +3,7 @@
 //! any environment; the PJRT path is covered by runtime_bridge.rs.
 
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
-use coedge_rag::coordinator::Coordinator;
-use coedge_rag::policy::ppo::Backend;
+use coedge_rag::coordinator::{Coordinator, CoordinatorBuilder};
 
 fn small_cfg(allocator: AllocatorKind) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
@@ -22,7 +21,7 @@ fn small_cfg(allocator: AllocatorKind) -> ExperimentConfig {
 
 #[test]
 fn coordinator_runs_and_conserves_queries() {
-    let mut co = Coordinator::build(small_cfg(AllocatorKind::Ppo), Backend::Reference).unwrap();
+    let mut co = CoordinatorBuilder::new(small_cfg(AllocatorKind::Ppo)).build().unwrap();
     let reports = co.run(3).unwrap();
     assert_eq!(reports.len(), 3);
     for r in &reports {
@@ -40,9 +39,9 @@ fn coordinator_runs_and_conserves_queries() {
 #[test]
 fn oracle_beats_random_quality() {
     let mut co_o =
-        Coordinator::build(small_cfg(AllocatorKind::Oracle), Backend::Reference).unwrap();
+        CoordinatorBuilder::new(small_cfg(AllocatorKind::Oracle)).build().unwrap();
     let mut co_r =
-        Coordinator::build(small_cfg(AllocatorKind::Random), Backend::Reference).unwrap();
+        CoordinatorBuilder::new(small_cfg(AllocatorKind::Random)).build().unwrap();
     let ro = co_o.run(3).unwrap();
     let rr = co_r.run(3).unwrap();
     let qo = Coordinator::tail_mean(&ro, 3);
@@ -61,7 +60,7 @@ fn ppo_improves_over_time_and_beats_random() {
     let mut cfg = small_cfg(AllocatorKind::Ppo);
     cfg.slots = 14;
     cfg.ppo_buffer = 128;
-    let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+    let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
     let reports = co.run(14).unwrap();
     let early: f64 = reports[..3].iter().map(|r| r.mean_scores.rouge_l).sum::<f64>() / 3.0;
     let late: f64 =
@@ -72,7 +71,7 @@ fn ppo_improves_over_time_and_beats_random() {
     );
     // against a fresh random allocator over the same horizon
     let mut co_r =
-        Coordinator::build(small_cfg(AllocatorKind::Random), Backend::Reference).unwrap();
+        CoordinatorBuilder::new(small_cfg(AllocatorKind::Random)).build().unwrap();
     let rr = co_r.run(6).unwrap();
     let qr = Coordinator::tail_mean(&rr, 3).rouge_l;
     assert!(late > qr, "ppo late {late:.3} vs random {qr:.3}");
@@ -82,7 +81,7 @@ fn ppo_improves_over_time_and_beats_random() {
 fn tight_slo_increases_drops() {
     let mut cfg = small_cfg(AllocatorKind::Oracle);
     cfg.queries_per_slot = 600;
-    let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+    let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
     co.set_slo(20.0);
     let relaxed = co.run(2).unwrap();
     co.set_slo(1.0);

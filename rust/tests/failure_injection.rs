@@ -2,7 +2,7 @@
 //! degrade gracefully, never panic, and account every query.
 
 use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IntraStrategy};
-use coedge_rag::coordinator::Coordinator;
+use coedge_rag::coordinator::CoordinatorBuilder;
 use coedge_rag::llmsim::model::ModelSize;
 use coedge_rag::policy::ppo::Backend;
 
@@ -20,7 +20,7 @@ fn tiny_cfg(allocator: AllocatorKind) -> ExperimentConfig {
 
 #[test]
 fn impossible_slo_drops_everything_gracefully() {
-    let mut co = Coordinator::build(tiny_cfg(AllocatorKind::Oracle), Backend::Reference).unwrap();
+    let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Oracle)).build().unwrap();
     co.set_slo(0.001); // below even the vector-search time
     let qids = co.sample_queries(100);
     let r = co.run_slot(&qids).unwrap();
@@ -32,7 +32,7 @@ fn impossible_slo_drops_everything_gracefully() {
 
 #[test]
 fn empty_slot_is_fine() {
-    let mut co = Coordinator::build(tiny_cfg(AllocatorKind::Ppo), Backend::Reference).unwrap();
+    let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Ppo)).build().unwrap();
     let r = co.run_slot(&[]).unwrap();
     assert_eq!(r.queries, 0);
     assert_eq!(r.outcomes.len(), 0);
@@ -43,7 +43,7 @@ fn empty_slot_is_fine() {
 fn node_with_empty_corpus_still_serves() {
     let mut cfg = tiny_cfg(AllocatorKind::Random);
     cfg.nodes[0].corpus_docs = 0; // data-less node: retrieval returns nothing
-    let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+    let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
     let qids = co.sample_queries(120);
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.outcomes.len(), 120);
@@ -62,7 +62,7 @@ fn pool_without_small_models_survives_tight_slo() {
         n.pool = vec![ModelSize::Large];
     }
     cfg.slo_s = 3.0;
-    let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+    let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
     let qids = co.sample_queries(200);
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.outcomes.len(), 200);
@@ -76,7 +76,7 @@ fn fixed_strategy_referencing_missing_size_degrades() {
         n.pool = vec![ModelSize::Small]; // pool lacks Mid
     }
     cfg.intra = IntraStrategy::mid_param(2); // asks for Mid everywhere
-    let mut co = Coordinator::build(cfg, Backend::Reference).unwrap();
+    let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
     let qids = co.sample_queries(60);
     let r = co.run_slot(&qids).unwrap();
     // nothing deployable -> every query dropped, no panic
@@ -102,7 +102,7 @@ fn server_survives_malformed_requests() {
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::Arc;
 
-    let co = Coordinator::build(tiny_cfg(AllocatorKind::Oracle), Backend::Reference).unwrap();
+    let co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Oracle)).build().unwrap();
     let shutdown = Arc::new(AtomicBool::new(false));
     let sd = Arc::clone(&shutdown);
     let (tx, rx) = std::sync::mpsc::channel();
@@ -152,13 +152,13 @@ fn server_survives_malformed_requests() {
 fn coordinator_deterministic_given_seed() {
     let r1 = {
         let mut co =
-            Coordinator::build(tiny_cfg(AllocatorKind::Ppo), Backend::Reference).unwrap();
+            CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Ppo)).build().unwrap();
         let qids = co.sample_queries(100);
         co.run_slot(&qids).unwrap().mean_scores
     };
     let r2 = {
         let mut co =
-            Coordinator::build(tiny_cfg(AllocatorKind::Ppo), Backend::Reference).unwrap();
+            CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Ppo)).build().unwrap();
         let qids = co.sample_queries(100);
         co.run_slot(&qids).unwrap().mean_scores
     };
