@@ -13,7 +13,7 @@ use coedge_rag::policy::params::{PolicyParams, EMBED_DIM};
 use coedge_rag::runtime::{PolicyRuntime, UpdateBatch};
 use coedge_rag::text::embed::{l2_normalize, Embedder};
 use coedge_rag::util::rng::Rng;
-use coedge_rag::vecdb::{FlatIndex, IvfIndex, VectorIndex};
+use coedge_rag::vecdb::{FlatIndex, HnswIndex, IvfIndex, ShardedIndex, VectorIndex};
 
 fn main() {
     let mut rng = Rng::new(1);
@@ -29,34 +29,63 @@ fn main() {
     });
     println!("{}", r.throughput_line(256.0));
 
-    // --- vector search (flat vs ivf), 1200-chunk node corpus ---
-    let vecs: Vec<Vec<f32>> = ds.documents.iter().map(|d| embedder.embed(&d.text())).collect();
-    let mut flat = FlatIndex::new(EMBED_DIM);
-    let mut ivf = IvfIndex::new(EMBED_DIM, 24, 6);
-    for (i, v) in vecs.iter().enumerate() {
-        flat.add(i, v);
-        ivf.add(i, v);
+    // --- vector search: corpus-size sweep over index kinds ---
+    // 1.2k / 12k / 120k-chunk tiers × {flat, flat-batched, ivf, hnsw,
+    // sharded-flat}: quantifies the IVF crossover claimed in vecdb/ivf.rs
+    // and the sharded batched speedup over single-threaded flat at the
+    // 120k tier. Per-query items/s on every line.
+    let random_unit = |rng: &mut Rng| {
+        let mut v: Vec<f32> = (0..EMBED_DIM).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    };
+    let queries: Vec<Vec<f32>> = (0..64).map(|_| random_unit(&mut rng)).collect();
+    for &n in &[1_200usize, 12_000, 120_000] {
+        let iters = if n >= 100_000 { 3 } else { 10 };
+        let nlist = ((n as f64).sqrt() as usize).max(8);
+        let nprobe = (nlist / 10).max(1);
+        let mut flat = FlatIndex::new(EMBED_DIM);
+        let mut ivf = IvfIndex::new(EMBED_DIM, nlist, nprobe);
+        let mut hnsw = HnswIndex::new(EMBED_DIM, 16, 64, 48, 11);
+        let mut sharded = ShardedIndex::from_fn(8, |_| FlatIndex::new(EMBED_DIM));
+        let (_, build_s) = coedge_rag::util::timer::timed(|| {
+            for i in 0..n {
+                let v = random_unit(&mut rng);
+                flat.add(i, &v);
+                ivf.add(i, &v);
+                hnsw.add(i, &v);
+                sharded.add(i, &v);
+            }
+            ivf.finalize(7);
+        });
+        println!("  [{n} chunks] ingest+train {build_s:.1}s (ivf nlist={nlist} nprobe={nprobe})");
+        let r = bench(&format!("flat          top-5 {n} chunks x64"), 1, iters, || {
+            for q in &queries {
+                std::hint::black_box(flat.search(q, 5));
+            }
+        });
+        println!("{}", r.throughput_line(64.0));
+        let r = bench(&format!("flat batched  top-5 {n} chunks x64"), 1, iters, || {
+            std::hint::black_box(flat.search_batch(&queries, 5));
+        });
+        println!("{}", r.throughput_line(64.0));
+        let r = bench(&format!("ivf           top-5 {n} chunks x64"), 1, iters, || {
+            for q in &queries {
+                std::hint::black_box(ivf.search(q, 5));
+            }
+        });
+        println!("{}", r.throughput_line(64.0));
+        let r = bench(&format!("hnsw          top-5 {n} chunks x64"), 1, iters, || {
+            for q in &queries {
+                std::hint::black_box(hnsw.search(q, 5));
+            }
+        });
+        println!("{}", r.throughput_line(64.0));
+        let r = bench(&format!("sharded-flat8 top-5 {n} chunks x64"), 1, iters, || {
+            std::hint::black_box(sharded.search_batch(&queries, 5));
+        });
+        println!("{}", r.throughput_line(64.0));
     }
-    ivf.train(7);
-    let queries: Vec<Vec<f32>> = (0..256)
-        .map(|_| {
-            let mut v: Vec<f32> = (0..EMBED_DIM).map(|_| rng.normal() as f32).collect();
-            l2_normalize(&mut v);
-            v
-        })
-        .collect();
-    let r = bench(&format!("flat top-5 over {} chunks x256", flat.len()), 3, 20, || {
-        for q in &queries {
-            std::hint::black_box(flat.search(q, 5));
-        }
-    });
-    println!("{}", r.throughput_line(256.0));
-    let r = bench(&format!("ivf  top-5 over {} chunks x256", ivf.len()), 3, 20, || {
-        for q in &queries {
-            std::hint::black_box(ivf.search(q, 5));
-        }
-    });
-    println!("{}", r.throughput_line(256.0));
 
     // --- metrics suite ---
     let ev = Evaluator::default();

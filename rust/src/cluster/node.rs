@@ -15,8 +15,10 @@ use crate::llmsim::latency::{LatencyGroundTruth, SearchTimeModel};
 use crate::llmsim::model::{pool_of, ModelSpec};
 use crate::metrics::{Evaluator, QualityScores};
 use crate::text::embed::{cosine, Embedder};
-use crate::vecdb::{FlatIndex, VectorIndex};
 use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use crate::vecdb::{Hit, IndexBuildCtx, IndexRegistry, VectorIndex};
+use crate::Result;
 use std::sync::Arc;
 
 /// Per-query serving outcome.
@@ -42,8 +44,13 @@ pub struct QueryOutcome {
 #[derive(Clone, Debug, Default)]
 pub struct NodeSlotReport {
     pub outcomes: Vec<QueryOutcome>,
-    /// TS_n^t — vector search time.
+    /// TS_n^t — *modeled* vector search time (drives the slot budget and
+    /// makespan, keeping simulations deterministic).
     pub search_time_s: f64,
+    /// Measured wall-clock of the slot's batched index search, recorded
+    /// alongside the model so the solver can be driven by either (e.g. via
+    /// `SearchTimeModel::calibrate`).
+    pub measured_search_s: f64,
     /// Max model completion time incl. reloads (Eq. 4 LHS).
     pub makespan_s: f64,
     /// Queries per model idx.
@@ -58,7 +65,11 @@ pub struct EdgeNode {
     pub name: String,
     /// Sorted doc ids stored locally.
     pub doc_ids: Vec<usize>,
-    pub index: FlatIndex,
+    /// Pluggable retrieval index (kind chosen per node via
+    /// `NodeConfig.index`; exact flat by default).
+    pub index: Box<dyn VectorIndex>,
+    /// Registry key the index was built from (diagnostics / CLI tables).
+    pub index_kind: String,
     pub pool: Vec<ModelSpec>,
     pub gpus: Vec<GpuState>,
     /// Ground-truth latency per GPU (the "hardware").
@@ -77,7 +88,8 @@ pub struct EdgeNode {
 }
 
 impl EdgeNode {
-    /// Build a node: embed + index its corpus, profile latency surrogates,
+    /// Build a node: embed + index its corpus (index kind from
+    /// `cfg.index` through `registry`), profile latency surrogates,
     /// compute Q_mn from local QA pairs ("node-specific data").
     #[allow(clippy::too_many_arguments)]
     pub fn build(
@@ -90,11 +102,18 @@ impl EdgeNode {
         strategy: IntraStrategy,
         top_k: usize,
         seed: u64,
-    ) -> Self {
-        let mut index = FlatIndex::new(crate::text::embed::EMBED_DIM);
+        registry: &IndexRegistry,
+    ) -> Result<Self> {
+        let ctx = IndexBuildCtx {
+            dim: crate::text::embed::EMBED_DIM,
+            seed: seed ^ 0x1D5EED,
+            spec: &cfg.index,
+        };
+        let mut index = registry.build(&cfg.index.kind, &ctx)?;
         for &d in &doc_ids {
             index.add(d, &doc_embs[d]);
         }
+        index.finalize(seed ^ 0x1D5EED);
         let pool = pool_of(&cfg.pool);
         let gpus: Vec<GpuState> = cfg.gpu_speeds.iter().map(|&s| GpuState::new(s)).collect();
         let gts: Vec<LatencyGroundTruth> =
@@ -125,11 +144,12 @@ impl EdgeNode {
             .take(60)
             .collect();
         let quality = quality_table(ds, &qa_sample, &pool, ev, seed ^ 0xAB5);
-        EdgeNode {
+        Ok(EdgeNode {
             id,
             name: cfg.name.clone(),
             doc_ids,
             index,
+            index_kind: cfg.index.kind.clone(),
             pool,
             gpus,
             gts,
@@ -140,7 +160,7 @@ impl EdgeNode {
             top_k,
             doc_embs,
             rng,
-        }
+        })
     }
 
     /// Corpus size in chunks.
@@ -278,7 +298,8 @@ impl EdgeNode {
             return report;
         }
         if budget <= 0.0 {
-            // everything is dropped before inference
+            // everything is dropped before inference — skip retrieval
+            // entirely (measured_search_s stays 0: no search ran)
             for &q in queries {
                 report.outcomes.push(QueryOutcome {
                     qa_id: q,
@@ -293,6 +314,23 @@ impl EdgeNode {
             }
             return report;
         }
+
+        // retrieval happens before generation: one batched search for the
+        // whole slot (vs a per-query call inside the serving loop)
+        let emb_storage: Vec<Vec<f32>>;
+        let embs: &[Vec<f32>] = match query_embs {
+            Some(embs) => embs,
+            None => {
+                emb_storage = queries
+                    .iter()
+                    .map(|&q| embedder.embed(&ds.qa_pairs[q].query))
+                    .collect();
+                &emb_storage
+            }
+        };
+        let timer = Timer::start();
+        let slot_hits = self.index.search_batch(embs, self.top_k);
+        report.measured_search_s = timer.secs();
 
         let plan = self.plan_slot(n, budget);
         // apply deployments
@@ -337,16 +375,8 @@ impl EdgeNode {
                         });
                         continue;
                     }
-                    // retrieval (for real, over the node's index)
-                    let emb_storage;
-                    let emb: &[f32] = match query_embs {
-                        Some(embs) => &embs[cursor + j],
-                        None => {
-                            emb_storage = embedder.embed(&qa.query);
-                            &emb_storage
-                        }
-                    };
-                    let rel = self.retrieval_relevance(emb, qa.gold_doc);
+                    // retrieval result from the slot's batched search
+                    let rel = self.relevance_from_hits(&slot_hits[cursor + j], qa.gold_doc);
                     let mut qrng = self.rng.fork(qa_id as u64);
                     let gen = generate(ds, qa, m, rel, &mut qrng);
                     let scores = ev.score_tokens(&gen, &qa.answer_tokens);
@@ -383,11 +413,18 @@ impl EdgeNode {
     }
 
     /// Top-k retrieval relevance for a query embedding against the gold
-    /// document: 1.0 when the gold chunk is retrieved, otherwise partial
-    /// credit proportional to the best retrieved chunk's similarity to the
-    /// gold chunk (cross-domain documents still help a little).
+    /// document (convenience wrapper issuing a single search; the serve
+    /// path batches instead and scores via
+    /// [`relevance_from_hits`](Self::relevance_from_hits)).
     pub fn retrieval_relevance(&self, query_emb: &[f32], gold_doc: usize) -> f64 {
-        let hits = self.index.search(query_emb, self.top_k);
+        self.relevance_from_hits(&self.index.search(query_emb, self.top_k), gold_doc)
+    }
+
+    /// Relevance of retrieved hits to the gold document: 1.0 when the gold
+    /// chunk is retrieved, otherwise partial credit proportional to the
+    /// best retrieved chunk's similarity to the gold chunk (cross-domain
+    /// documents still help a little).
+    pub fn relevance_from_hits(&self, hits: &[Hit], gold_doc: usize) -> f64 {
         if hits.iter().any(|h| h.id == gold_doc) {
             return 1.0;
         }

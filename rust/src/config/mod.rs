@@ -5,9 +5,11 @@
 //! like vLLM/MaxText config files.
 
 use crate::llmsim::model::ModelSize;
-use crate::util::toml::TomlDoc;
+use crate::util::toml::{Table, TomlDoc};
 use crate::workload::SkewPattern;
 use anyhow::{anyhow, Result};
+
+pub use crate::vecdb::registry::{IndexKind, IndexSpec};
 
 /// Which dataset family an experiment uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,6 +30,9 @@ pub struct NodeConfig {
     pub primary_domains: Vec<usize>,
     /// Documents stored (before overlap scaling).
     pub corpus_docs: usize,
+    /// Retrieval index configuration (kind + parameters; default: exact
+    /// flat, the paper's setup).
+    pub index: IndexSpec,
 }
 
 /// Intra-node scheduling strategy (Table III rows).
@@ -164,6 +169,7 @@ impl ExperimentConfig {
                 pool: vec![ModelSize::Small, ModelSize::Mid, ModelSize::Large],
                 primary_domains: vec![0, 1, 2],
                 corpus_docs: 260,
+                index: IndexSpec::default(),
             },
             NodeConfig {
                 name: "edge-b".into(),
@@ -171,6 +177,7 @@ impl ExperimentConfig {
                 pool: vec![ModelSize::Small, ModelSize::Mid, ModelSize::Large],
                 primary_domains: vec![3, 4, 5],
                 corpus_docs: 260,
+                index: IndexSpec::default(),
             },
             NodeConfig {
                 name: "edge-c".into(),
@@ -178,6 +185,7 @@ impl ExperimentConfig {
                 pool: vec![ModelSize::Small, ModelSize::Mid, ModelSize::Large],
                 primary_domains: vec![1, 3, 5],
                 corpus_docs: 300,
+                index: IndexSpec::default(),
             },
             NodeConfig {
                 name: "edge-d".into(),
@@ -185,6 +193,7 @@ impl ExperimentConfig {
                 pool: vec![ModelSize::Small, ModelSize::Mid, ModelSize::Large],
                 primary_domains: vec![0, 2, 4],
                 corpus_docs: 300,
+                index: IndexSpec::default(),
             },
         ];
         ExperimentConfig {
@@ -217,6 +226,7 @@ impl ExperimentConfig {
             pool: vec![ModelSize::Mid],
             primary_domains: vec![i],
             corpus_docs: 220,
+            index: IndexSpec::default(),
         };
         ExperimentConfig {
             seed: 7,
@@ -281,6 +291,13 @@ impl ExperimentConfig {
         if let Some(v) = root.get("inter_enabled").and_then(|v| v.as_bool()) {
             cfg.inter_enabled = v;
         }
+        // cluster-wide index default from `[index]`, overridable per node
+        // via `[nodes.index]` (stored as `index.*` keys in the node table)
+        let index_default = doc
+            .tables
+            .get("index")
+            .map(|t| index_spec_from(t, "", IndexSpec::default()))
+            .unwrap_or_default();
         if let Some(nodes) = doc.arrays.get("nodes") {
             cfg.nodes = nodes
                 .iter()
@@ -317,9 +334,14 @@ impl ExperimentConfig {
                             .get("corpus_docs")
                             .and_then(|v| v.as_usize())
                             .unwrap_or(250),
+                        index: index_spec_from(t, "index.", index_default.clone()),
                     }
                 })
                 .collect();
+        } else {
+            for n in cfg.nodes.iter_mut() {
+                n.index = index_default.clone();
+            }
         }
         Ok(cfg)
     }
@@ -327,6 +349,29 @@ impl ExperimentConfig {
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
     }
+}
+
+/// Read an [`IndexSpec`] from `prefix`-qualified keys of a table, starting
+/// from `base` (keys absent from the table keep the base value).
+fn index_spec_from(t: &Table, prefix: &str, base: IndexSpec) -> IndexSpec {
+    let mut spec = base;
+    let get = |key: &str| t.get(&format!("{prefix}{key}"));
+    if let Some(v) = get("kind").and_then(|v| v.as_str()) {
+        spec.kind = v.to_string();
+    }
+    for (key, field) in [
+        ("nlist", &mut spec.nlist),
+        ("nprobe", &mut spec.nprobe),
+        ("shards", &mut spec.shards),
+        ("hnsw_m", &mut spec.hnsw_m),
+        ("hnsw_ef_construction", &mut spec.hnsw_ef_construction),
+        ("hnsw_ef_search", &mut spec.hnsw_ef_search),
+    ] {
+        if let Some(v) = get(key).and_then(|v| v.as_usize()) {
+            *field = v;
+        }
+    }
+    spec
 }
 
 #[cfg(test)]
@@ -380,6 +425,46 @@ corpus_docs = 100
         assert_eq!(cfg.nodes.len(), 1);
         assert_eq!(cfg.nodes[0].gpu_speeds, vec![1.0, 1.5]);
         assert_eq!(cfg.nodes[0].pool, vec![ModelSize::Small, ModelSize::Mid]);
+    }
+
+    #[test]
+    fn from_toml_index_global_default_and_per_node_override() {
+        let text = r#"
+[index]
+kind = "ivf"
+nlist = 48
+nprobe = 12
+
+[[nodes]]
+name = "n0"
+
+[[nodes]]
+name = "n1"
+
+[nodes.index]
+kind = "sharded-flat"
+shards = 8
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.nodes.len(), 2);
+        // n0 inherits the cluster-wide [index] default
+        assert_eq!(cfg.nodes[0].index.kind, "ivf");
+        assert_eq!(cfg.nodes[0].index.nlist, 48);
+        assert_eq!(cfg.nodes[0].index.nprobe, 12);
+        // n1 overrides kind + shards but inherits the rest
+        assert_eq!(cfg.nodes[1].index.kind, "sharded-flat");
+        assert_eq!(cfg.nodes[1].index.shards, 8);
+        assert_eq!(cfg.nodes[1].index.nlist, 48);
+    }
+
+    #[test]
+    fn from_toml_index_defaults_to_flat() {
+        let cfg = ExperimentConfig::from_toml("seed = 1\n").unwrap();
+        assert!(cfg.nodes.iter().all(|n| n.index == IndexSpec::default()));
+        assert_eq!(cfg.nodes[0].index.kind, "flat");
+        // a global [index] also applies when no [[nodes]] are declared
+        let cfg = ExperimentConfig::from_toml("[index]\nkind = \"hnsw\"\nhnsw_m = 24\n").unwrap();
+        assert!(cfg.nodes.iter().all(|n| n.index.kind == "hnsw" && n.index.hnsw_m == 24));
     }
 
     #[test]

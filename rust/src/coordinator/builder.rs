@@ -20,6 +20,7 @@ use crate::policy::ppo::Backend;
 use crate::router::capacity::{profile_capacity, CapacityModel};
 use crate::text::embed::Embedder;
 use crate::util::rng::Rng;
+use crate::vecdb::{IndexBuildCtx, IndexRegistry, VectorIndex};
 use crate::Result;
 
 /// Builder for the full CoEdge-RAG system.
@@ -58,6 +59,7 @@ pub struct CoordinatorBuilder {
     cfg: ExperimentConfig,
     backend: Backend,
     registry: AllocatorRegistry,
+    index_registry: IndexRegistry,
     dataset: Option<SyntheticDataset>,
     partitions: Option<Vec<Vec<usize>>>,
     capacities: Option<Vec<CapacityModel>>,
@@ -74,6 +76,7 @@ impl CoordinatorBuilder {
             cfg,
             backend: Backend::Reference,
             registry: AllocatorRegistry::with_builtins(),
+            index_registry: IndexRegistry::with_builtins(),
             dataset: None,
             partitions: None,
             capacities: None,
@@ -135,6 +138,18 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Register a custom vector-index factory under `kind`; node configs
+    /// (TOML `[nodes.index]` / CLI `--index`) can then select it by name,
+    /// exactly like custom allocators.
+    pub fn register_index(
+        mut self,
+        kind: &str,
+        factory: impl Fn(&IndexBuildCtx) -> Result<Box<dyn VectorIndex>> + Send + Sync + 'static,
+    ) -> Self {
+        self.index_registry.register(kind, factory);
+        self
+    }
+
     /// Attach a [`SlotObserver`] receiving per-phase events (may be called
     /// repeatedly; all observers receive every event).
     pub fn observer(mut self, observer: Box<dyn SlotObserver>) -> Self {
@@ -161,6 +176,7 @@ impl CoordinatorBuilder {
             cfg,
             backend,
             registry,
+            index_registry,
             dataset,
             partitions,
             capacities,
@@ -224,9 +240,10 @@ impl CoordinatorBuilder {
                     cfg.intra.clone(),
                     cfg.top_k,
                     cfg.seed ^ 0x0D0E ^ i as u64,
+                    &index_registry,
                 )
             })
-            .collect();
+            .collect::<Result<Vec<_>>>()?;
 
         // stage 4: capacity profiling (initialization phase, §IV-B)
         let capacities: Vec<CapacityModel> = match capacities {

@@ -34,7 +34,6 @@ use crate::cluster::node::{EdgeNode, NodeSlotReport, QueryOutcome};
 use crate::config::{ExperimentConfig, IntraStrategy};
 use crate::corpus::synth::SyntheticDataset;
 use crate::metrics::{Evaluator, QualityScores};
-use crate::policy::ppo::Backend;
 use crate::router::capacity::CapacityModel;
 use crate::text::embed::Embedder;
 use crate::util::rng::Rng;
@@ -53,6 +52,9 @@ pub struct SlotReport {
     pub latency_s: f64,
     /// p_j^t per node.
     pub proportions: Vec<f64>,
+    /// Per node: (modeled TS_n^t, measured wall-clock) of the slot's
+    /// batched index search — the solver can be driven by either.
+    pub node_search_s: Vec<(f64, f64)>,
     /// Per model-size (small/mid/large): query share and memory share.
     pub size_query_share: [f64; 3],
     pub size_mem_share: [f64; 3],
@@ -74,6 +76,8 @@ pub struct ServedSlot {
     pub size_queries: [usize; 3],
     /// GPU memory per model-size class.
     pub size_mem: [f64; 3],
+    /// Per node: (modeled TS_n^t, measured wall-clock search time).
+    pub node_search_s: Vec<(f64, f64)>,
 }
 
 /// The CoEdge-RAG coordinator.
@@ -93,12 +97,6 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build with the config's allocator kind and an explicit backend.
-    #[deprecated(note = "use CoordinatorBuilder::new(cfg).backend(backend).build()")]
-    pub fn build(cfg: ExperimentConfig, backend: Backend) -> Result<Coordinator> {
-        CoordinatorBuilder::new(cfg).backend(backend).build()
-    }
-
     /// The active allocator.
     pub fn allocator(&self) -> &dyn Allocator {
         self.allocator.as_ref()
@@ -236,8 +234,10 @@ impl Coordinator {
         let mut latency_s = 0.0f64;
         let mut size_queries = [0usize; 3];
         let mut size_mem = [0.0f64; 3];
+        let mut node_search_s = Vec::with_capacity(n_nodes);
         for (nid, (idxs, report)) in per_node.iter().zip(node_reports).enumerate() {
             latency_s = latency_s.max(report.makespan_s);
+            node_search_s.push((report.search_time_s, report.measured_search_s));
             for (mi, m) in self.nodes[nid].pool.iter().enumerate() {
                 let si = m.size as usize;
                 size_queries[si] += report.per_model_queries[mi];
@@ -250,7 +250,7 @@ impl Coordinator {
         }
         let outcomes: Vec<QueryOutcome> =
             outcomes_by_pos.into_iter().map(|o| o.expect("outcome")).collect();
-        ServedSlot { outcomes, latency_s, size_queries, size_mem }
+        ServedSlot { outcomes, latency_s, size_queries, size_mem, node_search_s }
     }
 
     /// Phase ④: feed outcomes back into the allocator.
@@ -305,7 +305,7 @@ impl Coordinator {
         self.emit(&SlotEvent::Feedback { slot, stats, elapsed_s: t.secs() });
 
         // aggregate
-        let ServedSlot { outcomes, latency_s, size_queries, size_mem } = served;
+        let ServedSlot { outcomes, latency_s, size_queries, size_mem, node_search_s } = served;
         let drop_rate = outcomes.iter().filter(|o| o.dropped).count() as f64 / b.max(1) as f64;
         let all_scores: Vec<QualityScores> = outcomes.iter().map(|o| o.scores).collect();
         let total_q: usize = size_queries.iter().sum();
@@ -322,6 +322,7 @@ impl Coordinator {
             drop_rate,
             latency_s,
             proportions,
+            node_search_s,
             size_query_share: std::array::from_fn(|i| {
                 if total_q == 0 { 0.0 } else { size_queries[i] as f64 / total_q as f64 }
             }),

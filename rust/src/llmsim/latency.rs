@@ -100,6 +100,18 @@ impl SearchTimeModel {
     pub fn search_time(&self, queries: usize, corpus_chunks: usize) -> f64 {
         queries as f64 * self.per_query_per_kchunk_s * (corpus_chunks as f64 / 1000.0).max(0.1)
     }
+
+    /// Refit the coefficient from a measured batched search, so TS_n^t can
+    /// be driven by real index wall-clock instead of the synthetic default
+    /// (EMA with factor `alpha`; `alpha = 1` replaces outright).
+    pub fn calibrate(&mut self, queries: usize, corpus_chunks: usize, measured_s: f64, alpha: f64) {
+        if queries == 0 || measured_s <= 0.0 {
+            return;
+        }
+        let per = measured_s / (queries as f64 * (corpus_chunks as f64 / 1000.0).max(0.1));
+        let a = alpha.clamp(0.0, 1.0);
+        self.per_query_per_kchunk_s = (1.0 - a) * self.per_query_per_kchunk_s + a * per;
+    }
 }
 
 #[cfg(test)]
@@ -193,5 +205,9 @@ mod tests {
         let st = SearchTimeModel::default();
         assert!(st.search_time(1000, 2000) > st.search_time(1000, 1000));
         assert!(st.search_time(2000, 1000) > st.search_time(1000, 1000));
+        // calibration with alpha=1 reproduces the measurement exactly
+        let mut st = SearchTimeModel::default();
+        st.calibrate(500, 4000, 0.8, 1.0);
+        assert!((st.search_time(500, 4000) - 0.8).abs() < 1e-12);
     }
 }

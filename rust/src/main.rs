@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run      [--config FILE] [--slots N] [--allocator KIND] [--slo S]
+//!            [--index KIND] [--shards N]
 //!            run a full experiment and print per-slot results
 //!   serve    [--addr A] [--config FILE]      start the TCP serving front-end
 //!   profile  [--config FILE]                 print per-node capacity models
@@ -11,7 +12,7 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use coedge_rag::bench_harness::Table;
-use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IndexKind};
 use coedge_rag::coordinator::{AllocatorRegistry, CoordinatorBuilder};
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
@@ -64,6 +65,22 @@ fn load_config(flags: &std::collections::HashMap<String, String>) -> ExperimentC
     if let Some(v) = flags.get("seed") {
         cfg.seed = v.parse().expect("--seed");
     }
+    if let Some(v) = flags.get("index") {
+        // built-in kinds validate here; custom kinds need register_index
+        let kind = v.parse::<IndexKind>().unwrap_or_else(|e| {
+            eprintln!("[coedge] --index: {e}");
+            std::process::exit(2);
+        });
+        for n in cfg.nodes.iter_mut() {
+            n.index.kind = kind.as_str().to_string();
+        }
+    }
+    if let Some(v) = flags.get("shards") {
+        let shards: usize = v.parse().expect("--shards");
+        for n in cfg.nodes.iter_mut() {
+            n.index.shards = shards;
+        }
+    }
     cfg
 }
 
@@ -112,12 +129,14 @@ fn cmd_run(flags: std::collections::HashMap<String, String>) {
 fn cmd_profile(flags: std::collections::HashMap<String, String>) {
     let cfg = load_config(&flags);
     let co = CoordinatorBuilder::new(cfg).backend(Backend::Reference).build().expect("build");
-    let mut t = Table::new(&["node", "gpus", "corpus", "C(5s)", "C(15s)", "C(60s)", "k", "b"]);
+    let mut t =
+        Table::new(&["node", "gpus", "corpus", "index", "C(5s)", "C(15s)", "C(60s)", "k", "b"]);
     for (n, cap) in co.nodes.iter().zip(&co.capacities) {
         t.row(vec![
             n.name.clone(),
             format!("{}", n.gpus.len()),
             format!("{}", n.corpus_size()),
+            n.index_kind.clone(),
             format!("{:.0}", cap.eval(5.0)),
             format!("{:.0}", cap.eval(15.0)),
             format!("{:.0}", cap.eval(60.0)),
@@ -176,6 +195,10 @@ fn main() {
             println!(
                 "              [--queries N] [--slo S] [--allocator {}]",
                 AllocatorRegistry::with_builtins().kinds().join("|")
+            );
+            println!(
+                "              [--index {}] [--shards N]",
+                IndexKind::ALL.map(|k| k.as_str()).join("|")
             );
         }
     }

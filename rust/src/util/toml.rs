@@ -1,8 +1,11 @@
 //! TOML-subset parser for the config system.
 //!
 //! Supports the subset used by `configs/*.toml`: top-level key/values,
-//! `[table]` and `[[array-of-tables]]` headers, strings, integers, floats,
-//! booleans, and homogeneous inline arrays (including arrays of strings).
+//! `[table]` and `[[array-of-tables]]` headers, sub-tables of array
+//! elements (`[nodes.index]` attaches to the most recent `[[nodes]]`
+//! entry, its keys stored dot-prefixed as `index.key`), strings, integers,
+//! floats, booleans, and homogeneous inline arrays (including arrays of
+//! strings).
 //! Comments (`#`) and blank lines are ignored. This intentionally mirrors
 //! the config style of frameworks like MaxText/vLLM without an external
 //! dependency (offline build).
@@ -89,6 +92,9 @@ impl TomlDoc {
             Root,
             Table(String),
             Array(String),
+            // sub-table of the last element of array .0; keys are
+            // inserted with prefix .1 (e.g. "index.")
+            ArraySub(String, String),
         }
         let mut cur = Cursor::Root;
         for (lineno, raw) in text.lines().enumerate() {
@@ -102,16 +108,32 @@ impl TomlDoc {
                 cur = Cursor::Array(name);
             } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
                 let name = name.trim().to_string();
-                doc.tables.entry(name.clone()).or_default();
-                cur = Cursor::Table(name);
+                match name.split_once('.') {
+                    // `[arr.sub]` after a `[[arr]]`: sub-table of that entry
+                    Some((head, rest)) if doc.arrays.contains_key(head) && !rest.is_empty() => {
+                        cur = Cursor::ArraySub(head.to_string(), format!("{rest}."));
+                    }
+                    // any other dotted header keeps the old permissive
+                    // behavior: a plain table literally named "a.b"
+                    _ => {
+                        doc.tables.entry(name.clone()).or_default();
+                        cur = Cursor::Table(name);
+                    }
+                }
             } else if let Some(eq) = find_top_level_eq(&line) {
                 let key = line[..eq].trim().to_string();
                 let val = parse_value(line[eq + 1..].trim())
                     .map_err(|e| format!("line {}: {e}", lineno + 1))?;
-                let table = match &cur {
-                    Cursor::Root => &mut doc.root,
-                    Cursor::Table(name) => doc.tables.get_mut(name).unwrap(),
-                    Cursor::Array(name) => doc.arrays.get_mut(name).unwrap().last_mut().unwrap(),
+                let (table, key) = match &cur {
+                    Cursor::Root => (&mut doc.root, key),
+                    Cursor::Table(name) => (doc.tables.get_mut(name).unwrap(), key),
+                    Cursor::Array(name) => {
+                        (doc.arrays.get_mut(name).unwrap().last_mut().unwrap(), key)
+                    }
+                    Cursor::ArraySub(name, prefix) => (
+                        doc.arrays.get_mut(name).unwrap().last_mut().unwrap(),
+                        format!("{prefix}{key}"),
+                    ),
                 };
                 table.insert(key, val);
             } else {
@@ -315,6 +337,42 @@ primary_domains = [3, 4, 5]
     fn rejects_bad_lines() {
         assert!(TomlDoc::parse("this is not toml").is_err());
         assert!(TomlDoc::parse("x = ").is_err());
+    }
+
+    #[test]
+    fn array_sub_tables_attach_to_last_entry() {
+        let text = r#"
+[[nodes]]
+name = "a"
+
+[nodes.index]
+kind = "ivf"
+nlist = 32
+
+[[nodes]]
+name = "b"
+
+[nodes.index]
+kind = "sharded-flat"
+shards = 8
+"#;
+        let doc = TomlDoc::parse(text).unwrap();
+        let nodes = &doc.arrays["nodes"];
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0]["index.kind"].as_str(), Some("ivf"));
+        assert_eq!(nodes[0]["index.nlist"].as_usize(), Some(32));
+        assert_eq!(nodes[1]["index.kind"].as_str(), Some("sharded-flat"));
+        assert_eq!(nodes[1]["index.shards"].as_usize(), Some(8));
+        assert!(!nodes[1].contains_key("index.nlist"));
+    }
+
+    #[test]
+    fn dotted_header_without_array_stays_a_plain_table() {
+        // backward compat: dotted headers with no matching [[array]] parse
+        // as a table literally named "a.b" (harmlessly ignored downstream)
+        let doc = TomlDoc::parse("[nodes.index]\nkind = \"flat\"\n").unwrap();
+        assert_eq!(doc.get("nodes.index", "kind").unwrap().as_str(), Some("flat"));
+        assert!(doc.arrays.is_empty());
     }
 
     #[test]

@@ -53,6 +53,34 @@ impl VectorIndex for FlatIndex {
         top.into_vec()
     }
 
+    /// Blocked batched kernel: rows are scanned in cache-sized blocks and
+    /// scored against every query while hot, instead of streaming the whole
+    /// matrix once per query. Each query still sees rows in ascending
+    /// storage order, so results are identical to the per-query loop.
+    fn search_batch(&self, queries: &[Vec<f32>], k: usize) -> Vec<Vec<Hit>> {
+        const BLOCK_ROWS: usize = 64;
+        let mut tops: Vec<TopK> = queries
+            .iter()
+            .map(|q| {
+                assert_eq!(q.len(), self.dim, "dim mismatch");
+                TopK::new(k)
+            })
+            .collect();
+        let n = self.ids.len();
+        let mut start = 0;
+        while start < n {
+            let end = (start + BLOCK_ROWS).min(n);
+            for (q, top) in queries.iter().zip(tops.iter_mut()) {
+                for i in start..end {
+                    let score = dot(q, self.row(i));
+                    top.push(Hit { id: self.ids[i], score });
+                }
+            }
+            start = end;
+        }
+        tops.into_iter().map(TopK::into_vec).collect()
+    }
+
     fn len(&self) -> usize {
         self.ids.len()
     }
@@ -129,5 +157,23 @@ mod tests {
         let idx = FlatIndex::new(8);
         assert!(idx.is_empty());
         assert!(idx.search(&[0.0; 8], 3).is_empty());
+        assert!(idx.search_batch(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn batch_kernel_matches_per_query_search() {
+        let mut rng = Rng::new(53);
+        let dim = 32;
+        let mut idx = FlatIndex::new(dim);
+        // 150 rows: not a multiple of the 64-row block, exercising the tail
+        for i in 0..150 {
+            idx.add(i, &random_unit(&mut rng, dim));
+        }
+        let queries: Vec<Vec<f32>> = (0..33).map(|_| random_unit(&mut rng, dim)).collect();
+        let batched = idx.search_batch(&queries, 5);
+        assert_eq!(batched.len(), queries.len());
+        for (q, hits) in queries.iter().zip(&batched) {
+            assert_eq!(*hits, idx.search(q, 5));
+        }
     }
 }

@@ -1,0 +1,324 @@
+//! HNSW (hierarchical navigable small world) approximate index.
+//!
+//! Graph-based search: each vector gets a random level; upper layers form
+//! sparser navigation graphs, layer 0 holds everyone. Queries greedily
+//! descend from the top entry point, then run an `ef`-wide beam at layer 0.
+//! Unlike IVF there is no train step — the graph is built incrementally on
+//! [`add`](VectorIndex::add) — so it suits corpora that grow online.
+//! Deterministic for a fixed construction seed.
+
+use super::{Hit, TopK, VectorIndex};
+use crate::text::embed::dot;
+use crate::util::rng::Rng;
+
+/// Internal candidate ordered by score via total order (NaN-safe).
+#[derive(Clone, Copy, Debug)]
+struct Cand {
+    score: f32,
+    node: u32,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.score.total_cmp(&other.score).is_eq() && self.node == other.node
+    }
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // higher score first in a max-heap; break ties on node id for
+        // determinism across insertion orders of the heap
+        self.score.total_cmp(&other.score).then(other.node.cmp(&self.node))
+    }
+}
+
+/// HNSW graph index.
+pub struct HnswIndex {
+    dim: usize,
+    /// Max links per node on layers ≥ 1 (layer 0 allows 2·M).
+    m: usize,
+    ef_construction: usize,
+    ef_search: usize,
+    /// 1/ln(M) — the level sampling scale from the HNSW paper.
+    level_scale: f64,
+    rng: Rng,
+    ids: Vec<usize>,
+    data: Vec<f32>, // row-major [len x dim]
+    /// Per node: highest layer it appears on.
+    levels: Vec<usize>,
+    /// neighbors[layer][node] → adjacency list (nodes absent from a layer
+    /// keep an empty list there).
+    neighbors: Vec<Vec<Vec<u32>>>,
+    entry: Option<u32>,
+}
+
+impl HnswIndex {
+    /// `m` links per node, `ef_construction` build beam, `ef_search` query
+    /// beam (raised to `k` when smaller at query time).
+    pub fn new(dim: usize, m: usize, ef_construction: usize, ef_search: usize, seed: u64) -> Self {
+        let m = m.max(2);
+        HnswIndex {
+            dim,
+            m,
+            ef_construction: ef_construction.max(m),
+            ef_search: ef_search.max(1),
+            level_scale: 1.0 / (m as f64).ln(),
+            rng: Rng::new(seed ^ 0x9E3779B97F4A7C15),
+            ids: Vec::new(),
+            data: Vec::new(),
+            levels: Vec::new(),
+            neighbors: Vec::new(),
+            entry: None,
+        }
+    }
+
+    #[inline]
+    fn row(&self, i: u32) -> &[f32] {
+        let i = i as usize;
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    fn sample_level(&mut self) -> usize {
+        let u = self.rng.f64().max(1e-12);
+        ((-u.ln() * self.level_scale) as usize).min(16)
+    }
+
+    /// Greedy 1-best walk on `layer` from `start`.
+    fn greedy_step(&self, query: &[f32], mut cur: u32, layer: usize) -> u32 {
+        let mut cur_s = dot(query, self.row(cur));
+        loop {
+            let mut improved = false;
+            for &nb in &self.neighbors[layer][cur as usize] {
+                let s = dot(query, self.row(nb));
+                if s > cur_s {
+                    cur_s = s;
+                    cur = nb;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return cur;
+            }
+        }
+    }
+
+    /// `ef`-wide beam search on `layer`; returns candidates best-first.
+    fn beam(&self, query: &[f32], start: u32, layer: usize, ef: usize) -> Vec<Cand> {
+        use std::cmp::Reverse;
+        use std::collections::{BinaryHeap, HashSet};
+        let mut visited: HashSet<u32> = HashSet::new();
+        visited.insert(start);
+        let s0 = Cand { score: dot(query, self.row(start)), node: start };
+        let mut frontier: BinaryHeap<Cand> = BinaryHeap::new(); // best-first
+        frontier.push(s0);
+        let mut best: BinaryHeap<Reverse<Cand>> = BinaryHeap::new(); // worst at top
+        best.push(Reverse(s0));
+        while let Some(c) = frontier.pop() {
+            let worst = best.peek().map(|r| r.0.score).unwrap_or(f32::NEG_INFINITY);
+            if best.len() >= ef && c.score < worst {
+                break;
+            }
+            for &nb in &self.neighbors[layer][c.node as usize] {
+                if !visited.insert(nb) {
+                    continue;
+                }
+                let s = dot(query, self.row(nb));
+                let worst = best.peek().map(|r| r.0.score).unwrap_or(f32::NEG_INFINITY);
+                if best.len() < ef || s > worst {
+                    let cand = Cand { score: s, node: nb };
+                    frontier.push(cand);
+                    best.push(Reverse(cand));
+                    if best.len() > ef {
+                        best.pop();
+                    }
+                }
+            }
+        }
+        let mut out: Vec<Cand> = best.into_iter().map(|r| r.0).collect();
+        out.sort_by(|a, b| b.cmp(a));
+        out
+    }
+
+    /// Keep the top `max` links of `node` on `layer` by similarity.
+    fn prune(&mut self, node: u32, layer: usize, max: usize) {
+        let list = &self.neighbors[layer][node as usize];
+        if list.len() <= max {
+            return;
+        }
+        let base = self.row(node).to_vec();
+        let mut scored: Vec<Cand> = list
+            .iter()
+            .map(|&nb| Cand { score: dot(&base, self.row(nb)), node: nb })
+            .collect();
+        scored.sort_by(|a, b| b.cmp(a));
+        self.neighbors[layer][node as usize] =
+            scored.into_iter().take(max).map(|c| c.node).collect();
+    }
+
+    fn max_links(&self, layer: usize) -> usize {
+        if layer == 0 {
+            self.m * 2
+        } else {
+            self.m
+        }
+    }
+}
+
+impl VectorIndex for HnswIndex {
+    fn add(&mut self, id: usize, vector: &[f32]) {
+        assert_eq!(vector.len(), self.dim, "dim mismatch");
+        let node = self.ids.len() as u32;
+        self.ids.push(id);
+        self.data.extend_from_slice(vector);
+        let level = self.sample_level();
+        self.levels.push(level);
+        while self.neighbors.len() <= level {
+            // a new top layer starts with empty adjacency for everyone so far
+            self.neighbors.push(vec![Vec::new(); self.ids.len().saturating_sub(1)]);
+        }
+        for layer in self.neighbors.iter_mut() {
+            layer.push(Vec::new());
+        }
+
+        let Some(entry) = self.entry else {
+            self.entry = Some(node);
+            return;
+        };
+        let top = self.levels[entry as usize];
+
+        // descend greedily through layers above the new node's level
+        let mut cur = entry;
+        for layer in ((level + 1)..=top).rev() {
+            cur = self.greedy_step(vector, cur, layer);
+        }
+        // connect on each shared layer
+        for layer in (0..=level.min(top)).rev() {
+            let found = self.beam(vector, cur, layer, self.ef_construction);
+            cur = found.first().map(|c| c.node).unwrap_or(cur);
+            let links: Vec<u32> =
+                found.iter().take(self.max_links(layer)).map(|c| c.node).collect();
+            for &nb in &links {
+                self.neighbors[layer][nb as usize].push(node);
+                let max = self.max_links(layer);
+                self.prune(nb, layer, max);
+            }
+            self.neighbors[layer][node as usize] = links;
+        }
+        if level > top {
+            self.entry = Some(node);
+        }
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim, "dim mismatch");
+        let Some(entry) = self.entry else {
+            return Vec::new();
+        };
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut cur = entry;
+        for layer in (1..=self.levels[entry as usize]).rev() {
+            cur = self.greedy_step(query, cur, layer);
+        }
+        let ef = self.ef_search.max(k);
+        let found = self.beam(query, cur, 0, ef);
+        let mut top = TopK::new(k);
+        for c in found {
+            top.push(Hit { id: self.ids[c.node as usize], score: c.score });
+        }
+        top.into_vec()
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::embed::l2_normalize;
+    use crate::vecdb::FlatIndex;
+
+    fn random_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn self_query_is_top_hit() {
+        let mut rng = Rng::new(11);
+        let dim = 16;
+        let mut idx = HnswIndex::new(dim, 8, 48, 32, 5);
+        let vecs: Vec<Vec<f32>> = (0..200).map(|_| random_unit(&mut rng, dim)).collect();
+        for (i, v) in vecs.iter().enumerate() {
+            idx.add(i, v);
+        }
+        for (i, v) in vecs.iter().enumerate().take(20) {
+            let hits = idx.search(v, 1);
+            assert_eq!(hits[0].id, i);
+            assert!((hits[0].score - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn recall_vs_flat() {
+        let mut rng = Rng::new(13);
+        let dim = 32;
+        let n = 1500;
+        let vecs: Vec<Vec<f32>> = (0..n).map(|_| random_unit(&mut rng, dim)).collect();
+        let mut flat = FlatIndex::new(dim);
+        let mut hnsw = HnswIndex::new(dim, 12, 80, 64, 3);
+        for (i, v) in vecs.iter().enumerate() {
+            flat.add(i, v);
+            hnsw.add(i, v);
+        }
+        let queries = 40;
+        let mut recall_sum = 0.0;
+        for _ in 0..queries {
+            let q = random_unit(&mut rng, dim);
+            let exact: std::collections::HashSet<usize> =
+                flat.search(&q, 5).into_iter().map(|h| h.id).collect();
+            let approx = hnsw.search(&q, 5);
+            recall_sum +=
+                approx.iter().filter(|h| exact.contains(&h.id)).count() as f64 / 5.0;
+        }
+        let recall = recall_sum / queries as f64;
+        assert!(recall > 0.8, "recall@5={recall}");
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let mut rng = Rng::new(17);
+        let dim = 8;
+        let vecs: Vec<Vec<f32>> = (0..120).map(|_| random_unit(&mut rng, dim)).collect();
+        let build = || {
+            let mut idx = HnswIndex::new(dim, 6, 32, 24, 99);
+            for (i, v) in vecs.iter().enumerate() {
+                idx.add(i, v);
+            }
+            idx
+        };
+        let (a, b) = (build(), build());
+        let q = random_unit(&mut rng, dim);
+        assert_eq!(a.search(&q, 5), b.search(&q, 5));
+    }
+
+    #[test]
+    fn empty_and_small() {
+        let mut idx = HnswIndex::new(4, 4, 16, 16, 1);
+        assert!(idx.search(&[1.0, 0.0, 0.0, 0.0], 3).is_empty());
+        idx.add(42, &[1.0, 0.0, 0.0, 0.0]);
+        let hits = idx.search(&[1.0, 0.0, 0.0, 0.0], 10);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].id, 42);
+        assert!(idx.search(&[1.0, 0.0, 0.0, 0.0], 0).is_empty());
+    }
+}

@@ -4,7 +4,12 @@
 //! Not used by the paper's configuration (which is exact flat search) but
 //! included for the perf study: at edge-node corpus sizes the flat index
 //! is often faster; IVF wins once corpora grow past ~100k chunks. The
-//! `perf_micro` bench quantifies the crossover.
+//! `perf_micro` bench quantifies the crossover with a corpus-size sweep
+//! over the 1.2k / 12k / 120k-chunk tiers (flat vs ivf vs hnsw vs sharded).
+//!
+//! Vectors added after [`train`](IvfIndex::train) are routed online to the
+//! nearest centroid's posting list, so they are immediately visible to
+//! `search` without a re-train.
 
 use super::{Hit, TopK, VectorIndex};
 use crate::text::embed::{dot, l2_normalize};
@@ -128,6 +133,9 @@ impl VectorIndex for IvfIndex {
     }
 
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        if self.len == 0 {
+            return Vec::new();
+        }
         assert!(self.trained, "IvfIndex::train must be called before search");
         // rank centroids
         let mut cs: Vec<(usize, f32)> = (0..self.nlist)
@@ -145,6 +153,12 @@ impl VectorIndex for IvfIndex {
 
     fn len(&self) -> usize {
         self.len
+    }
+
+    /// Train the coarse quantizer on everything ingested so far (the
+    /// cluster layer's one-time build hook).
+    fn finalize(&mut self, seed: u64) {
+        self.train(seed);
     }
 }
 
@@ -219,5 +233,34 @@ mod tests {
         let hits = ivf.search(&v, 1);
         assert_eq!(hits[0].id, 999);
         assert_eq!(ivf.len(), 101);
+    }
+
+    /// Regression: post-train adds must land in a posting list (never in
+    /// `pending`, where they would be invisible until a re-train) — every
+    /// one of a stream of late adds is retrievable immediately.
+    #[test]
+    fn every_post_train_add_is_searchable_without_retrain() {
+        let mut rng = Rng::new(59);
+        let dim = 8;
+        let mut ivf = IvfIndex::new(dim, 4, 4); // probe all lists → exact
+        for i in 0..80 {
+            ivf.add(i, &random_unit(&mut rng, dim));
+        }
+        ivf.finalize(3);
+        let late: Vec<Vec<f32>> = (0..25).map(|_| random_unit(&mut rng, dim)).collect();
+        for (j, v) in late.iter().enumerate() {
+            ivf.add(1000 + j, v);
+        }
+        assert_eq!(ivf.len(), 105);
+        for (j, v) in late.iter().enumerate() {
+            let hits = ivf.search(v, 1);
+            assert_eq!(hits[0].id, 1000 + j, "late add {j} not retrievable");
+            assert!((hits[0].score - 1.0).abs() < 1e-5);
+        }
+        // batched search sees them too
+        let batched = ivf.search_batch(&late, 1);
+        for (j, hits) in batched.iter().enumerate() {
+            assert_eq!(hits[0].id, 1000 + j);
+        }
     }
 }

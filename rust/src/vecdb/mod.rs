@@ -1,14 +1,27 @@
-//! Vector database: exact flat index (the paper's Faiss flat setup) and an
-//! IVF approximate index for the performance study.
+//! Vector database: the retrieval tier behind every edge node.
+//!
+//! Index kinds: exact [`FlatIndex`] (the paper's Faiss flat setup), IVF
+//! ([`IvfIndex`]) and HNSW ([`HnswIndex`]) approximate indexes, and a
+//! generic [`ShardedIndex`] that segments any inner index across N shards
+//! and fans batched searches out on the crate thread pool. Kinds are
+//! string-keyed in [`IndexRegistry`] (mirroring the scheduling tier's
+//! `AllocatorRegistry`) so deployments pick an index per node via TOML /
+//! CLI and downstream code never branches on the concrete type.
 //!
 //! Stores unit-normalized embeddings contiguously (SoA) and returns top-k
 //! by inner product (== cosine for unit vectors).
 
 pub mod flat;
+pub mod hnsw;
 pub mod ivf;
+pub mod registry;
+pub mod sharded;
 
 pub use flat::FlatIndex;
+pub use hnsw::HnswIndex;
 pub use ivf::IvfIndex;
+pub use registry::{IndexBuildCtx, IndexKind, IndexRegistry, IndexSpec};
+pub use sharded::ShardedIndex;
 
 /// A search hit: external id + similarity score.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -18,13 +31,35 @@ pub struct Hit {
 }
 
 /// Common interface over index kinds.
+///
+/// The serving hot path issues one [`search_batch`](VectorIndex::search_batch)
+/// per node per slot; implementations are expected to override it when they
+/// can beat the per-query loop (blocked kernels, shard fan-out).
 pub trait VectorIndex: Send + Sync {
     /// Add a vector with an external id. Vectors must share the index dim.
     fn add(&mut self, id: usize, vector: &[f32]);
+
     /// Exact or approximate top-k by cosine similarity.
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit>;
+
+    /// Batched top-k: one result list per query, in query order.
+    ///
+    /// The default implementation loops over [`search`](VectorIndex::search);
+    /// override for batched kernels. Implementations must return results
+    /// identical to the per-query loop (same hits, same order) so callers
+    /// can batch without changing retrieval semantics.
+    fn search_batch(&self, queries: &[Vec<f32>], k: usize) -> Vec<Vec<Hit>> {
+        queries.iter().map(|q| self.search(q, k)).collect()
+    }
+
+    /// One-time build hook after ingestion (e.g. IVF k-means training).
+    /// Called once by the cluster layer when a node's corpus is loaded;
+    /// the default is a no-op for indexes that build incrementally.
+    fn finalize(&mut self, _seed: u64) {}
+
     /// Number of stored vectors.
     fn len(&self) -> usize;
+
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -32,8 +67,12 @@ pub trait VectorIndex: Send + Sync {
 
 /// Bounded max-k collector (min-heap semantics via sorted insertion —
 /// k is small [top-5 in the paper], so linear insertion beats a heap).
+///
+/// Public so custom [`VectorIndex`] implementations (and shard mergers)
+/// can reuse the exact tie-breaking the built-ins have: equal scores keep
+/// the earlier-pushed hit first, and NaN scores never displace real ones.
 #[derive(Clone, Debug)]
-pub(crate) struct TopK {
+pub struct TopK {
     k: usize,
     hits: Vec<Hit>,
 }
@@ -43,24 +82,38 @@ impl TopK {
         TopK { k, hits: Vec::with_capacity(k + 1) }
     }
 
+    /// Current k-th best score (−∞ while under-filled or when the k-th
+    /// slot holds a NaN — a NaN occupant is always displaceable).
     #[inline]
     pub fn worst(&self) -> f32 {
         if self.hits.len() < self.k {
-            f32::NEG_INFINITY
-        } else {
-            self.hits.last().map(|h| h.score).unwrap_or(f32::NEG_INFINITY)
+            return f32::NEG_INFINITY;
+        }
+        match self.hits.last() {
+            Some(h) if !h.score.is_nan() => h.score,
+            _ => f32::NEG_INFINITY,
         }
     }
 
+    /// Offer a hit; kept only if it beats the current k-th best. A NaN
+    /// occupant in the k-th slot is always displaceable (even by −∞),
+    /// while a NaN offer never displaces anything.
     #[inline]
     pub fn push(&mut self, hit: Hit) {
-        if self.hits.len() == self.k && hit.score <= self.worst() {
-            return;
+        if self.hits.len() >= self.k {
+            if hit.score.is_nan() {
+                return;
+            }
+            if let Some(last) = self.hits.last() {
+                if !last.score.is_nan() && hit.score <= last.score {
+                    return;
+                }
+            }
         }
         let pos = self
             .hits
             .iter()
-            .position(|h| h.score < hit.score)
+            .position(|h| h.score < hit.score || h.score.is_nan())
             .unwrap_or(self.hits.len());
         self.hits.insert(pos, hit);
         if self.hits.len() > self.k {
@@ -68,6 +121,7 @@ impl TopK {
         }
     }
 
+    /// Hits collected so far, best-first.
     pub fn into_vec(self) -> Vec<Hit> {
         self.hits
     }
@@ -98,5 +152,82 @@ mod tests {
         let v = t.into_vec();
         assert_eq!(v.len(), 2);
         assert_eq!(v[0].id, 1);
+    }
+
+    #[test]
+    fn topk_ties_keep_insertion_order() {
+        let mut t = TopK::new(2);
+        t.push(Hit { id: 10, score: 0.5 });
+        t.push(Hit { id: 11, score: 0.5 });
+        t.push(Hit { id: 12, score: 0.5 }); // tie with the worst: not kept
+        let v = t.into_vec();
+        assert_eq!(v.iter().map(|h| h.id).collect::<Vec<_>>(), vec![10, 11]);
+    }
+
+    #[test]
+    fn topk_k_zero_collects_nothing() {
+        let mut t = TopK::new(0);
+        t.push(Hit { id: 0, score: 1.0 });
+        t.push(Hit { id: 1, score: f32::NEG_INFINITY });
+        t.push(Hit { id: 2, score: f32::NAN });
+        assert!(t.into_vec().is_empty());
+    }
+
+    #[test]
+    fn topk_k_larger_than_candidates() {
+        let mut t = TopK::new(10);
+        for i in 0..3 {
+            t.push(Hit { id: i, score: i as f32 });
+        }
+        let v = t.into_vec();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].id, 2);
+    }
+
+    #[test]
+    fn topk_nan_never_displaces_real_scores() {
+        let mut t = TopK::new(2);
+        t.push(Hit { id: 0, score: 0.3 });
+        t.push(Hit { id: 1, score: 0.1 });
+        t.push(Hit { id: 2, score: f32::NAN });
+        let v = t.clone().into_vec();
+        assert_eq!(v.iter().map(|h| h.id).collect::<Vec<_>>(), vec![0, 1]);
+        // and a real score still displaces the current worst afterwards
+        t.push(Hit { id: 3, score: 0.2 });
+        let v = t.into_vec();
+        assert_eq!(v.iter().map(|h| h.id).collect::<Vec<_>>(), vec![0, 3]);
+    }
+
+    #[test]
+    fn topk_nan_fills_only_spare_slots() {
+        // under-filled: NaN may occupy a spare slot (ranked last) but is
+        // evicted as soon as enough real scores arrive
+        let mut t = TopK::new(2);
+        t.push(Hit { id: 0, score: f32::NAN });
+        t.push(Hit { id: 1, score: 0.5 });
+        t.push(Hit { id: 2, score: 0.4 });
+        let ids: Vec<usize> = t.into_vec().iter().map(|h| h.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn topk_neg_inf_is_a_valid_score() {
+        let mut t = TopK::new(2);
+        t.push(Hit { id: 0, score: f32::NEG_INFINITY });
+        t.push(Hit { id: 1, score: 0.0 });
+        let v = t.into_vec();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].id, 1);
+        assert_eq!(v[1].id, 0);
+    }
+
+    #[test]
+    fn topk_neg_inf_displaces_nan_occupant() {
+        let mut t = TopK::new(2);
+        t.push(Hit { id: 0, score: f32::NAN });
+        t.push(Hit { id: 1, score: 0.5 }); // → [0.5, NaN]
+        t.push(Hit { id: 2, score: f32::NEG_INFINITY });
+        let ids: Vec<usize> = t.into_vec().iter().map(|h| h.id).collect();
+        assert_eq!(ids, vec![1, 2]);
     }
 }

@@ -1,0 +1,261 @@
+//! String-keyed index registry + per-node index configuration.
+//!
+//! Mirrors the scheduling tier's `AllocatorRegistry`: built-in kinds are
+//! registered under their [`IndexKind`] names, custom indexes register a
+//! factory under any other key, and the cluster layer builds whatever the
+//! node's [`IndexSpec`] names — no downstream code branches on the kind.
+
+use std::collections::BTreeMap;
+
+use super::{FlatIndex, HnswIndex, IvfIndex, ShardedIndex, VectorIndex};
+use anyhow::{anyhow, Result};
+
+/// Built-in index kinds (also the registry's built-in keys).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexKind {
+    /// Exact brute-force search (the paper's configuration, the default).
+    Flat,
+    /// IVF approximate search (k-means coarse quantizer).
+    Ivf,
+    /// HNSW graph-based approximate search.
+    Hnsw,
+    /// Flat segments fanned out across N shards on the thread pool.
+    ShardedFlat,
+    /// IVF segments fanned out across N shards.
+    ShardedIvf,
+}
+
+impl IndexKind {
+    /// Every built-in kind.
+    pub const ALL: [IndexKind; 5] = [
+        IndexKind::Flat,
+        IndexKind::Ivf,
+        IndexKind::Hnsw,
+        IndexKind::ShardedFlat,
+        IndexKind::ShardedIvf,
+    ];
+
+    /// Stable string key (CLI flag values, TOML, registry keys).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            IndexKind::Flat => "flat",
+            IndexKind::Ivf => "ivf",
+            IndexKind::Hnsw => "hnsw",
+            IndexKind::ShardedFlat => "sharded-flat",
+            IndexKind::ShardedIvf => "sharded-ivf",
+        }
+    }
+}
+
+impl std::fmt::Display for IndexKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for IndexKind {
+    type Err = anyhow::Error;
+
+    /// Exhaustive over [`IndexKind::ALL`]; the error lists every valid kind.
+    fn from_str(s: &str) -> Result<Self> {
+        IndexKind::ALL
+            .iter()
+            .find(|k| k.as_str() == s)
+            .copied()
+            .ok_or_else(|| {
+                let valid: Vec<&str> = IndexKind::ALL.iter().map(|k| k.as_str()).collect();
+                anyhow!("unknown index kind {s:?}; valid kinds: {}", valid.join(", "))
+            })
+    }
+}
+
+/// Per-node index configuration (TOML `[nodes.index]` / CLI `--index`).
+///
+/// `kind` is a registry key, so it may also name a custom index registered
+/// through `CoordinatorBuilder::register_index`; unknown kinds fail at
+/// build time with the registry's key list. Parameters not used by the
+/// selected kind are ignored.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IndexSpec {
+    /// Registry key (`flat`, `ivf`, `hnsw`, `sharded-flat`, `sharded-ivf`,
+    /// or a custom registration).
+    pub kind: String,
+    /// IVF: number of k-means lists.
+    pub nlist: usize,
+    /// IVF: lists probed per query.
+    pub nprobe: usize,
+    /// Sharded kinds: number of shards.
+    pub shards: usize,
+    /// HNSW: max links per node (M).
+    pub hnsw_m: usize,
+    /// HNSW: construction beam width.
+    pub hnsw_ef_construction: usize,
+    /// HNSW: search beam width.
+    pub hnsw_ef_search: usize,
+}
+
+impl Default for IndexSpec {
+    fn default() -> Self {
+        IndexSpec {
+            kind: IndexKind::Flat.as_str().into(),
+            nlist: 64,
+            nprobe: 8,
+            shards: 4,
+            hnsw_m: 16,
+            hnsw_ef_construction: 100,
+            hnsw_ef_search: 64,
+        }
+    }
+}
+
+impl IndexSpec {
+    /// Default parameters with the given kind.
+    pub fn of_kind(kind: &str) -> Self {
+        IndexSpec { kind: kind.into(), ..IndexSpec::default() }
+    }
+}
+
+/// What an index factory gets to build from.
+pub struct IndexBuildCtx<'a> {
+    /// Embedding dimensionality.
+    pub dim: usize,
+    /// Deterministic seed (per node).
+    pub seed: u64,
+    /// The node's index configuration.
+    pub spec: &'a IndexSpec,
+}
+
+type IndexFactory = Box<dyn Fn(&IndexBuildCtx) -> Result<Box<dyn VectorIndex>> + Send + Sync>;
+
+/// String-keyed registry of index factories.
+pub struct IndexRegistry {
+    factories: BTreeMap<String, IndexFactory>,
+}
+
+impl IndexRegistry {
+    /// Empty registry (no built-ins).
+    pub fn empty() -> Self {
+        IndexRegistry { factories: BTreeMap::new() }
+    }
+
+    /// Registry with every [`IndexKind`] built-in registered.
+    pub fn with_builtins() -> Self {
+        let mut r = IndexRegistry::empty();
+        r.register(IndexKind::Flat.as_str(), |ctx| {
+            Ok(Box::new(FlatIndex::new(ctx.dim)))
+        });
+        r.register(IndexKind::Ivf.as_str(), |ctx| {
+            Ok(Box::new(IvfIndex::new(ctx.dim, ctx.spec.nlist, ctx.spec.nprobe)))
+        });
+        r.register(IndexKind::Hnsw.as_str(), |ctx| {
+            Ok(Box::new(HnswIndex::new(
+                ctx.dim,
+                ctx.spec.hnsw_m,
+                ctx.spec.hnsw_ef_construction,
+                ctx.spec.hnsw_ef_search,
+                ctx.seed,
+            )))
+        });
+        r.register(IndexKind::ShardedFlat.as_str(), |ctx| {
+            let dim = ctx.dim;
+            Ok(Box::new(ShardedIndex::from_fn(ctx.spec.shards, |_| FlatIndex::new(dim))))
+        });
+        r.register(IndexKind::ShardedIvf.as_str(), |ctx| {
+            let (dim, nlist, nprobe) = (ctx.dim, ctx.spec.nlist, ctx.spec.nprobe);
+            Ok(Box::new(ShardedIndex::from_fn(ctx.spec.shards, |_| {
+                IvfIndex::new(dim, nlist, nprobe)
+            })))
+        });
+        r
+    }
+
+    /// Register (or replace) a factory under `kind`.
+    pub fn register(
+        &mut self,
+        kind: &str,
+        factory: impl Fn(&IndexBuildCtx) -> Result<Box<dyn VectorIndex>> + Send + Sync + 'static,
+    ) {
+        self.factories.insert(kind.to_string(), Box::new(factory));
+    }
+
+    /// Registered keys, sorted.
+    pub fn kinds(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    /// Build an empty index of `kind`; the error lists every registered key.
+    pub fn build(&self, kind: &str, ctx: &IndexBuildCtx) -> Result<Box<dyn VectorIndex>> {
+        match self.factories.get(kind) {
+            Some(f) => f(ctx),
+            None => Err(anyhow!(
+                "unknown index kind {kind:?}; registered kinds: {}",
+                self.kinds().join(", ")
+            )),
+        }
+    }
+}
+
+impl Default for IndexRegistry {
+    fn default() -> Self {
+        IndexRegistry::with_builtins()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_and_errors_list_valid() {
+        for k in IndexKind::ALL {
+            assert_eq!(k.as_str().parse::<IndexKind>().unwrap(), k);
+        }
+        let err = "bogus".parse::<IndexKind>().unwrap_err().to_string();
+        assert!(err.contains("valid kinds") && err.contains("sharded-flat"), "{err}");
+    }
+
+    #[test]
+    fn builtins_build_every_kind() {
+        let reg = IndexRegistry::with_builtins();
+        let spec = IndexSpec::default();
+        for k in IndexKind::ALL {
+            let ctx = IndexBuildCtx { dim: 8, seed: 1, spec: &spec };
+            let idx = reg.build(k.as_str(), &ctx).unwrap();
+            assert!(idx.is_empty(), "{k}");
+        }
+    }
+
+    #[test]
+    fn unknown_kind_lists_registered_keys() {
+        let reg = IndexRegistry::with_builtins();
+        let spec = IndexSpec::default();
+        let err = reg
+            .build("nope", &IndexBuildCtx { dim: 8, seed: 1, spec: &spec })
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        for k in IndexKind::ALL {
+            assert!(err.contains(k.as_str()), "{err}");
+        }
+    }
+
+    #[test]
+    fn custom_registration() {
+        struct Null;
+        impl VectorIndex for Null {
+            fn add(&mut self, _id: usize, _v: &[f32]) {}
+            fn search(&self, _q: &[f32], _k: usize) -> Vec<super::super::Hit> {
+                Vec::new()
+            }
+            fn len(&self) -> usize {
+                0
+            }
+        }
+        let mut reg = IndexRegistry::with_builtins();
+        reg.register("null", |_| Ok(Box::new(Null)));
+        let spec = IndexSpec::of_kind("null");
+        let idx = reg.build("null", &IndexBuildCtx { dim: 4, seed: 0, spec: &spec }).unwrap();
+        assert!(idx.search(&[0.0; 4], 3).is_empty());
+        assert!(reg.kinds().contains(&"null".to_string()));
+    }
+}

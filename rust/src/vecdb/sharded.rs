@@ -1,0 +1,236 @@
+//! Generic sharded index: segments vectors across N inner indexes and
+//! fans batched searches out on the crate thread pool, merging per-query
+//! top-k with [`TopK`].
+//!
+//! Sharding an exact index stays exact — including tie-breaking: every
+//! shard scores the same dot products an unsharded index would, and the
+//! merge replays candidates in global insertion order, so equal scores
+//! keep the earlier-added vector exactly like a single `FlatIndex` scan.
+//! `ShardedIndex<FlatIndex>` returns the same top-k as a `FlatIndex`
+//! holding all vectors (property test in `tests/index_api.rs`).
+
+use std::collections::HashMap;
+
+use super::{Hit, TopK, VectorIndex};
+use crate::util::threadpool::parallel_map;
+
+/// Below this many score evaluations (stored vectors × queries) the shard
+/// fan-out runs inline: spawning scoped threads costs more than the scan.
+const PARALLEL_MIN_WORK: usize = 1 << 15;
+
+/// N inner indexes with round-robin ingestion and parallel batched search.
+pub struct ShardedIndex<I: VectorIndex> {
+    shards: Vec<I>,
+    /// Round-robin ingestion cursor.
+    next: usize,
+    /// Threads used for `search_batch` fan-out (default: one per shard).
+    threads: usize,
+    /// id → global insertion sequence (first occurrence wins, matching a
+    /// flat scan), for flat-identical tie-breaking in the merge.
+    seq: HashMap<usize, usize>,
+    /// Monotone insertion counter (≠ `seq.len()` once ids repeat).
+    count: usize,
+}
+
+impl<I: VectorIndex> ShardedIndex<I> {
+    /// Wrap pre-built (typically empty) shards. Panics when empty.
+    pub fn new(shards: Vec<I>) -> Self {
+        assert!(!shards.is_empty(), "ShardedIndex needs at least one shard");
+        let threads = shards.len();
+        ShardedIndex { shards, next: 0, threads, seq: HashMap::new(), count: 0 }
+    }
+
+    /// Build `n` shards from a constructor closure (shard index as arg).
+    pub fn from_fn(n: usize, f: impl FnMut(usize) -> I) -> Self {
+        let n = n.max(1);
+        ShardedIndex::new((0..n).map(f).collect())
+    }
+
+    /// Cap the fan-out thread count (≥1).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The inner shards (diagnostics / tests).
+    pub fn shards(&self) -> &[I] {
+        &self.shards
+    }
+
+    /// Merge per-shard hit lists into one global top-k: candidates are
+    /// replayed in insertion order so [`TopK`]'s earlier-push-wins ties
+    /// resolve identically to an unsharded scan.
+    fn merge(&self, lists: impl Iterator<Item = Hit>, k: usize) -> Vec<Hit> {
+        let mut cands: Vec<Hit> = lists.collect();
+        cands.sort_by_key(|h| self.seq.get(&h.id).copied().unwrap_or(usize::MAX));
+        let mut top = TopK::new(k);
+        for h in cands {
+            top.push(h);
+        }
+        top.into_vec()
+    }
+}
+
+impl<I: VectorIndex> VectorIndex for ShardedIndex<I> {
+    fn add(&mut self, id: usize, vector: &[f32]) {
+        self.seq.entry(id).or_insert(self.count);
+        self.count += 1;
+        self.shards[self.next].add(id, vector);
+        self.next = (self.next + 1) % self.shards.len();
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        self.merge(self.shards.iter().flat_map(|s| s.search(query, k)), k)
+    }
+
+    /// One `search_batch` per shard — fanned out on scoped threads when the
+    /// scan is large enough to amortize the spawns — then a per-query merge.
+    fn search_batch(&self, queries: &[Vec<f32>], k: usize) -> Vec<Vec<Hit>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let per_shard: Vec<Vec<Vec<Hit>>> =
+            if self.threads <= 1 || self.len() * queries.len() < PARALLEL_MIN_WORK {
+                self.shards.iter().map(|s| s.search_batch(queries, k)).collect()
+            } else {
+                parallel_map(self.shards.len(), self.threads, |s| {
+                    self.shards[s].search_batch(queries, k)
+                })
+            };
+        (0..queries.len())
+            .map(|q| self.merge(per_shard.iter().flat_map(|s| s[q].iter().copied()), k))
+            .collect()
+    }
+
+    fn finalize(&mut self, seed: u64) {
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            shard.finalize(seed ^ (i as u64).wrapping_mul(0x9E37_79B9));
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::embed::l2_normalize;
+    use crate::util::rng::Rng;
+    use crate::vecdb::{FlatIndex, IvfIndex};
+
+    fn random_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn sharded_flat_matches_flat() {
+        let mut rng = Rng::new(23);
+        let dim = 24;
+        let mut flat = FlatIndex::new(dim);
+        let mut sharded = ShardedIndex::from_fn(3, |_| FlatIndex::new(dim));
+        for i in 0..400 {
+            let v = random_unit(&mut rng, dim);
+            flat.add(i, &v);
+            sharded.add(i, &v);
+        }
+        assert_eq!(sharded.len(), 400);
+        assert_eq!(sharded.num_shards(), 3);
+        for _ in 0..20 {
+            let q = random_unit(&mut rng, dim);
+            assert_eq!(sharded.search(&q, 5), flat.search(&q, 5));
+        }
+    }
+
+    /// Duplicate embeddings: flat keeps the earliest-inserted on ties and
+    /// the sharded merge must reproduce that exactly.
+    #[test]
+    fn tie_breaking_matches_flat_insertion_order() {
+        let dim = 4;
+        let a = [1.0f32, 0.0, 0.0, 0.0];
+        let b = [0.0f32, 1.0, 0.0, 0.0];
+        let mut flat = FlatIndex::new(dim);
+        let mut sharded = ShardedIndex::from_fn(2, |_| FlatIndex::new(dim));
+        // ids 0..4 all share embedding `a`; ids 4..6 share `b`
+        for i in 0..6 {
+            let v = if i < 4 { &a } else { &b };
+            flat.add(i, v);
+            sharded.add(i, v);
+        }
+        for k in 1..=6 {
+            assert_eq!(sharded.search(&a, k), flat.search(&a, k), "k={k}");
+            assert_eq!(
+                sharded.search_batch(&[a.to_vec()], k)[0],
+                flat.search(&a, k),
+                "batched k={k}"
+            );
+        }
+    }
+
+    /// A re-added id keeps its first insertion rank, so ties against ids
+    /// added between the two insertions still resolve like a flat scan.
+    #[test]
+    fn duplicate_id_keeps_first_insertion_rank() {
+        let dim = 4;
+        let v = [1.0f32, 0.0, 0.0, 0.0];
+        let mut flat = FlatIndex::new(dim);
+        let mut sharded = ShardedIndex::from_fn(2, |_| FlatIndex::new(dim));
+        for id in [5usize, 5, 6] {
+            flat.add(id, &v);
+            sharded.add(id, &v);
+        }
+        // all three rows tie at 1.0; flat returns id 5 first
+        assert_eq!(sharded.search(&v, 2), flat.search(&v, 2));
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let mut rng = Rng::new(29);
+        let dim = 16;
+        let mut sharded = ShardedIndex::from_fn(4, |_| FlatIndex::new(dim));
+        for i in 0..300 {
+            sharded.add(i, &random_unit(&mut rng, dim));
+        }
+        let queries: Vec<Vec<f32>> = (0..32).map(|_| random_unit(&mut rng, dim)).collect();
+        let batched = sharded.search_batch(&queries, 5);
+        for (q, hits) in queries.iter().zip(&batched) {
+            assert_eq!(*hits, sharded.search(q, 5));
+        }
+        // force the parallel path too (work threshold is on vectors × queries)
+        let many: Vec<Vec<f32>> = (0..150).map(|_| random_unit(&mut rng, dim)).collect();
+        let wide = sharded.search_batch(&many, 5);
+        for (q, hits) in many.iter().zip(&wide) {
+            assert_eq!(*hits, sharded.search(q, 5));
+        }
+    }
+
+    #[test]
+    fn finalize_reaches_every_shard() {
+        let mut rng = Rng::new(31);
+        let dim = 8;
+        let mut sharded = ShardedIndex::from_fn(2, |_| IvfIndex::new(dim, 4, 4));
+        let vecs: Vec<Vec<f32>> = (0..200).map(|_| random_unit(&mut rng, dim)).collect();
+        for (i, v) in vecs.iter().enumerate() {
+            sharded.add(i, v);
+        }
+        sharded.finalize(7); // trains both IVF shards
+        let hits = sharded.search(&vecs[0], 1);
+        assert_eq!(hits[0].id, 0);
+    }
+
+    #[test]
+    fn empty_batch_and_single_shard() {
+        let sharded: ShardedIndex<FlatIndex> =
+            ShardedIndex::from_fn(0, |_| FlatIndex::new(4)); // clamps to 1
+        assert_eq!(sharded.num_shards(), 1);
+        assert!(sharded.search_batch(&[], 5).is_empty());
+        assert!(sharded.is_empty());
+    }
+}

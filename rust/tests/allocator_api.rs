@@ -230,14 +230,3 @@ fn misbehaving_allocator_is_rejected_not_panicking() {
     let err = co.run_slot(&qids).unwrap_err().to_string();
     assert!(err.contains("out-of-range"), "{err}");
 }
-
-#[test]
-#[allow(deprecated)]
-fn deprecated_build_shim_still_works() {
-    use coedge_rag::coordinator::Coordinator;
-    use coedge_rag::policy::ppo::Backend;
-    let mut co =
-        Coordinator::build(tiny_cfg(AllocatorKind::Oracle), Backend::Reference).unwrap();
-    let qids = co.sample_queries(10);
-    assert_eq!(co.run_slot(&qids).unwrap().outcomes.len(), 10);
-}

@@ -78,6 +78,27 @@ fn ppo_improves_over_time_and_beats_random() {
 }
 
 #[test]
+fn approximate_index_cluster_serves_with_sane_quality() {
+    use coedge_rag::config::IndexSpec;
+    // heterogeneous retrieval tier: hnsw + ivf nodes next to flat ones
+    let mut cfg = small_cfg(AllocatorKind::Oracle);
+    cfg.nodes[0].index = IndexSpec::of_kind("hnsw");
+    cfg.nodes[1].index = IndexSpec::of_kind("ivf");
+    cfg.nodes[1].index.nlist = 16;
+    cfg.nodes[1].index.nprobe = 8;
+    let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
+    let reports = co.run(2).unwrap();
+    for r in &reports {
+        assert_eq!(r.outcomes.len(), 200);
+        assert!(r.drop_rate < 0.2, "drop_rate={}", r.drop_rate);
+        // approximate retrieval still finds most gold docs under Oracle routing
+        let mean_rel: f64 =
+            r.outcomes.iter().map(|o| o.rel).sum::<f64>() / r.outcomes.len() as f64;
+        assert!(mean_rel > 0.5, "mean_rel={mean_rel}");
+    }
+}
+
+#[test]
 fn tight_slo_increases_drops() {
     let mut cfg = small_cfg(AllocatorKind::Oracle);
     cfg.queries_per_slot = 600;

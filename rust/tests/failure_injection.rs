@@ -31,6 +31,21 @@ fn impossible_slo_drops_everything_gracefully() {
 }
 
 #[test]
+fn failing_index_factory_surfaces_as_build_error() {
+    let mut cfg = tiny_cfg(AllocatorKind::Oracle);
+    for n in cfg.nodes.iter_mut() {
+        n.index = coedge_rag::config::IndexSpec::of_kind("degraded");
+    }
+    let err = CoordinatorBuilder::new(cfg)
+        .register_index("degraded", |_| anyhow::bail!("index backend unavailable"))
+        .build()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("index backend unavailable"), "{err}");
+}
+
+#[test]
 fn empty_slot_is_fine() {
     let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Ppo)).build().unwrap();
     let r = co.run_slot(&[]).unwrap();
