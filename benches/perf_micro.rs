@@ -195,7 +195,7 @@ fn main() {
         .build()
         .unwrap();
     let r = bench("e2e slot (1000 queries, 4 nodes)", 1, 8, || {
-        let qids = co.sample_queries(1000);
+        let qids = co.sample_queries(1000).unwrap();
         std::hint::black_box(co.run_slot(&qids).unwrap());
     });
     println!("{}", r.throughput_line(1000.0));

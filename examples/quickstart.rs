@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(&["slot", "R-L", "BERTScore", "drop%", "makespan(s)"]);
     for t in 0..slots {
-        let qids = co.sample_queries(co.cfg.queries_per_slot);
+        let qids = co.sample_queries(co.cfg.queries_per_slot).unwrap();
         let r = co.run_slot(&qids)?;
         table.row(vec![
             t.to_string(),

@@ -52,7 +52,12 @@ fn main() -> anyhow::Result<()> {
         addr_tx.send(addr).unwrap();
         serve(
             co,
-            ServerConfig { addr: addr.to_string(), batch_window_ms: 15, max_batch: 128 },
+            ServerConfig {
+                addr: addr.to_string(),
+                batch_window_ms: 15,
+                max_batch: 128,
+                ..Default::default()
+            },
             sd,
         )
         .unwrap();

@@ -25,6 +25,8 @@ use std::sync::Arc;
 #[derive(Clone, Debug)]
 pub struct QueryOutcome {
     pub qa_id: usize,
+    /// Serving node. `usize::MAX` means "never routed": the coordinator
+    /// shed the query because every node was down (always `dropped`).
     pub node: usize,
     /// Model size label index into the node pool; None if dropped before
     /// being served.
@@ -166,6 +168,20 @@ impl EdgeNode {
     /// Corpus size in chunks.
     pub fn corpus_size(&self) -> usize {
         self.doc_ids.len()
+    }
+
+    /// Live corpus update (scenario CorpusIngest): add documents to the
+    /// *running* index via `VectorIndex::add` — no rebuild, no
+    /// re-finalize. Post-train IVF routes new vectors online to the
+    /// nearest centroid and HNSW builds incrementally, so the documents
+    /// are searchable in the very next slot. Callers pass ids not yet
+    /// held by this node (the coordinator filters duplicates).
+    pub fn ingest_docs(&mut self, doc_ids: &[usize]) {
+        for &d in doc_ids {
+            self.index.add(d, &self.doc_embs[d]);
+            self.doc_ids.push(d);
+        }
+        self.doc_ids.sort_unstable();
     }
 
     /// Compute the slot plan for `n_queries` within `budget_s`

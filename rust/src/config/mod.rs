@@ -291,6 +291,12 @@ impl ExperimentConfig {
         if let Some(v) = root.get("inter_enabled").and_then(|v| v.as_bool()) {
             cfg.inter_enabled = v;
         }
+        // per-slot query domain mix from `[skew]` (kind + domain/frac/alpha)
+        if let Some(t) = doc.tables.get("skew") {
+            if let Some(p) = SkewPattern::from_table(t, "kind")? {
+                cfg.skew = p;
+            }
+        }
         // cluster-wide index default from `[index]`, overridable per node
         // via `[nodes.index]` (stored as `index.*` keys in the node table)
         let index_default = doc
@@ -455,6 +461,20 @@ shards = 8
         assert_eq!(cfg.nodes[1].index.kind, "sharded-flat");
         assert_eq!(cfg.nodes[1].index.shards, 8);
         assert_eq!(cfg.nodes[1].index.nlist, 48);
+    }
+
+    #[test]
+    fn from_toml_skew_table() {
+        let text = "[skew]\nkind = \"primary\"\ndomain = 3\nfrac = 0.75\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        match cfg.skew {
+            SkewPattern::Primary { domain: 3, frac } => assert!((frac - 0.75).abs() < 1e-12),
+            ref other => panic!("{other:?}"),
+        }
+        // bad kinds error with the valid list; absent [skew] keeps the preset
+        assert!(ExperimentConfig::from_toml("[skew]\nkind = \"nope\"\n").is_err());
+        let cfg = ExperimentConfig::from_toml("seed = 1\n").unwrap();
+        assert!(matches!(cfg.skew, SkewPattern::Dirichlet { .. }));
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::cluster::node::QueryOutcome;
 use crate::config::{AllocatorKind, ExperimentConfig};
 use crate::corpus::synth::SyntheticDataset;
 use crate::policy::ppo::{Backend, OnlinePolicy, PpoConfig};
-use crate::router::inter::inter_node_schedule;
+use crate::router::inter::inter_node_schedule_masked;
 use crate::text::embed::EMBED_DIM;
 use crate::util::rng::Rng;
 use crate::Result;
@@ -31,8 +31,14 @@ pub struct SlotContext<'a> {
     pub embs: &'a [Vec<f32>],
     /// The shared dataset (domains, gold docs, …).
     pub ds: &'a SyntheticDataset,
-    /// Effective per-node capacities C_n(L) for this slot's SLO.
+    /// Effective per-node capacities C_n(L) for this slot's SLO. A down
+    /// node's capacity is exactly 0.
     pub capacities: &'a [f64],
+    /// Per-node availability (scenario NodeDown/NodeUp). A down node MUST
+    /// receive no queries — `Coordinator::route` rejects assignments that
+    /// touch one. The coordinator guarantees at least one live node (an
+    /// all-down slot is shed before the allocator runs).
+    pub active: &'a [bool],
     /// The slot latency SLO (seconds).
     pub slo_s: f64,
     /// Whether Algorithm-1 capacity-aware reassignment is enabled.
@@ -48,6 +54,16 @@ impl SlotContext<'_> {
     /// Number of queries in the slot.
     pub fn batch(&self) -> usize {
         self.qa_ids.len()
+    }
+
+    /// Whether node `j` is live (out of range counts as down).
+    pub fn is_active(&self, j: usize) -> bool {
+        self.active.get(j).copied().unwrap_or(false)
+    }
+
+    /// Indices of the live nodes.
+    pub fn active_nodes(&self) -> impl Iterator<Item = usize> + '_ {
+        self.active.iter().enumerate().filter(|(_, &up)| up).map(|(j, _)| j)
     }
 }
 
@@ -243,9 +259,42 @@ impl Allocator for PpoAllocator {
         for e in ctx.embs {
             flat.extend_from_slice(e);
         }
-        let probs = self.policy.probs(&flat, b)?;
+        let mut probs = self.policy.probs(&flat, b)?;
+        // Down nodes must receive no queries: zero their matching
+        // probabilities s_i^t and renormalize each row over live nodes
+        // (the behavior distribution PPO learns from is the masked one).
+        if ctx.active.iter().any(|&up| !up) {
+            for row in probs.chunks_mut(n_nodes) {
+                let mut live = 0.0f32;
+                for (j, p) in row.iter_mut().enumerate() {
+                    if ctx.is_active(j) {
+                        live += *p;
+                    } else {
+                        *p = 0.0;
+                    }
+                }
+                if live > 0.0 {
+                    for p in row.iter_mut() {
+                        *p /= live;
+                    }
+                } else {
+                    // the policy put all mass on down nodes: uniform over
+                    // the live ones
+                    let n_live = ctx.active_nodes().count().max(1);
+                    for (j, p) in row.iter_mut().enumerate() {
+                        *p = if ctx.is_active(j) { 1.0 / n_live as f32 } else { 0.0 };
+                    }
+                }
+            }
+        }
         if ctx.inter_enabled {
-            let res = inter_node_schedule(&probs, n_nodes, ctx.capacities, &mut self.rng);
+            let res = inter_node_schedule_masked(
+                &probs,
+                n_nodes,
+                ctx.capacities,
+                ctx.active,
+                &mut self.rng,
+            );
             // behavior logp for PPO: probability of the final node
             let logps: Vec<f32> = res
                 .assignment
@@ -260,7 +309,21 @@ impl Allocator for PpoAllocator {
             let mut logps = Vec::with_capacity(b);
             for i in 0..b {
                 let row = &probs[i * n_nodes..(i + 1) * n_nodes];
-                let (a, lp) = self.policy.sample_action(row);
+                let (mut a, mut lp) = self.policy.sample_action(row);
+                if !ctx.is_active(a) {
+                    // numerically-degenerate sample off the masked
+                    // support: take the most probable live node instead
+                    let mut best = a;
+                    let mut best_p = f32::NEG_INFINITY;
+                    for (j, &p) in row.iter().enumerate() {
+                        if ctx.is_active(j) && p > best_p {
+                            best_p = p;
+                            best = j;
+                        }
+                    }
+                    a = best;
+                    lp = row[a].max(1e-12).ln();
+                }
                 node_of.push(a);
                 logps.push(lp);
             }

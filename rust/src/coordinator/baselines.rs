@@ -13,16 +13,22 @@ use crate::util::rng::Rng;
 use crate::Result;
 
 /// Overload scaling as in Algorithm 1 lines 5–8, for fairness with the
-/// capacity-aware PPO path.
-fn effective_caps(batch: usize, capacities: &[f64]) -> Vec<f64> {
-    let total_cap: f64 = capacities.iter().sum();
+/// capacity-aware PPO path. Down nodes are pinned to capacity 0 — even in
+/// the degenerate no-capacity case only live nodes open up.
+fn effective_caps(batch: usize, capacities: &[f64], active: &[bool]) -> Vec<f64> {
+    let caps: Vec<f64> = capacities
+        .iter()
+        .zip(active)
+        .map(|(&c, &up)| if up { c } else { 0.0 })
+        .collect();
+    let total_cap: f64 = caps.iter().sum();
     if (batch as f64) > total_cap && total_cap > 0.0 {
         let excess = batch as f64 - total_cap;
-        capacities.iter().map(|&c| c + c / total_cap * excess).collect()
+        caps.iter().map(|&c| c + c / total_cap * excess).collect()
     } else if total_cap <= 0.0 {
-        vec![f64::INFINITY; capacities.len()]
+        active.iter().map(|&up| if up { f64::INFINITY } else { 0.0 }).collect()
     } else {
-        capacities.to_vec()
+        caps
     }
 }
 
@@ -36,25 +42,30 @@ fn least_loaded(cands: impl Iterator<Item = usize>, counts: &[usize], caps: &[f6
 }
 
 /// Shared assignment loop: each query names a preferred node via
-/// `prefer(query_pos, qa_id, counts, caps)`; when capacity-aware routing
-/// is on and the preference is saturated, the query spills to the
-/// least-loaded node with residual capacity.
+/// `prefer(query_pos, qa_id, counts, caps)`. A down preference is always
+/// diverted to the least-loaded live node (capacity-aware or not — down
+/// nodes never receive queries); when capacity-aware routing is on and
+/// the preference is saturated, the query spills to the least-loaded live
+/// node with residual capacity.
 fn assign_with_spill(
     ctx: &SlotContext,
     mut prefer: impl FnMut(usize, usize, &[usize], &[f64]) -> usize,
 ) -> Assignment {
     let n_nodes = ctx.n_nodes();
-    let caps = effective_caps(ctx.batch(), ctx.capacities);
+    let caps = effective_caps(ctx.batch(), ctx.capacities, ctx.active);
     let mut counts = vec![0usize; n_nodes];
     let node_of = ctx
         .qa_ids
         .iter()
         .enumerate()
         .map(|(i, &q)| {
-            let p = prefer(i, q, &counts, &caps);
+            let mut p = prefer(i, q, &counts, &caps);
+            if !ctx.is_active(p) {
+                p = least_loaded(ctx.active_nodes(), &counts, &caps).unwrap_or(p);
+            }
             let a = if ctx.inter_enabled && (counts[p] as f64) >= caps[p] {
                 least_loaded(
-                    (0..n_nodes).filter(|&j| (counts[j] as f64) < caps[j]),
+                    ctx.active_nodes().filter(|&j| (counts[j] as f64) < caps[j]),
                     &counts,
                     &caps,
                 )
@@ -148,12 +159,14 @@ impl Allocator for OracleAllocator {
         let n_nodes = ctx.n_nodes();
         let gold = &self.gold_locs;
         Ok(assign_with_spill(ctx, |_, q, counts, caps| {
+            // prefer a *live* gold-holder (a down replica would otherwise
+            // always win least-loaded at load 0 and forfeit the gold doc
+            // to an arbitrary divert); fall back to the overall
+            // least-loaded node when no live replica exists
             let locs = &gold[q];
-            if locs.is_empty() {
-                least_loaded(0..n_nodes, counts, caps).unwrap()
-            } else {
-                least_loaded(locs.iter().copied(), counts, caps).unwrap()
-            }
+            least_loaded(locs.iter().copied().filter(|&j| ctx.is_active(j)), counts, caps)
+                .or_else(|| least_loaded(0..n_nodes, counts, caps))
+                .unwrap()
         }))
     }
 }

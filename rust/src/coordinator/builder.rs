@@ -51,7 +51,7 @@ use crate::Result;
 ///     .capacities(vec![CapacityModel { k: 50.0, b: 0.0 }; 4]) // skip profiling
 ///     .build()
 ///     .unwrap();
-/// let qids = co.sample_queries(6);
+/// let qids = co.sample_queries(6).unwrap();
 /// let report = co.run_slot(&qids).unwrap();
 /// assert!(report.outcomes.iter().all(|o| o.node == 0));
 /// ```
@@ -279,6 +279,7 @@ impl CoordinatorBuilder {
             }
         };
 
+        let n_nodes = nodes.len();
         Ok(Coordinator {
             rng: Rng::new(cfg.seed ^ 0xC00D),
             cfg,
@@ -291,6 +292,8 @@ impl CoordinatorBuilder {
             allocator,
             observers,
             slot_idx: 0,
+            active: vec![true; n_nodes],
+            cap_scale: vec![1.0; n_nodes],
         })
     }
 }

@@ -35,6 +35,7 @@ use crate::config::{ExperimentConfig, IntraStrategy};
 use crate::corpus::synth::SyntheticDataset;
 use crate::metrics::{Evaluator, QualityScores};
 use crate::router::capacity::CapacityModel;
+use crate::scenario::ScenarioEvent;
 use crate::text::embed::Embedder;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -64,6 +65,10 @@ pub struct SlotReport {
     pub feedback: FeedbackStats,
     /// Parameter-update rounds this slot (alias of `feedback.updates`).
     pub ppo_updates: usize,
+    /// Per-node availability when the slot ran (scenario NodeDown/NodeUp).
+    pub active: Vec<bool>,
+    /// The latency SLO the slot ran under (varies under SloChange events).
+    pub slo_s: f64,
 }
 
 /// What the serve phase produced, before aggregation.
@@ -94,6 +99,10 @@ pub struct Coordinator {
     observers: Vec<Box<dyn SlotObserver>>,
     rng: Rng,
     slot_idx: usize,
+    /// Per-node availability (scenario NodeDown/NodeUp); all up initially.
+    active: Vec<bool>,
+    /// Multiplicative per-node capacity scaling (scenario CapacityScale).
+    cap_scale: Vec<f64>,
 }
 
 impl Coordinator {
@@ -131,10 +140,12 @@ impl Coordinator {
         }
     }
 
-    /// Sample one slot's queries per the configured skew pattern.
-    pub fn sample_queries(&mut self, count: usize) -> Vec<usize> {
-        let mix = domain_mix(&self.cfg.skew, self.ds.num_domains(), &mut self.rng);
-        sample_slot_queries(&self.ds, &mix, count, &mut self.rng)
+    /// Sample one slot's queries per the configured skew pattern. Errors
+    /// when the pattern is invalid for the dataset (e.g. an out-of-range
+    /// primary domain injected by a SkewShift event).
+    pub fn sample_queries(&mut self, count: usize) -> Result<Vec<usize>> {
+        let mix = domain_mix(&self.cfg.skew, self.ds.num_domains(), &mut self.rng)?;
+        Ok(sample_slot_queries(&self.ds, &mix, count, &mut self.rng))
     }
 
     /// Phase ①: embed the slot's queries.
@@ -145,10 +156,113 @@ impl Coordinator {
             .collect()
     }
 
-    /// Effective per-node capacities C_n(L) at the current SLO.
+    /// Effective per-node capacities C_n(L) at the current SLO: a down
+    /// node contributes exactly 0; live nodes are scaled by any
+    /// CapacityScale factors applied so far.
     pub fn slot_capacities(&self) -> Vec<f64> {
         let slo = self.cfg.slo_s;
-        self.capacities.iter().map(|c| c.eval(slo)).collect()
+        self.capacities
+            .iter()
+            .enumerate()
+            .map(|(j, c)| if self.active[j] { c.eval(slo) * self.cap_scale[j] } else { 0.0 })
+            .collect()
+    }
+
+    /// Per-node availability mask (scenario NodeDown/NodeUp events).
+    pub fn node_active(&self) -> &[bool] {
+        &self.active
+    }
+
+    /// Mark a node down (`up = false`) or back up. Down nodes have
+    /// capacity 0 and must receive no queries — `route` enforces it.
+    pub fn set_node_active(&mut self, node: usize, up: bool) -> Result<()> {
+        anyhow::ensure!(
+            node < self.nodes.len(),
+            "node {node} out of range (cluster has {} nodes)",
+            self.nodes.len()
+        );
+        self.active[node] = up;
+        Ok(())
+    }
+
+    /// Multiply a node's effective capacity by `factor` (composes with
+    /// earlier scalings; <1 models degradation, >1 an upgrade).
+    pub fn scale_capacity(&mut self, node: usize, factor: f64) -> Result<()> {
+        anyhow::ensure!(
+            node < self.nodes.len(),
+            "node {node} out of range (cluster has {} nodes)",
+            self.nodes.len()
+        );
+        anyhow::ensure!(
+            factor.is_finite() && factor >= 0.0,
+            "capacity factor must be finite and >= 0, got {factor}"
+        );
+        self.cap_scale[node] *= factor;
+        Ok(())
+    }
+
+    /// Live corpus update: replicate up to `docs` documents of `domain`
+    /// (lowest ids first, deterministic) onto `node`, adding them to its
+    /// running index without a rebuild or re-finalize (post-train IVF
+    /// routes online; HNSW builds incrementally). Gold-document locations
+    /// are updated for diagnostics and future Oracle builds; an already
+    /// built OracleAllocator keeps its snapshot, which stays *valid*
+    /// (ingest only adds replicas) just not refreshed. Returns how many
+    /// documents were actually new to the node.
+    pub fn ingest_corpus(&mut self, node: usize, domain: usize, docs: usize) -> Result<usize> {
+        anyhow::ensure!(
+            node < self.nodes.len(),
+            "node {node} out of range (cluster has {} nodes)",
+            self.nodes.len()
+        );
+        let nd = self.ds.num_domains();
+        anyhow::ensure!(domain < nd, "domain {domain} out of range (dataset has {nd} domains)");
+        let held: std::collections::HashSet<usize> =
+            self.nodes[node].doc_ids.iter().copied().collect();
+        let new_ids: Vec<usize> = self
+            .ds
+            .docs_of_domain(domain)
+            .into_iter()
+            .filter(|d| !held.contains(d))
+            .take(docs)
+            .collect();
+        self.nodes[node].ingest_docs(&new_ids);
+        let ingested: std::collections::HashSet<usize> = new_ids.iter().copied().collect();
+        for qa in &self.ds.qa_pairs {
+            if ingested.contains(&qa.gold_doc) && !self.gold_locs[qa.id].contains(&node) {
+                self.gold_locs[qa.id].push(node);
+                self.gold_locs[qa.id].sort_unstable();
+            }
+        }
+        Ok(new_ids.len())
+    }
+
+    /// Apply one scenario event (between slots). `BurstOverride` is a
+    /// no-op here — it is a per-slot load override consumed by the
+    /// [`ScenarioRunner`](crate::scenario::ScenarioRunner)'s arrival loop.
+    pub fn apply_event(&mut self, event: &ScenarioEvent) -> Result<()> {
+        match event {
+            ScenarioEvent::NodeDown { node } => self.set_node_active(*node, false),
+            ScenarioEvent::NodeUp { node } => self.set_node_active(*node, true),
+            ScenarioEvent::CapacityScale { node, factor } => self.scale_capacity(*node, *factor),
+            ScenarioEvent::SloChange { slo_s } => {
+                anyhow::ensure!(
+                    slo_s.is_finite() && *slo_s > 0.0,
+                    "slo change must be positive, got {slo_s}"
+                );
+                self.set_slo(*slo_s);
+                Ok(())
+            }
+            ScenarioEvent::CorpusIngest { node, docs, domain } => {
+                self.ingest_corpus(*node, *domain, *docs).map(|_| ())
+            }
+            ScenarioEvent::BurstOverride { .. } => Ok(()),
+            ScenarioEvent::SkewShift { pattern } => {
+                pattern.validate(self.ds.num_domains())?;
+                self.cfg.skew = pattern.clone();
+                Ok(())
+            }
+        }
     }
 
     /// Phase ②: identification + inter-node routing via the allocator.
@@ -165,6 +279,7 @@ impl Coordinator {
             embs,
             ds: &self.ds,
             capacities: caps,
+            active: &self.active,
             slo_s: self.cfg.slo_s,
             inter_enabled: self.cfg.inter_enabled,
         };
@@ -181,6 +296,12 @@ impl Coordinator {
                 "allocator {:?} routed to node {bad} (cluster has {})",
                 self.allocator.name(),
                 self.nodes.len()
+            );
+        }
+        if let Some(&bad) = assignment.node_of.iter().find(|&&a| !self.active[a]) {
+            anyhow::bail!(
+                "allocator {:?} routed to down node {bad}",
+                self.allocator.name()
             );
         }
         Ok(assignment)
@@ -269,16 +390,59 @@ impl Coordinator {
             embs,
             ds: &self.ds,
             capacities: caps,
+            active: &self.active,
             slo_s: self.cfg.slo_s,
             inter_enabled: self.cfg.inter_enabled,
         };
         self.allocator.observe(&ctx, assignment, outcomes)
     }
 
+    /// All nodes down: shed the whole slot at the coordinator. There is
+    /// nothing to route to, so the allocator is bypassed; every query is
+    /// dropped with `node == usize::MAX` ("never routed") and proportions
+    /// are all zero. Observers still receive the closing `SlotEnd`.
+    fn shed_slot(&mut self, slot: usize, qa_ids: &[usize]) -> Result<SlotReport> {
+        let b = qa_ids.len();
+        let n_nodes = self.nodes.len();
+        let outcomes: Vec<QueryOutcome> = qa_ids
+            .iter()
+            .map(|&q| QueryOutcome {
+                qa_id: q,
+                node: usize::MAX,
+                model_idx: None,
+                dropped: true,
+                rel: 0.0,
+                scores: QualityScores::zeros(),
+                feedback: 0.0,
+                latency_s: self.cfg.slo_s,
+            })
+            .collect();
+        let report = SlotReport {
+            queries: b,
+            mean_scores: QualityScores::default(),
+            drop_rate: if b == 0 { 0.0 } else { 1.0 },
+            latency_s: 0.0,
+            proportions: vec![0.0; n_nodes],
+            node_search_s: vec![(0.0, 0.0); n_nodes],
+            size_query_share: [0.0; 3],
+            size_mem_share: [0.0; 3],
+            outcomes,
+            feedback: FeedbackStats::default(),
+            ppo_updates: 0,
+            active: self.active.clone(),
+            slo_s: self.cfg.slo_s,
+        };
+        self.emit(&SlotEvent::SlotEnd { slot, report: &report });
+        Ok(report)
+    }
+
     /// Run one complete slot for the given QA ids.
     pub fn run_slot(&mut self, qa_ids: &[usize]) -> Result<SlotReport> {
         let slot = self.slot_idx;
         self.slot_idx += 1;
+        if !self.active.iter().any(|&a| a) {
+            return self.shed_slot(slot, qa_ids);
+        }
         let b = qa_ids.len();
         let n_nodes = self.nodes.len();
 
@@ -332,16 +496,20 @@ impl Coordinator {
             outcomes,
             feedback: stats,
             ppo_updates: stats.updates,
+            active: self.active.clone(),
+            slo_s: self.cfg.slo_s,
         };
         self.emit(&SlotEvent::SlotEnd { slot, report: &report });
         Ok(report)
     }
 
     /// Run `slots` slots of `queries_per_slot`, returning all reports.
+    /// (Static load; use [`ScenarioRunner`](crate::scenario::ScenarioRunner)
+    /// for trace-driven fluctuating load and mid-run cluster dynamics.)
     pub fn run(&mut self, slots: usize) -> Result<Vec<SlotReport>> {
         let mut reports = Vec::with_capacity(slots);
         for _ in 0..slots {
-            let qids = self.sample_queries(self.cfg.queries_per_slot);
+            let qids = self.sample_queries(self.cfg.queries_per_slot)?;
             reports.push(self.run_slot(&qids)?);
         }
         Ok(reports)

@@ -35,6 +35,7 @@ pub mod router;
 pub mod intranode;
 pub mod cluster;
 pub mod coordinator;
+pub mod scenario;
 pub mod server;
 pub mod bench_harness;
 

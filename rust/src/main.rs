@@ -2,9 +2,14 @@
 //!
 //! Subcommands:
 //!   run      [--config FILE] [--slots N] [--allocator KIND] [--slo S]
-//!            [--index KIND] [--shards N]
-//!            run a full experiment and print per-slot results
-//!   serve    [--addr A] [--config FILE]      start the TCP serving front-end
+//!            [--index KIND] [--shards N] [--scenario FILE]
+//!            [--transcript FILE]
+//!            run a full experiment and print per-slot results; with
+//!            --scenario, replay a cluster-dynamics timeline (node churn,
+//!            bursts, SLO changes, live corpus ingest) under its arrival
+//!            trace and optionally dump the byte-stable run transcript
+//!   serve    [--addr A] [--config FILE] [--transcript FILE]
+//!            start the TCP serving front-end
 //!   profile  [--config FILE]                 print per-node capacity models
 //!   info                                     artifact/runtime diagnostics
 
@@ -16,6 +21,7 @@ use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IndexKind
 use coedge_rag::coordinator::{AllocatorRegistry, CoordinatorBuilder};
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
+use coedge_rag::scenario::{Scenario, ScenarioRunner};
 use coedge_rag::server::{serve, ServerConfig};
 use coedge_rag::util::logging;
 
@@ -99,6 +105,9 @@ fn backend() -> Backend {
 
 fn cmd_run(flags: std::collections::HashMap<String, String>) {
     let cfg = load_config(&flags);
+    if let Some(path) = flags.get("scenario") {
+        return cmd_run_scenario(cfg, path, flags.get("transcript"));
+    }
     let slots = cfg.slots;
     eprintln!(
         "[coedge] running {slots} slots × {} queries, SLO {}s, allocator {:?}",
@@ -110,7 +119,7 @@ fn cmd_run(flags: std::collections::HashMap<String, String>) {
         "slot", "queries", "R-L", "BERT", "drop%", "latency(s)", "p_j", "ppo_upd",
     ]);
     for t in 0..slots {
-        let qids = co.sample_queries(co.cfg.queries_per_slot);
+        let qids = co.sample_queries(co.cfg.queries_per_slot).expect("sample queries");
         let r = co.run_slot(&qids).expect("slot");
         table.row(vec![
             format!("{t}"),
@@ -124,6 +133,52 @@ fn cmd_run(flags: std::collections::HashMap<String, String>) {
         ]);
     }
     table.print();
+}
+
+/// `run --scenario FILE`: replay a cluster-dynamics timeline under its
+/// arrival trace, printing per-slot events/availability next to the usual
+/// quality columns; `--transcript FILE` dumps the byte-stable JSONL.
+fn cmd_run_scenario(cfg: ExperimentConfig, path: &str, transcript: Option<&String>) {
+    let text = std::fs::read_to_string(path).expect("read scenario");
+    let sc = Scenario::from_toml(&text).unwrap_or_else(|e| {
+        eprintln!("[coedge] --scenario: {e}");
+        std::process::exit(2);
+    });
+    eprintln!(
+        "[coedge] scenario {:?}: {} events over {} slots, allocator {:?}",
+        sc.name,
+        sc.events.len(),
+        sc.slots.unwrap_or(cfg.slots),
+        cfg.allocator
+    );
+    let mut co =
+        CoordinatorBuilder::new(cfg).backend(backend()).build().expect("build coordinator");
+    let runner = ScenarioRunner::new(sc);
+    let run = runner.run(&mut co).unwrap_or_else(|e| {
+        eprintln!("[coedge] scenario run: {e}");
+        std::process::exit(2);
+    });
+    let mut table = Table::new(&[
+        "slot", "queries", "events", "active", "R-L", "drop%", "p_j",
+    ]);
+    for (t, r) in run.reports.iter().enumerate() {
+        let events: Vec<String> =
+            runner.scenario().events_at(t).map(|e| e.event.label()).collect();
+        table.row(vec![
+            format!("{t}"),
+            format!("{}", r.queries),
+            if events.is_empty() { "-".into() } else { events.join(" ") },
+            r.active.iter().map(|&a| if a { '#' } else { '.' }).collect::<String>(),
+            format!("{:.3}", r.mean_scores.rouge_l),
+            format!("{:.2}", r.drop_rate * 100.0),
+            r.proportions.iter().map(|p| format!("{p:.2}")).collect::<Vec<_>>().join("/"),
+        ]);
+    }
+    table.print();
+    if let Some(out) = transcript {
+        run.transcript.write_to(std::path::Path::new(out)).expect("write transcript");
+        eprintln!("[coedge] transcript written to {out}");
+    }
 }
 
 fn cmd_profile(flags: std::collections::HashMap<String, String>) {
@@ -150,11 +205,13 @@ fn cmd_profile(flags: std::collections::HashMap<String, String>) {
 fn cmd_serve(flags: std::collections::HashMap<String, String>) {
     let cfg = load_config(&flags);
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7717".into());
+    let transcript_path = flags.get("transcript").map(std::path::PathBuf::from);
     let co =
         CoordinatorBuilder::new(cfg).backend(backend()).build().expect("build coordinator");
     let shutdown = Arc::new(AtomicBool::new(false));
     eprintln!("[coedge] serving on {addr} (line-JSON; send {{\"id\":1,\"qa_id\":0}})");
-    serve(co, ServerConfig { addr, ..Default::default() }, shutdown).expect("serve");
+    serve(co, ServerConfig { addr, transcript_path, ..Default::default() }, shutdown)
+        .expect("serve");
 }
 
 fn cmd_info() {
@@ -200,6 +257,7 @@ fn main() {
                 "              [--index {}] [--shards N]",
                 IndexKind::ALL.map(|k| k.as_str()).join("|")
             );
+            println!("              [--scenario FILE] [--transcript FILE]");
         }
     }
 }

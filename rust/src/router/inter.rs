@@ -22,7 +22,7 @@ pub struct InterScheduleResult {
     pub capacities: Vec<f64>,
 }
 
-/// Run Algorithm 1.
+/// Run Algorithm 1 with every node live.
 ///
 /// `probs` is row-major `[B × N]` (each row sums to 1);
 /// `capacities` is C_n(L^t) per node.
@@ -32,22 +32,68 @@ pub fn inter_node_schedule(
     capacities: &[f64],
     rng: &mut Rng,
 ) -> InterScheduleResult {
+    inter_node_schedule_masked(probs, n_nodes, capacities, &vec![true; n_nodes], rng)
+}
+
+/// Weighted sample that can never land on a down node: down nodes carry
+/// weight 0, and the one residual edge case of `sample_weighted` (a draw
+/// of exactly 0 selecting a zero-weight index) is diverted to the live
+/// node with the largest weight (ties → lowest index). No extra RNG draws.
+fn sample_live(rng: &mut Rng, weights: &[f64], active: &[bool]) -> usize {
+    let a = rng.sample_weighted(weights);
+    if active[a] && weights[a] > 0.0 {
+        return a;
+    }
+    let mut best = a;
+    let mut best_w = f64::NEG_INFINITY;
+    for (j, (&w, &up)) in weights.iter().zip(active).enumerate() {
+        if up && w > best_w {
+            best_w = w;
+            best = j;
+        }
+    }
+    best
+}
+
+/// Run Algorithm 1 under a node-availability mask (scenario
+/// NodeDown/NodeUp events): a down node has effective capacity 0, carries
+/// no sampling weight, and is excluded from the degenerate even-split, so
+/// it receives exactly zero queries. At least one node must be live (the
+/// coordinator sheds all-down slots before routing).
+pub fn inter_node_schedule_masked(
+    probs: &[f32],
+    n_nodes: usize,
+    capacities: &[f64],
+    active: &[bool],
+    rng: &mut Rng,
+) -> InterScheduleResult {
     assert_eq!(capacities.len(), n_nodes);
+    assert_eq!(active.len(), n_nodes);
     assert!(n_nodes > 0);
-    let b = if n_nodes == 0 { 0 } else { probs.len() / n_nodes };
+    assert!(active.iter().any(|&up| up), "inter_node_schedule: every node is down");
+    let b = probs.len() / n_nodes;
     assert_eq!(probs.len(), b * n_nodes);
 
-    // Lines 5–8: proportional scaling under cluster overload.
-    let total_cap: f64 = capacities.iter().sum();
-    let mut caps: Vec<f64> = capacities.to_vec();
+    // Lines 5–8: proportional scaling under cluster overload, over the
+    // live nodes only (a down node's capacity is pinned to 0).
+    let mut caps: Vec<f64> = capacities
+        .iter()
+        .zip(active)
+        .map(|(&c, &up)| if up { c } else { 0.0 })
+        .collect();
+    let total_cap: f64 = caps.iter().sum();
     if b as f64 > total_cap && total_cap > 0.0 {
         let excess = b as f64 - total_cap;
         for c in caps.iter_mut() {
             *c += (*c / total_cap) * excess;
         }
     } else if total_cap <= 0.0 {
-        // degenerate: no capacity anywhere — split evenly
-        caps = vec![(b as f64 / n_nodes as f64).ceil(); n_nodes];
+        // degenerate: no capacity anywhere — split evenly over live nodes
+        let n_live = active.iter().filter(|&&up| up).count();
+        let even = (b as f64 / n_live as f64).ceil();
+        for (c, &up) in caps.iter_mut().zip(active) {
+            *c = if up { even } else { 0.0 };
+        }
     }
 
     let mut counts = vec![0usize; n_nodes];
@@ -55,25 +101,41 @@ pub fn inter_node_schedule(
     let mut weights = vec![0f64; n_nodes];
     for i in 0..b {
         let row = &probs[i * n_nodes..(i + 1) * n_nodes];
-        for (w, &p) in weights.iter_mut().zip(row) {
-            *w = p as f64;
+        let mut live_mass = 0.0;
+        for (j, (w, &p)) in weights.iter_mut().zip(row).enumerate() {
+            *w = if active[j] { p as f64 } else { 0.0 };
+            live_mass += *w;
         }
-        let mut a = rng.sample_weighted(&weights);
+        if live_mass <= 0.0 {
+            // all probability mass sat on down nodes: uniform over live
+            for (w, &up) in weights.iter_mut().zip(active) {
+                *w = if up { 1.0 } else { 0.0 };
+            }
+        }
+        let mut a = sample_live(rng, &weights, active);
         // Line 11: capacity-aware validation + renormalized reassignment.
         if (counts[a] as f64) >= caps[a] {
             let mut any = false;
             for j in 0..n_nodes {
-                if (counts[j] as f64) < caps[j] {
+                if active[j] && (counts[j] as f64) < caps[j] {
                     any = true;
                 } else {
                     weights[j] = 0.0;
                 }
             }
             if any {
-                a = rng.sample_weighted(&weights);
+                if weights.iter().sum::<f64>() <= 0.0 {
+                    // residual capacity only at zero-probability nodes
+                    for j in 0..n_nodes {
+                        if active[j] && (counts[j] as f64) < caps[j] {
+                            weights[j] = 1.0;
+                        }
+                    }
+                }
+                a = sample_live(rng, &weights, active);
             }
-            // else: every node saturated (can only happen from rounding;
-            // keep the original sample)
+            // else: every live node saturated (can only happen from
+            // rounding; keep the original sample — live by construction)
         }
         counts[a] += 1;
         assignment.push(a);
@@ -159,5 +221,57 @@ mod tests {
         for &c in &res.counts {
             assert!(c >= 20 && c <= 40, "{:?}", res.counts);
         }
+    }
+
+    #[test]
+    fn masked_down_node_receives_nothing_even_when_preferred() {
+        let mut rng = Rng::new(11);
+        // every query loves node 0, but node 0 is down
+        let res = inter_node_schedule_masked(
+            &skewed_probs(400, 3, 0, 0.9),
+            3,
+            &[500.0; 3],
+            &[false, true, true],
+            &mut rng,
+        );
+        assert_eq!(res.counts[0], 0);
+        assert!(res.assignment.iter().all(|&a| a != 0));
+        assert_eq!(res.counts.iter().sum::<usize>(), 400);
+        assert_eq!(res.capacities[0], 0.0);
+    }
+
+    #[test]
+    fn masked_degenerate_capacity_splits_over_live_nodes_only() {
+        let mut rng = Rng::new(12);
+        let res = inter_node_schedule_masked(
+            &uniform_probs(90, 3),
+            3,
+            &[0.0; 3],
+            &[true, false, true],
+            &mut rng,
+        );
+        assert_eq!(res.counts[1], 0, "{:?}", res.counts);
+        assert_eq!(res.counts.iter().sum::<usize>(), 90);
+        // overload still hits only the live nodes' scaled capacities
+        assert_eq!(res.capacities[1], 0.0);
+    }
+
+    #[test]
+    fn unmasked_wrapper_is_the_all_live_mask() {
+        let probs = skewed_probs(200, 4, 2, 0.7);
+        let caps = [60.0, 70.0, 10.0, 80.0];
+        let mut r1 = Rng::new(13);
+        let mut r2 = Rng::new(13);
+        let a = inter_node_schedule(&probs, 4, &caps, &mut r1);
+        let b = inter_node_schedule_masked(&probs, 4, &caps, &[true; 4], &mut r2);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.counts, b.counts);
+    }
+
+    #[test]
+    #[should_panic(expected = "every node is down")]
+    fn masked_all_down_panics() {
+        let mut rng = Rng::new(14);
+        inter_node_schedule_masked(&uniform_probs(4, 2), 2, &[10.0; 2], &[false, false], &mut rng);
     }
 }

@@ -1,0 +1,374 @@
+//! Typed cluster-dynamics events and the slot-indexed [`Scenario`]
+//! timeline, parsed from `[scenario]` / `[scenario.trace]` /
+//! `[[scenario.events]]` TOML tables (standalone scenario files or tables
+//! embedded in an experiment config).
+
+use crate::util::toml::{Table, TomlDoc};
+use crate::workload::{SkewPattern, TraceConfig};
+use crate::Result;
+use anyhow::anyhow;
+
+/// One cluster-dynamics event, applied by the coordinator between slots
+/// (see [`Coordinator::apply_event`](crate::coordinator::Coordinator::apply_event)).
+#[derive(Clone, Debug)]
+pub enum ScenarioEvent {
+    /// Take a node offline: capacity 0, no queries routed to it.
+    NodeDown { node: usize },
+    /// Bring a node back online.
+    NodeUp { node: usize },
+    /// Multiply a node's effective capacity by `factor` (<1 degradation,
+    /// >1 upgrade; factors compose across events).
+    CapacityScale { node: usize, factor: f64 },
+    /// Change the per-slot latency SLO L^t.
+    SloChange { slo_s: f64 },
+    /// Live corpus update: replicate up to `docs` documents of `domain`
+    /// onto `node` via `VectorIndex::add` — no rebuild, no re-finalize.
+    CorpusIngest { node: usize, docs: usize, domain: usize },
+    /// Override this slot's arrival load with an exact query count.
+    BurstOverride { queries: usize },
+    /// Switch the per-slot query domain mix.
+    SkewShift { pattern: SkewPattern },
+}
+
+impl ScenarioEvent {
+    /// Valid `kind` strings for `[[scenario.events]]` tables.
+    pub const KINDS: [&'static str; 7] = [
+        "node-down",
+        "node-up",
+        "capacity-scale",
+        "slo-change",
+        "corpus-ingest",
+        "burst",
+        "skew-shift",
+    ];
+
+    /// Stable kind key (the TOML `kind` value).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ScenarioEvent::NodeDown { .. } => "node-down",
+            ScenarioEvent::NodeUp { .. } => "node-up",
+            ScenarioEvent::CapacityScale { .. } => "capacity-scale",
+            ScenarioEvent::SloChange { .. } => "slo-change",
+            ScenarioEvent::CorpusIngest { .. } => "corpus-ingest",
+            ScenarioEvent::BurstOverride { .. } => "burst",
+            ScenarioEvent::SkewShift { .. } => "skew-shift",
+        }
+    }
+
+    /// Compact label for transcripts and CLI tables, e.g. `node-down(2)`.
+    pub fn label(&self) -> String {
+        match self {
+            ScenarioEvent::NodeDown { node } => format!("node-down({node})"),
+            ScenarioEvent::NodeUp { node } => format!("node-up({node})"),
+            ScenarioEvent::CapacityScale { node, factor } => {
+                format!("capacity-scale({node},x{factor})")
+            }
+            ScenarioEvent::SloChange { slo_s } => format!("slo-change({slo_s})"),
+            ScenarioEvent::CorpusIngest { node, docs, domain } => {
+                format!("corpus-ingest({node},{docs}@d{domain})")
+            }
+            ScenarioEvent::BurstOverride { queries } => format!("burst({queries})"),
+            ScenarioEvent::SkewShift { pattern } => {
+                let p = match pattern {
+                    SkewPattern::Balanced => "balanced".to_string(),
+                    SkewPattern::Primary { domain, frac } => format!("primary:d{domain}@{frac}"),
+                    SkewPattern::Dirichlet { alpha } => format!("dirichlet:{alpha}"),
+                };
+                format!("skew-shift({p})")
+            }
+        }
+    }
+}
+
+/// An event scheduled for a specific slot.
+#[derive(Clone, Debug)]
+pub struct TimedEvent {
+    /// 0-based slot the event fires *before* (events apply between slots).
+    pub slot: usize,
+    pub event: ScenarioEvent,
+}
+
+impl TimedEvent {
+    /// Parse one `[[scenario.events]]` table. Unknown kinds and missing
+    /// required keys are clear errors naming the valid alternatives.
+    pub fn from_table(t: &Table) -> Result<TimedEvent> {
+        let slot = t
+            .get("slot")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("scenario event missing 'slot'"))?;
+        let kind = t
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("scenario event at slot {slot} missing 'kind'"))?;
+        let node = || {
+            t.get("node")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("{kind} at slot {slot}: missing 'node'"))
+        };
+        let f64_key = |key: &str| {
+            t.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("{kind} at slot {slot}: missing '{key}'"))
+        };
+        let usize_key = |key: &str| {
+            t.get(key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("{kind} at slot {slot}: missing '{key}'"))
+        };
+        let event = match kind {
+            "node-down" => ScenarioEvent::NodeDown { node: node()? },
+            "node-up" => ScenarioEvent::NodeUp { node: node()? },
+            "capacity-scale" => {
+                ScenarioEvent::CapacityScale { node: node()?, factor: f64_key("factor")? }
+            }
+            "slo-change" => ScenarioEvent::SloChange { slo_s: f64_key("slo_s")? },
+            "corpus-ingest" => ScenarioEvent::CorpusIngest {
+                node: node()?,
+                docs: usize_key("docs")?,
+                domain: usize_key("domain")?,
+            },
+            "burst" => ScenarioEvent::BurstOverride { queries: usize_key("queries")? },
+            "skew-shift" => ScenarioEvent::SkewShift {
+                pattern: SkewPattern::from_table(t, "skew")?
+                    .ok_or_else(|| anyhow!("skew-shift at slot {slot}: missing 'skew'"))?,
+            },
+            other => anyhow::bail!(
+                "unknown scenario event kind {other:?} at slot {slot}; valid kinds: {}",
+                ScenarioEvent::KINDS.join(", ")
+            ),
+        };
+        Ok(TimedEvent { slot, event })
+    }
+}
+
+/// A slot-indexed timeline of cluster dynamics plus an optional arrival
+/// trace — everything `Coordinator::run` holds fixed, made fluctuating.
+#[derive(Clone, Debug, Default)]
+pub struct Scenario {
+    pub name: String,
+    /// Slots to run; `None` falls back to the experiment config's count.
+    pub slots: Option<usize>,
+    /// Arrival trace driving per-slot load; `None` keeps the config's
+    /// fixed `queries_per_slot`. (`trace.slots` is overridden by the
+    /// resolved slot count at run time.)
+    pub trace: Option<TraceConfig>,
+    /// Events sorted by slot (same-slot events keep file order).
+    pub events: Vec<TimedEvent>,
+}
+
+impl Scenario {
+    /// Parse a scenario from TOML text (a standalone `--scenario` file or
+    /// a full experiment config embedding the `[scenario]` tables).
+    pub fn from_toml(text: &str) -> Result<Scenario> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("scenario toml: {e}"))?;
+        Scenario::from_doc(&doc)
+    }
+
+    /// Read the scenario tables out of a parsed document.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Scenario> {
+        let mut sc = Scenario::default();
+        if let Some(t) = doc.tables.get("scenario") {
+            if let Some(v) = t.get("name").and_then(|v| v.as_str()) {
+                sc.name = v.to_string();
+            }
+            if let Some(v) = t.get("slots").and_then(|v| v.as_usize()) {
+                sc.slots = Some(v);
+            }
+        }
+        if let Some(t) = doc.tables.get("scenario.trace") {
+            let mut tc = TraceConfig::default();
+            if let Some(v) = t.get("base").and_then(|v| v.as_usize()) {
+                tc.base = v;
+            }
+            if let Some(v) = t.get("period").and_then(|v| v.as_usize()) {
+                tc.period = v;
+            }
+            if let Some(v) = t.get("diurnal_amp").and_then(|v| v.as_f64()) {
+                tc.diurnal_amp = v;
+            }
+            if let Some(v) = t.get("burst_prob").and_then(|v| v.as_f64()) {
+                tc.burst_prob = v;
+            }
+            if let Some(v) = t.get("burst_mult").and_then(|v| v.as_f64()) {
+                tc.burst_mult = v;
+            }
+            if let Some(v) = t.get("seed").and_then(|v| v.as_i64()) {
+                tc.seed = v as u64;
+            }
+            sc.trace = Some(tc);
+        }
+        for t in doc.array("scenario.events") {
+            sc.events.push(TimedEvent::from_table(t)?);
+        }
+        // stable: same-slot events keep file order
+        sc.events.sort_by_key(|e| e.slot);
+        Ok(sc)
+    }
+
+    /// Events scheduled for `slot`, in file order.
+    pub fn events_at(&self, slot: usize) -> impl Iterator<Item = &TimedEvent> {
+        self.events.iter().filter(move |e| e.slot == slot)
+    }
+
+    /// Bounds-check every event against a built cluster — typo'd node or
+    /// domain indices fail before the run starts, not mid-replay.
+    pub fn validate(&self, n_nodes: usize, n_domains: usize) -> Result<()> {
+        let check_node = |node: usize, kind: &str, slot: usize| {
+            anyhow::ensure!(
+                node < n_nodes,
+                "{kind} at slot {slot}: node {node} out of range (cluster has {n_nodes} nodes)"
+            );
+            Ok(())
+        };
+        for te in &self.events {
+            let (kind, slot) = (te.event.kind(), te.slot);
+            match &te.event {
+                ScenarioEvent::NodeDown { node } | ScenarioEvent::NodeUp { node } => {
+                    check_node(*node, kind, slot)?;
+                }
+                ScenarioEvent::CapacityScale { node, factor } => {
+                    check_node(*node, kind, slot)?;
+                    anyhow::ensure!(
+                        factor.is_finite() && *factor >= 0.0,
+                        "{kind} at slot {slot}: factor must be finite and >= 0, got {factor}"
+                    );
+                }
+                ScenarioEvent::SloChange { slo_s } => {
+                    anyhow::ensure!(
+                        slo_s.is_finite() && *slo_s > 0.0,
+                        "{kind} at slot {slot}: slo_s must be positive, got {slo_s}"
+                    );
+                }
+                ScenarioEvent::CorpusIngest { node, domain, .. } => {
+                    check_node(*node, kind, slot)?;
+                    anyhow::ensure!(
+                        *domain < n_domains,
+                        "{kind} at slot {slot}: domain {domain} out of range \
+                         (dataset has {n_domains} domains)"
+                    );
+                }
+                ScenarioEvent::BurstOverride { .. } => {}
+                ScenarioEvent::SkewShift { pattern } => pattern.validate(n_domains)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[scenario]
+name = "demo"
+slots = 6
+
+[scenario.trace]
+base = 40
+diurnal_amp = 0.3
+period = 6
+burst_prob = 0.0
+seed = 9
+
+[[scenario.events]]
+slot = 4
+kind = "node-up"
+node = 1
+
+[[scenario.events]]
+slot = 2
+kind = "node-down"
+node = 1
+
+[[scenario.events]]
+slot = 2
+kind = "slo-change"
+slo_s = 6.5
+
+[[scenario.events]]
+slot = 3
+kind = "skew-shift"
+skew = "primary"
+domain = 1
+frac = 0.8
+"#;
+
+    #[test]
+    fn parses_and_sorts_by_slot_keeping_file_order_within_a_slot() {
+        let sc = Scenario::from_toml(SAMPLE).unwrap();
+        assert_eq!(sc.name, "demo");
+        assert_eq!(sc.slots, Some(6));
+        let tc = sc.trace.as_ref().unwrap();
+        assert_eq!(tc.base, 40);
+        assert_eq!(tc.seed, 9);
+        let kinds: Vec<(usize, &str)> =
+            sc.events.iter().map(|e| (e.slot, e.event.kind())).collect();
+        assert_eq!(
+            kinds,
+            vec![(2, "node-down"), (2, "slo-change"), (3, "skew-shift"), (4, "node-up")]
+        );
+        assert_eq!(sc.events_at(2).count(), 2);
+        assert_eq!(sc.events_at(5).count(), 0);
+    }
+
+    #[test]
+    fn unknown_kind_lists_valid_kinds() {
+        let err = Scenario::from_toml("[[scenario.events]]\nslot = 0\nkind = \"meteor\"\n")
+            .unwrap_err()
+            .to_string();
+        for k in ScenarioEvent::KINDS {
+            assert!(err.contains(k), "{err} should list {k}");
+        }
+    }
+
+    #[test]
+    fn missing_fields_error_clearly() {
+        let err = Scenario::from_toml("[[scenario.events]]\nkind = \"node-down\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("slot"), "{err}");
+        let err = Scenario::from_toml("[[scenario.events]]\nslot = 1\nkind = \"node-down\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("node"), "{err}");
+        let err = Scenario::from_toml("[[scenario.events]]\nslot = 1\nkind = \"skew-shift\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("skew"), "{err}");
+    }
+
+    #[test]
+    fn validate_bounds_checks_nodes_domains_and_parameters() {
+        let mk = |event: ScenarioEvent| Scenario {
+            events: vec![TimedEvent { slot: 0, event }],
+            ..Scenario::default()
+        };
+        assert!(mk(ScenarioEvent::NodeDown { node: 3 }).validate(4, 6).is_ok());
+        let err =
+            mk(ScenarioEvent::NodeDown { node: 4 }).validate(4, 6).unwrap_err().to_string();
+        assert!(err.contains("node 4") && err.contains("4 nodes"), "{err}");
+        let err = mk(ScenarioEvent::CorpusIngest { node: 0, docs: 5, domain: 6 })
+            .validate(4, 6)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("domain 6"), "{err}");
+        assert!(mk(ScenarioEvent::SloChange { slo_s: 0.0 }).validate(4, 6).is_err());
+        assert!(mk(ScenarioEvent::CapacityScale { node: 0, factor: -1.0 })
+            .validate(4, 6)
+            .is_err());
+        assert!(mk(ScenarioEvent::SkewShift {
+            pattern: crate::workload::SkewPattern::Primary { domain: 9, frac: 0.5 }
+        })
+        .validate(4, 6)
+        .is_err());
+    }
+
+    #[test]
+    fn empty_document_is_an_empty_scenario() {
+        let sc = Scenario::from_toml("").unwrap();
+        assert!(sc.events.is_empty());
+        assert!(sc.trace.is_none());
+        assert_eq!(sc.slots, None);
+    }
+}

@@ -1,0 +1,32 @@
+//! Scenario engine: deterministic cluster dynamics + golden-trace replay.
+//!
+//! The paper's setting is *fluctuating* assigned loads over heterogeneous,
+//! churn-prone edge nodes (§III, §IV-B/C), yet a plain `Coordinator::run`
+//! is static: fixed load, fixed SLO, a cluster that never changes. This
+//! tier makes the dynamics first-class:
+//!
+//! - [`Scenario`] ([`event`]) — a slot-indexed timeline of typed events
+//!   (`node-down`/`node-up`, `capacity-scale`, `slo-change`,
+//!   `corpus-ingest`, `burst`, `skew-shift`), parsed from
+//!   `[[scenario.events]]` TOML tables (`--scenario <file>` on the CLI);
+//! - [`ScenarioRunner`] ([`runner`]) — applies events between slots and
+//!   drives per-slot load from a [`TraceConfig`](crate::workload::TraceConfig)
+//!   arrival trace, so load actually fluctuates;
+//! - [`RunTranscript`] ([`transcript`]) — a byte-stable JSONL record of
+//!   every slot (queries, proportions, drop rate, quality, active-node
+//!   mask, applied events). `tests/scenarios.rs` replays committed
+//!   scenario fixtures against committed transcripts and asserts exact
+//!   equality — any nondeterminism or behavioral drift is a test failure.
+//!
+//! Node availability threads through `SlotContext::active` and
+//! `Coordinator::slot_capacities` (a down node has capacity 0, every
+//! built-in allocator routes around it, and `route` rejects assignments
+//! that touch one).
+
+pub mod event;
+pub mod runner;
+pub mod transcript;
+
+pub use event::{Scenario, ScenarioEvent, TimedEvent};
+pub use runner::{ScenarioRun, ScenarioRunner};
+pub use transcript::{RunTranscript, TranscriptRecorder};

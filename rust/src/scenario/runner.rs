@@ -1,0 +1,88 @@
+//! Scenario execution: apply events between slots, drive per-slot load
+//! from the arrival trace, and record a byte-stable [`RunTranscript`].
+
+use super::event::{Scenario, ScenarioEvent};
+use super::transcript::RunTranscript;
+use crate::coordinator::{Coordinator, SlotReport};
+use crate::workload::{arrival_trace, TraceConfig};
+use crate::Result;
+
+/// Everything one scenario run produced.
+pub struct ScenarioRun {
+    /// Per-slot reports, in slot order.
+    pub reports: Vec<SlotReport>,
+    /// The replayable transcript (one JSON line per slot + header).
+    pub transcript: RunTranscript,
+}
+
+/// Replays a [`Scenario`] against a coordinator: per slot, apply the
+/// scheduled events, sample the trace-driven (fluctuating) load, run the
+/// slot, and record the transcript line.
+pub struct ScenarioRunner {
+    scenario: Scenario,
+}
+
+impl ScenarioRunner {
+    pub fn new(scenario: Scenario) -> Self {
+        ScenarioRunner { scenario }
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    /// Per-slot query counts this scenario would drive against `co`'s
+    /// config: the arrival trace when one is configured, otherwise the
+    /// config's fixed `queries_per_slot`. `BurstOverride` events replace
+    /// individual entries at run time.
+    pub fn loads(&self, co: &Coordinator) -> Vec<usize> {
+        let slots = self.scenario.slots.unwrap_or(co.cfg.slots);
+        match &self.scenario.trace {
+            Some(tc) => arrival_trace(&TraceConfig { slots, ..tc.clone() }),
+            None => vec![co.cfg.queries_per_slot; slots],
+        }
+    }
+
+    /// Run the full scenario. Events apply between slots, in timeline
+    /// order; the run fails fast on out-of-range nodes/domains and on
+    /// events scheduled beyond the resolved slot count (a typo'd `slot`
+    /// would otherwise just silently never fire).
+    pub fn run(&self, co: &mut Coordinator) -> Result<ScenarioRun> {
+        self.scenario.validate(co.nodes.len(), co.ds.num_domains())?;
+        let loads = self.loads(co);
+        for te in &self.scenario.events {
+            anyhow::ensure!(
+                te.slot < loads.len(),
+                "scenario event {} at slot {} is beyond the run's {} slots",
+                te.event.kind(),
+                te.slot,
+                loads.len()
+            );
+        }
+        let mut transcript = RunTranscript::new(
+            &self.scenario.name,
+            co.cfg.seed,
+            co.nodes.len(),
+            co.allocator().name(),
+            loads.len(),
+        );
+        let mut reports = Vec::with_capacity(loads.len());
+        for (t, &load) in loads.iter().enumerate() {
+            let mut burst = None;
+            let mut labels = Vec::new();
+            for te in self.scenario.events_at(t) {
+                labels.push(te.event.label());
+                if let ScenarioEvent::BurstOverride { queries } = &te.event {
+                    burst = Some(*queries); // consumed by the load below
+                } else {
+                    co.apply_event(&te.event)?;
+                }
+            }
+            let qids = co.sample_queries(burst.unwrap_or(load))?;
+            let report = co.run_slot(&qids)?;
+            transcript.record(t, &labels, &report);
+            reports.push(report);
+        }
+        Ok(ScenarioRun { reports, transcript })
+    }
+}

@@ -1,0 +1,165 @@
+//! Byte-stable run transcripts: the golden-trace replay format.
+//!
+//! A transcript is a header line plus one JSON line per slot, holding only
+//! *modeled* quantities (never wall-clock measurements) so that, for a
+//! given seed + scenario, two runs — on any machine, under any thread
+//! count — produce byte-identical text. `tests/scenarios.rs` replays the
+//! committed scenario fixtures against committed transcripts and asserts
+//! exact equality, catching both nondeterminism (e.g. in the parallel
+//! serve path or the sharded-index merge) and unintended behavioral drift.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::observer::{SlotEvent, SlotObserver};
+use crate::coordinator::SlotReport;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Structured record of one run: JSON lines, append-only.
+#[derive(Clone, Debug, Default)]
+pub struct RunTranscript {
+    lines: Vec<String>,
+}
+
+impl RunTranscript {
+    /// Start a transcript with a self-describing header line.
+    pub fn new(scenario: &str, seed: u64, n_nodes: usize, allocator: &str, slots: usize) -> Self {
+        let header = Json::obj(vec![
+            ("scenario", Json::Str(scenario.to_string())),
+            ("seed", Json::Num(seed as f64)),
+            ("nodes", Json::Num(n_nodes as f64)),
+            ("allocator", Json::Str(allocator.to_string())),
+            ("slots", Json::Num(slots as f64)),
+        ]);
+        RunTranscript { lines: vec![header.to_string()] }
+    }
+
+    /// Append one slot record. `events` are the labels of the scenario
+    /// events applied before the slot (empty outside the scenario engine).
+    ///
+    /// Deliberately excluded: `measured_search_s` and phase wall-clock
+    /// times — anything a stopwatch produced would break byte stability.
+    pub fn record(&mut self, slot: usize, events: &[String], report: &SlotReport) {
+        let line = Json::obj(vec![
+            ("slot", Json::Num(slot as f64)),
+            ("queries", Json::Num(report.queries as f64)),
+            ("events", Json::arr_str(events)),
+            ("active", Json::Arr(report.active.iter().map(|&a| Json::Bool(a)).collect())),
+            ("slo_s", Json::Num(report.slo_s)),
+            ("proportions", Json::arr_f64(&report.proportions)),
+            ("drop_rate", Json::Num(report.drop_rate)),
+            ("latency_s", Json::Num(report.latency_s)),
+            ("rouge_l", Json::Num(report.mean_scores.rouge_l)),
+            ("bert_score", Json::Num(report.mean_scores.bert_score)),
+            ("updates", Json::Num(report.feedback.updates as f64)),
+        ]);
+        self.lines.push(line.to_string());
+    }
+
+    /// All lines (header first).
+    pub fn lines(&self) -> &[String] {
+        &self.lines
+    }
+
+    /// Slot records written so far (excludes the header).
+    pub fn num_slots(&self) -> usize {
+        self.lines.len().saturating_sub(1)
+    }
+
+    /// The transcript as JSON-lines text (every line newline-terminated).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the JSONL text to `path` (golden-fixture blessing).
+    pub fn write_to(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_jsonl())?;
+        Ok(())
+    }
+}
+
+/// A [`SlotObserver`] appending every `SlotEnd` to a shared
+/// [`RunTranscript`] — lets long-running fronts (the TCP server) record a
+/// replayable transcript without running under the scenario engine.
+#[derive(Clone)]
+pub struct TranscriptRecorder {
+    inner: Arc<Mutex<RunTranscript>>,
+}
+
+impl TranscriptRecorder {
+    pub fn new(name: &str, seed: u64, n_nodes: usize, allocator: &str) -> Self {
+        TranscriptRecorder {
+            inner: Arc::new(Mutex::new(RunTranscript::new(name, seed, n_nodes, allocator, 0))),
+        }
+    }
+
+    /// Snapshot of everything recorded so far.
+    pub fn snapshot(&self) -> RunTranscript {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+impl SlotObserver for TranscriptRecorder {
+    fn on_event(&mut self, event: &SlotEvent) {
+        if let SlotEvent::SlotEnd { slot, report } = event {
+            self.inner.lock().unwrap().record(*slot, &[], report);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SlotReport;
+
+    fn demo_report() -> SlotReport {
+        SlotReport {
+            queries: 10,
+            drop_rate: 0.1,
+            latency_s: 3.25,
+            proportions: vec![0.5, 0.5],
+            active: vec![true, false],
+            slo_s: 15.0,
+            ..SlotReport::default()
+        }
+    }
+
+    #[test]
+    fn serialization_is_stable_and_excludes_wall_clock() {
+        let mk = || {
+            let mut t = RunTranscript::new("demo", 42, 2, "oracle", 1);
+            let mut r = demo_report();
+            // wall-clock fields must not leak into the transcript
+            r.node_search_s = vec![(0.1, 123.456), (0.1, 789.0)];
+            t.record(0, &["node-down(1)".to_string()], &r);
+            t.to_jsonl()
+        };
+        let a = mk();
+        assert_eq!(a, mk(), "same inputs must serialize byte-identically");
+        assert_eq!(a.lines().count(), 2);
+        assert!(a.contains("\"scenario\":\"demo\""), "{a}");
+        assert!(a.contains("\"events\":[\"node-down(1)\"]"), "{a}");
+        assert!(a.contains("\"active\":[true,false]"), "{a}");
+        assert!(!a.contains("123.456"), "wall-clock leaked: {a}");
+    }
+
+    #[test]
+    fn recorder_appends_on_slot_end() {
+        let rec = TranscriptRecorder::new("srv", 7, 2, "random");
+        let report = demo_report();
+        let mut obs: Box<dyn SlotObserver> = Box::new(rec.clone());
+        obs.on_event(&SlotEvent::Encoded { slot: 0, queries: 10, elapsed_s: 0.0 });
+        obs.on_event(&SlotEvent::SlotEnd { slot: 0, report: &report });
+        let snap = rec.snapshot();
+        assert_eq!(snap.num_slots(), 1);
+        assert!(snap.to_jsonl().contains("\"queries\":10"));
+    }
+}

@@ -35,11 +35,20 @@ pub struct ServerConfig {
     pub batch_window_ms: u64,
     /// Dispatch immediately once this many requests are pending.
     pub max_batch: usize,
+    /// When set, record a byte-stable [`RunTranscript`](crate::scenario::RunTranscript)
+    /// of every dispatched batch and write it here at shutdown — the same
+    /// JSONL format the scenario replay harness asserts on.
+    pub transcript_path: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7717".into(), batch_window_ms: 20, max_batch: 256 }
+        ServerConfig {
+            addr: "127.0.0.1:7717".into(),
+            batch_window_ms: 20,
+            max_batch: 256,
+            transcript_path: None,
+        }
     }
 }
 
@@ -123,6 +132,18 @@ pub fn serve(
     // any observers the caller attached)
     let metrics = ServerMetrics::default();
     coordinator.add_observer(Box::new(metrics.clone()));
+
+    // optional replayable transcript of every dispatched batch
+    let recorder = cfg.transcript_path.as_ref().map(|_| {
+        let rec = crate::scenario::TranscriptRecorder::new(
+            "serve",
+            coordinator.cfg.seed,
+            coordinator.nodes.len(),
+            coordinator.allocator().name(),
+        );
+        coordinator.add_observer(Box::new(rec.clone()));
+        rec
+    });
 
     // batcher thread: owns the coordinator
     let batch_shutdown = Arc::clone(&shutdown);
@@ -216,6 +237,12 @@ pub fn serve(
         let _ = h.join();
     }
     let _ = batcher.join();
+    if let (Some(path), Some(rec)) = (&cfg.transcript_path, &recorder) {
+        match rec.snapshot().write_to(path) {
+            Ok(()) => log_info!("transcript written to {}", path.display()),
+            Err(e) => log_info!("transcript write to {} failed: {e}", path.display()),
+        }
+    }
     log_info!("{}", metrics.summary());
     Ok(addr)
 }
@@ -308,7 +335,12 @@ mod tests {
         }
         let co = CoordinatorBuilder::new(cfg).build().unwrap();
         let shutdown = Arc::new(AtomicBool::new(false));
-        let scfg = ServerConfig { addr: "127.0.0.1:0".into(), batch_window_ms: 10, max_batch: 8 };
+        let scfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            batch_window_ms: 10,
+            max_batch: 8,
+            ..Default::default()
+        };
 
         // bind first to learn the port, then serve on that listener config
         let sd = Arc::clone(&shutdown);

@@ -151,6 +151,16 @@ impl TomlDoc {
             self.tables.get(table).and_then(|t| t.get(key))
         }
     }
+
+    /// `[[name]]` array-of-tables lookup; an absent array reads as empty.
+    /// Dotted headers like `[[scenario.events]]` are stored under their
+    /// literal name (`"scenario.events"`).
+    pub fn array(&self, name: &str) -> &[Table] {
+        match self.arrays.get(name) {
+            Some(v) => v,
+            None => &[],
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -373,6 +383,39 @@ shards = 8
         let doc = TomlDoc::parse("[nodes.index]\nkind = \"flat\"\n").unwrap();
         assert_eq!(doc.get("nodes.index", "kind").unwrap().as_str(), Some("flat"));
         assert!(doc.arrays.is_empty());
+    }
+
+    /// The scenario layer's schema: a `[scenario]` table, a
+    /// `[scenario.trace]` sub-table (plain table under its literal dotted
+    /// name), and `[[scenario.events]]` dotted array-of-tables headers.
+    #[test]
+    fn dotted_array_of_tables_headers() {
+        let text = r#"
+[scenario]
+name = "churn"
+
+[scenario.trace]
+base = 50
+
+[[scenario.events]]
+slot = 2
+kind = "node-down"
+node = 1
+
+[[scenario.events]]
+slot = 5
+kind = "node-up"
+node = 1
+"#;
+        let doc = TomlDoc::parse(text).unwrap();
+        assert_eq!(doc.get("scenario", "name").unwrap().as_str(), Some("churn"));
+        assert_eq!(doc.get("scenario.trace", "base").unwrap().as_usize(), Some(50));
+        let events = doc.array("scenario.events");
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0]["kind"].as_str(), Some("node-down"));
+        assert_eq!(events[1]["slot"].as_usize(), Some(5));
+        // absent arrays read as empty, not None
+        assert!(doc.array("nodes").is_empty());
     }
 
     #[test]

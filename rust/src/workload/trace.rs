@@ -2,6 +2,8 @@
 
 use crate::corpus::synth::SyntheticDataset;
 use crate::util::rng::Rng;
+use crate::util::toml::Table;
+use crate::Result;
 
 /// Arrival-trace parameters (ECW-like diurnal load with bursts).
 #[derive(Clone, Debug)]
@@ -62,18 +64,72 @@ pub enum SkewPattern {
     Dirichlet { alpha: f64 },
 }
 
+impl SkewPattern {
+    /// Valid kind strings for TOML / scenario parsing.
+    pub const KINDS: [&'static str; 3] = ["balanced", "primary", "dirichlet"];
+
+    /// Check the pattern against a dataset's domain count — the error a
+    /// typo'd `domain` gets instead of an index panic deep in sampling.
+    pub fn validate(&self, nd: usize) -> Result<()> {
+        anyhow::ensure!(nd > 0, "domain mix over a dataset with no domains");
+        if let SkewPattern::Primary { domain, .. } = self {
+            anyhow::ensure!(
+                *domain < nd,
+                "skew primary domain {domain} out of range (dataset has {nd} domains)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Read a pattern from a TOML table: the kind string under `kind_key`
+    /// (one of [`SkewPattern::KINDS`]), parameters under `domain` / `frac`
+    /// (primary) and `alpha` (dirichlet). `Ok(None)` when `kind_key` is
+    /// absent, so callers can keep their default.
+    pub fn from_table(t: &Table, kind_key: &str) -> Result<Option<SkewPattern>> {
+        let Some(kind) = t.get(kind_key).and_then(|v| v.as_str()) else {
+            return Ok(None);
+        };
+        let pattern = match kind {
+            "balanced" => SkewPattern::Balanced,
+            "primary" => SkewPattern::Primary {
+                domain: t.get("domain").and_then(|v| v.as_usize()).unwrap_or(0),
+                frac: t.get("frac").and_then(|v| v.as_f64()).unwrap_or(0.6),
+            },
+            "dirichlet" => SkewPattern::Dirichlet {
+                alpha: t.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.6),
+            },
+            other => anyhow::bail!(
+                "unknown skew kind {other:?}; valid kinds: {}",
+                SkewPattern::KINDS.join(", ")
+            ),
+        };
+        Ok(Some(pattern))
+    }
+}
+
 /// Realize a mixture over `nd` domains for one slot.
-pub fn domain_mix(pattern: &SkewPattern, nd: usize, rng: &mut Rng) -> Vec<f64> {
-    match pattern {
+///
+/// Degenerate cases are handled explicitly: a single-domain dataset gets
+/// the whole mass regardless of the pattern, and an out-of-range primary
+/// domain is a clear error rather than an index panic.
+pub fn domain_mix(pattern: &SkewPattern, nd: usize, rng: &mut Rng) -> Result<Vec<f64>> {
+    pattern.validate(nd)?;
+    Ok(match pattern {
         SkewPattern::Balanced => vec![1.0 / nd as f64; nd],
         SkewPattern::Primary { domain, frac } => {
-            let rest = (1.0 - frac) / (nd - 1) as f64;
-            let mut w = vec![rest; nd];
-            w[*domain] = *frac;
-            w
+            if nd == 1 {
+                // the lone domain takes everything (the nd-1 division
+                // below would be 0/0)
+                vec![1.0]
+            } else {
+                let rest = (1.0 - frac) / (nd - 1) as f64;
+                let mut w = vec![rest; nd];
+                w[*domain] = *frac;
+                w
+            }
         }
         SkewPattern::Dirichlet { alpha } => rng.dirichlet(&vec![*alpha; nd]),
-    }
+    })
 }
 
 /// Sample `count` QA ids for one slot according to a domain mixture.
@@ -124,7 +180,7 @@ mod tests {
     #[test]
     fn primary_mix_shapes() {
         let mut rng = Rng::new(1);
-        let w = domain_mix(&SkewPattern::Primary { domain: 2, frac: 0.75 }, 6, &mut rng);
+        let w = domain_mix(&SkewPattern::Primary { domain: 2, frac: 0.75 }, 6, &mut rng).unwrap();
         assert!((w[2] - 0.75).abs() < 1e-12);
         assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
         assert!((w[0] - 0.05).abs() < 1e-12);
@@ -134,7 +190,7 @@ mod tests {
     fn sampled_queries_follow_mix() {
         let ds = build_dataset(&domainqa_spec(50, 20), 3);
         let mut rng = Rng::new(2);
-        let mix = domain_mix(&SkewPattern::Primary { domain: 1, frac: 0.8 }, 6, &mut rng);
+        let mix = domain_mix(&SkewPattern::Primary { domain: 1, frac: 0.8 }, 6, &mut rng).unwrap();
         let qs = sample_slot_queries(&ds, &mix, 2000, &mut rng);
         assert_eq!(qs.len(), 2000);
         let d1 = qs.iter().filter(|&&q| ds.qa_pairs[q].domain == 1).count();
@@ -146,9 +202,62 @@ mod tests {
     fn dirichlet_mix_valid() {
         let mut rng = Rng::new(3);
         for _ in 0..20 {
-            let w = domain_mix(&SkewPattern::Dirichlet { alpha: 0.3 }, 6, &mut rng);
+            let w = domain_mix(&SkewPattern::Dirichlet { alpha: 0.3 }, 6, &mut rng).unwrap();
             assert_eq!(w.len(), 6);
             assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
         }
+    }
+
+    /// `Primary` over a single-domain dataset used to divide by `nd - 1 ==
+    /// 0`, yielding an inf/NaN mixture; it must collapse to `[1.0]`.
+    #[test]
+    fn primary_mix_single_domain_is_whole_mass() {
+        let mut rng = Rng::new(4);
+        for frac in [0.0, 0.5, 1.0] {
+            let w = domain_mix(&SkewPattern::Primary { domain: 0, frac }, 1, &mut rng).unwrap();
+            assert_eq!(w, vec![1.0], "frac={frac}");
+        }
+        // the other patterns are well-defined at nd == 1 too
+        assert_eq!(domain_mix(&SkewPattern::Balanced, 1, &mut rng).unwrap(), vec![1.0]);
+        let d = domain_mix(&SkewPattern::Dirichlet { alpha: 0.3 }, 1, &mut rng).unwrap();
+        assert!((d[0] - 1.0).abs() < 1e-9);
+    }
+
+    /// An out-of-range primary domain is a clear error, not an index panic.
+    #[test]
+    fn primary_mix_out_of_range_domain_errors() {
+        let mut rng = Rng::new(5);
+        let err = domain_mix(&SkewPattern::Primary { domain: 6, frac: 0.7 }, 6, &mut rng)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("domain 6") && err.contains("6 domains"), "{err}");
+        let err = domain_mix(&SkewPattern::Balanced, 0, &mut rng).unwrap_err().to_string();
+        assert!(err.contains("no domains"), "{err}");
+    }
+
+    #[test]
+    fn skew_pattern_from_table_parses_all_kinds() {
+        use crate::util::toml::TomlDoc;
+        let doc = TomlDoc::parse("kind = \"primary\"\ndomain = 2\nfrac = 0.7\n").unwrap();
+        match SkewPattern::from_table(&doc.root, "kind").unwrap() {
+            Some(SkewPattern::Primary { domain: 2, frac }) => assert!((frac - 0.7).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+        let doc = TomlDoc::parse("kind = \"dirichlet\"\nalpha = 0.3\n").unwrap();
+        assert!(matches!(
+            SkewPattern::from_table(&doc.root, "kind").unwrap(),
+            Some(SkewPattern::Dirichlet { .. })
+        ));
+        let doc = TomlDoc::parse("kind = \"balanced\"\n").unwrap();
+        assert!(matches!(
+            SkewPattern::from_table(&doc.root, "kind").unwrap(),
+            Some(SkewPattern::Balanced)
+        ));
+        // absent key keeps the caller's default; unknown kinds list the valid ones
+        let doc = TomlDoc::parse("x = 1\n").unwrap();
+        assert!(SkewPattern::from_table(&doc.root, "kind").unwrap().is_none());
+        let doc = TomlDoc::parse("kind = \"zipf\"\n").unwrap();
+        let err = SkewPattern::from_table(&doc.root, "kind").unwrap_err().to_string();
+        assert!(err.contains("valid kinds") && err.contains("dirichlet"), "{err}");
     }
 }

@@ -69,7 +69,7 @@ fn mock_allocator_sees_assign_then_observe_once_per_slot() {
         .build()
         .unwrap();
     for _ in 0..3 {
-        let qids = co.sample_queries(8);
+        let qids = co.sample_queries(8).unwrap();
         let r = co.run_slot(&qids).unwrap();
         assert_eq!(r.queries, 8);
         assert_eq!(r.feedback.observed, 8);
@@ -103,7 +103,7 @@ fn slot_events_fire_in_phase_order_with_probs_for_ppo() {
         })))
         .build()
         .unwrap();
-    let qids = co.sample_queries(12);
+    let qids = co.sample_queries(12).unwrap();
     co.run_slot(&qids).unwrap();
     assert_eq!(
         seen.lock().unwrap().clone(),
@@ -120,7 +120,7 @@ fn all_capacities_zero_still_serves_every_query() {
         .capacities(vec![CapacityModel { k: 0.0, b: 0.0 }; 4])
         .build()
         .unwrap();
-    let qids = co.sample_queries(40);
+    let qids = co.sample_queries(40).unwrap();
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.outcomes.len(), 40);
     let psum: f64 = r.proportions.iter().sum();
@@ -134,7 +134,7 @@ fn single_node_cluster_takes_the_whole_slot() {
     cfg.nodes[0].primary_domains = vec![0, 1, 2, 3, 4, 5];
     let mut co =
         CoordinatorBuilder::new(cfg).capacities(stub_caps(1)).build().unwrap();
-    let qids = co.sample_queries(20);
+    let qids = co.sample_queries(20).unwrap();
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.outcomes.len(), 20);
     assert!(r.outcomes.iter().all(|o| o.node == 0));
@@ -147,7 +147,7 @@ fn inter_disabled_ppo_assigns_by_pure_sampling() {
     cfg.inter_enabled = false;
     let mut co =
         CoordinatorBuilder::new(cfg).capacities(stub_caps(4)).build().unwrap();
-    let qids = co.sample_queries(30);
+    let qids = co.sample_queries(30).unwrap();
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.outcomes.len(), 30);
     assert!(r.outcomes.iter().all(|o| o.node < 4));
@@ -161,11 +161,11 @@ fn freeze_learning_stops_observation_for_learning_allocators() {
             .capacities(stub_caps(4))
             .build()
             .unwrap();
-        let qids = co.sample_queries(10);
+        let qids = co.sample_queries(10).unwrap();
         let r = co.run_slot(&qids).unwrap();
         assert_eq!(r.feedback.observed, 10, "{kind}: learns while unfrozen");
         co.freeze_learning();
-        let qids = co.sample_queries(10);
+        let qids = co.sample_queries(10).unwrap();
         let r = co.run_slot(&qids).unwrap();
         assert_eq!(r.feedback.observed, 0, "{kind}: frozen must not learn");
         assert_eq!(r.feedback.updates, 0);
@@ -190,7 +190,7 @@ fn custom_allocator_registers_without_touching_the_coordinator() {
         .build()
         .unwrap();
     assert_eq!(co.allocator().name(), "always-zero");
-    let qids = co.sample_queries(10);
+    let qids = co.sample_queries(10).unwrap();
     let r = co.run_slot(&qids).unwrap();
     assert!(r.outcomes.iter().all(|o| o.node == 0));
 }
@@ -226,7 +226,7 @@ fn misbehaving_allocator_is_rejected_not_panicking() {
         .capacities(stub_caps(4))
         .build()
         .unwrap();
-    let qids = co.sample_queries(5);
+    let qids = co.sample_queries(5).unwrap();
     let err = co.run_slot(&qids).unwrap_err().to_string();
     assert!(err.contains("out-of-range"), "{err}");
 }

@@ -5,6 +5,7 @@ use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IntraStra
 use coedge_rag::coordinator::CoordinatorBuilder;
 use coedge_rag::llmsim::model::ModelSize;
 use coedge_rag::policy::ppo::Backend;
+use coedge_rag::scenario::{Scenario, ScenarioEvent, ScenarioRunner, TimedEvent};
 
 fn tiny_cfg(allocator: AllocatorKind) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
@@ -22,7 +23,7 @@ fn tiny_cfg(allocator: AllocatorKind) -> ExperimentConfig {
 fn impossible_slo_drops_everything_gracefully() {
     let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Oracle)).build().unwrap();
     co.set_slo(0.001); // below even the vector-search time
-    let qids = co.sample_queries(100);
+    let qids = co.sample_queries(100).unwrap();
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.outcomes.len(), 100);
     assert!(r.drop_rate > 0.95, "drop={}", r.drop_rate);
@@ -59,7 +60,7 @@ fn node_with_empty_corpus_still_serves() {
     let mut cfg = tiny_cfg(AllocatorKind::Random);
     cfg.nodes[0].corpus_docs = 0; // data-less node: retrieval returns nothing
     let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
-    let qids = co.sample_queries(120);
+    let qids = co.sample_queries(120).unwrap();
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.outcomes.len(), 120);
     // queries landing on the empty node get rel=0 generations, not panics
@@ -78,7 +79,7 @@ fn pool_without_small_models_survives_tight_slo() {
     }
     cfg.slo_s = 3.0;
     let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
-    let qids = co.sample_queries(200);
+    let qids = co.sample_queries(200).unwrap();
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.outcomes.len(), 200);
     assert!(r.drop_rate > 0.2, "large-only at 3s must shed load");
@@ -92,7 +93,7 @@ fn fixed_strategy_referencing_missing_size_degrades() {
     }
     cfg.intra = IntraStrategy::mid_param(2); // asks for Mid everywhere
     let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
-    let qids = co.sample_queries(60);
+    let qids = co.sample_queries(60).unwrap();
     let r = co.run_slot(&qids).unwrap();
     // nothing deployable -> every query dropped, no panic
     assert_eq!(r.outcomes.len(), 60);
@@ -128,7 +129,12 @@ fn server_survives_malformed_requests() {
         tx.send(addr).unwrap();
         serve(
             co,
-            ServerConfig { addr: addr.to_string(), batch_window_ms: 5, max_batch: 4 },
+            ServerConfig {
+                addr: addr.to_string(),
+                batch_window_ms: 5,
+                max_batch: 4,
+                ..Default::default()
+            },
             sd,
         )
         .unwrap();
@@ -163,18 +169,107 @@ fn server_survives_malformed_requests() {
     handle.join().unwrap();
 }
 
+/// Every node down: the slot is shed at the coordinator — 100% drops, no
+/// panic, proportions all zero — and service resumes the moment any node
+/// returns.
+#[test]
+fn all_nodes_down_slot_degrades_gracefully_then_recovers() {
+    let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Oracle)).build().unwrap();
+    for n in 0..4 {
+        co.set_node_active(n, false).unwrap();
+    }
+    let qids = co.sample_queries(50).unwrap();
+    let r = co.run_slot(&qids).unwrap();
+    assert_eq!(r.outcomes.len(), 50);
+    assert_eq!(r.drop_rate, 1.0);
+    assert!(r.outcomes.iter().all(|o| o.dropped && o.node == usize::MAX));
+    assert_eq!(r.proportions, vec![0.0; 4]);
+    assert!(r.active.iter().all(|&a| !a));
+
+    co.set_node_active(1, true).unwrap();
+    let qids = co.sample_queries(50).unwrap();
+    let r = co.run_slot(&qids).unwrap();
+    assert_eq!(r.outcomes.len(), 50);
+    assert!(r.outcomes.iter().all(|o| o.node == 1), "only the live node may serve");
+    assert!(r.drop_rate < 1.0, "drop={}", r.drop_rate);
+}
+
+/// A node that fails mid-run and comes back: while down it receives
+/// nothing; once up it serves again — driven through the scenario engine.
+#[test]
+fn node_down_mid_run_comes_back_and_recovers() {
+    let sc = Scenario {
+        name: "churn".into(),
+        slots: Some(4),
+        trace: None,
+        events: vec![
+            TimedEvent { slot: 1, event: ScenarioEvent::NodeDown { node: 0 } },
+            TimedEvent { slot: 3, event: ScenarioEvent::NodeUp { node: 0 } },
+        ],
+    };
+    let mut cfg = tiny_cfg(AllocatorKind::Random);
+    cfg.queries_per_slot = 120;
+    let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
+    let run = ScenarioRunner::new(sc).run(&mut co).unwrap();
+    assert_eq!(run.reports.len(), 4);
+    assert!(run.reports[0].outcomes.iter().any(|o| o.node == 0), "warmup uses node 0");
+    for t in 1..3 {
+        assert!(!run.reports[t].active[0]);
+        assert!(
+            run.reports[t].outcomes.iter().all(|o| o.node != 0),
+            "slot {t}: query on down node 0"
+        );
+        assert_eq!(run.reports[t].proportions[0], 0.0);
+    }
+    assert!(run.reports[3].active[0]);
+    assert!(
+        run.reports[3].outcomes.iter().any(|o| o.node == 0),
+        "node 0 must rejoin after NodeUp: {:?}",
+        run.reports[3].proportions
+    );
+}
+
+/// Live corpus ingest into finalized IVF and HNSW indexes: vectors route
+/// online (IVF) / build incrementally (HNSW) — no re-finalize, no panic,
+/// and the next slot serves normally.
+#[test]
+fn corpus_ingest_into_ivf_and_hnsw_serves_without_refinalize() {
+    let mut cfg = tiny_cfg(AllocatorKind::Random);
+    cfg.nodes[0].index = coedge_rag::config::IndexSpec::of_kind("ivf");
+    cfg.nodes[0].index.nlist = 8;
+    cfg.nodes[0].index.nprobe = 4;
+    cfg.nodes[1].index = coedge_rag::config::IndexSpec::of_kind("hnsw");
+    let mut co = CoordinatorBuilder::new(cfg).build().unwrap();
+    let before: Vec<usize> = (0..2).map(|n| co.nodes[n].corpus_size()).collect();
+    let added_ivf = co.ingest_corpus(0, 4, 12).unwrap();
+    let added_hnsw = co.ingest_corpus(1, 0, 12).unwrap();
+    assert!(added_ivf > 0 && added_hnsw > 0, "{added_ivf} {added_hnsw}");
+    assert_eq!(co.nodes[0].corpus_size(), before[0] + added_ivf);
+    assert_eq!(co.nodes[1].corpus_size(), before[1] + added_hnsw);
+    // the running indexes grew with the corpus — no rebuild happened
+    assert_eq!(co.nodes[0].index.len(), co.nodes[0].corpus_size());
+    assert_eq!(co.nodes[1].index.len(), co.nodes[1].corpus_size());
+    // ingest is idempotent once the domain is exhausted on that node
+    let rest = co.ingest_corpus(0, 4, 1000).unwrap();
+    assert_eq!(co.nodes[0].corpus_size(), before[0] + added_ivf + rest);
+    assert_eq!(co.ingest_corpus(0, 4, 1000).unwrap(), 0, "domain already fully replicated");
+    let qids = co.sample_queries(80).unwrap();
+    let r = co.run_slot(&qids).unwrap();
+    assert_eq!(r.outcomes.len(), 80);
+}
+
 #[test]
 fn coordinator_deterministic_given_seed() {
     let r1 = {
         let mut co =
             CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Ppo)).build().unwrap();
-        let qids = co.sample_queries(100);
+        let qids = co.sample_queries(100).unwrap();
         co.run_slot(&qids).unwrap().mean_scores
     };
     let r2 = {
         let mut co =
             CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Ppo)).build().unwrap();
-        let qids = co.sample_queries(100);
+        let qids = co.sample_queries(100).unwrap();
         co.run_slot(&qids).unwrap().mean_scores
     };
     assert_eq!(r1, r2);

@@ -107,7 +107,7 @@ fn node_index_kind_is_config_selectable() {
     for n in &co.nodes {
         assert_eq!(n.index.len(), n.corpus_size(), "{}", n.name);
     }
-    let qids = co.sample_queries(40);
+    let qids = co.sample_queries(40).unwrap();
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.outcomes.len(), 40);
 }
@@ -136,7 +136,7 @@ fn custom_index_registration() {
         .capacities(stub_caps(4))
         .build()
         .unwrap();
-    let qids = co.sample_queries(30);
+    let qids = co.sample_queries(30).unwrap();
     let r = co.run_slot(&qids).unwrap();
     // nothing retrieved → zero relevance everywhere, but serving still works
     assert!(r.outcomes.iter().all(|o| o.rel == 0.0));
@@ -170,7 +170,7 @@ fn e2e_sharded_flat_matches_flat_outcomes() {
             n.index.shards = 3;
         }
         let mut co = CoordinatorBuilder::new(cfg).capacities(stub_caps(4)).build().unwrap();
-        let qids = co.sample_queries(60);
+        let qids = co.sample_queries(60).unwrap();
         (qids.clone(), co.run_slot(&qids).unwrap())
     };
     let (q_flat, r_flat) = run("flat");
@@ -191,7 +191,7 @@ fn measured_search_time_is_reported() {
         .capacities(stub_caps(4))
         .build()
         .unwrap();
-    let qids = co.sample_queries(80);
+    let qids = co.sample_queries(80).unwrap();
     let r = co.run_slot(&qids).unwrap();
     assert_eq!(r.node_search_s.len(), co.nodes.len());
     // with a random allocator over 80 queries every node serves some

@@ -4,8 +4,13 @@
 //! discipline with the crate's own deterministic RNG: hundreds of random
 //! cases per property, with the failing seed printed on assertion failure.
 
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+use coedge_rag::coordinator::CoordinatorBuilder;
 use coedge_rag::corpus::partition::{partition_corpus, NodeCorpusSpec};
 use coedge_rag::corpus::{build_dataset, domainqa_spec};
+use coedge_rag::router::capacity::CapacityModel;
+use coedge_rag::scenario::ScenarioEvent;
+use coedge_rag::workload::SkewPattern;
 use coedge_rag::intranode::latfit::LatencyProfiler;
 use coedge_rag::intranode::solver::{solve_node, SolverInput};
 use coedge_rag::llmsim::gpu::GpuState;
@@ -65,6 +70,88 @@ fn prop_inter_node_conservation_and_capacity() {
                         let r2 = res.capacities[j] / res.capacities[k];
                         assert!((r1 - r2).abs() < 1e-6, "case {case}");
                     }
+                }
+            }
+        }
+    }
+}
+
+/// Scheduling conservation under random scenario churn: across random
+/// seeds, allocators and random mid-run events (node down/up, capacity
+/// scaling, skew shifts), every slot must (a) account every sampled query
+/// exactly once and in slot order, (b) emit proportions that sum to 1
+/// whenever any node is live and the slot is nonempty (all-zero
+/// otherwise), and (c) never route a query to a down node.
+#[test]
+fn prop_scheduling_conservation_under_random_churn() {
+    let kinds = [
+        AllocatorKind::Random,
+        AllocatorKind::Mab,
+        AllocatorKind::Oracle,
+        AllocatorKind::Ppo,
+    ];
+    for (case, &allocator) in kinds.iter().enumerate() {
+        let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+        cfg.seed = 9000 + case as u64;
+        cfg.qa_per_domain = 10;
+        cfg.docs_per_domain = 15;
+        cfg.allocator = allocator;
+        for n in cfg.nodes.iter_mut() {
+            n.corpus_docs = 20;
+        }
+        let mut co = CoordinatorBuilder::new(cfg)
+            .capacities(vec![CapacityModel { k: 3.0, b: 0.0 }; 4])
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(0x5CE0 ^ case as u64);
+        for slot in 0..6 {
+            if rng.chance(0.6) {
+                let node = rng.below(4);
+                let event = match rng.below(4) {
+                    0 => ScenarioEvent::NodeDown { node },
+                    1 => ScenarioEvent::NodeUp { node },
+                    2 => ScenarioEvent::CapacityScale {
+                        node,
+                        factor: rng.range_f64(0.2, 2.0),
+                    },
+                    _ => ScenarioEvent::SkewShift {
+                        pattern: SkewPattern::Primary {
+                            domain: rng.below(6),
+                            frac: rng.range_f64(0.3, 0.9),
+                        },
+                    },
+                };
+                co.apply_event(&event).unwrap();
+            }
+            let b = rng.below(80);
+            let qids = co.sample_queries(b).unwrap();
+            let r = co.run_slot(&qids).unwrap();
+            let tag = format!("{allocator} slot {slot}");
+
+            // (a) conservation, in slot order
+            assert_eq!(r.queries, qids.len(), "{tag}");
+            assert_eq!(r.outcomes.len(), qids.len(), "{tag}");
+            for (o, &q) in r.outcomes.iter().zip(&qids) {
+                assert_eq!(o.qa_id, q, "{tag}: outcome order broken");
+            }
+
+            // (b) proportions form a distribution iff anything could run
+            let any_live = r.active.iter().any(|&a| a);
+            let psum: f64 = r.proportions.iter().sum();
+            if b > 0 && any_live {
+                assert!((psum - 1.0).abs() < 1e-9, "{tag}: psum={psum}");
+            } else {
+                assert_eq!(psum, 0.0, "{tag}");
+            }
+
+            // (c) no query on a down node; coordinator-shed queries are
+            // marked never-routed and only occur when everything is down
+            for o in &r.outcomes {
+                if o.node == usize::MAX {
+                    assert!(!any_live && o.dropped, "{tag}: shed outcome with live nodes");
+                } else {
+                    assert!(o.node < 4, "{tag}");
+                    assert!(r.active[o.node], "{tag}: query routed to down node {}", o.node);
                 }
             }
         }

@@ -1,0 +1,234 @@
+//! Golden-trace replay harness for the scenario engine.
+//!
+//! Every committed scenario fixture (`scenarios/*.toml`) is replayed
+//! twice from independently built coordinators and the two transcripts
+//! must be byte-identical — catching any nondeterminism in the parallel
+//! serve path, the sharded-index merge, or the schedulers. The transcript
+//! is then compared byte-for-byte against the committed golden file in
+//! `tests/golden/`; drift is a failure.
+//!
+//! Regenerating goldens intentionally (after a deliberate behavior
+//! change):
+//!
+//!     UPDATE_GOLDEN=1 cargo test --test scenarios
+//!
+//! A missing golden file is blessed on first run (this is how the
+//! fixtures bootstrap on a machine with a toolchain); CI then fails on
+//! any uncommitted drift via `git diff --exit-code -- tests/golden`.
+
+use std::path::{Path, PathBuf};
+
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IndexSpec};
+use coedge_rag::coordinator::CoordinatorBuilder;
+use coedge_rag::router::capacity::CapacityModel;
+use coedge_rag::scenario::{Scenario, ScenarioRun, ScenarioRunner};
+use coedge_rag::vecdb::{FlatIndex, ShardedIndex};
+
+/// The fixed harness cluster every fixture replays against: the paper's
+/// 4-node testbed shrunk for test speed, with stubbed capacity models so
+/// profiling noise can't leak into goldens.
+fn harness_cfg(allocator: AllocatorKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.qa_per_domain = 20;
+    cfg.docs_per_domain = 40;
+    cfg.queries_per_slot = 60;
+    cfg.allocator = allocator;
+    for n in cfg.nodes.iter_mut() {
+        n.corpus_docs = 60;
+    }
+    cfg
+}
+
+fn stub_caps() -> Vec<CapacityModel> {
+    // 6 q per SLO-second per node: 360 total at the 15 s default — the
+    // fixtures' 240/300-query bursts genuinely overload the cluster
+    vec![CapacityModel { k: 6.0, b: 0.0 }; 4]
+}
+
+fn scenario_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios").join(format!("{name}.toml"))
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(format!("{name}.jsonl"))
+}
+
+fn load_scenario(name: &str) -> Scenario {
+    let text = std::fs::read_to_string(scenario_path(name)).expect("read scenario fixture");
+    Scenario::from_toml(&text).expect("parse scenario fixture")
+}
+
+fn run_fixture(name: &str, allocator: AllocatorKind) -> ScenarioRun {
+    let mut co = CoordinatorBuilder::new(harness_cfg(allocator))
+        .capacities(stub_caps())
+        .build()
+        .unwrap();
+    ScenarioRunner::new(load_scenario(name)).run(&mut co).expect("scenario run")
+}
+
+/// Byte-compare two transcripts, reporting the first differing line.
+fn assert_same_transcript(name: &str, got: &str, want: &str, what: &str) {
+    if got == want {
+        return;
+    }
+    for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+        assert_eq!(
+            g, w,
+            "{name}: {what} differs first at line {i}\n  \
+             (intentional change? regenerate: UPDATE_GOLDEN=1 cargo test --test scenarios)"
+        );
+    }
+    panic!(
+        "{name}: {what} differs in line count ({} vs {})",
+        got.lines().count(),
+        want.lines().count()
+    );
+}
+
+/// Replay `name` twice (independent coordinators, same seed) asserting
+/// byte-identical transcripts, then compare against — or bless — the
+/// committed golden file.
+fn replay_golden(name: &str, allocator: AllocatorKind) -> ScenarioRun {
+    let run = run_fixture(name, allocator);
+    let rerun = run_fixture(name, allocator);
+    let got = run.transcript.to_jsonl();
+    assert_same_transcript(name, &got, &rerun.transcript.to_jsonl(), "replay (run-to-run)");
+
+    let gp = golden_path(name);
+    let bless = std::env::var("UPDATE_GOLDEN").is_ok();
+    if gp.exists() && !bless {
+        let golden = std::fs::read_to_string(&gp).expect("read golden");
+        assert_same_transcript(name, &got, &golden, "committed golden");
+    } else {
+        run.transcript.write_to(&gp).expect("bless golden");
+        eprintln!("[golden] blessed {} ({} slot records)", gp.display(), run.transcript.num_slots());
+    }
+    run
+}
+
+#[test]
+fn burst_storm_replays_byte_identical() {
+    let run = replay_golden("burst_storm", AllocatorKind::Mab);
+    assert_eq!(run.reports.len(), 8);
+    // BurstOverride events replace the trace load exactly
+    assert_eq!(run.reports[2].queries, 240);
+    assert_eq!(run.reports[5].queries, 300);
+    // the arrival trace actually fluctuates (Coordinator::run never did)
+    let loads: Vec<usize> = run.reports.iter().map(|r| r.queries).collect();
+    assert!(loads.iter().any(|&q| q != loads[0]), "static loads: {loads:?}");
+    // the SLO change lands on its slot and sticks
+    assert_eq!(run.reports[4].slo_s, 15.0);
+    assert_eq!(run.reports[5].slo_s, 8.0);
+    assert_eq!(run.reports[7].slo_s, 8.0);
+    // overloaded slots shed load but never lose queries
+    for r in &run.reports {
+        assert_eq!(r.outcomes.len(), r.queries);
+    }
+}
+
+#[test]
+fn node_churn_replays_and_routes_around_the_down_node() {
+    let run = replay_golden("node_churn", AllocatorKind::Oracle);
+    // slots 2..5: node 2 is down — zero queries routed to it, ever
+    for t in 2..5 {
+        let r = &run.reports[t];
+        assert!(!r.active[2], "slot {t}");
+        assert_eq!(r.proportions[2], 0.0, "slot {t}: {:?}", r.proportions);
+        assert!(
+            r.outcomes.iter().all(|o| o.node != 2),
+            "slot {t}: a query was routed to the down node"
+        );
+        let psum: f64 = r.proportions.iter().sum();
+        assert!((psum - 1.0).abs() < 1e-9, "slot {t}: {psum}");
+    }
+    // before and after the outage the node participates again
+    assert!(run.reports[1].active[2]);
+    assert!(run.reports[5].active[2]);
+    assert!(
+        run.reports[5..].iter().any(|r| r.proportions[2] > 0.0),
+        "node 2 never recovered: {:?}",
+        run.reports.iter().map(|r| r.proportions[2]).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn corpus_drift_replays_with_live_ingest() {
+    let run = replay_golden("corpus_drift", AllocatorKind::Domain);
+    assert_eq!(run.reports.len(), 8);
+    let text = run.transcript.to_jsonl();
+    assert!(text.contains("skew-shift(primary:d1@0.8)"), "{text}");
+    assert!(text.contains("corpus-ingest(0,20@d1)"), "{text}");
+    assert!(text.contains("corpus-ingest(3,20@d1)"), "{text}");
+    for r in &run.reports {
+        assert_eq!(r.outcomes.len(), r.queries);
+    }
+}
+
+/// PR 2 claimed the sharded fan-out merge is ordering-deterministic; pin
+/// it: the same seed + scenario under parallel shard fan-out vs a
+/// single-threaded fan-out must produce byte-identical transcripts. The
+/// corpus is sized so the batched searches clear the parallel-path work
+/// threshold (vectors × queries ≥ 2^15).
+#[test]
+fn transcripts_stable_across_shard_fanout_thread_counts() {
+    let sc = load_scenario("burst_storm");
+    let run = |single_threaded: bool| {
+        let mut cfg = harness_cfg(AllocatorKind::Oracle);
+        cfg.docs_per_domain = 60;
+        for n in cfg.nodes.iter_mut() {
+            n.corpus_docs = 300;
+            n.index = IndexSpec::of_kind(if single_threaded {
+                "sharded-flat-st"
+            } else {
+                "sharded-flat"
+            });
+        }
+        let mut builder = CoordinatorBuilder::new(cfg).capacities(stub_caps());
+        if single_threaded {
+            builder = builder.register_index("sharded-flat-st", |ctx| {
+                let dim = ctx.dim;
+                Ok(Box::new(
+                    ShardedIndex::from_fn(ctx.spec.shards, |_| FlatIndex::new(dim))
+                        .with_threads(1),
+                ))
+            });
+        }
+        let mut co = builder.build().unwrap();
+        ScenarioRunner::new(sc.clone()).run(&mut co).unwrap().transcript.to_jsonl()
+    };
+    let parallel = run(false);
+    let single = run(true);
+    assert_same_transcript("burst_storm[sharded]", &parallel, &single, "threads=N vs threads=1");
+}
+
+/// Scenario files with out-of-range targets fail fast with clear errors —
+/// before any slot runs.
+#[test]
+fn invalid_scenarios_fail_before_running() {
+    let mut co = CoordinatorBuilder::new(harness_cfg(AllocatorKind::Random))
+        .capacities(stub_caps())
+        .build()
+        .unwrap();
+    let sc = Scenario::from_toml(
+        "[[scenario.events]]\nslot = 0\nkind = \"node-down\"\nnode = 9\n",
+    )
+    .unwrap();
+    let err = ScenarioRunner::new(sc).run(&mut co).unwrap_err().to_string();
+    assert!(err.contains("node 9") && err.contains("4 nodes"), "{err}");
+
+    let sc = Scenario::from_toml(
+        "[[scenario.events]]\nslot = 1\nkind = \"corpus-ingest\"\nnode = 0\ndocs = 5\ndomain = 11\n",
+    )
+    .unwrap();
+    let err = ScenarioRunner::new(sc).run(&mut co).unwrap_err().to_string();
+    assert!(err.contains("domain 11"), "{err}");
+
+    // an event scheduled beyond the run's slot count would silently never
+    // fire — it must be rejected up front
+    let sc = Scenario::from_toml(
+        "[scenario]\nslots = 4\n\n[[scenario.events]]\nslot = 50\nkind = \"node-down\"\nnode = 0\n",
+    )
+    .unwrap();
+    let err = ScenarioRunner::new(sc).run(&mut co).unwrap_err().to_string();
+    assert!(err.contains("slot 50") && err.contains("4 slots"), "{err}");
+}
