@@ -5,7 +5,10 @@
 
 use std::sync::Arc;
 
-use coedge_rag::bench_harness::{bench, PhaseBreakdown};
+use coedge_rag::bench_harness::{bench, write_bench_json, BenchCase, PhaseBreakdown};
+use coedge_rag::cache::{
+    quantize_embedding, CacheEntry, CachePayload, EntryTag, EvictPolicy, PolicyCache, QueryCache,
+};
 use coedge_rag::corpus::{build_dataset, domainqa_spec};
 use coedge_rag::metrics::Evaluator;
 use coedge_rag::policy::mlp;
@@ -85,6 +88,90 @@ fn main() {
             std::hint::black_box(sharded.search_batch(&queries, 5));
         });
         println!("{}", r.throughput_line(64.0));
+    }
+
+    // --- retrieval cache: hit-rate × corpus-size grid ---
+    // Streams of 256 queries where `repeat` of the stream re-asks one of
+    // 8 hot queries: quantifies what an LRU retrieval cache buys at each
+    // corpus tier, and how the win scales with the repeat rate. Results
+    // also land in BENCH_cache.json (machine-readable perf trajectory).
+    let mut cache_cases: Vec<BenchCase> = Vec::new();
+    for &n in &[1_200usize, 12_000] {
+        let iters = 10;
+        let mut index = FlatIndex::new(EMBED_DIM);
+        for i in 0..n {
+            let v = random_unit(&mut rng);
+            index.add(i, &v);
+        }
+        for &repeat in &[0.0f64, 0.5, 0.9] {
+            let hot: Vec<Vec<f32>> = (0..8).map(|_| random_unit(&mut rng)).collect();
+            let stream: Vec<Vec<f32>> = (0..256)
+                .map(|_| {
+                    if rng.chance(repeat) {
+                        hot[rng.below(hot.len())].clone()
+                    } else {
+                        random_unit(&mut rng)
+                    }
+                })
+                .collect();
+            let keys: Vec<Vec<i8>> = stream.iter().map(|q| quantize_embedding(q)).collect();
+
+            let r0 = bench(&format!("cache off  top-5 {n} chunks rep={repeat}"), 1, iters, || {
+                for q in &stream {
+                    std::hint::black_box(index.search(q, 5));
+                }
+            });
+            println!("{}", r0.throughput_line(256.0));
+
+            // each timed pass starts from a COLD cache, so misses really
+            // search and the timing scales with the repeat rate (a warm
+            // persistent cache would hit 100% at every repeat level and
+            // measure nothing but map lookups)
+            let mut hits = 0usize;
+            let mut lookups = 0usize;
+            let r1 = bench(&format!("cache lru  top-5 {n} chunks rep={repeat}"), 1, iters, || {
+                let mut cache = PolicyCache::new(EvictPolicy::Lru, 64 * 1024 * 1024);
+                for (q, key) in stream.iter().zip(&keys) {
+                    lookups += 1;
+                    if cache.get(key).is_some() {
+                        hits += 1;
+                        continue;
+                    }
+                    let found = index.search(q, 5);
+                    cache.insert(
+                        key.clone(),
+                        CacheEntry {
+                            tag: EntryTag { node: 0, domain: 0 },
+                            guard: 0,
+                            payload: CachePayload::Hits(found),
+                        },
+                    );
+                }
+            });
+            let hit_rate = hits as f64 / lookups.max(1) as f64;
+            println!("{}  (hit rate {:.2})", r1.throughput_line(256.0), hit_rate);
+
+            cache_cases.push(
+                BenchCase::new(format!("off n={n} rep={repeat}"))
+                    .field("corpus", n as f64)
+                    .field("repeat_frac", repeat)
+                    .field("hit_rate", 0.0)
+                    .field("items_per_s", 256.0 / r0.mean_s)
+                    .timing(&r0),
+            );
+            cache_cases.push(
+                BenchCase::new(format!("lru n={n} rep={repeat}"))
+                    .field("corpus", n as f64)
+                    .field("repeat_frac", repeat)
+                    .field("hit_rate", hit_rate)
+                    .field("items_per_s", 256.0 / r1.mean_s)
+                    .timing(&r1),
+            );
+        }
+    }
+    match write_bench_json(std::path::Path::new("."), "cache", &cache_cases) {
+        Ok(path) => println!("  cache sweep written to {}", path.display()),
+        Err(e) => println!("  (BENCH_cache.json not written: {e})"),
     }
 
     // --- metrics suite ---
@@ -169,6 +256,7 @@ fn main() {
             quality: &quality,
             queries: 500,
             budget_s: 12.0,
+            mem_cap: 1.0,
         }));
     });
     println!("{}", r.throughput_line(1.0));

@@ -1,0 +1,68 @@
+//! Cache warm-up demo: the same skewed query mix replayed slot after
+//! slot, once without caching and once with LRU caches at both levels —
+//! prints per-slot hit rates, drop rates and the shrinking
+//! generation-memory cap as the retrieval caches fill.
+//!
+//!     cargo run --release --example cache_warmup
+
+use coedge_rag::bench_harness::Table;
+use coedge_rag::config::{AllocatorKind, CacheSpec, DatasetKind, ExperimentConfig};
+use coedge_rag::coordinator::CoordinatorBuilder;
+use coedge_rag::router::capacity::CapacityModel;
+use coedge_rag::workload::SkewPattern;
+
+fn demo_cfg(cache: CacheSpec) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.seed = 23;
+    cfg.qa_per_domain = 25;
+    cfg.docs_per_domain = 50;
+    cfg.queries_per_slot = 120;
+    cfg.allocator = AllocatorKind::Mab;
+    // a hot domain: most of the slot re-asks the same few dozen queries
+    cfg.skew = SkewPattern::Primary { domain: 1, frac: 0.85 };
+    cfg.cache = cache.clone();
+    for n in cfg.nodes.iter_mut() {
+        n.corpus_docs = 80;
+        n.cache = cache.clone();
+    }
+    cfg
+}
+
+fn main() {
+    for kind in ["none", "lru"] {
+        let cache = CacheSpec { capacity_mb: 16, ..CacheSpec::of_kind(kind) };
+        let mut co = CoordinatorBuilder::new(demo_cfg(cache))
+            .capacities(vec![CapacityModel { k: 10.0, b: 0.0 }; 4])
+            .build()
+            .expect("build coordinator");
+        println!("\n== cache = {kind} ==");
+        let mut table = Table::new(&[
+            "slot", "queries", "hit%", "ans-hits", "ret-hits", "drop%", "R-L", "gen-mem-cap",
+        ]);
+        for t in 0..8 {
+            let qids = co.sample_queries(co.cfg.queries_per_slot).expect("sample");
+            let r = co.run_slot(&qids).expect("slot");
+            let (hit_rate, ans, ret) = match &r.cache {
+                Some(c) => (c.hit_rate() * 100.0, c.answer_hits, c.retrieval_hits),
+                None => (0.0, 0, 0),
+            };
+            let min_cap =
+                co.nodes.iter().map(|n| n.gen_mem_cap()).fold(1.0f64, f64::min);
+            table.row(vec![
+                format!("{t}"),
+                format!("{}", r.queries),
+                format!("{hit_rate:.1}"),
+                format!("{ans}"),
+                format!("{ret}"),
+                format!("{:.1}", r.drop_rate * 100.0),
+                format!("{:.3}", r.mean_scores.rouge_l),
+                format!("{min_cap:.4}"),
+            ]);
+        }
+        table.print();
+    }
+    println!("\nWith LRU on, repeats are answered at the coordinator (ans-hits),");
+    println!("drops fall under the same load, and the generation-memory cap dips");
+    println!("as cache bytes charge the node budget — the paper's latency-quality");
+    println!("trade-off widened by a third, cache axis.");
+}

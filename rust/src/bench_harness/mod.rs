@@ -7,6 +7,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::observer::{SlotEvent, SlotObserver};
+use crate::util::json::Json;
 use crate::util::stats::{mean, percentile, std};
 use crate::util::timer::Timer;
 
@@ -53,6 +54,60 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Be
         p50_s: percentile(&samples, 50.0),
         p95_s: percentile(&samples, 95.0),
     }
+}
+
+/// One case of a machine-readable bench dump: a name plus arbitrary
+/// numeric fields (grid coordinates, rates, timings).
+#[derive(Clone, Debug)]
+pub struct BenchCase {
+    pub name: String,
+    pub fields: Vec<(&'static str, f64)>,
+}
+
+impl BenchCase {
+    pub fn new(name: impl Into<String>) -> Self {
+        BenchCase { name: name.into(), fields: Vec::new() }
+    }
+
+    pub fn field(mut self, key: &'static str, value: f64) -> Self {
+        self.fields.push((key, value));
+        self
+    }
+
+    /// Fold a timing summary in as `mean_s` / `p50_s` / `p95_s`.
+    pub fn timing(self, r: &BenchResult) -> Self {
+        self.field("mean_s", r.mean_s).field("p50_s", r.p50_s).field("p95_s", r.p95_s)
+    }
+}
+
+/// Write a bench sweep as `BENCH_<bench>.json` in `dir` — the
+/// machine-readable perf trajectory CI and notebooks can diff across
+/// commits (`{"bench": .., "cases": [{"name": .., <fields>...}, ..]}`).
+/// Returns the path written.
+pub fn write_bench_json(
+    dir: &std::path::Path,
+    bench: &str,
+    cases: &[BenchCase],
+) -> std::io::Result<std::path::PathBuf> {
+    let json = Json::obj(vec![
+        ("bench", Json::Str(bench.to_string())),
+        (
+            "cases",
+            Json::Arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        let mut fields = vec![("name", Json::Str(c.name.clone()))];
+                        fields.extend(c.fields.iter().map(|&(k, v)| (k, Json::Num(v))));
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, json.to_string() + "\n")?;
+    Ok(path)
 }
 
 /// Fixed-width table printer for paper-style result tables.
@@ -218,6 +273,24 @@ mod tests {
         assert_eq!(r.iters, 10);
         assert!(r.mean_s >= 0.0);
         assert!(r.p95_s >= r.p50_s);
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let dir = std::env::temp_dir();
+        let cases = vec![
+            BenchCase::new("lru 1200 chunks").field("corpus", 1200.0).field("hit_rate", 0.5),
+            BenchCase::new("baseline").field("corpus", 1200.0),
+        ];
+        let path = write_bench_json(&dir, "cache_test", &cases).unwrap();
+        assert!(path.ends_with("BENCH_cache_test.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("cache_test"));
+        let arr = parsed.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("hit_rate").unwrap().as_f64(), Some(0.5));
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -1,0 +1,606 @@
+//! Memory-governed multi-level query caching: the third registry-patterned
+//! subsystem (mirroring `AllocatorRegistry` / `IndexRegistry`).
+//!
+//! Two cache levels share one [`QueryCache`] trait:
+//!
+//! * a **per-node retrieval cache** — quantized-query-embedding key →
+//!   the top-k [`Hit`] list the node's vector index returned, so repeated
+//!   and near-duplicate queries skip the index search entirely;
+//! * a **cluster-level semantic answer cache** — the same quantized key,
+//!   looked up by cosine-similarity threshold ([`QueryCache::get_similar`];
+//!   `threshold = 1.0` means *exact duplicates only*), holding the full
+//!   served answer ([`CachedAnswer`]) so a duplicate query never reaches a
+//!   node at all.
+//!
+//! Everything is **modeled and deterministic**: keys are deterministic
+//! i8-quantized embeddings, the byte accounting is a fixed per-entry
+//! model ([`entry_bytes`]), and eviction order depends only on the access
+//! sequence — never on wall-clock — so cached runs replay byte-identically
+//! in the golden-trace harness. Cache bytes are charged against the node's
+//! memory budget (`CacheSpec::node_mem_mb`), shrinking the memory cap the
+//! intra-node solver may hand to generation models: cache footprint
+//! genuinely competes with generation memory, the paper's §IV-C
+//! latency-quality trade-off widened by a third axis.
+//!
+//! Policies are string-keyed in [`CacheRegistry`] (`lru` / `lfu` /
+//! `none`); custom policies register through
+//! `CoordinatorBuilder::register_cache` exactly like custom allocators
+//! and indexes.
+
+pub mod registry;
+
+pub use registry::{CacheBuildCtx, CacheKind, CacheRegistry, CacheSpec};
+
+use std::collections::BTreeMap;
+
+use crate::metrics::QualityScores;
+use crate::vecdb::Hit;
+
+/// Provenance tag stored with every entry, consulted by invalidation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EntryTag {
+    /// Node whose corpus/serving produced the entry.
+    pub node: usize,
+    /// Query domain the entry was written for.
+    pub domain: usize,
+}
+
+/// A complete served answer, replayable on a cache hit without touching
+/// any node. Scores are the *stored* (originally generated) metrics, so a
+/// hit at `threshold = 1.0` reproduces the original quality bitwise.
+#[derive(Clone, Debug)]
+pub struct CachedAnswer {
+    /// Node that originally served the answer (provenance).
+    pub node: usize,
+    pub model_idx: Option<usize>,
+    /// Retrieval relevance achieved when the answer was generated.
+    pub rel: f64,
+    pub scores: QualityScores,
+    /// Composite feedback f_i of the original serve.
+    pub feedback: f64,
+}
+
+/// What a cache entry holds: retrieval results or a full answer.
+#[derive(Clone, Debug)]
+pub enum CachePayload {
+    /// Top-k retrieval hits (per-node retrieval cache).
+    Hits(Vec<Hit>),
+    /// A served answer (cluster-level semantic answer cache).
+    Answer(CachedAnswer),
+}
+
+/// One cache entry: provenance tag + full-precision identity guard +
+/// payload. `guard` is [`embedding_guard`] of the embedding the entry was
+/// written for; exact-threshold lookups reject a key hit whose guard
+/// differs (quantization collision — see [`embedding_guard`]).
+#[derive(Clone, Debug)]
+pub struct CacheEntry {
+    pub tag: EntryTag,
+    pub guard: u64,
+    pub payload: CachePayload,
+}
+
+/// Modeled size of one entry in bytes (deterministic — never `size_of`
+/// guesses that could drift across platforms): quantized key + a fixed
+/// per-payload cost + bookkeeping overhead.
+pub fn entry_bytes(key: &[i8], entry: &CacheEntry) -> usize {
+    const OVERHEAD: usize = 32;
+    const PER_HIT: usize = 16; // id + score, padded
+    const ANSWER: usize = 64; // scores + provenance
+    let payload = match &entry.payload {
+        CachePayload::Hits(hits) => PER_HIT * hits.len(),
+        CachePayload::Answer(_) => ANSWER,
+    };
+    key.len() + payload + OVERHEAD
+}
+
+/// Deterministically quantize a (unit-norm) embedding into the cache key
+/// space: one signed byte per dimension. Exact duplicate queries embed
+/// identically and therefore key identically; quantization only widens
+/// near-duplicate matching, never splits exact duplicates.
+pub fn quantize_embedding(emb: &[f32]) -> Vec<i8> {
+    emb.iter().map(|&x| (x * 127.0).round().clamp(-127.0, 127.0) as i8).collect()
+}
+
+/// 64-bit identity guard of the *full-precision* embedding (FNV-1a over
+/// the raw f32 bit patterns). Quantized keys can in principle merge two
+/// nearly-identical-but-distinct embeddings; exact-threshold callers
+/// store this with the entry and compare it on a key hit, so a
+/// quantization collision degrades to a cache miss instead of silently
+/// serving another query's answer.
+pub fn embedding_guard(emb: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &x in emb {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Cosine similarity between two quantized keys (integer dot product,
+/// fully deterministic across platforms).
+pub fn quantized_cosine(a: &[i8], b: &[i8]) -> f64 {
+    if a.len() != b.len() || a.is_empty() {
+        return 0.0;
+    }
+    let (mut dot, mut na, mut nb) = (0i64, 0i64, 0i64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as i64 * y as i64;
+        na += x as i64 * x as i64;
+        nb += y as i64 * y as i64;
+    }
+    if na == 0 || nb == 0 {
+        return 0.0;
+    }
+    dot as f64 / ((na as f64).sqrt() * (nb as f64).sqrt())
+}
+
+/// The pluggable cache interface both cache levels run behind.
+///
+/// Implementations must be deterministic: same call sequence ⇒ same hits,
+/// same evictions. `get`/`get_similar` are `&mut self` because lookups
+/// update replacement-policy state (recency / frequency).
+pub trait QueryCache: Send {
+    /// Short stable identifier (registry key for built-ins).
+    fn name(&self) -> &str;
+
+    /// Exact lookup by quantized key.
+    fn get(&mut self, key: &[i8]) -> Option<CacheEntry>;
+
+    /// Best entry whose key has cosine similarity ≥ `threshold` to `key`.
+    /// A `threshold >= 1.0` must return only exact key matches (true
+    /// duplicates) — the default delegates to [`get`](QueryCache::get)
+    /// then, and returns `None` for sub-exact thresholds.
+    fn get_similar(&mut self, key: &[i8], threshold: f64) -> Option<CacheEntry> {
+        if threshold >= 1.0 {
+            self.get(key)
+        } else {
+            None
+        }
+    }
+
+    /// Insert (or overwrite) an entry; returns how many *other* entries
+    /// were evicted to fit it. A cache with zero capacity stores nothing.
+    fn insert(&mut self, key: Vec<i8>, entry: CacheEntry) -> usize;
+
+    /// Drop every entry whose tag matches; returns how many were dropped.
+    /// The conservative default flushes everything.
+    fn invalidate(&mut self, pred: &mut dyn FnMut(&EntryTag) -> bool) -> usize {
+        let _ = pred;
+        self.clear()
+    }
+
+    /// Drop everything; returns how many entries were dropped.
+    fn clear(&mut self) -> usize;
+
+    /// Entries currently stored.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Modeled bytes currently in use (see [`entry_bytes`]).
+    fn bytes(&self) -> usize;
+
+    /// Configured byte budget.
+    fn capacity_bytes(&self) -> usize;
+}
+
+/// The `none` policy: a cache-shaped hole. Stores nothing, hits nothing,
+/// occupies zero bytes — the default, pinning "adding the cache tier
+/// changed nothing" in the golden-trace harness.
+pub struct NoneCache;
+
+impl QueryCache for NoneCache {
+    fn name(&self) -> &str {
+        "none"
+    }
+    fn get(&mut self, _key: &[i8]) -> Option<CacheEntry> {
+        None
+    }
+    fn insert(&mut self, _key: Vec<i8>, _entry: CacheEntry) -> usize {
+        0
+    }
+    fn clear(&mut self) -> usize {
+        0
+    }
+    fn len(&self) -> usize {
+        0
+    }
+    fn bytes(&self) -> usize {
+        0
+    }
+    fn capacity_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Eviction policy for [`PolicyCache`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Evict the least-recently-used entry.
+    Lru,
+    /// Evict the least-frequently-used entry (ties broken LRU).
+    Lfu,
+}
+
+struct Stored {
+    entry: CacheEntry,
+    bytes: usize,
+    last_used: u64,
+    freq: u64,
+}
+
+/// Byte-budgeted cache with pluggable LRU/LFU eviction. Entries live in a
+/// `BTreeMap` so iteration (and therefore similarity scans and eviction
+/// tie-breaks) is key-ordered and deterministic.
+pub struct PolicyCache {
+    policy: EvictPolicy,
+    capacity_bytes: usize,
+    entries: BTreeMap<Vec<i8>, Stored>,
+    bytes: usize,
+    tick: u64,
+}
+
+impl PolicyCache {
+    pub fn new(policy: EvictPolicy, capacity_bytes: usize) -> Self {
+        PolicyCache { policy, capacity_bytes, entries: BTreeMap::new(), bytes: 0, tick: 0 }
+    }
+
+    fn touch(&mut self, key: &[i8]) {
+        self.tick += 1;
+        if let Some(s) = self.entries.get_mut(key) {
+            s.last_used = self.tick;
+            s.freq += 1;
+        }
+    }
+
+    /// Key of the current eviction victim under the policy. `protect`
+    /// shields the just-inserted key — naive LFU would otherwise evict
+    /// the newcomer (freq 1) and a full cache could never turn over.
+    ///
+    /// O(n) scan per victim: only taken once the cache is at its byte
+    /// budget, which test- and paper-scale runs never reach. When
+    /// production runs operate saturated caches, switch to an ordered
+    /// rank index (`BTreeMap<(u64, u64), key>`; ranks are unique because
+    /// the tick is strictly monotone) — tracked in ROADMAP open items.
+    fn victim(&self, protect: &[i8]) -> Option<Vec<i8>> {
+        self.entries
+            .iter()
+            .filter(|(k, _)| k.as_slice() != protect)
+            .min_by_key(|(_, s)| match self.policy {
+                EvictPolicy::Lru => (s.last_used, 0),
+                EvictPolicy::Lfu => (s.freq, s.last_used),
+            })
+            .map(|(k, _)| k.clone())
+    }
+
+    fn evict_to_fit(&mut self, protect: &[i8]) -> usize {
+        let mut evicted = 0;
+        while self.bytes > self.capacity_bytes {
+            let Some(victim) = self.victim(protect) else { break };
+            if let Some(s) = self.entries.remove(&victim) {
+                self.bytes -= s.bytes;
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+}
+
+impl QueryCache for PolicyCache {
+    fn name(&self) -> &str {
+        match self.policy {
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::Lfu => "lfu",
+        }
+    }
+
+    fn get(&mut self, key: &[i8]) -> Option<CacheEntry> {
+        // single tree walk; the tick advances only on hits, as for every
+        // other policy-state update
+        if let Some(s) = self.entries.get_mut(key) {
+            self.tick += 1;
+            s.last_used = self.tick;
+            s.freq += 1;
+            return Some(s.entry.clone());
+        }
+        None
+    }
+
+    fn get_similar(&mut self, key: &[i8], threshold: f64) -> Option<CacheEntry> {
+        // exact-only thresholds never do float comparisons: true
+        // duplicates hit, everything else misses
+        if threshold >= 1.0 {
+            return self.get(key);
+        }
+        // exact duplicates score cosine 1.0 >= any threshold — serve them
+        // without scanning (the warm-cache common case)
+        if let Some(hit) = self.get(key) {
+            return Some(hit);
+        }
+        let mut best: Option<(f64, Vec<i8>)> = None;
+        for stored_key in self.entries.keys() {
+            let sim = quantized_cosine(key, stored_key);
+            // strict > keeps the first (lowest) key on ties: deterministic
+            if sim >= threshold && best.as_ref().map(|(b, _)| sim > *b).unwrap_or(true) {
+                best = Some((sim, stored_key.clone()));
+            }
+        }
+        let (_, k) = best?;
+        self.touch(&k);
+        self.entries.get(&k).map(|s| s.entry.clone())
+    }
+
+    fn insert(&mut self, key: Vec<i8>, entry: CacheEntry) -> usize {
+        let size = entry_bytes(&key, &entry);
+        if self.capacity_bytes == 0 || size > self.capacity_bytes {
+            return 0; // never store what can never fit
+        }
+        self.tick += 1;
+        if let Some(s) = self.entries.get_mut(&key) {
+            // overwrite: recency/frequency refresh, entry count unchanged
+            self.bytes = self.bytes - s.bytes + size;
+            s.entry = entry;
+            s.bytes = size;
+            s.last_used = self.tick;
+            s.freq += 1;
+        } else {
+            self.bytes += size;
+            self.entries.insert(
+                key.clone(),
+                Stored { entry, bytes: size, last_used: self.tick, freq: 1 },
+            );
+        }
+        self.evict_to_fit(&key)
+    }
+
+    fn invalidate(&mut self, pred: &mut dyn FnMut(&EntryTag) -> bool) -> usize {
+        let doomed: Vec<Vec<i8>> = self
+            .entries
+            .iter()
+            .filter(|(_, s)| pred(&s.entry.tag))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &doomed {
+            if let Some(s) = self.entries.remove(k) {
+                self.bytes -= s.bytes;
+            }
+        }
+        doomed.len()
+    }
+
+    fn clear(&mut self) -> usize {
+        let n = self.entries.len();
+        self.entries.clear();
+        self.bytes = 0;
+        n
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+}
+
+/// Per-slot cache activity, aggregated across both levels and surfaced in
+/// `SlotReport::cache` (and, when caching is enabled, in run transcripts).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheSlotStats {
+    /// Per-node retrieval-cache hits (index search skipped).
+    pub retrieval_hits: usize,
+    pub retrieval_misses: usize,
+    pub retrieval_evictions: usize,
+    /// Cluster answer-cache hits (query never routed to a node).
+    pub answer_hits: usize,
+    pub answer_misses: usize,
+    pub answer_evictions: usize,
+    /// Entries dropped by event-driven invalidation since the last slot.
+    pub invalidations: usize,
+    /// Total modeled cache bytes in use after the slot (all levels).
+    pub bytes: usize,
+}
+
+impl CacheSlotStats {
+    /// Combined hits across both levels.
+    pub fn hits(&self) -> usize {
+        self.retrieval_hits + self.answer_hits
+    }
+
+    /// Combined misses across both levels.
+    pub fn misses(&self) -> usize {
+        self.retrieval_misses + self.answer_misses
+    }
+
+    /// Combined evictions across both levels.
+    pub fn evictions(&self) -> usize {
+        self.retrieval_evictions + self.answer_evictions
+    }
+
+    /// Hit rate over all lookups this slot (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits() + self.misses();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits_entry(node: usize, domain: usize, n_hits: usize) -> CacheEntry {
+        CacheEntry {
+            tag: EntryTag { node, domain },
+            guard: 0,
+            payload: CachePayload::Hits(
+                (0..n_hits).map(|i| Hit { id: i, score: 0.5 }).collect(),
+            ),
+        }
+    }
+
+    fn key(tag: u8) -> Vec<i8> {
+        vec![tag as i8; 8]
+    }
+
+    /// Capacity in bytes for exactly `n` of the `hits_entry(_, _, 5)`
+    /// entries with 8-byte keys.
+    fn cap_for(n: usize) -> usize {
+        n * entry_bytes(&key(0), &hits_entry(0, 0, 5))
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = PolicyCache::new(EvictPolicy::Lru, cap_for(2));
+        assert_eq!(c.insert(key(1), hits_entry(0, 0, 5)), 0);
+        assert_eq!(c.insert(key(2), hits_entry(0, 0, 5)), 0);
+        assert!(c.get(&key(1)).is_some()); // 1 is now more recent than 2
+        assert_eq!(c.insert(key(3), hits_entry(0, 0, 5)), 1);
+        assert!(c.get(&key(2)).is_none(), "LRU victim must be 2");
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequently_used() {
+        let mut c = PolicyCache::new(EvictPolicy::Lfu, cap_for(2));
+        c.insert(key(1), hits_entry(0, 0, 5));
+        c.insert(key(2), hits_entry(0, 0, 5));
+        // key 1 is hot, key 2 cold
+        for _ in 0..3 {
+            assert!(c.get(&key(1)).is_some());
+        }
+        assert_eq!(c.insert(key(3), hits_entry(0, 0, 5)), 1);
+        assert!(c.get(&key(2)).is_none(), "LFU victim must be the cold key");
+        assert!(c.get(&key(1)).is_some());
+    }
+
+    #[test]
+    fn capacity_zero_never_stores() {
+        let mut c = PolicyCache::new(EvictPolicy::Lru, 0);
+        assert_eq!(c.insert(key(1), hits_entry(0, 0, 5)), 0);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.bytes(), 0);
+        assert!(c.get(&key(1)).is_none());
+    }
+
+    #[test]
+    fn reinsert_updates_recency_not_size() {
+        let mut c = PolicyCache::new(EvictPolicy::Lru, cap_for(2));
+        c.insert(key(1), hits_entry(0, 0, 5));
+        c.insert(key(2), hits_entry(0, 0, 5));
+        assert_eq!(c.len(), 2);
+        let before = c.bytes();
+        c.insert(key(1), hits_entry(0, 1, 5)); // overwrite, refresh recency
+        assert_eq!(c.len(), 2, "re-insert must not grow the cache");
+        assert_eq!(c.bytes(), before);
+        // 2 is now the LRU entry
+        assert_eq!(c.insert(key(3), hits_entry(0, 0, 5)), 1);
+        assert!(c.get(&key(2)).is_none());
+        let e = c.get(&key(1)).unwrap();
+        assert_eq!(e.tag.domain, 1, "overwrite must replace the payload");
+    }
+
+    #[test]
+    fn bytes_never_exceed_budget() {
+        let cap = cap_for(3) + 7; // deliberately not entry-aligned
+        let mut c = PolicyCache::new(EvictPolicy::Lru, cap);
+        for i in 0..50u8 {
+            c.insert(key(i), hits_entry(0, 0, 5));
+            assert!(c.bytes() <= cap, "bytes {} > cap {cap}", c.bytes());
+        }
+        assert!(c.len() >= 1);
+        // an entry that can never fit is refused outright
+        let mut tiny = PolicyCache::new(EvictPolicy::Lru, 10);
+        assert_eq!(tiny.insert(key(1), hits_entry(0, 0, 5)), 0);
+        assert_eq!(tiny.len(), 0);
+    }
+
+    #[test]
+    fn exact_threshold_returns_only_true_duplicates() {
+        let mut c = PolicyCache::new(EvictPolicy::Lru, cap_for(4));
+        c.insert(vec![100, 0, 0, 0], hits_entry(0, 0, 5));
+        // a near-duplicate key (cosine ≈ 0.995) must NOT hit at 1.0
+        assert!(c.get_similar(&[100, 10, 0, 0], 1.0).is_none());
+        assert!(c.get_similar(&[100, 0, 0, 0], 1.0).is_some());
+        // ... but does hit at a sub-exact threshold
+        assert!(c.get_similar(&[100, 10, 0, 0], 0.9).is_some());
+        // and an unrelated key misses at any threshold ≥ 0.5
+        assert!(c.get_similar(&[0, 0, -100, 0], 0.5).is_none());
+    }
+
+    #[test]
+    fn invalidate_drops_matching_tags_only() {
+        let mut c = PolicyCache::new(EvictPolicy::Lru, cap_for(4));
+        c.insert(key(1), hits_entry(0, 2, 5));
+        c.insert(key(2), hits_entry(1, 2, 5));
+        c.insert(key(3), hits_entry(0, 4, 5));
+        let dropped = c.invalidate(&mut |t| t.node == 0);
+        assert_eq!(dropped, 2);
+        assert!(c.get(&key(2)).is_some());
+        assert!(c.get(&key(1)).is_none());
+        assert_eq!(c.clear(), 1);
+        assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn quantization_is_exact_for_duplicates_and_cosine_sane() {
+        let emb: Vec<f32> = vec![0.5, -0.25, 0.75, 0.0];
+        assert_eq!(quantize_embedding(&emb), quantize_embedding(&emb.clone()));
+        let a = quantize_embedding(&emb);
+        assert!((quantized_cosine(&a, &a) - 1.0).abs() < 1e-12);
+        let b = quantize_embedding(&[-0.5, 0.25, -0.75, 0.0]);
+        assert!(quantized_cosine(&a, &b) < -0.99);
+    }
+
+    #[test]
+    fn guard_distinguishes_quantization_collisions() {
+        // two distinct full-precision embeddings that land on the same
+        // quantized key — the guard is what keeps them apart
+        let a: Vec<f32> = vec![0.5, 0.25, 0.0, 0.0];
+        let b: Vec<f32> = vec![0.5001, 0.25, 0.0, 0.0];
+        assert_eq!(quantize_embedding(&a), quantize_embedding(&b));
+        assert_ne!(embedding_guard(&a), embedding_guard(&b));
+        // and it is stable for true duplicates
+        assert_eq!(embedding_guard(&a), embedding_guard(&a.clone()));
+    }
+
+    #[test]
+    fn none_cache_is_a_hole() {
+        let mut c = NoneCache;
+        assert_eq!(c.insert(key(1), hits_entry(0, 0, 5)), 0);
+        assert!(c.get(&key(1)).is_none());
+        assert!(c.get_similar(&key(1), 1.0).is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.clear(), 0);
+    }
+
+    #[test]
+    fn slot_stats_rates() {
+        let s = CacheSlotStats {
+            retrieval_hits: 3,
+            retrieval_misses: 1,
+            answer_hits: 1,
+            answer_misses: 3,
+            ..Default::default()
+        };
+        assert_eq!(s.hits(), 4);
+        assert_eq!(s.misses(), 4);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(CacheSlotStats::default().hit_rate(), 0.0);
+    }
+}

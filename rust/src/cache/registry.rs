@@ -1,0 +1,229 @@
+//! String-keyed cache registry + cache configuration.
+//!
+//! Mirrors `AllocatorRegistry` / `IndexRegistry`: built-in policies are
+//! registered under their [`CacheKind`] names, custom caches register a
+//! factory under any other key, and both the cluster layer (per-node
+//! retrieval caches) and the coordinator (the semantic answer cache)
+//! build whatever the [`CacheSpec`] names — no downstream code branches
+//! on the policy kind.
+
+use std::collections::BTreeMap;
+
+use super::{EvictPolicy, NoneCache, PolicyCache, QueryCache};
+use anyhow::{anyhow, Result};
+
+/// Built-in cache policies (also the registry's built-in keys).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheKind {
+    /// Least-recently-used eviction.
+    Lru,
+    /// Least-frequently-used eviction (ties broken LRU).
+    Lfu,
+    /// No caching at all — the default; byte-identical to the pre-cache
+    /// system (pinned by the golden-trace parity tests).
+    None,
+}
+
+impl CacheKind {
+    /// Every built-in kind.
+    pub const ALL: [CacheKind; 3] = [CacheKind::Lru, CacheKind::Lfu, CacheKind::None];
+
+    /// Stable string key (CLI flag values, TOML, registry keys).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CacheKind::Lru => "lru",
+            CacheKind::Lfu => "lfu",
+            CacheKind::None => "none",
+        }
+    }
+}
+
+impl std::fmt::Display for CacheKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for CacheKind {
+    type Err = anyhow::Error;
+
+    /// Exhaustive over [`CacheKind::ALL`]; the error lists every valid kind.
+    fn from_str(s: &str) -> Result<Self> {
+        CacheKind::ALL
+            .iter()
+            .find(|k| k.as_str() == s)
+            .copied()
+            .ok_or_else(|| {
+                let valid: Vec<&str> = CacheKind::ALL.iter().map(|k| k.as_str()).collect();
+                anyhow!("unknown cache kind {s:?}; valid kinds: {}", valid.join(", "))
+            })
+    }
+}
+
+/// Cache configuration (TOML `[cache]` global table, `[nodes.cache]`
+/// per-node sub-tables, CLI `--cache` / `--cache-mb`).
+///
+/// `kind` is a registry key, so it may also name a custom cache registered
+/// through `CoordinatorBuilder::register_cache`; unknown kinds fail at
+/// build time with the registry's key list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheSpec {
+    /// Registry key (`lru`, `lfu`, `none`, or a custom registration).
+    pub kind: String,
+    /// Cache byte budget in MiB (`--cache-mb`). Zero stores nothing.
+    pub capacity_mb: usize,
+    /// Semantic answer-cache similarity threshold; `1.0` (the default)
+    /// serves exact duplicates only, guaranteeing bitwise-equal quality.
+    pub threshold: f64,
+    /// Modeled node memory (MiB) the retrieval cache competes within: the
+    /// intra-node solver's generation-memory cap shrinks by
+    /// `cache_bytes / node_mem_mb` as the cache fills.
+    pub node_mem_mb: usize,
+}
+
+impl Default for CacheSpec {
+    fn default() -> Self {
+        CacheSpec {
+            kind: CacheKind::None.as_str().into(),
+            capacity_mb: 32,
+            threshold: 1.0,
+            node_mem_mb: 8192,
+        }
+    }
+}
+
+impl CacheSpec {
+    /// Default parameters with the given kind.
+    pub fn of_kind(kind: &str) -> Self {
+        CacheSpec { kind: kind.into(), ..CacheSpec::default() }
+    }
+
+    /// Whether this spec configures an actual cache (anything but `none`).
+    pub fn enabled(&self) -> bool {
+        self.kind != CacheKind::None.as_str()
+    }
+
+    /// The byte budget.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_mb * 1024 * 1024
+    }
+
+    /// The modeled node memory budget in bytes.
+    pub fn node_mem_bytes(&self) -> usize {
+        self.node_mem_mb * 1024 * 1024
+    }
+}
+
+/// What a cache factory gets to build from.
+pub struct CacheBuildCtx<'a> {
+    /// The resolved cache configuration.
+    pub spec: &'a CacheSpec,
+}
+
+type CacheFactory = Box<dyn Fn(&CacheBuildCtx) -> Result<Box<dyn QueryCache>> + Send + Sync>;
+
+/// String-keyed registry of cache factories.
+pub struct CacheRegistry {
+    factories: BTreeMap<String, CacheFactory>,
+}
+
+impl CacheRegistry {
+    /// Empty registry (no built-ins).
+    pub fn empty() -> Self {
+        CacheRegistry { factories: BTreeMap::new() }
+    }
+
+    /// Registry with every [`CacheKind`] built-in registered.
+    pub fn with_builtins() -> Self {
+        let mut r = CacheRegistry::empty();
+        r.register(CacheKind::Lru.as_str(), |ctx| {
+            Ok(Box::new(PolicyCache::new(EvictPolicy::Lru, ctx.spec.capacity_bytes())))
+        });
+        r.register(CacheKind::Lfu.as_str(), |ctx| {
+            Ok(Box::new(PolicyCache::new(EvictPolicy::Lfu, ctx.spec.capacity_bytes())))
+        });
+        r.register(CacheKind::None.as_str(), |_| Ok(Box::new(NoneCache)));
+        r
+    }
+
+    /// Register (or replace) a factory under `kind`.
+    pub fn register(
+        &mut self,
+        kind: &str,
+        factory: impl Fn(&CacheBuildCtx) -> Result<Box<dyn QueryCache>> + Send + Sync + 'static,
+    ) {
+        self.factories.insert(kind.to_string(), Box::new(factory));
+    }
+
+    /// Registered keys, sorted.
+    pub fn kinds(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    /// Build an empty cache of `kind`; the error lists every registered key.
+    pub fn build(&self, kind: &str, ctx: &CacheBuildCtx) -> Result<Box<dyn QueryCache>> {
+        match self.factories.get(kind) {
+            Some(f) => f(ctx),
+            None => Err(anyhow!(
+                "unknown cache kind {kind:?}; registered kinds: {}",
+                self.kinds().join(", ")
+            )),
+        }
+    }
+}
+
+impl Default for CacheRegistry {
+    fn default() -> Self {
+        CacheRegistry::with_builtins()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_and_errors_list_valid() {
+        for k in CacheKind::ALL {
+            assert_eq!(k.as_str().parse::<CacheKind>().unwrap(), k);
+        }
+        let err = "bogus".parse::<CacheKind>().unwrap_err().to_string();
+        assert!(err.contains("valid kinds") && err.contains("lru"), "{err}");
+    }
+
+    #[test]
+    fn builtins_build_every_kind() {
+        let reg = CacheRegistry::with_builtins();
+        let spec = CacheSpec::default();
+        for k in CacheKind::ALL {
+            let cache = reg.build(k.as_str(), &CacheBuildCtx { spec: &spec }).unwrap();
+            assert!(cache.is_empty(), "{k}");
+            assert_eq!(cache.name(), k.as_str());
+        }
+    }
+
+    #[test]
+    fn unknown_kind_lists_registered_keys() {
+        let reg = CacheRegistry::with_builtins();
+        let spec = CacheSpec::default();
+        let err = reg
+            .build("redis", &CacheBuildCtx { spec: &spec })
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        for k in CacheKind::ALL {
+            assert!(err.contains(k.as_str()), "{err}");
+        }
+        assert!(err.contains("redis"), "{err}");
+    }
+
+    #[test]
+    fn spec_defaults_are_off_and_exact() {
+        let spec = CacheSpec::default();
+        assert!(!spec.enabled());
+        assert_eq!(spec.threshold, 1.0);
+        assert_eq!(CacheSpec::of_kind("lru").kind, "lru");
+        assert!(CacheSpec::of_kind("lru").enabled());
+        assert_eq!(spec.capacity_bytes(), 32 * 1024 * 1024);
+    }
+}

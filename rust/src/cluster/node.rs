@@ -4,6 +4,10 @@
 
 use std::collections::BTreeMap;
 
+use crate::cache::{
+    embedding_guard, quantize_embedding, CacheBuildCtx, CacheEntry, CachePayload, CacheRegistry,
+    EntryTag, QueryCache,
+};
 use crate::config::{IntraStrategy, NodeConfig};
 use crate::corpus::synth::SyntheticDataset;
 use crate::intranode::latfit::{LatencyFit, LatencyProfiler};
@@ -40,6 +44,9 @@ pub struct QueryOutcome {
     pub feedback: f64,
     /// Simulated completion latency (s, within the slot).
     pub latency_s: f64,
+    /// Served from the cluster answer cache — the query never reached a
+    /// node this slot; `node`/`scores` are the original serve's.
+    pub cached: bool,
 }
 
 /// Slot-level summary for one node.
@@ -59,6 +66,12 @@ pub struct NodeSlotReport {
     pub per_model_queries: Vec<usize>,
     /// Memory fraction per model idx (summed over GPUs).
     pub per_model_mem: Vec<f64>,
+    /// Retrieval-cache hits this slot (index search skipped).
+    pub cache_hits: usize,
+    /// Retrieval-cache misses this slot (searched, then inserted).
+    pub cache_misses: usize,
+    /// Entries evicted from the retrieval cache this slot.
+    pub cache_evictions: usize,
 }
 
 /// An edge node.
@@ -72,6 +85,17 @@ pub struct EdgeNode {
     pub index: Box<dyn VectorIndex>,
     /// Registry key the index was built from (diagnostics / CLI tables).
     pub index_kind: String,
+    /// Per-node retrieval cache (quantized-query-embedding key → top-k
+    /// hits). `NoneCache` by default — zero overhead, zero behavior drift.
+    pub cache: Box<dyn QueryCache>,
+    /// Registry key the cache was built from.
+    pub cache_kind: String,
+    /// Whether the cache participates in the serve path at all (false for
+    /// the `none` kind — keeps the pre-cache hot path byte-identical).
+    cache_active: bool,
+    /// Modeled node memory (bytes) the cache footprint is charged against
+    /// when computing the solver's generation-memory cap.
+    node_mem_bytes: usize,
     pub pool: Vec<ModelSpec>,
     pub gpus: Vec<GpuState>,
     /// Ground-truth latency per GPU (the "hardware").
@@ -105,6 +129,7 @@ impl EdgeNode {
         top_k: usize,
         seed: u64,
         registry: &IndexRegistry,
+        cache_registry: &CacheRegistry,
     ) -> Result<Self> {
         let ctx = IndexBuildCtx {
             dim: crate::text::embed::EMBED_DIM,
@@ -112,6 +137,7 @@ impl EdgeNode {
             spec: &cfg.index,
         };
         let mut index = registry.build(&cfg.index.kind, &ctx)?;
+        let cache = cache_registry.build(&cfg.cache.kind, &CacheBuildCtx { spec: &cfg.cache })?;
         for &d in &doc_ids {
             index.add(d, &doc_embs[d]);
         }
@@ -152,6 +178,10 @@ impl EdgeNode {
             doc_ids,
             index,
             index_kind: cfg.index.kind.clone(),
+            cache,
+            cache_kind: cfg.cache.kind.clone(),
+            cache_active: cfg.cache.enabled(),
+            node_mem_bytes: cfg.cache.node_mem_bytes(),
             pool,
             gpus,
             gts,
@@ -184,6 +214,24 @@ impl EdgeNode {
         self.doc_ids.sort_unstable();
     }
 
+    /// Fraction of GPU memory left for generation models after charging
+    /// the retrieval cache's modeled footprint against the node's memory
+    /// budget (§IV-C widened: cache competes with generation memory).
+    /// Exactly 1.0 whenever the cache is off or empty.
+    pub fn gen_mem_cap(&self) -> f64 {
+        if self.node_mem_bytes == 0 {
+            return 1.0;
+        }
+        (1.0 - self.cache.bytes() as f64 / self.node_mem_bytes as f64).clamp(0.0, 1.0)
+    }
+
+    /// Flush the retrieval cache (corpus changed: any cached top-k may now
+    /// be wrong — new vectors can enter *any* query's top-k, so the whole
+    /// node cache is conservatively dropped). Returns entries dropped.
+    pub fn invalidate_cache(&mut self) -> usize {
+        self.cache.clear()
+    }
+
     /// Compute the slot plan for `n_queries` within `budget_s`
     /// (Solver strategy runs Eq. 25–29; Fixed splits evenly).
     pub fn plan_slot(&self, n_queries: usize, budget_s: f64) -> NodePlan {
@@ -195,6 +243,7 @@ impl EdgeNode {
                 quality: &self.quality,
                 queries: n_queries,
                 budget_s,
+                mem_cap: self.gen_mem_cap(),
             }),
             IntraStrategy::Fixed(plans) => self.fixed_plan(plans, n_queries, budget_s),
         }
@@ -302,10 +351,7 @@ impl EdgeNode {
         slo_s: f64,
     ) -> NodeSlotReport {
         let n = queries.len();
-        let ts = self.search_model.search_time(n, self.corpus_size());
-        let budget = slo_s - ts;
         let mut report = NodeSlotReport {
-            search_time_s: ts,
             per_model_queries: vec![0; self.pool.len()],
             per_model_mem: vec![0.0; self.pool.len()],
             ..Default::default()
@@ -313,26 +359,9 @@ impl EdgeNode {
         if n == 0 {
             return report;
         }
-        if budget <= 0.0 {
-            // everything is dropped before inference — skip retrieval
-            // entirely (measured_search_s stays 0: no search ran)
-            for &q in queries {
-                report.outcomes.push(QueryOutcome {
-                    qa_id: q,
-                    node: self.id,
-                    model_idx: None,
-                    dropped: true,
-                    rel: 0.0,
-                    scores: QualityScores::zeros(),
-                    feedback: 0.0,
-                    latency_s: slo_s,
-                });
-            }
-            return report;
-        }
 
-        // retrieval happens before generation: one batched search for the
-        // whole slot (vs a per-query call inside the serving loop)
+        // resolve embeddings up front (the coordinator always passes them;
+        // the retrieval cache keys on them)
         let emb_storage: Vec<Vec<f32>>;
         let embs: &[Vec<f32>] = match query_embs {
             Some(embs) => embs,
@@ -344,9 +373,93 @@ impl EdgeNode {
                 &emb_storage
             }
         };
-        let timer = Timer::start();
-        let slot_hits = self.index.search_batch(embs, self.top_k);
-        report.measured_search_s = timer.secs();
+
+        // retrieval-cache lookups (cache off ⇒ every query misses, no
+        // calls): hits skip the index search AND shrink the modeled
+        // TS_n^t below — cached retrieval buys back latency budget. A key
+        // hit whose full-precision guard differs (quantization collision)
+        // is treated as a miss, never served.
+        let mut hits_by_pos: Vec<Option<Vec<Hit>>> = vec![None; n];
+        let mut keys: Vec<Vec<i8>> = Vec::new();
+        let mut guards: Vec<u64> = Vec::new();
+        let miss_pos: Vec<usize> = if !self.cache_active {
+            (0..n).collect()
+        } else {
+            keys = embs.iter().map(|e| quantize_embedding(e)).collect();
+            guards = embs.iter().map(|e| embedding_guard(e)).collect();
+            let mut misses = Vec::new();
+            for (i, key) in keys.iter().enumerate() {
+                match self.cache.get(key) {
+                    Some(CacheEntry { guard, payload: CachePayload::Hits(h), .. })
+                        if guard == guards[i] =>
+                    {
+                        report.cache_hits += 1;
+                        hits_by_pos[i] = Some(h);
+                    }
+                    _ => {
+                        report.cache_misses += 1;
+                        misses.push(i);
+                    }
+                }
+            }
+            misses
+        };
+
+        // modeled search time TS_n^t covers only the queries actually
+        // searched (== all of them whenever the cache is off)
+        let ts = self.search_model.search_time(miss_pos.len(), self.corpus_size());
+        let budget = slo_s - ts;
+        report.search_time_s = ts;
+        if budget <= 0.0 {
+            // everything is dropped before inference — skip the search
+            // entirely (measured_search_s stays 0: no search ran)
+            for &q in queries {
+                report.outcomes.push(QueryOutcome {
+                    qa_id: q,
+                    node: self.id,
+                    model_idx: None,
+                    dropped: true,
+                    rel: 0.0,
+                    scores: QualityScores::zeros(),
+                    feedback: 0.0,
+                    latency_s: slo_s,
+                    cached: false,
+                });
+            }
+            return report;
+        }
+
+        // one batched search per slot over the cache misses, results
+        // stitched back in query order (cache off: all queries, the
+        // pre-cache hot path bit for bit)
+        let searched: Vec<Vec<Hit>> = if miss_pos.len() == n {
+            let timer = Timer::start();
+            let hits = self.index.search_batch(embs, self.top_k);
+            report.measured_search_s = timer.secs();
+            hits
+        } else {
+            let miss_embs: Vec<Vec<f32>> = miss_pos.iter().map(|&i| embs[i].clone()).collect();
+            let timer = Timer::start();
+            let hits = self.index.search_batch(&miss_embs, self.top_k);
+            report.measured_search_s = timer.secs();
+            hits
+        };
+        for (&i, found) in miss_pos.iter().zip(searched) {
+            if self.cache_active {
+                let qa = &ds.qa_pairs[queries[i]];
+                report.cache_evictions += self.cache.insert(
+                    keys[i].clone(),
+                    CacheEntry {
+                        tag: EntryTag { node: self.id, domain: qa.domain },
+                        guard: guards[i],
+                        payload: CachePayload::Hits(found.clone()),
+                    },
+                );
+            }
+            hits_by_pos[i] = Some(found);
+        }
+        let slot_hits: Vec<Vec<Hit>> =
+            hits_by_pos.into_iter().map(|h| h.expect("hit or searched")).collect();
 
         let plan = self.plan_slot(n, budget);
         // apply deployments
@@ -388,6 +501,7 @@ impl EdgeNode {
                             scores: QualityScores::zeros(),
                             feedback: 0.0,
                             latency_s: slo_s,
+                            cached: false,
                         });
                         continue;
                     }
@@ -406,6 +520,7 @@ impl EdgeNode {
                         scores,
                         feedback,
                         latency_s: ts + done,
+                        cached: false,
                     });
                 }
                 cursor += take;
@@ -422,6 +537,7 @@ impl EdgeNode {
                 scores: QualityScores::zeros(),
                 feedback: 0.0,
                 latency_s: slo_s,
+                cached: false,
             });
             cursor += 1;
         }

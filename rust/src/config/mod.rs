@@ -9,6 +9,7 @@ use crate::util::toml::{Table, TomlDoc};
 use crate::workload::SkewPattern;
 use anyhow::{anyhow, Result};
 
+pub use crate::cache::registry::{CacheKind, CacheSpec};
 pub use crate::vecdb::registry::{IndexKind, IndexSpec};
 
 /// Which dataset family an experiment uses.
@@ -33,6 +34,9 @@ pub struct NodeConfig {
     /// Retrieval index configuration (kind + parameters; default: exact
     /// flat, the paper's setup).
     pub index: IndexSpec,
+    /// Retrieval-cache configuration (policy + byte budget; default:
+    /// `none` — no caching, the pre-cache behavior).
+    pub cache: CacheSpec,
 }
 
 /// Intra-node scheduling strategy (Table III rows).
@@ -151,6 +155,9 @@ pub struct ExperimentConfig {
     pub top_k: usize,
     pub allocator: AllocatorKind,
     pub intra: IntraStrategy,
+    /// Cluster-level semantic answer cache (also the default every node's
+    /// retrieval cache inherits unless `[nodes.cache]` overrides it).
+    pub cache: CacheSpec,
     /// Enable Algorithm-1 capacity-aware reassignment (Fig. 5 ablation).
     pub inter_enabled: bool,
     /// PPO buffer threshold / epochs.
@@ -170,6 +177,7 @@ impl ExperimentConfig {
                 primary_domains: vec![0, 1, 2],
                 corpus_docs: 260,
                 index: IndexSpec::default(),
+                cache: CacheSpec::default(),
             },
             NodeConfig {
                 name: "edge-b".into(),
@@ -178,6 +186,7 @@ impl ExperimentConfig {
                 primary_domains: vec![3, 4, 5],
                 corpus_docs: 260,
                 index: IndexSpec::default(),
+                cache: CacheSpec::default(),
             },
             NodeConfig {
                 name: "edge-c".into(),
@@ -186,6 +195,7 @@ impl ExperimentConfig {
                 primary_domains: vec![1, 3, 5],
                 corpus_docs: 300,
                 index: IndexSpec::default(),
+                cache: CacheSpec::default(),
             },
             NodeConfig {
                 name: "edge-d".into(),
@@ -194,6 +204,7 @@ impl ExperimentConfig {
                 primary_domains: vec![0, 2, 4],
                 corpus_docs: 300,
                 index: IndexSpec::default(),
+                cache: CacheSpec::default(),
             },
         ];
         ExperimentConfig {
@@ -211,6 +222,7 @@ impl ExperimentConfig {
             top_k: 5,
             allocator: AllocatorKind::Ppo,
             intra: IntraStrategy::Solver,
+            cache: CacheSpec::default(),
             inter_enabled: true,
             ppo_buffer: 256,
             ppo_epochs: 8,
@@ -227,6 +239,7 @@ impl ExperimentConfig {
             primary_domains: vec![i],
             corpus_docs: 220,
             index: IndexSpec::default(),
+            cache: CacheSpec::default(),
         };
         ExperimentConfig {
             seed: 7,
@@ -243,6 +256,7 @@ impl ExperimentConfig {
             top_k: 5,
             allocator: AllocatorKind::Oracle,
             intra: IntraStrategy::Solver,
+            cache: CacheSpec::default(),
             inter_enabled: true,
             ppo_buffer: 128,
             ppo_epochs: 6,
@@ -304,6 +318,13 @@ impl ExperimentConfig {
             .get("index")
             .map(|t| index_spec_from(t, "", IndexSpec::default()))
             .unwrap_or_default();
+        // cluster-wide cache config from `[cache]`: the coordinator's
+        // semantic answer cache AND the default every node's retrieval
+        // cache inherits, overridable per node via `[nodes.cache]`
+        if let Some(t) = doc.tables.get("cache") {
+            cfg.cache = cache_spec_from(t, "", cfg.cache.clone())?;
+        }
+        let cache_default = cfg.cache.clone();
         if let Some(nodes) = doc.arrays.get("nodes") {
             cfg.nodes = nodes
                 .iter()
@@ -320,7 +341,7 @@ impl ExperimentConfig {
                             _ => ModelSize::Large,
                         })
                         .collect();
-                    NodeConfig {
+                    Ok(NodeConfig {
                         name: t
                             .get("name")
                             .and_then(|v| v.as_str())
@@ -341,12 +362,14 @@ impl ExperimentConfig {
                             .and_then(|v| v.as_usize())
                             .unwrap_or(250),
                         index: index_spec_from(t, "index.", index_default.clone()),
-                    }
+                        cache: cache_spec_from(t, "cache.", cache_default.clone())?,
+                    })
                 })
-                .collect();
+                .collect::<Result<Vec<_>>>()?;
         } else {
             for n in cfg.nodes.iter_mut() {
                 n.index = index_default.clone();
+                n.cache = cache_default.clone();
             }
         }
         Ok(cfg)
@@ -378,6 +401,34 @@ fn index_spec_from(t: &Table, prefix: &str, base: IndexSpec) -> IndexSpec {
         }
     }
     spec
+}
+
+/// Read a [`CacheSpec`] from `prefix`-qualified keys of a table, starting
+/// from `base` (keys absent from the table keep the base value). Errors on
+/// out-of-range thresholds — a typo'd similarity bound should fail at
+/// parse time, not silently serve wrong answers.
+fn cache_spec_from(t: &Table, prefix: &str, base: CacheSpec) -> Result<CacheSpec> {
+    let mut spec = base;
+    let get = |key: &str| t.get(&format!("{prefix}{key}"));
+    if let Some(v) = get("kind").and_then(|v| v.as_str()) {
+        spec.kind = v.to_string();
+    }
+    for (key, field) in [
+        ("capacity_mb", &mut spec.capacity_mb),
+        ("node_mem_mb", &mut spec.node_mem_mb),
+    ] {
+        if let Some(v) = get(key).and_then(|v| v.as_usize()) {
+            *field = v;
+        }
+    }
+    if let Some(v) = get("threshold").and_then(|v| v.as_f64()) {
+        anyhow::ensure!(
+            v.is_finite() && v > 0.0 && v <= 1.0,
+            "cache threshold must be in (0, 1], got {v}"
+        );
+        spec.threshold = v;
+    }
+    Ok(spec)
 }
 
 #[cfg(test)]
@@ -475,6 +526,64 @@ shards = 8
         assert!(ExperimentConfig::from_toml("[skew]\nkind = \"nope\"\n").is_err());
         let cfg = ExperimentConfig::from_toml("seed = 1\n").unwrap();
         assert!(matches!(cfg.skew, SkewPattern::Dirichlet { .. }));
+    }
+
+    #[test]
+    fn from_toml_cache_global_default_and_per_node_override() {
+        let text = r#"
+[cache]
+kind = "lru"
+capacity_mb = 16
+threshold = 0.95
+node_mem_mb = 4096
+
+[[nodes]]
+name = "n0"
+
+[[nodes]]
+name = "n1"
+
+[nodes.cache]
+kind = "lfu"
+capacity_mb = 8
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        // the cluster-level answer cache takes the [cache] table
+        assert_eq!(cfg.cache.kind, "lru");
+        assert_eq!(cfg.cache.capacity_mb, 16);
+        assert!((cfg.cache.threshold - 0.95).abs() < 1e-12);
+        assert_eq!(cfg.cache.node_mem_mb, 4096);
+        // n0 inherits the global default; n1 overrides kind + budget only
+        assert_eq!(cfg.nodes[0].cache.kind, "lru");
+        assert_eq!(cfg.nodes[0].cache.capacity_mb, 16);
+        assert_eq!(cfg.nodes[1].cache.kind, "lfu");
+        assert_eq!(cfg.nodes[1].cache.capacity_mb, 8);
+        assert_eq!(cfg.nodes[1].cache.node_mem_mb, 4096);
+    }
+
+    #[test]
+    fn from_toml_cache_defaults_to_none_and_rejects_bad_threshold() {
+        let cfg = ExperimentConfig::from_toml("seed = 1\n").unwrap();
+        assert_eq!(cfg.cache, CacheSpec::default());
+        assert!(!cfg.cache.enabled());
+        assert!(cfg.nodes.iter().all(|n| !n.cache.enabled()));
+        // a global [cache] also applies when no [[nodes]] are declared
+        let cfg = ExperimentConfig::from_toml("[cache]\nkind = \"lru\"\n").unwrap();
+        assert!(cfg.nodes.iter().all(|n| n.cache.kind == "lru"));
+        let err = ExperimentConfig::from_toml("[cache]\nthreshold = 1.5\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("threshold"), "{err}");
+        assert!(ExperimentConfig::from_toml("[cache]\nthreshold = 0.0\n").is_err());
+    }
+
+    #[test]
+    fn cache_kind_roundtrips_and_errors_list_valid() {
+        for k in CacheKind::ALL {
+            assert_eq!(k.as_str().parse::<CacheKind>().unwrap(), k);
+        }
+        let err = "memcached".parse::<CacheKind>().unwrap_err().to_string();
+        assert!(err.contains("valid kinds") && err.contains("lfu"), "{err}");
     }
 
     #[test]

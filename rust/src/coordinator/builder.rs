@@ -7,6 +7,7 @@
 
 use std::sync::Arc;
 
+use crate::cache::{CacheBuildCtx, CacheRegistry, QueryCache};
 use crate::cluster::node::EdgeNode;
 use crate::config::{DatasetKind, ExperimentConfig};
 use crate::coordinator::allocator::{Allocator, AllocatorBuildCtx, AllocatorRegistry};
@@ -60,6 +61,7 @@ pub struct CoordinatorBuilder {
     backend: Backend,
     registry: AllocatorRegistry,
     index_registry: IndexRegistry,
+    cache_registry: CacheRegistry,
     dataset: Option<SyntheticDataset>,
     partitions: Option<Vec<Vec<usize>>>,
     capacities: Option<Vec<CapacityModel>>,
@@ -77,6 +79,7 @@ impl CoordinatorBuilder {
             backend: Backend::Reference,
             registry: AllocatorRegistry::with_builtins(),
             index_registry: IndexRegistry::with_builtins(),
+            cache_registry: CacheRegistry::with_builtins(),
             dataset: None,
             partitions: None,
             capacities: None,
@@ -150,6 +153,19 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Register a custom query-cache factory under `kind`; the global
+    /// `[cache]` table, per-node `[nodes.cache]` sub-tables and the
+    /// `--cache` flag can then select it by name, exactly like custom
+    /// allocators and indexes.
+    pub fn register_cache(
+        mut self,
+        kind: &str,
+        factory: impl Fn(&CacheBuildCtx) -> Result<Box<dyn QueryCache>> + Send + Sync + 'static,
+    ) -> Self {
+        self.cache_registry.register(kind, factory);
+        self
+    }
+
     /// Attach a [`SlotObserver`] receiving per-phase events (may be called
     /// repeatedly; all observers receive every event).
     pub fn observer(mut self, observer: Box<dyn SlotObserver>) -> Self {
@@ -177,6 +193,7 @@ impl CoordinatorBuilder {
             backend,
             registry,
             index_registry,
+            cache_registry,
             dataset,
             partitions,
             capacities,
@@ -241,6 +258,7 @@ impl CoordinatorBuilder {
                     cfg.top_k,
                     cfg.seed ^ 0x0D0E ^ i as u64,
                     &index_registry,
+                    &cache_registry,
                 )
             })
             .collect::<Result<Vec<_>>>()?;
@@ -279,6 +297,16 @@ impl CoordinatorBuilder {
             }
         };
 
+        // stage 6: the cache tier — cluster answer cache from the global
+        // `[cache]` spec; `cache_enabled` is false only when NOTHING is
+        // cached anywhere (the default), which pins byte-identical
+        // pre-cache behavior in the golden-trace harness
+        let answer_cache =
+            cache_registry.build(&cfg.cache.kind, &CacheBuildCtx { spec: &cfg.cache })?;
+        let answer_cache_active = cfg.cache.enabled();
+        let cache_enabled =
+            answer_cache_active || cfg.nodes.iter().any(|n| n.cache.enabled());
+
         let n_nodes = nodes.len();
         Ok(Coordinator {
             rng: Rng::new(cfg.seed ^ 0xC00D),
@@ -294,6 +322,10 @@ impl CoordinatorBuilder {
             slot_idx: 0,
             active: vec![true; n_nodes],
             cap_scale: vec![1.0; n_nodes],
+            answer_cache,
+            answer_cache_active,
+            cache_enabled,
+            pending_invalidations: 0,
         })
     }
 }

@@ -30,6 +30,10 @@ pub mod observer;
 pub use allocator::{Allocator, AllocatorRegistry, Assignment, FeedbackStats, SlotContext};
 pub use builder::CoordinatorBuilder;
 
+use crate::cache::{
+    embedding_guard, quantize_embedding, CacheEntry, CachePayload, CacheSlotStats, CachedAnswer,
+    EntryTag, QueryCache,
+};
 use crate::cluster::node::{EdgeNode, NodeSlotReport, QueryOutcome};
 use crate::config::{ExperimentConfig, IntraStrategy};
 use crate::corpus::synth::SyntheticDataset;
@@ -69,7 +73,15 @@ pub struct SlotReport {
     pub active: Vec<bool>,
     /// The latency SLO the slot ran under (varies under SloChange events).
     pub slo_s: f64,
+    /// Cache-tier activity this slot; `None` when no cache is configured
+    /// anywhere (the default), keeping pre-cache transcripts byte-stable.
+    pub cache: Option<CacheSlotStats>,
 }
+
+/// Modeled coordinator-side latency of a semantic answer-cache hit: one
+/// similarity lookup, no retrieval, no generation. Deterministic (never
+/// wall-clock) so cached runs stay transcript-stable.
+pub const ANSWER_HIT_LATENCY_S: f64 = 0.005;
 
 /// What the serve phase produced, before aggregation.
 pub struct ServedSlot {
@@ -83,6 +95,27 @@ pub struct ServedSlot {
     pub size_mem: [f64; 3],
     /// Per node: (modeled TS_n^t, measured wall-clock search time).
     pub node_search_s: Vec<(f64, f64)>,
+    /// Retrieval-cache hits / misses / evictions summed over nodes.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    pub cache_evictions: usize,
+}
+
+impl ServedSlot {
+    /// The serve phase of a slot where nothing needed serving (every
+    /// query was answered from the cluster cache).
+    fn empty(n_nodes: usize) -> Self {
+        ServedSlot {
+            outcomes: Vec::new(),
+            latency_s: 0.0,
+            size_queries: [0; 3],
+            size_mem: [0.0; 3],
+            node_search_s: vec![(0.0, 0.0); n_nodes],
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_evictions: 0,
+        }
+    }
 }
 
 /// The CoEdge-RAG coordinator.
@@ -103,6 +136,34 @@ pub struct Coordinator {
     active: Vec<bool>,
     /// Multiplicative per-node capacity scaling (scenario CapacityScale).
     cap_scale: Vec<f64>,
+    /// Cluster-level semantic answer cache (`cfg.cache`; `NoneCache` by
+    /// default). Hits are served at the coordinator without routing.
+    pub(crate) answer_cache: Box<dyn QueryCache>,
+    /// Whether the answer cache participates in `run_slot` at all.
+    pub(crate) answer_cache_active: bool,
+    /// Whether ANY cache (answer or per-node retrieval) is configured —
+    /// gates `SlotReport::cache` so default runs stay byte-identical.
+    pub(crate) cache_enabled: bool,
+    /// Entries dropped by event-driven invalidation since the last slot
+    /// report (folded into the next `CacheSlotStats`).
+    pending_invalidations: usize,
+}
+
+/// Scope of a cache-invalidation request, the hook scenario events reach
+/// the cache tier through ([`Coordinator::apply_event`] →
+/// [`Coordinator::invalidate_caches`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheInvalidate {
+    /// `node`'s corpus changed (corpus-ingest): its retrieval cache is
+    /// flushed (new vectors can enter *any* query's top-k) and answer
+    /// entries produced by that node are dropped.
+    Corpus { node: usize },
+    /// The query mix changed (skew-shift): the semantic answer cache is
+    /// flushed — the hot set it was warmed for no longer represents the
+    /// arrival distribution (EACO-RAG-style adaptive knowledge update).
+    QueryMix,
+    /// Flush everything, everywhere.
+    All,
 }
 
 impl Coordinator {
@@ -234,7 +295,38 @@ impl Coordinator {
                 self.gold_locs[qa.id].sort_unstable();
             }
         }
+        // the corpus actually changed: cached retrieval results and
+        // answers derived from this node's old corpus are now stale
+        if !new_ids.is_empty() {
+            self.invalidate_caches(CacheInvalidate::Corpus { node });
+        }
         Ok(new_ids.len())
+    }
+
+    /// Drop cache entries a cluster change may have staled. Called by
+    /// [`apply_event`](Self::apply_event) for `corpus-ingest` and
+    /// `skew-shift` (and by [`ingest_corpus`](Self::ingest_corpus)
+    /// directly, so programmatic ingest is covered too); also public for
+    /// custom invalidation flows. Returns how many entries were dropped;
+    /// the count is folded into the next slot's `CacheSlotStats`.
+    pub fn invalidate_caches(&mut self, scope: CacheInvalidate) -> usize {
+        let dropped = match scope {
+            CacheInvalidate::Corpus { node } => {
+                self.nodes[node].invalidate_cache()
+                    + self.answer_cache.invalidate(&mut |tag: &EntryTag| tag.node == node)
+            }
+            CacheInvalidate::QueryMix => self.answer_cache.clear(),
+            CacheInvalidate::All => {
+                self.answer_cache.clear()
+                    + self
+                        .nodes
+                        .iter_mut()
+                        .map(|n| n.invalidate_cache())
+                        .sum::<usize>()
+            }
+        };
+        self.pending_invalidations += dropped;
+        dropped
     }
 
     /// Apply one scenario event (between slots). `BurstOverride` is a
@@ -260,6 +352,7 @@ impl Coordinator {
             ScenarioEvent::SkewShift { pattern } => {
                 pattern.validate(self.ds.num_domains())?;
                 self.cfg.skew = pattern.clone();
+                self.invalidate_caches(CacheInvalidate::QueryMix);
                 Ok(())
             }
         }
@@ -356,9 +449,13 @@ impl Coordinator {
         let mut size_queries = [0usize; 3];
         let mut size_mem = [0.0f64; 3];
         let mut node_search_s = Vec::with_capacity(n_nodes);
+        let (mut cache_hits, mut cache_misses, mut cache_evictions) = (0usize, 0usize, 0usize);
         for (nid, (idxs, report)) in per_node.iter().zip(node_reports).enumerate() {
             latency_s = latency_s.max(report.makespan_s);
             node_search_s.push((report.search_time_s, report.measured_search_s));
+            cache_hits += report.cache_hits;
+            cache_misses += report.cache_misses;
+            cache_evictions += report.cache_evictions;
             for (mi, m) in self.nodes[nid].pool.iter().enumerate() {
                 let si = m.size as usize;
                 size_queries[si] += report.per_model_queries[mi];
@@ -371,7 +468,16 @@ impl Coordinator {
         }
         let outcomes: Vec<QueryOutcome> =
             outcomes_by_pos.into_iter().map(|o| o.expect("outcome")).collect();
-        ServedSlot { outcomes, latency_s, size_queries, size_mem, node_search_s }
+        ServedSlot {
+            outcomes,
+            latency_s,
+            size_queries,
+            size_mem,
+            node_search_s,
+            cache_hits,
+            cache_misses,
+            cache_evictions,
+        }
     }
 
     /// Phase ④: feed outcomes back into the allocator.
@@ -404,6 +510,7 @@ impl Coordinator {
     fn shed_slot(&mut self, slot: usize, qa_ids: &[usize]) -> Result<SlotReport> {
         let b = qa_ids.len();
         let n_nodes = self.nodes.len();
+        let cache = self.slot_cache_stats((0, 0, 0), (0, 0, 0));
         let outcomes: Vec<QueryOutcome> = qa_ids
             .iter()
             .map(|&q| QueryOutcome {
@@ -415,6 +522,7 @@ impl Coordinator {
                 scores: QualityScores::zeros(),
                 feedback: 0.0,
                 latency_s: self.cfg.slo_s,
+                cached: false,
             })
             .collect();
         let report = SlotReport {
@@ -431,9 +539,36 @@ impl Coordinator {
             ppo_updates: 0,
             active: self.active.clone(),
             slo_s: self.cfg.slo_s,
+            cache,
         };
         self.emit(&SlotEvent::SlotEnd { slot, report: &report });
         Ok(report)
+    }
+
+    /// Per-slot cache statistics, or `None` when no cache tier is
+    /// configured anywhere (keeps default-run reports and transcripts
+    /// byte-identical to the pre-cache system). Folds in — and resets —
+    /// the invalidation count accumulated by events since the last slot.
+    fn slot_cache_stats(
+        &mut self,
+        retrieval: (usize, usize, usize),
+        answer: (usize, usize, usize),
+    ) -> Option<CacheSlotStats> {
+        if !self.cache_enabled {
+            return None;
+        }
+        let bytes = self.answer_cache.bytes()
+            + self.nodes.iter().map(|n| n.cache.bytes()).sum::<usize>();
+        Some(CacheSlotStats {
+            retrieval_hits: retrieval.0,
+            retrieval_misses: retrieval.1,
+            retrieval_evictions: retrieval.2,
+            answer_hits: answer.0,
+            answer_misses: answer.1,
+            answer_evictions: answer.2,
+            invalidations: std::mem::take(&mut self.pending_invalidations),
+            bytes,
+        })
     }
 
     /// Run one complete slot for the given QA ids.
@@ -450,26 +585,138 @@ impl Coordinator {
         let embs = self.encode(qa_ids);
         self.emit(&SlotEvent::Encoded { slot, queries: b, elapsed_s: t.secs() });
 
-        let t = Timer::start();
-        let caps = self.slot_capacities();
-        let assignment = self.route(slot, qa_ids, &embs, &caps)?;
-        self.emit(&SlotEvent::Routed { slot, assignment: &assignment, elapsed_s: t.secs() });
+        // semantic answer-cache pre-pass: a hit replays the stored answer
+        // (bitwise-equal scores at threshold 1.0) without ever routing the
+        // query. Inactive ⇒ everything "misses" without a single cache
+        // call — the pre-cache path, bit for bit.
+        let mut cached_out: Vec<Option<QueryOutcome>> = vec![None; b];
+        let (mut answer_hits, mut answer_misses, mut answer_evictions) = (0usize, 0usize, 0usize);
+        let mut keys: Vec<Vec<i8>> = Vec::new();
+        let mut guards: Vec<u64> = Vec::new();
+        let mut miss_pos: Vec<usize> = Vec::with_capacity(b);
+        if self.answer_cache_active {
+            let threshold = self.cfg.cache.threshold;
+            keys = embs.iter().map(|e| quantize_embedding(e)).collect();
+            guards = embs.iter().map(|e| embedding_guard(e)).collect();
+            for (i, &q) in qa_ids.iter().enumerate() {
+                // at exact-only thresholds a key hit must also match the
+                // full-precision guard — a quantization collision becomes
+                // a miss, never someone else's answer
+                match self.answer_cache.get_similar(&keys[i], threshold) {
+                    Some(CacheEntry { guard, payload: CachePayload::Answer(a), .. })
+                        if threshold < 1.0 || guard == guards[i] =>
+                    {
+                        answer_hits += 1;
+                        cached_out[i] = Some(QueryOutcome {
+                            qa_id: q,
+                            node: a.node,
+                            model_idx: a.model_idx,
+                            dropped: false,
+                            rel: a.rel,
+                            scores: a.scores,
+                            feedback: a.feedback,
+                            latency_s: ANSWER_HIT_LATENCY_S,
+                            cached: true,
+                        });
+                    }
+                    _ => {
+                        answer_misses += 1;
+                        miss_pos.push(i);
+                    }
+                }
+            }
+        } else {
+            miss_pos.extend(0..b);
+        }
 
-        let t = Timer::start();
-        let served = self.serve(qa_ids, &embs, &assignment);
-        self.emit(&SlotEvent::Served {
-            slot,
-            outcomes: &served.outcomes,
-            makespan_s: served.latency_s,
-            elapsed_s: t.secs(),
-        });
+        // route / serve / feedback run over the cache misses only (== the
+        // whole slot whenever the answer cache is off)
+        let all_miss = miss_pos.len() == b;
+        let qa_sub: Vec<usize>;
+        let emb_sub: Vec<Vec<f32>>;
+        let (qa_m, embs_m): (&[usize], &[Vec<f32>]) = if all_miss {
+            (qa_ids, &embs)
+        } else {
+            qa_sub = miss_pos.iter().map(|&i| qa_ids[i]).collect();
+            emb_sub = miss_pos.iter().map(|&i| embs[i].clone()).collect();
+            (&qa_sub, &emb_sub)
+        };
 
-        let t = Timer::start();
-        let stats = self.feedback(slot, qa_ids, &embs, &caps, &assignment, &served.outcomes)?;
-        self.emit(&SlotEvent::Feedback { slot, stats, elapsed_s: t.secs() });
+        let (assignment, served, stats) = if self.answer_cache_active && qa_m.is_empty() {
+            // the whole slot was answered from cache: nothing to route,
+            // the allocator is not consulted (and learns nothing). (With
+            // the cache off an empty slot still takes the normal path —
+            // allocators see exactly the pre-cache call sequence.)
+            (Assignment::default(), ServedSlot::empty(n_nodes), FeedbackStats::default())
+        } else {
+            let t = Timer::start();
+            let caps = self.slot_capacities();
+            let assignment = self.route(slot, qa_m, embs_m, &caps)?;
+            self.emit(&SlotEvent::Routed { slot, assignment: &assignment, elapsed_s: t.secs() });
 
-        // aggregate
-        let ServedSlot { outcomes, latency_s, size_queries, size_mem, node_search_s } = served;
+            let t = Timer::start();
+            let served = self.serve(qa_m, embs_m, &assignment);
+            self.emit(&SlotEvent::Served {
+                slot,
+                outcomes: &served.outcomes,
+                makespan_s: served.latency_s,
+                elapsed_s: t.secs(),
+            });
+
+            let t = Timer::start();
+            let stats = self.feedback(slot, qa_m, embs_m, &caps, &assignment, &served.outcomes)?;
+            self.emit(&SlotEvent::Feedback { slot, stats, elapsed_s: t.secs() });
+            (assignment, served, stats)
+        };
+
+        // freshly served answers warm the answer cache for future slots
+        if self.answer_cache_active {
+            for (&i, out) in miss_pos.iter().zip(&served.outcomes) {
+                if out.dropped {
+                    continue;
+                }
+                answer_evictions += self.answer_cache.insert(
+                    keys[i].clone(),
+                    CacheEntry {
+                        tag: EntryTag {
+                            node: out.node,
+                            domain: self.ds.qa_pairs[out.qa_id].domain,
+                        },
+                        guard: guards[i],
+                        payload: CachePayload::Answer(CachedAnswer {
+                            node: out.node,
+                            model_idx: out.model_idx,
+                            rel: out.rel,
+                            scores: out.scores,
+                            feedback: out.feedback,
+                        }),
+                    },
+                );
+            }
+        }
+
+        let cache = self.slot_cache_stats(
+            (served.cache_hits, served.cache_misses, served.cache_evictions),
+            (answer_hits, answer_misses, answer_evictions),
+        );
+
+        // aggregate, cached answers merged back in slot order
+        let ServedSlot {
+            outcomes: served_out, latency_s, size_queries, size_mem, node_search_s, ..
+        } = served;
+        // answer hits complete at the coordinator after the lookup, so
+        // the slot makespan is at least that (matters when every query
+        // hit and no node ran); exactly the node makespan when cache off
+        let latency_s =
+            if answer_hits > 0 { latency_s.max(ANSWER_HIT_LATENCY_S) } else { latency_s };
+        let mut served_iter = served_out.into_iter();
+        let outcomes: Vec<QueryOutcome> = cached_out
+            .into_iter()
+            .map(|c| match c {
+                Some(o) => o,
+                None => served_iter.next().expect("served outcome"),
+            })
+            .collect();
         let drop_rate = outcomes.iter().filter(|o| o.dropped).count() as f64 / b.max(1) as f64;
         let all_scores: Vec<QualityScores> = outcomes.iter().map(|o| o.scores).collect();
         let total_q: usize = size_queries.iter().sum();
@@ -498,6 +745,7 @@ impl Coordinator {
             ppo_updates: stats.updates,
             active: self.active.clone(),
             slo_s: self.cfg.slo_s,
+            cache,
         };
         self.emit(&SlotEvent::SlotEnd { slot, report: &report });
         Ok(report)

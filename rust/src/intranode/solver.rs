@@ -31,6 +31,12 @@ pub struct SolverInput<'a> {
     pub queries: usize,
     /// Latency budget in seconds: L^t − TS_n^t.
     pub budget_s: f64,
+    /// Fraction of each GPU's memory available to generation models
+    /// (normally 1.0). The retrieval-cache tier charges its footprint
+    /// here: as a node's cache fills, `mem_cap` shrinks and deployments
+    /// that no longer fit are pruned — cache bytes genuinely compete with
+    /// generation memory.
+    pub mem_cap: f64,
 }
 
 /// One model's assignment on a GPU.
@@ -96,16 +102,18 @@ struct GpuCandidate {
 
 const MEM_STEP: f64 = 0.05;
 
-/// Enumerate memory compositions for `models` on a unit GPU with min-mem
+/// Enumerate memory compositions for `models` on a GPU whose generation
+/// share is `mem_cap` (≤ 1; the rest is cache footprint), with min-mem
 /// constraints, on a MEM_STEP grid. All remaining memory is distributed
-/// (more memory never hurts throughput), so compositions always sum to 1.
-fn mem_grid(pool: &[ModelSpec], models: &[usize]) -> Vec<Vec<f64>> {
+/// (more memory never hurts throughput), so compositions always sum to
+/// `mem_cap` on the grid.
+fn mem_grid(pool: &[ModelSpec], models: &[usize], mem_cap: f64) -> Vec<Vec<f64>> {
     let mins: Vec<f64> = models.iter().map(|&m| pool[m].min_mem).collect();
     let min_sum: f64 = mins.iter().sum();
-    if min_sum > 1.0 + 1e-9 {
+    if min_sum > mem_cap + 1e-9 {
         return Vec::new();
     }
-    let free = 1.0 - min_sum;
+    let free = mem_cap - min_sum;
     let steps = (free / MEM_STEP).floor() as usize;
     let k = models.len();
     let mut out = Vec::new();
@@ -134,14 +142,14 @@ fn mem_grid(pool: &[ModelSpec], models: &[usize]) -> Vec<Vec<f64>> {
     out
 }
 
-/// All non-empty feasible deployment subsets of the pool.
-fn subsets(pool: &[ModelSpec]) -> Vec<Vec<usize>> {
+/// All non-empty deployment subsets of the pool feasible within `mem_cap`.
+fn subsets(pool: &[ModelSpec], mem_cap: f64) -> Vec<Vec<usize>> {
     let n = pool.len();
     let mut out = Vec::new();
     for mask in 1u32..(1 << n) {
         let models: Vec<usize> = (0..n).filter(|i| mask & (1 << i) != 0).collect();
         let min_sum: f64 = models.iter().map(|&m| pool[m].min_mem).sum();
-        if min_sum <= 1.0 + 1e-9 {
+        if min_sum <= mem_cap + 1e-9 {
             out.push(models);
         }
     }
@@ -151,12 +159,13 @@ fn subsets(pool: &[ModelSpec]) -> Vec<Vec<usize>> {
 /// Solve one node's intra-scheduling problem.
 pub fn solve_node(input: &SolverInput) -> NodePlan {
     let nk = input.gpus.len();
+    let mem_cap = input.mem_cap.clamp(0.0, 1.0);
     // Per GPU: enumerate candidates.
     let mut per_gpu: Vec<Vec<GpuCandidate>> = Vec::with_capacity(nk);
     for (k, gpu) in input.gpus.iter().enumerate() {
         let mut cands = Vec::new();
-        for models in subsets(input.pool) {
-            for mems in mem_grid(input.pool, &models) {
+        for models in subsets(input.pool, mem_cap) {
+            for mems in mem_grid(input.pool, &models, mem_cap) {
                 let target: BTreeMap<String, f64> = models
                     .iter()
                     .zip(&mems)
@@ -387,6 +396,7 @@ mod tests {
             quality: &q,
             queries: 120,
             budget_s: 4.0,
+            mem_cap: 1.0,
         });
         // most queries must land on the small model
         let mut per_model = vec![0usize; 3];
@@ -417,6 +427,7 @@ mod tests {
             quality: &q,
             queries: 60,
             budget_s: 30.0,
+            mem_cap: 1.0,
         });
         let mut per_model = vec![0usize; 3];
         for g in &plan.gpus {
@@ -445,6 +456,7 @@ mod tests {
             quality: &q,
             queries: 300,
             budget_s: 10.0,
+            mem_cap: 1.0,
         });
         for g in &plan.gpus {
             let mem: f64 = g.assignments.iter().map(|a| a.mem).sum();
@@ -475,6 +487,7 @@ mod tests {
             quality: &q,
             queries: 80,
             budget_s: 2.5,
+            mem_cap: 1.0,
         });
         // must keep the small model deployed (reload-free) and serve on it
         let small_served: usize = plan.gpus[0]
@@ -499,9 +512,54 @@ mod tests {
             quality: &q,
             queries: 100_000,
             budget_s: 5.0,
+            mem_cap: 1.0,
         });
         assert!(plan.overflow > 0 || plan.total_assigned() == 100_000);
         assert_eq!(plan.total_assigned() + plan.overflow, 100_000);
+    }
+
+    #[test]
+    fn mem_cap_shrinks_generation_memory() {
+        let pool = standard_pool();
+        let gpus = vec![GpuState::new(1.0)];
+        let fits = make_fits(&pool, 1);
+        let q = input_quality();
+        let solve = |mem_cap: f64| {
+            solve_node(&SolverInput {
+                pool: &pool,
+                gpus: &gpus,
+                fits: &fits,
+                quality: &q,
+                queries: 60,
+                budget_s: 30.0,
+                mem_cap,
+            })
+        };
+        // every deployment respects the cap
+        for cap in [1.0, 0.6, 0.35] {
+            let plan = solve(cap);
+            for g in &plan.gpus {
+                let mem: f64 = g.assignments.iter().map(|a| a.mem).sum();
+                assert!(mem <= cap + 1e-9, "cap {cap}: deployed {mem}");
+            }
+        }
+        // a cap below the largest model's min_mem forces it off the GPU
+        let largest_min = pool.iter().map(|m| m.min_mem).fold(0.0, f64::max);
+        let plan = solve(largest_min - 0.05);
+        for g in &plan.gpus {
+            for a in &g.assignments {
+                assert!(
+                    pool[a.model_idx].min_mem < largest_min,
+                    "cap excludes the largest model, got {:?}",
+                    pool[a.model_idx].name
+                );
+            }
+        }
+        // a cap below every min_mem deploys nothing: all queries overflow
+        let smallest_min = pool.iter().map(|m| m.min_mem).fold(1.0, f64::min);
+        let plan = solve(smallest_min / 2.0);
+        assert_eq!(plan.total_assigned(), 0);
+        assert_eq!(plan.overflow, 60);
     }
 
     #[test]
@@ -517,6 +575,7 @@ mod tests {
             quality: &q,
             queries: 0,
             budget_s: 10.0,
+            mem_cap: 1.0,
         });
         assert_eq!(plan.total_assigned(), 0);
         assert_eq!(plan.overflow, 0);

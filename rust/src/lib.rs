@@ -25,6 +25,7 @@ pub mod config;
 pub mod text;
 pub mod corpus;
 pub mod vecdb;
+pub mod cache;
 pub mod metrics;
 pub mod llmsim;
 pub mod workload;

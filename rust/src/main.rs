@@ -2,8 +2,8 @@
 //!
 //! Subcommands:
 //!   run      [--config FILE] [--slots N] [--allocator KIND] [--slo S]
-//!            [--index KIND] [--shards N] [--scenario FILE]
-//!            [--transcript FILE]
+//!            [--index KIND] [--shards N] [--cache KIND] [--cache-mb N]
+//!            [--scenario FILE] [--transcript FILE]
 //!            run a full experiment and print per-slot results; with
 //!            --scenario, replay a cluster-dynamics timeline (node churn,
 //!            bursts, SLO changes, live corpus ingest) under its arrival
@@ -17,7 +17,7 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use coedge_rag::bench_harness::Table;
-use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, IndexKind};
+use coedge_rag::config::{AllocatorKind, CacheKind, DatasetKind, ExperimentConfig, IndexKind};
 use coedge_rag::coordinator::{AllocatorRegistry, CoordinatorBuilder};
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
@@ -85,6 +85,24 @@ fn load_config(flags: &std::collections::HashMap<String, String>) -> ExperimentC
         let shards: usize = v.parse().expect("--shards");
         for n in cfg.nodes.iter_mut() {
             n.index.shards = shards;
+        }
+    }
+    if let Some(v) = flags.get("cache") {
+        // built-in kinds validate here; custom kinds need register_cache
+        let kind = v.parse::<CacheKind>().unwrap_or_else(|e| {
+            eprintln!("[coedge] --cache: {e}");
+            std::process::exit(2);
+        });
+        cfg.cache.kind = kind.as_str().to_string();
+        for n in cfg.nodes.iter_mut() {
+            n.cache.kind = kind.as_str().to_string();
+        }
+    }
+    if let Some(v) = flags.get("cache-mb") {
+        let mb: usize = v.parse().expect("--cache-mb");
+        cfg.cache.capacity_mb = mb;
+        for n in cfg.nodes.iter_mut() {
+            n.cache.capacity_mb = mb;
         }
     }
     cfg
@@ -184,14 +202,16 @@ fn cmd_run_scenario(cfg: ExperimentConfig, path: &str, transcript: Option<&Strin
 fn cmd_profile(flags: std::collections::HashMap<String, String>) {
     let cfg = load_config(&flags);
     let co = CoordinatorBuilder::new(cfg).backend(Backend::Reference).build().expect("build");
-    let mut t =
-        Table::new(&["node", "gpus", "corpus", "index", "C(5s)", "C(15s)", "C(60s)", "k", "b"]);
+    let mut t = Table::new(&[
+        "node", "gpus", "corpus", "index", "cache", "C(5s)", "C(15s)", "C(60s)", "k", "b",
+    ]);
     for (n, cap) in co.nodes.iter().zip(&co.capacities) {
         t.row(vec![
             n.name.clone(),
             format!("{}", n.gpus.len()),
             format!("{}", n.corpus_size()),
             n.index_kind.clone(),
+            n.cache_kind.clone(),
             format!("{:.0}", cap.eval(5.0)),
             format!("{:.0}", cap.eval(15.0)),
             format!("{:.0}", cap.eval(60.0)),
@@ -256,6 +276,10 @@ fn main() {
             println!(
                 "              [--index {}] [--shards N]",
                 IndexKind::ALL.map(|k| k.as_str()).join("|")
+            );
+            println!(
+                "              [--cache {}] [--cache-mb N]",
+                CacheKind::ALL.map(|k| k.as_str()).join("|")
             );
             println!("              [--scenario FILE] [--transcript FILE]");
         }

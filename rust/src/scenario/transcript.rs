@@ -39,8 +39,11 @@ impl RunTranscript {
     ///
     /// Deliberately excluded: `measured_search_s` and phase wall-clock
     /// times — anything a stopwatch produced would break byte stability.
+    /// Cache counters appear only when a cache tier is configured
+    /// (`report.cache` is `Some`), so default-configuration transcripts
+    /// are byte-identical to the pre-cache format.
     pub fn record(&mut self, slot: usize, events: &[String], report: &SlotReport) {
-        let line = Json::obj(vec![
+        let mut fields = vec![
             ("slot", Json::Num(slot as f64)),
             ("queries", Json::Num(report.queries as f64)),
             ("events", Json::arr_str(events)),
@@ -52,7 +55,15 @@ impl RunTranscript {
             ("rouge_l", Json::Num(report.mean_scores.rouge_l)),
             ("bert_score", Json::Num(report.mean_scores.bert_score)),
             ("updates", Json::Num(report.feedback.updates as f64)),
-        ]);
+        ];
+        if let Some(c) = &report.cache {
+            fields.push(("cache_hits", Json::Num(c.hits() as f64)));
+            fields.push(("cache_misses", Json::Num(c.misses() as f64)));
+            fields.push(("cache_evictions", Json::Num(c.evictions() as f64)));
+            fields.push(("cache_invalidations", Json::Num(c.invalidations as f64)));
+            fields.push(("cache_bytes", Json::Num(c.bytes as f64)));
+        }
+        let line = Json::obj(fields);
         self.lines.push(line.to_string());
     }
 
@@ -149,6 +160,31 @@ mod tests {
         assert!(a.contains("\"events\":[\"node-down(1)\"]"), "{a}");
         assert!(a.contains("\"active\":[true,false]"), "{a}");
         assert!(!a.contains("123.456"), "wall-clock leaked: {a}");
+        // no cache tier configured ⇒ no cache fields (pre-cache format)
+        assert!(!a.contains("cache"), "{a}");
+    }
+
+    #[test]
+    fn cache_fields_appear_only_when_cache_tier_is_on() {
+        let mut t = RunTranscript::new("demo", 42, 2, "oracle", 1);
+        let mut r = demo_report();
+        r.cache = Some(crate::cache::CacheSlotStats {
+            retrieval_hits: 5,
+            retrieval_misses: 3,
+            answer_hits: 2,
+            answer_misses: 6,
+            retrieval_evictions: 1,
+            answer_evictions: 0,
+            invalidations: 4,
+            bytes: 1024,
+        });
+        t.record(0, &[], &r);
+        let text = t.to_jsonl();
+        assert!(text.contains("\"cache_hits\":7"), "{text}");
+        assert!(text.contains("\"cache_misses\":9"), "{text}");
+        assert!(text.contains("\"cache_evictions\":1"), "{text}");
+        assert!(text.contains("\"cache_invalidations\":4"), "{text}");
+        assert!(text.contains("\"cache_bytes\":1024"), "{text}");
     }
 
     #[test]

@@ -65,6 +65,8 @@ struct MetricsInner {
     dropped: usize,
     updates: usize,
     makespan_s: f64,
+    cache_hits: usize,
+    cache_misses: usize,
 }
 
 /// Live serving metrics, fed by coordinator [`SlotEvent`]s as batches are
@@ -82,11 +84,27 @@ impl ServerMetrics {
         (m.slots, m.queries, m.dropped)
     }
 
+    /// (cache hits, cache misses) across both cache levels so far — all
+    /// zero when no cache tier is configured.
+    pub fn cache_totals(&self) -> (usize, usize) {
+        let m = self.inner.lock().unwrap();
+        (m.cache_hits, m.cache_misses)
+    }
+
     /// One-line summary for shutdown logging.
     fn summary(&self) -> String {
         let m = self.inner.lock().unwrap();
+        let cache = if m.cache_hits + m.cache_misses > 0 {
+            format!(
+                ", cache hit rate {:.1}%",
+                m.cache_hits as f64 / (m.cache_hits + m.cache_misses) as f64 * 100.0
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "served {} queries in {} batches ({} dropped, {} policy updates, peak makespan {:.2}s)",
+            "served {} queries in {} batches ({} dropped, {} policy updates, \
+             peak makespan {:.2}s{cache})",
             m.queries, m.slots, m.dropped, m.updates, m.makespan_s
         )
     }
@@ -104,6 +122,10 @@ impl SlotObserver for ServerMetrics {
                 m.queries += report.queries;
                 m.dropped += report.outcomes.iter().filter(|o| o.dropped).count();
                 m.makespan_s = m.makespan_s.max(report.latency_s);
+                if let Some(c) = &report.cache {
+                    m.cache_hits += c.hits();
+                    m.cache_misses += c.misses();
+                }
                 log_info!(
                     "batch {}: {} queries, drop {:.1}%, makespan {:.2}s",
                     m.slots,

@@ -158,6 +158,99 @@ fn prop_scheduling_conservation_under_random_churn() {
     }
 }
 
+/// Cache-safety property: under random interleavings of queries and
+/// corpus-ingest / skew-shift events, (a) a cached answer is never served
+/// for a (node, domain) whose corpus changed after the entry was written,
+/// (b) every cached answer's quality is bitwise equal to the serve that
+/// wrote the entry (threshold = 1.0 ⇒ exact duplicates only), and (c) no
+/// entry written before a skew-shift survives its flush.
+#[test]
+fn prop_cache_never_serves_stale_answers() {
+    use coedge_rag::config::CacheSpec;
+    use coedge_rag::metrics::QualityScores;
+    use std::collections::HashMap;
+
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.seed = 0xCACE;
+    cfg.qa_per_domain = 10;
+    cfg.docs_per_domain = 20;
+    cfg.allocator = AllocatorKind::Oracle;
+    cfg.cache = CacheSpec { kind: "lru".into(), capacity_mb: 4, ..CacheSpec::default() };
+    for n in cfg.nodes.iter_mut() {
+        n.corpus_docs = 25;
+        n.cache = cfg.cache.clone();
+    }
+    let mut co = CoordinatorBuilder::new(cfg)
+        .capacities(vec![CapacityModel { k: 30.0, b: 0.0 }; 4])
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(0x57A1E);
+    // last non-dropped uncached serve per qa: (slot, scores) — mirrors
+    // the answer cache's overwrite order exactly
+    let mut written: HashMap<usize, (usize, QualityScores)> = HashMap::new();
+    // last slot each (node, domain) corpus actually changed
+    let mut changed: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut last_skew_flush = 0usize;
+    let mut hits = 0usize;
+    for slot in 0..24 {
+        if rng.chance(0.35) {
+            if rng.chance(0.5) {
+                let (node, domain) = (rng.below(4), rng.below(6));
+                let added = co.ingest_corpus(node, domain, 1 + rng.below(6)).unwrap();
+                if added > 0 {
+                    changed.insert((node, domain), slot);
+                }
+            } else {
+                co.apply_event(&ScenarioEvent::SkewShift {
+                    pattern: SkewPattern::Primary {
+                        domain: rng.below(6),
+                        frac: rng.range_f64(0.4, 0.9),
+                    },
+                })
+                .unwrap();
+                last_skew_flush = slot;
+            }
+        }
+        let qids = co.sample_queries(20 + rng.below(30)).unwrap();
+        let r = co.run_slot(&qids).unwrap();
+        assert_eq!(r.outcomes.len(), qids.len(), "slot {slot}: conservation");
+        for o in &r.outcomes {
+            if o.cached {
+                hits += 1;
+                let (wslot, wscores) =
+                    *written.get(&o.qa_id).expect("cache hit before any serve");
+                // (b) bitwise-equal quality at threshold = 1.0
+                assert_eq!(
+                    o.scores, wscores,
+                    "slot {slot}: qa {} cached quality diverged from the stored serve",
+                    o.qa_id
+                );
+                assert!(!o.dropped, "slot {slot}: a cached answer cannot be a drop");
+                // (a) never stale w.r.t. the serving node's corpus
+                let domain = co.ds.qa_pairs[o.qa_id].domain;
+                if let Some(&chg) = changed.get(&(o.node, domain)) {
+                    assert!(
+                        wslot >= chg,
+                        "slot {slot}: qa {} served from cache (node {}, domain {domain}) \
+                         written at slot {wslot}, but that corpus changed at slot {chg}",
+                        o.qa_id,
+                        o.node
+                    );
+                }
+                // (c) skew-shift flushes the answer cache
+                assert!(
+                    wslot >= last_skew_flush,
+                    "slot {slot}: entry written at {wslot} survived the skew flush at \
+                     {last_skew_flush}"
+                );
+            } else if !o.dropped {
+                written.insert(o.qa_id, (slot, o.scores));
+            }
+        }
+    }
+    assert!(hits > 0, "property vacuous: the run never hit the answer cache");
+}
+
 #[test]
 fn prop_solver_feasibility() {
     let pool = standard_pool();
@@ -182,6 +275,7 @@ fn prop_solver_feasibility() {
             quality: &quality,
             queries,
             budget_s: budget,
+            mem_cap: 1.0,
         });
         // every query accounted for
         assert_eq!(plan.total_assigned() + plan.overflow, queries, "case {case}");
