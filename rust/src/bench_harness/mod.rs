@@ -80,15 +80,12 @@ impl BenchCase {
     }
 }
 
-/// Write a bench sweep as `BENCH_<bench>.json` in `dir` — the
-/// machine-readable perf trajectory CI and notebooks can diff across
-/// commits (`{"bench": .., "cases": [{"name": .., <fields>...}, ..]}`).
-/// Returns the path written.
-pub fn write_bench_json(
-    dir: &std::path::Path,
-    bench: &str,
-    cases: &[BenchCase],
-) -> std::io::Result<std::path::PathBuf> {
+/// Render a bench sweep as the `BENCH_<bench>.json` document text
+/// (`{"bench": .., "cases": [{"name": .., <fields>...}, ..]}`,
+/// newline-terminated). Key order and float formatting are deterministic,
+/// so two identical sweeps serialize byte-identically — the `eval` grid
+/// and its CI double-run diff rely on this.
+pub fn bench_json(bench: &str, cases: &[BenchCase]) -> String {
     let json = Json::obj(vec![
         ("bench", Json::Str(bench.to_string())),
         (
@@ -105,8 +102,19 @@ pub fn write_bench_json(
             ),
         ),
     ]);
+    json.to_string() + "\n"
+}
+
+/// Write a bench sweep as `BENCH_<bench>.json` in `dir` — the
+/// machine-readable perf trajectory CI and notebooks can diff across
+/// commits (see [`bench_json`] for the format). Returns the path written.
+pub fn write_bench_json(
+    dir: &std::path::Path,
+    bench: &str,
+    cases: &[BenchCase],
+) -> std::io::Result<std::path::PathBuf> {
     let path = dir.join(format!("BENCH_{bench}.json"));
-    std::fs::write(&path, json.to_string() + "\n")?;
+    std::fs::write(&path, bench_json(bench, cases))?;
     Ok(path)
 }
 

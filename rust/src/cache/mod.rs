@@ -52,9 +52,11 @@ pub struct EntryTag {
 pub struct CachedAnswer {
     /// Node that originally served the answer (provenance).
     pub node: usize,
+    /// Model within the node's pool that generated it (None if dropped).
     pub model_idx: Option<usize>,
     /// Retrieval relevance achieved when the answer was generated.
     pub rel: f64,
+    /// Quality metrics of the original generation (replayed bitwise).
     pub scores: QualityScores,
     /// Composite feedback f_i of the original serve.
     pub feedback: f64,
@@ -75,8 +77,11 @@ pub enum CachePayload {
 /// differs (quantization collision — see [`embedding_guard`]).
 #[derive(Clone, Debug)]
 pub struct CacheEntry {
+    /// Provenance (node, domain) consulted by invalidation.
     pub tag: EntryTag,
+    /// Full-precision identity guard ([`embedding_guard`]).
     pub guard: u64,
+    /// The cached retrieval hits or served answer.
     pub payload: CachePayload,
 }
 
@@ -178,6 +183,7 @@ pub trait QueryCache: Send {
     /// Entries currently stored.
     fn len(&self) -> usize;
 
+    /// Whether the cache holds no entries.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -234,47 +240,87 @@ struct Stored {
     freq: u64,
 }
 
+/// The eviction rank of a stored entry under `policy`. Ranks are unique:
+/// the tick is strictly monotone, so `last_used` never repeats across
+/// live entries (and therefore neither does `(freq, last_used)`), which
+/// makes the rank index a total order identical to the reference scan's
+/// `min_by_key` — pinned by `victim`'s debug assertion and the
+/// `rank_index_*` regression tests.
+fn rank_of(policy: EvictPolicy, s: &Stored) -> (u64, u64) {
+    match policy {
+        EvictPolicy::Lru => (s.last_used, 0),
+        EvictPolicy::Lfu => (s.freq, s.last_used),
+    }
+}
+
 /// Byte-budgeted cache with pluggable LRU/LFU eviction. Entries live in a
 /// `BTreeMap` so iteration (and therefore similarity scans and eviction
-/// tie-breaks) is key-ordered and deterministic.
+/// tie-breaks) is key-ordered and deterministic; a second `BTreeMap` keyed
+/// by eviction rank makes victim selection O(log n) instead of an O(n)
+/// scan (the ROADMAP open item for saturated production caches).
 pub struct PolicyCache {
     policy: EvictPolicy,
     capacity_bytes: usize,
     entries: BTreeMap<Vec<i8>, Stored>,
+    /// Eviction-order index: [`rank_of`] → cache key. Maintained by every
+    /// operation that changes recency/frequency; its first entry is the
+    /// next victim, so eviction is a tree-min instead of a full scan.
+    rank: BTreeMap<(u64, u64), Vec<i8>>,
     bytes: usize,
     tick: u64,
 }
 
 impl PolicyCache {
+    /// An empty cache with the given policy and byte budget.
     pub fn new(policy: EvictPolicy, capacity_bytes: usize) -> Self {
-        PolicyCache { policy, capacity_bytes, entries: BTreeMap::new(), bytes: 0, tick: 0 }
-    }
-
-    fn touch(&mut self, key: &[i8]) {
-        self.tick += 1;
-        if let Some(s) = self.entries.get_mut(key) {
-            s.last_used = self.tick;
-            s.freq += 1;
+        PolicyCache {
+            policy,
+            capacity_bytes,
+            entries: BTreeMap::new(),
+            rank: BTreeMap::new(),
+            bytes: 0,
+            tick: 0,
         }
     }
 
-    /// Key of the current eviction victim under the policy. `protect`
-    /// shields the just-inserted key — naive LFU would otherwise evict
-    /// the newcomer (freq 1) and a full cache could never turn over.
-    ///
-    /// O(n) scan per victim: only taken once the cache is at its byte
-    /// budget, which test- and paper-scale runs never reach. When
-    /// production runs operate saturated caches, switch to an ordered
-    /// rank index (`BTreeMap<(u64, u64), key>`; ranks are unique because
-    /// the tick is strictly monotone) — tracked in ROADMAP open items.
+    /// Advance the clock and refresh an existing entry's recency and
+    /// frequency, keeping the rank index in sync; returns the refreshed
+    /// entry. Policy state (the tick included) never changes on a miss.
+    /// This is the one copy of the remove-rank / update / re-insert-rank
+    /// sequence every lookup path shares.
+    fn bump(&mut self, key: &[i8]) -> Option<CacheEntry> {
+        let s = self.entries.get_mut(key)?;
+        self.tick += 1;
+        self.rank.remove(&rank_of(self.policy, s));
+        s.last_used = self.tick;
+        s.freq += 1;
+        self.rank.insert(rank_of(self.policy, s), key.to_vec());
+        Some(s.entry.clone())
+    }
+
+    /// Key of the current eviction victim under the policy: the first
+    /// rank-index entry, skipping `protect` — the just-inserted key, which
+    /// naive LFU would otherwise evict (freq 1) so a full cache could
+    /// never turn over. O(log n); every debug build cross-checks the
+    /// result against the O(n) reference scan.
     fn victim(&self, protect: &[i8]) -> Option<Vec<i8>> {
+        let v = self.rank.values().find(|k| k.as_slice() != protect).cloned();
+        debug_assert_eq!(
+            v,
+            self.victim_scan(protect),
+            "rank index diverged from the reference eviction scan"
+        );
+        v
+    }
+
+    /// The original O(n) victim scan, kept as the executable specification
+    /// the rank index is pinned against (debug assertion in
+    /// [`victim`](Self::victim) + the `rank_index_*` regression tests).
+    fn victim_scan(&self, protect: &[i8]) -> Option<Vec<i8>> {
         self.entries
             .iter()
             .filter(|(k, _)| k.as_slice() != protect)
-            .min_by_key(|(_, s)| match self.policy {
-                EvictPolicy::Lru => (s.last_used, 0),
-                EvictPolicy::Lfu => (s.freq, s.last_used),
-            })
+            .min_by_key(|(_, s)| rank_of(self.policy, s))
             .map(|(k, _)| k.clone())
     }
 
@@ -283,6 +329,7 @@ impl PolicyCache {
         while self.bytes > self.capacity_bytes {
             let Some(victim) = self.victim(protect) else { break };
             if let Some(s) = self.entries.remove(&victim) {
+                self.rank.remove(&rank_of(self.policy, &s));
                 self.bytes -= s.bytes;
                 evicted += 1;
             }
@@ -302,13 +349,7 @@ impl QueryCache for PolicyCache {
     fn get(&mut self, key: &[i8]) -> Option<CacheEntry> {
         // single tree walk; the tick advances only on hits, as for every
         // other policy-state update
-        if let Some(s) = self.entries.get_mut(key) {
-            self.tick += 1;
-            s.last_used = self.tick;
-            s.freq += 1;
-            return Some(s.entry.clone());
-        }
-        None
+        self.bump(key)
     }
 
     fn get_similar(&mut self, key: &[i8], threshold: f64) -> Option<CacheEntry> {
@@ -331,8 +372,7 @@ impl QueryCache for PolicyCache {
             }
         }
         let (_, k) = best?;
-        self.touch(&k);
-        self.entries.get(&k).map(|s| s.entry.clone())
+        self.bump(&k)
     }
 
     fn insert(&mut self, key: Vec<i8>, entry: CacheEntry) -> usize {
@@ -343,17 +383,18 @@ impl QueryCache for PolicyCache {
         self.tick += 1;
         if let Some(s) = self.entries.get_mut(&key) {
             // overwrite: recency/frequency refresh, entry count unchanged
+            self.rank.remove(&rank_of(self.policy, s));
             self.bytes = self.bytes - s.bytes + size;
             s.entry = entry;
             s.bytes = size;
             s.last_used = self.tick;
             s.freq += 1;
+            self.rank.insert(rank_of(self.policy, s), key.clone());
         } else {
             self.bytes += size;
-            self.entries.insert(
-                key.clone(),
-                Stored { entry, bytes: size, last_used: self.tick, freq: 1 },
-            );
+            let stored = Stored { entry, bytes: size, last_used: self.tick, freq: 1 };
+            self.rank.insert(rank_of(self.policy, &stored), key.clone());
+            self.entries.insert(key.clone(), stored);
         }
         self.evict_to_fit(&key)
     }
@@ -367,6 +408,7 @@ impl QueryCache for PolicyCache {
             .collect();
         for k in &doomed {
             if let Some(s) = self.entries.remove(k) {
+                self.rank.remove(&rank_of(self.policy, &s));
                 self.bytes -= s.bytes;
             }
         }
@@ -376,6 +418,7 @@ impl QueryCache for PolicyCache {
     fn clear(&mut self) -> usize {
         let n = self.entries.len();
         self.entries.clear();
+        self.rank.clear();
         self.bytes = 0;
         n
     }
@@ -399,11 +442,15 @@ impl QueryCache for PolicyCache {
 pub struct CacheSlotStats {
     /// Per-node retrieval-cache hits (index search skipped).
     pub retrieval_hits: usize,
+    /// Retrieval-cache lookups that fell through to the index.
     pub retrieval_misses: usize,
+    /// Entries the retrieval caches evicted to stay in budget.
     pub retrieval_evictions: usize,
     /// Cluster answer-cache hits (query never routed to a node).
     pub answer_hits: usize,
+    /// Answer-cache lookups that went through the full serve path.
     pub answer_misses: usize,
+    /// Entries the answer cache evicted to stay in budget.
     pub answer_evictions: usize,
     /// Entries dropped by event-driven invalidation since the last slot.
     pub invalidations: usize,
@@ -564,6 +611,68 @@ mod tests {
         assert!((quantized_cosine(&a, &a) - 1.0).abs() < 1e-12);
         let b = quantize_embedding(&[-0.5, 0.25, -0.75, 0.0]);
         assert!(quantized_cosine(&a, &b) < -0.99);
+    }
+
+    /// The O(log n) rank index must pick victims in *exactly* the order
+    /// the original O(n) scan did, under both policies, across a long
+    /// deterministic mix of inserts / hits / overwrites / invalidations
+    /// (beyond this explicit sequence, `victim` debug-asserts rank-vs-scan
+    /// agreement on every eviction the whole test suite takes).
+    #[test]
+    fn rank_index_matches_scan_eviction_order() {
+        for policy in [EvictPolicy::Lru, EvictPolicy::Lfu] {
+            let mut c = PolicyCache::new(policy, cap_for(3));
+            for step in 0..400u32 {
+                let k = key((step.wrapping_mul(7) % 13) as u8);
+                match step % 5 {
+                    0 | 3 => {
+                        c.insert(k, hits_entry((step % 2) as usize, 0, 5));
+                    }
+                    1 => {
+                        let _ = c.get(&k);
+                    }
+                    2 => {
+                        let _ = c.get_similar(&k, 1.0);
+                    }
+                    _ => {
+                        if step % 60 == 4 {
+                            c.invalidate(&mut |t| t.node == 1);
+                        }
+                    }
+                }
+                // the rank index mirrors the entry map at every step, and
+                // agrees with the reference scan on the next victim
+                assert_eq!(c.rank.len(), c.len(), "policy {policy:?} step {step}");
+                assert_eq!(
+                    c.victim(&key(255)),
+                    c.victim_scan(&key(255)),
+                    "policy {policy:?} step {step}"
+                );
+            }
+            assert!(c.len() <= 3);
+            let live = c.len();
+            assert_eq!(c.clear(), live);
+            assert!(c.rank.is_empty());
+        }
+    }
+
+    /// Every rank-index entry points back at a live cache entry whose
+    /// recomputed rank is the index key (no stale ranks after overwrites).
+    #[test]
+    fn rank_index_stays_consistent_after_overwrites() {
+        let mut c = PolicyCache::new(EvictPolicy::Lfu, cap_for(4));
+        for i in 0..4u8 {
+            c.insert(key(i), hits_entry(0, 0, 5));
+        }
+        for _ in 0..3 {
+            c.get(&key(1));
+            c.insert(key(2), hits_entry(0, 1, 5)); // overwrite refreshes rank
+        }
+        for (rank, k) in &c.rank {
+            let s = c.entries.get(k).expect("rank points at a live entry");
+            assert_eq!(*rank, rank_of(c.policy, s));
+        }
+        assert_eq!(c.rank.len(), c.len());
     }
 
     #[test]

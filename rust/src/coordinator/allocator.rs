@@ -131,7 +131,9 @@ pub trait Allocator: Send {
 
 /// Inputs available to allocator factories at build time.
 pub struct AllocatorBuildCtx<'a> {
+    /// The full experiment configuration.
     pub cfg: &'a ExperimentConfig,
+    /// The shared dataset (domains, gold docs, …).
     pub ds: &'a SyntheticDataset,
     /// Per QA id, the nodes holding its gold document.
     pub gold_locs: &'a [Vec<usize>],
@@ -222,6 +224,7 @@ pub fn from_kind(kind: AllocatorKind, ctx: &AllocatorBuildCtx) -> Result<Box<dyn
 /// The paper's allocator: PPO online query identification (§IV-A) feeding
 /// Algorithm-1 inter-node scheduling, with per-outcome feedback learning.
 pub struct PpoAllocator {
+    /// The online PPO policy (exposed for diagnostics and benches).
     pub policy: OnlinePolicy,
     /// Private routing-noise stream (Algorithm 1 samples from `s_i^t`).
     rng: Rng,
@@ -229,6 +232,7 @@ pub struct PpoAllocator {
 }
 
 impl PpoAllocator {
+    /// Build from explicit PPO configuration and execution backend.
     pub fn new(n_nodes: usize, pcfg: PpoConfig, backend: Backend, route_seed: u64) -> Self {
         PpoAllocator {
             policy: OnlinePolicy::new(n_nodes, pcfg, backend),

@@ -86,6 +86,7 @@ pub struct RandomAllocator {
 }
 
 impl RandomAllocator {
+    /// Seeded uniform-random router.
     pub fn new(seed: u64) -> Self {
         RandomAllocator { rng: Rng::new(seed) }
     }
@@ -145,6 +146,7 @@ pub struct OracleAllocator {
 }
 
 impl OracleAllocator {
+    /// Snapshot the per-QA gold-document locations.
     pub fn new(gold_locs: &[Vec<usize>]) -> Self {
         OracleAllocator { gold_locs: gold_locs.to_vec() }
     }
@@ -178,6 +180,7 @@ pub struct MabAllocator {
 }
 
 impl MabAllocator {
+    /// Seeded LinUCB bandit over `n_nodes` arms.
     pub fn new(n_nodes: usize, seed: u64) -> Self {
         MabAllocator { mab: LinUcb::new(n_nodes, 0.6, seed), frozen: false }
     }

@@ -73,6 +73,7 @@ pub struct CoordinatorBuilder {
 }
 
 impl CoordinatorBuilder {
+    /// Start a build pipeline from an experiment configuration.
     pub fn new(cfg: ExperimentConfig) -> Self {
         CoordinatorBuilder {
             cfg,

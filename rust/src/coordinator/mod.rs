@@ -50,8 +50,11 @@ use observer::{SlotEvent, SlotObserver};
 /// Aggregated result of one slot.
 #[derive(Clone, Debug, Default)]
 pub struct SlotReport {
+    /// Queries the slot received (served + cached + dropped).
     pub queries: usize,
+    /// Mean quality over all queries (dropped ones count as zeros).
     pub mean_scores: QualityScores,
+    /// Dropped queries / total queries.
     pub drop_rate: f64,
     /// Makespan across nodes (max node completion time, Eq. 4 LHS).
     pub latency_s: f64,
@@ -60,8 +63,9 @@ pub struct SlotReport {
     /// Per node: (modeled TS_n^t, measured wall-clock) of the slot's
     /// batched index search — the solver can be driven by either.
     pub node_search_s: Vec<(f64, f64)>,
-    /// Per model-size (small/mid/large): query share and memory share.
+    /// Per model-size (small/mid/large): share of served queries.
     pub size_query_share: [f64; 3],
+    /// Per model-size (small/mid/large): share of GPU memory.
     pub size_mem_share: [f64; 3],
     /// All individual outcomes (for fine-grained analysis).
     pub outcomes: Vec<QueryOutcome>,
@@ -95,9 +99,11 @@ pub struct ServedSlot {
     pub size_mem: [f64; 3],
     /// Per node: (modeled TS_n^t, measured wall-clock search time).
     pub node_search_s: Vec<(f64, f64)>,
-    /// Retrieval-cache hits / misses / evictions summed over nodes.
+    /// Retrieval-cache hits summed over nodes.
     pub cache_hits: usize,
+    /// Retrieval-cache misses summed over nodes.
     pub cache_misses: usize,
+    /// Retrieval-cache evictions summed over nodes.
     pub cache_evictions: usize,
 }
 
@@ -120,11 +126,17 @@ impl ServedSlot {
 
 /// The CoEdge-RAG coordinator.
 pub struct Coordinator {
+    /// The experiment configuration the system was built from.
     pub cfg: ExperimentConfig,
+    /// The shared synthetic dataset (documents, QA pairs, domains).
     pub ds: SyntheticDataset,
+    /// The edge nodes, in configuration order.
     pub nodes: Vec<EdgeNode>,
+    /// Per-node capacity models C_n(L) (profiled or injected).
     pub capacities: Vec<CapacityModel>,
+    /// The deterministic query/document embedder.
     pub embedder: Embedder,
+    /// The quality-metrics evaluator.
     pub evaluator: Evaluator,
     /// Gold-doc locations per QA id (Oracle + diagnostics).
     pub gold_locs: Vec<Vec<usize>>,
@@ -771,14 +783,16 @@ impl Coordinator {
     }
 }
 
-/// Swap the intra-node strategy on all nodes (used by Table III benches).
 impl Coordinator {
+    /// Swap the intra-node strategy on all nodes (Table III benches).
     pub fn set_intra_strategy(&mut self, s: IntraStrategy) {
         self.cfg.intra = s.clone();
         for n in self.nodes.iter_mut() {
             n.strategy = s.clone();
         }
     }
+
+    /// Change the per-slot latency SLO L^t.
     pub fn set_slo(&mut self, slo_s: f64) {
         self.cfg.slo_s = slo_s;
     }

@@ -33,11 +33,15 @@ pub enum SlotEvent<'a> {
 /// Receiver for [`SlotEvent`]s. Runs synchronously on the coordinator's
 /// thread — keep callbacks cheap (counters, channels).
 pub trait SlotObserver: Send {
+    /// Called after every phase of every slot, in phase order.
     fn on_event(&mut self, event: &SlotEvent);
 }
 
 /// Forward events to a closure (the smallest possible observer).
-pub struct FnObserver<F: FnMut(&SlotEvent) + Send>(pub F);
+pub struct FnObserver<F: FnMut(&SlotEvent) + Send>(
+    /// The wrapped callback.
+    pub F,
+);
 
 impl<F: FnMut(&SlotEvent) + Send> SlotObserver for FnObserver<F> {
     fn on_event(&mut self, event: &SlotEvent) {

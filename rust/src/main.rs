@@ -8,6 +8,12 @@
 //!            --scenario, replay a cluster-dynamics timeline (node churn,
 //!            bursts, SLO changes, live corpus ingest) under its arrival
 //!            trace and optionally dump the byte-stable run transcript
+//!   eval     [--grid paper|smoke] [--threads N] [--scenarios DIR]
+//!            [--bench-dir DIR] [--results FILE]
+//!            run the baseline-comparison evaluation grid (allocators ×
+//!            datasets × scenario fixtures) in parallel and regenerate
+//!            BENCH_eval.json + docs/RESULTS.md — byte-deterministic, so
+//!            CI replays it like the golden traces
 //!   serve    [--addr A] [--config FILE] [--transcript FILE]
 //!            start the TCP serving front-end
 //!   profile  [--config FILE]                 print per-node capacity models
@@ -19,6 +25,7 @@ use std::sync::Arc;
 use coedge_rag::bench_harness::Table;
 use coedge_rag::config::{AllocatorKind, CacheKind, DatasetKind, ExperimentConfig, IndexKind};
 use coedge_rag::coordinator::{AllocatorRegistry, CoordinatorBuilder};
+use coedge_rag::experiments::{find_scenarios_dir, EvalGrid};
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
 use coedge_rag::scenario::{Scenario, ScenarioRunner};
@@ -199,6 +206,93 @@ fn cmd_run_scenario(cfg: ExperimentConfig, path: &str, transcript: Option<&Strin
     }
 }
 
+/// `eval`: run the baseline-comparison grid and regenerate the committed
+/// evaluation artifacts (`BENCH_eval.json` + `docs/RESULTS.md`). Two runs
+/// of the same grid are byte-identical — CI diffs them like goldens.
+fn cmd_eval(flags: std::collections::HashMap<String, String>) {
+    let grid_name = flags.get("grid").map(String::as_str).unwrap_or("paper");
+    let grid = EvalGrid::by_name(grid_name).unwrap_or_else(|e| {
+        eprintln!("[coedge] --grid: {e}");
+        std::process::exit(2);
+    });
+    let threads: usize = match flags.get("threads") {
+        Some(v) => v.parse().unwrap_or_else(|_| {
+            eprintln!("[coedge] --threads: expected a number, got {v:?}");
+            std::process::exit(2);
+        }),
+        None => 0,
+    };
+    let scenarios_dir = match flags.get("scenarios") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => find_scenarios_dir().unwrap_or_else(|| {
+            eprintln!("[coedge] no scenarios/ directory found; pass --scenarios DIR");
+            std::process::exit(2);
+        }),
+    };
+    // default artifact locations: the repository root (the parent of the
+    // fixture directory), so `coedge eval` run from the root or from
+    // `rust/` regenerates the committed files in place
+    let root = scenarios_dir.parent().map(std::path::Path::to_path_buf).unwrap_or_default();
+    let bench_dir = flags.get("bench-dir").map(std::path::PathBuf::from).unwrap_or_else(|| {
+        if root.as_os_str().is_empty() { std::path::PathBuf::from(".") } else { root.clone() }
+    });
+    let results = flags
+        .get("results")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| root.join("docs/RESULTS.md"));
+
+    eprintln!(
+        "[coedge] eval grid {:?}: {} cells ({} datasets × {} scenarios × {} allocators)",
+        grid.name,
+        grid.num_cells(),
+        grid.datasets.len(),
+        grid.scenarios.len(),
+        grid.allocators.len()
+    );
+    let report = grid.run(&scenarios_dir, threads).unwrap_or_else(|e| {
+        eprintln!("[coedge] eval: {e}");
+        std::process::exit(2);
+    });
+
+    let mut table = Table::new(&[
+        "cell", "R-L", "BERT", "drop%", "lat(s)", "p95(s)", "slo%", "hit%",
+    ]);
+    for c in &report.cells {
+        let m = &c.metrics;
+        table.row(vec![
+            c.name(),
+            format!("{:.4}", m.rouge_l),
+            format!("{:.4}", m.bert_score),
+            format!("{:.2}", m.drop_rate * 100.0),
+            format!("{:.3}", m.mean_latency_s),
+            format!("{:.3}", m.p95_latency_s),
+            format!("{:.1}", m.slo_attainment * 100.0),
+            m.cache_hit_rate.map(|h| format!("{:.1}", h * 100.0)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    table.print();
+
+    fn fail(what: &str, e: &dyn std::fmt::Display) -> ! {
+        eprintln!("[coedge] {what}: {e}");
+        std::process::exit(2);
+    }
+    let json_path = coedge_rag::bench_harness::write_bench_json(
+        &bench_dir,
+        "eval",
+        &report.to_bench_cases(),
+    )
+    .unwrap_or_else(|e| fail("write BENCH_eval.json", &e));
+    if let Some(parent) = results.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .unwrap_or_else(|e| fail(&format!("create {}", parent.display()), &e));
+        }
+    }
+    std::fs::write(&results, report.render_markdown())
+        .unwrap_or_else(|e| fail(&format!("write {}", results.display()), &e));
+    eprintln!("[coedge] wrote {} and {}", json_path.display(), results.display());
+}
+
 fn cmd_profile(flags: std::collections::HashMap<String, String>) {
     let cfg = load_config(&flags);
     let co = CoordinatorBuilder::new(cfg).backend(Backend::Reference).build().expect("build");
@@ -263,12 +357,13 @@ fn main() {
     let flags = parse_flags(&args[args.len().min(1)..]);
     match cmd {
         "run" => cmd_run(flags),
+        "eval" => cmd_eval(flags),
         "profile" => cmd_profile(flags),
         "serve" => cmd_serve(flags),
         "info" => cmd_info(),
         _ => {
             println!("coedge — CoEdge-RAG launcher");
-            println!("usage: coedge <run|serve|profile|info> [--config FILE] [--slots N]");
+            println!("usage: coedge <run|eval|serve|profile|info> [--config FILE] [--slots N]");
             println!(
                 "              [--queries N] [--slo S] [--allocator {}]",
                 AllocatorRegistry::with_builtins().kinds().join("|")
@@ -282,6 +377,8 @@ fn main() {
                 CacheKind::ALL.map(|k| k.as_str()).join("|")
             );
             println!("              [--scenario FILE] [--transcript FILE]");
+            println!("       coedge eval [--grid paper|smoke] [--threads N] [--scenarios DIR]");
+            println!("              [--bench-dir DIR] [--results FILE]");
         }
     }
 }

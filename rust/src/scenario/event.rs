@@ -85,6 +85,7 @@ impl ScenarioEvent {
 pub struct TimedEvent {
     /// 0-based slot the event fires *before* (events apply between slots).
     pub slot: usize,
+    /// The event to apply.
     pub event: ScenarioEvent,
 }
 
@@ -145,6 +146,7 @@ impl TimedEvent {
 /// trace — everything `Coordinator::run` holds fixed, made fluctuating.
 #[derive(Clone, Debug, Default)]
 pub struct Scenario {
+    /// Scenario name (stamped into transcripts).
     pub name: String,
     /// Slots to run; `None` falls back to the experiment config's count.
     pub slots: Option<usize>,

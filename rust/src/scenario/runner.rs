@@ -23,10 +23,12 @@ pub struct ScenarioRunner {
 }
 
 impl ScenarioRunner {
+    /// Wrap a parsed scenario for replay.
     pub fn new(scenario: Scenario) -> Self {
         ScenarioRunner { scenario }
     }
 
+    /// The scenario being replayed.
     pub fn scenario(&self) -> &Scenario {
         &self.scenario
     }

@@ -106,6 +106,7 @@ pub struct TranscriptRecorder {
 }
 
 impl TranscriptRecorder {
+    /// Start a shared transcript with the given header fields.
     pub fn new(name: &str, seed: u64, n_nodes: usize, allocator: &str) -> Self {
         TranscriptRecorder {
             inner: Arc::new(Mutex::new(RunTranscript::new(name, seed, n_nodes, allocator, 0))),

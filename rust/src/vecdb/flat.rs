@@ -14,10 +14,12 @@ pub struct FlatIndex {
 }
 
 impl FlatIndex {
+    /// An empty index for `dim`-dimensional vectors.
     pub fn new(dim: usize) -> Self {
         FlatIndex { dim, ids: Vec::new(), data: Vec::new() }
     }
 
+    /// Embedding dimensionality.
     pub fn dim(&self) -> usize {
         self.dim
     }

@@ -29,6 +29,7 @@ pub struct IvfIndex {
 }
 
 impl IvfIndex {
+    /// An empty untrained index (`nlist` lists, probing `nprobe`).
     pub fn new(dim: usize, nlist: usize, nprobe: usize) -> Self {
         IvfIndex {
             dim,

@@ -26,7 +26,9 @@ pub use sharded::ShardedIndex;
 /// A search hit: external id + similarity score.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Hit {
+    /// External id of the stored vector.
     pub id: usize,
+    /// Similarity score (inner product == cosine for unit vectors).
     pub score: f32,
 }
 
@@ -60,6 +62,7 @@ pub trait VectorIndex: Send + Sync {
     /// Number of stored vectors.
     fn len(&self) -> usize;
 
+    /// Whether the index holds no vectors.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -78,6 +81,7 @@ pub struct TopK {
 }
 
 impl TopK {
+    /// An empty collector keeping the best `k` hits.
     pub fn new(k: usize) -> Self {
         TopK { k, hits: Vec::with_capacity(k + 1) }
     }

@@ -52,6 +52,7 @@ impl<I: VectorIndex> ShardedIndex<I> {
         self
     }
 
+    /// Number of shards.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }

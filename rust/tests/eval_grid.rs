@@ -1,0 +1,105 @@
+//! Integration coverage for the evaluation & reporting tier (`coedge
+//! eval`): the grid fan-out must be byte-deterministic (two runs of the
+//! same grid produce identical `BENCH_eval.json` text and identical
+//! `docs/RESULTS.md` markdown), the paper grid must cover the full
+//! acceptance matrix (all five allocators × both datasets × the four
+//! committed scenario fixtures), and the rendered artifacts must carry
+//! the per-baseline %-gain columns.
+
+use std::path::{Path, PathBuf};
+
+use coedge_rag::bench_harness::bench_json;
+use coedge_rag::config::AllocatorKind;
+use coedge_rag::experiments::{EvalGrid, EvalReport};
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+fn artifacts(report: &EvalReport) -> (String, String) {
+    (bench_json("eval", &report.to_bench_cases()), report.render_markdown())
+}
+
+/// Two independent smoke-grid runs — different thread counts, fresh
+/// coordinators — must serialize byte-identically, the same contract the
+/// golden-trace harness pins for transcripts. This is what lets CI diff
+/// `coedge eval` output across double runs and commits.
+#[test]
+fn smoke_grid_is_byte_deterministic_across_runs_and_thread_counts() {
+    let grid = EvalGrid::smoke();
+    let a = grid.run(&scenarios_dir(), 4).expect("smoke grid run");
+    let b = grid.run(&scenarios_dir(), 1).expect("smoke grid rerun");
+    let (json_a, md_a) = artifacts(&a);
+    let (json_b, md_b) = artifacts(&b);
+    for (ga, gb) in json_a.lines().zip(json_b.lines()) {
+        assert_eq!(ga, gb, "BENCH_eval.json drifted between identical runs");
+    }
+    assert_eq!(json_a, json_b);
+    assert_eq!(md_a, md_b, "RESULTS.md drifted between identical runs");
+}
+
+/// The smoke grid's cells carry sane paper metrics, and the LRU-cached
+/// repeat-storm cells report a cache hit rate while the plain cells do
+/// not (the cache column only appears when the tier is on).
+#[test]
+fn smoke_grid_metrics_are_sane() {
+    let report = EvalGrid::smoke().run(&scenarios_dir(), 0).expect("smoke grid run");
+    assert_eq!(report.cells.len(), EvalGrid::smoke().num_cells());
+    for c in &report.cells {
+        let m = &c.metrics;
+        assert!(m.slots > 0 && m.queries > 0, "{}: empty cell", c.name());
+        assert!((0.0..=1.0).contains(&m.drop_rate), "{}: drop {}", c.name(), m.drop_rate);
+        assert!((0.0..=1.0).contains(&m.slo_attainment), "{}", c.name());
+        assert!(m.p95_latency_s >= 0.0 && m.mean_latency_s >= 0.0, "{}", c.name());
+        assert!(m.rouge_l >= 0.0 && m.bert_score >= 0.0, "{}", c.name());
+        if c.cached {
+            let h = m.cache_hit_rate.expect("cached cell must report a hit rate");
+            assert!((0.0..=1.0).contains(&h), "{}: hit rate {h}", c.name());
+        } else {
+            assert!(m.cache_hit_rate.is_none(), "{}: cache-off cell grew a hit rate", c.name());
+        }
+    }
+    // at least one cached cell actually hit: repeat_storm is built for it
+    assert!(
+        report.cells.iter().any(|c| c.cached && c.metrics.cache_hit_rate.unwrap_or(0.0) > 0.0),
+        "repeat_storm under LRU should produce nonzero hits"
+    );
+}
+
+/// The paper grid covers the acceptance matrix — all five allocators
+/// across at least four scenario fixtures and both datasets — and every
+/// fixture it names is actually committed.
+#[test]
+fn paper_grid_covers_the_acceptance_matrix() {
+    let grid = EvalGrid::paper();
+    assert_eq!(grid.allocators, AllocatorKind::ALL.to_vec());
+    assert!(grid.scenarios.len() >= 4);
+    assert_eq!(grid.datasets.len(), 2);
+    for sc in &grid.scenarios {
+        let p = scenarios_dir().join(format!("{}.toml", sc.name));
+        assert!(p.is_file(), "fixture missing: {}", p.display());
+    }
+}
+
+/// The rendered markdown carries the paper-layout tables: one block per
+/// (dataset, scenario) with every allocator as a row, plus the PPO-gain
+/// summary with one column per baseline.
+#[test]
+fn rendered_markdown_has_baseline_and_gain_tables() {
+    let report = EvalGrid::smoke().run(&scenarios_dir(), 0).expect("smoke grid run");
+    let md = report.render_markdown();
+    assert!(md.contains("Auto-generated"), "{md}");
+    for al in AllocatorKind::ALL {
+        assert!(md.contains(&format!("| {} |", al.as_str())), "missing row {al}\n{md}");
+    }
+    for col in ["vs random", "vs domain", "vs oracle", "vs mab"] {
+        assert!(md.contains(col), "missing gain column {col}\n{md}");
+    }
+    assert!(md.contains("`domainqa` / `burst_storm`"), "{md}");
+    assert!(md.contains("LRU caches on"), "{md}");
+    // the JSON twin carries the same gains as machine-readable fields
+    let json = bench_json("eval", &report.to_bench_cases());
+    for key in ["gain_vs_random", "gain_vs_domain", "gain_vs_oracle", "gain_vs_mab"] {
+        assert!(json.contains(key), "missing {key} in BENCH_eval.json\n{json}");
+    }
+}
