@@ -4,6 +4,8 @@
 //! TOML-subset parser (`configs/*.toml`) so deployments are declarative
 //! like vLLM/MaxText config files.
 
+use std::path::PathBuf;
+
 use crate::llmsim::model::ModelSize;
 use crate::util::toml::{Table, TomlDoc};
 use crate::workload::SkewPattern;
@@ -111,6 +113,14 @@ impl AllocatorKind {
     }
 }
 
+/// Registry key of the frozen-checkpoint PPO allocator
+/// (`--allocator ppo-pretrained --checkpoint FILE`). Deliberately NOT an
+/// [`AllocatorKind`] variant: the enum enumerates the paper's Table II
+/// comparison rows, while pretrained deployment is a registry-only
+/// extension resolved through
+/// [`ExperimentConfig::allocator_override`].
+pub const PPO_PRETRAINED_KEY: &str = "ppo-pretrained";
+
 impl std::fmt::Display for AllocatorKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.as_str())
@@ -154,6 +164,14 @@ pub struct ExperimentConfig {
     /// Retrieval depth (paper: top-5).
     pub top_k: usize,
     pub allocator: AllocatorKind,
+    /// Registry-key allocator override (e.g. [`PPO_PRETRAINED_KEY`]):
+    /// when set, the coordinator builder resolves this key through the
+    /// allocator registry instead of `allocator` — the extension point
+    /// for allocators that are not Table II comparison rows.
+    pub allocator_override: Option<String>,
+    /// Policy checkpoint the `ppo-pretrained` allocator loads
+    /// (`--checkpoint FILE` / TOML `checkpoint = "..."`).
+    pub checkpoint: Option<PathBuf>,
     pub intra: IntraStrategy,
     /// Cluster-level semantic answer cache (also the default every node's
     /// retrieval cache inherits unless `[nodes.cache]` overrides it).
@@ -221,6 +239,8 @@ impl ExperimentConfig {
             skew: SkewPattern::Dirichlet { alpha: 0.6 },
             top_k: 5,
             allocator: AllocatorKind::Ppo,
+            allocator_override: None,
+            checkpoint: None,
             intra: IntraStrategy::Solver,
             cache: CacheSpec::default(),
             inter_enabled: true,
@@ -255,6 +275,8 @@ impl ExperimentConfig {
             skew: SkewPattern::Balanced,
             top_k: 5,
             allocator: AllocatorKind::Oracle,
+            allocator_override: None,
+            checkpoint: None,
             intra: IntraStrategy::Solver,
             cache: CacheSpec::default(),
             inter_enabled: true,
@@ -300,7 +322,14 @@ impl ExperimentConfig {
             cfg.overlap = v;
         }
         if let Some(v) = root.get("allocator").and_then(|v| v.as_str()) {
-            cfg.allocator = v.parse()?;
+            if v == PPO_PRETRAINED_KEY {
+                cfg.allocator_override = Some(PPO_PRETRAINED_KEY.to_string());
+            } else {
+                cfg.allocator = v.parse()?;
+            }
+        }
+        if let Some(v) = root.get("checkpoint").and_then(|v| v.as_str()) {
+            cfg.checkpoint = Some(PathBuf::from(v));
         }
         if let Some(v) = root.get("inter_enabled").and_then(|v| v.as_bool()) {
             cfg.inter_enabled = v;
@@ -604,6 +633,19 @@ capacity_mb = 8
         let err = "bogus".parse::<AllocatorKind>().unwrap_err().to_string();
         assert!(err.contains("valid kinds") && err.contains("ppo"), "{err}");
         assert!(ExperimentConfig::from_toml("allocator = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn from_toml_ppo_pretrained_sets_override_and_checkpoint() {
+        let text = "allocator = \"ppo-pretrained\"\ncheckpoint = \"models/policy.ckpt\"\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        // the enum kind is untouched; the registry-key override carries it
+        assert_eq!(cfg.allocator, AllocatorKind::Ppo);
+        assert_eq!(cfg.allocator_override.as_deref(), Some(PPO_PRETRAINED_KEY));
+        assert_eq!(cfg.checkpoint.as_deref(), Some(std::path::Path::new("models/policy.ckpt")));
+        // defaults: no override, no checkpoint
+        let cfg = ExperimentConfig::from_toml("seed = 1\n").unwrap();
+        assert!(cfg.allocator_override.is_none() && cfg.checkpoint.is_none());
     }
 
     #[test]

@@ -127,6 +127,14 @@ pub trait Allocator: Send {
 
     /// Stop learning (measurement sweeps freeze training progress).
     fn freeze(&mut self) {}
+
+    /// Whether learning is permanently or currently off. The coordinator
+    /// skips the feedback phase entirely for frozen allocators — no
+    /// `observe` call, no [`FeedbackStats`] drift — so frozen replays of
+    /// the same fixture are byte-identical across runs.
+    fn is_frozen(&self) -> bool {
+        false
+    }
 }
 
 /// Inputs available to allocator factories at build time.
@@ -185,6 +193,21 @@ impl AllocatorRegistry {
         });
         r.register(AllocatorKind::Mab.as_str(), |ctx| {
             Ok(Box::new(MabAllocator::new(ctx.cfg.num_nodes(), ctx.seed ^ 0xBA5E)))
+        });
+        r.register(crate::config::PPO_PRETRAINED_KEY, |ctx| {
+            let path = ctx.cfg.checkpoint.as_deref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "allocator {:?} needs a policy checkpoint: pass --checkpoint FILE \
+                     (or TOML `checkpoint = \"...\"`)",
+                    crate::config::PPO_PRETRAINED_KEY
+                )
+            })?;
+            Ok(Box::new(crate::train::PretrainedPpoAllocator::load(
+                path,
+                ctx.cfg.num_nodes(),
+                ctx.ds.num_domains(),
+                ctx.seed ^ 0x707E,
+            )?))
         });
         r
     }
@@ -363,5 +386,9 @@ impl Allocator for PpoAllocator {
 
     fn freeze(&mut self) {
         self.frozen = true;
+    }
+
+    fn is_frozen(&self) -> bool {
+        self.frozen
     }
 }

@@ -217,4 +217,8 @@ impl Allocator for MabAllocator {
     fn freeze(&mut self) {
         self.frozen = true;
     }
+
+    fn is_frozen(&self) -> bool {
+        self.frozen
+    }
 }

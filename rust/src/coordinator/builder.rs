@@ -292,7 +292,10 @@ impl CoordinatorBuilder {
                     backend: &backend,
                     seed: cfg.seed,
                 };
+                // precedence: explicit builder key > config registry-key
+                // override (e.g. `ppo-pretrained`) > the Table II enum
                 let kind = allocator_kind
+                    .or_else(|| cfg.allocator_override.clone())
                     .unwrap_or_else(|| cfg.allocator.as_str().to_string());
                 registry.build(&kind, &build_ctx)?
             }

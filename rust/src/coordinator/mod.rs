@@ -492,7 +492,10 @@ impl Coordinator {
         }
     }
 
-    /// Phase ④: feed outcomes back into the allocator.
+    /// Phase ④: feed outcomes back into the allocator. Skipped entirely
+    /// for frozen allocators ([`Allocator::is_frozen`]): no `observe`
+    /// call can mutate learner state or drift [`FeedbackStats`], so a
+    /// frozen policy replays a fixture byte-identically.
     pub fn feedback(
         &mut self,
         slot: usize,
@@ -502,6 +505,9 @@ impl Coordinator {
         assignment: &Assignment,
         outcomes: &[QueryOutcome],
     ) -> Result<FeedbackStats> {
+        if self.allocator.is_frozen() {
+            return Ok(FeedbackStats::default());
+        }
         let ctx = SlotContext {
             slot_idx: slot,
             qa_ids,

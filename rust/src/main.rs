@@ -2,18 +2,28 @@
 //!
 //! Subcommands:
 //!   run      [--config FILE] [--slots N] [--allocator KIND] [--slo S]
-//!            [--index KIND] [--shards N] [--cache KIND] [--cache-mb N]
+//!            [--checkpoint FILE] [--index KIND] [--shards N]
+//!            [--cache KIND] [--cache-mb N]
 //!            [--scenario FILE] [--transcript FILE]
 //!            run a full experiment and print per-slot results; with
 //!            --scenario, replay a cluster-dynamics timeline (node churn,
 //!            bursts, SLO changes, live corpus ingest) under its arrival
-//!            trace and optionally dump the byte-stable run transcript
+//!            trace and optionally dump the byte-stable run transcript;
+//!            --allocator ppo-pretrained --checkpoint FILE deploys a
+//!            frozen trained policy
 //!   eval     [--grid paper|smoke] [--threads N] [--scenarios DIR]
-//!            [--bench-dir DIR] [--results FILE]
+//!            [--bench-dir DIR] [--results FILE] [--checkpoint FILE]
 //!            run the baseline-comparison evaluation grid (allocators ×
 //!            datasets × scenario fixtures) in parallel and regenerate
 //!            BENCH_eval.json + docs/RESULTS.md — byte-deterministic, so
-//!            CI replays it like the golden traces
+//!            CI replays it like the golden traces; with --checkpoint,
+//!            the grid grows a ppo-pretrained column
+//!   train    [--scenarios DIR] [--replicas N] [--epochs N] [--seed S]
+//!            [--threads N] [--checkpoint-out FILE] [--bench-dir DIR]
+//!            run the vectorized PPO rollout farm over the scenario
+//!            fixtures, write the learning curve to BENCH_train.json and
+//!            the trained policy to a versioned checkpoint —
+//!            byte-deterministic across runs and thread counts
 //!   serve    [--addr A] [--config FILE] [--transcript FILE]
 //!            start the TCP serving front-end
 //!   profile  [--config FILE]                 print per-node capacity models
@@ -23,13 +33,16 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use coedge_rag::bench_harness::Table;
-use coedge_rag::config::{AllocatorKind, CacheKind, DatasetKind, ExperimentConfig, IndexKind};
+use coedge_rag::config::{
+    AllocatorKind, CacheKind, DatasetKind, ExperimentConfig, IndexKind, PPO_PRETRAINED_KEY,
+};
 use coedge_rag::coordinator::{AllocatorRegistry, CoordinatorBuilder};
-use coedge_rag::experiments::{find_scenarios_dir, EvalGrid};
+use coedge_rag::experiments::EvalGrid;
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
-use coedge_rag::scenario::{Scenario, ScenarioRunner};
+use coedge_rag::scenario::{resolve_scenarios_dir, Scenario, ScenarioRunner};
 use coedge_rag::server::{serve, ServerConfig};
+use coedge_rag::train::{TrainConfig, TrainFarm};
 use coedge_rag::util::logging;
 
 fn parse_flags(args: &[String]) -> std::collections::HashMap<String, String> {
@@ -69,11 +82,28 @@ fn load_config(flags: &std::collections::HashMap<String, String>) -> ExperimentC
         cfg.queries_per_slot = v.parse().expect("--queries");
     }
     if let Some(v) = flags.get("allocator") {
-        // exhaustive over AllocatorKind; unknown kinds list the registry keys
-        cfg.allocator = v.parse::<AllocatorKind>().unwrap_or_else(|e| {
-            eprintln!("[coedge] --allocator: {e}");
-            std::process::exit(2);
-        });
+        // Table II enum kinds resolve directly; ppo-pretrained is a
+        // registry-key override (needs --checkpoint); anything else lists
+        // every registered key
+        match v.parse::<AllocatorKind>() {
+            Ok(kind) => {
+                cfg.allocator = kind;
+                cfg.allocator_override = None;
+            }
+            Err(_) if v == PPO_PRETRAINED_KEY => {
+                cfg.allocator_override = Some(v.clone());
+            }
+            Err(_) => {
+                eprintln!(
+                    "[coedge] --allocator: unknown allocator {v:?}; valid kinds: {}",
+                    AllocatorRegistry::with_builtins().kinds().join(", ")
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(v) = flags.get("checkpoint") {
+        cfg.checkpoint = Some(std::path::PathBuf::from(v));
     }
     if let Some(v) = flags.get("seed") {
         cfg.seed = v.parse().expect("--seed");
@@ -115,6 +145,12 @@ fn load_config(flags: &std::collections::HashMap<String, String>) -> ExperimentC
     cfg
 }
 
+/// The allocator a config will resolve to, for log lines (the registry-key
+/// override wins over the Table II enum, mirroring the builder).
+fn allocator_label(cfg: &ExperimentConfig) -> String {
+    cfg.allocator_override.clone().unwrap_or_else(|| cfg.allocator.to_string())
+}
+
 fn backend() -> Backend {
     match PolicyRuntime::load(&PolicyRuntime::default_dir()) {
         Ok(rt) => {
@@ -135,8 +171,10 @@ fn cmd_run(flags: std::collections::HashMap<String, String>) {
     }
     let slots = cfg.slots;
     eprintln!(
-        "[coedge] running {slots} slots × {} queries, SLO {}s, allocator {:?}",
-        cfg.queries_per_slot, cfg.slo_s, cfg.allocator
+        "[coedge] running {slots} slots × {} queries, SLO {}s, allocator {}",
+        cfg.queries_per_slot,
+        cfg.slo_s,
+        allocator_label(&cfg)
     );
     let mut co =
         CoordinatorBuilder::new(cfg).backend(backend()).build().expect("build coordinator");
@@ -170,11 +208,11 @@ fn cmd_run_scenario(cfg: ExperimentConfig, path: &str, transcript: Option<&Strin
         std::process::exit(2);
     });
     eprintln!(
-        "[coedge] scenario {:?}: {} events over {} slots, allocator {:?}",
+        "[coedge] scenario {:?}: {} events over {} slots, allocator {}",
         sc.name,
         sc.events.len(),
         sc.slots.unwrap_or(cfg.slots),
-        cfg.allocator
+        allocator_label(&cfg)
     );
     let mut co =
         CoordinatorBuilder::new(cfg).backend(backend()).build().expect("build coordinator");
@@ -211,10 +249,13 @@ fn cmd_run_scenario(cfg: ExperimentConfig, path: &str, transcript: Option<&Strin
 /// of the same grid are byte-identical — CI diffs them like goldens.
 fn cmd_eval(flags: std::collections::HashMap<String, String>) {
     let grid_name = flags.get("grid").map(String::as_str).unwrap_or("paper");
-    let grid = EvalGrid::by_name(grid_name).unwrap_or_else(|e| {
+    let mut grid = EvalGrid::by_name(grid_name).unwrap_or_else(|e| {
         eprintln!("[coedge] --grid: {e}");
         std::process::exit(2);
     });
+    if let Some(ckpt) = flags.get("checkpoint") {
+        grid.pretrained = Some(std::path::PathBuf::from(ckpt));
+    }
     let threads: usize = match flags.get("threads") {
         Some(v) => v.parse().unwrap_or_else(|_| {
             eprintln!("[coedge] --threads: expected a number, got {v:?}");
@@ -222,13 +263,11 @@ fn cmd_eval(flags: std::collections::HashMap<String, String>) {
         }),
         None => 0,
     };
-    let scenarios_dir = match flags.get("scenarios") {
-        Some(d) => std::path::PathBuf::from(d),
-        None => find_scenarios_dir().unwrap_or_else(|| {
-            eprintln!("[coedge] no scenarios/ directory found; pass --scenarios DIR");
+    let scenarios_dir = resolve_scenarios_dir(flags.get("scenarios").map(String::as_str))
+        .unwrap_or_else(|e| {
+            eprintln!("[coedge] --scenarios: {e}");
             std::process::exit(2);
-        }),
-    };
+        });
     // default artifact locations: the repository root (the parent of the
     // fixture directory), so `coedge eval` run from the root or from
     // `rust/` regenerates the committed files in place
@@ -247,7 +286,7 @@ fn cmd_eval(flags: std::collections::HashMap<String, String>) {
         grid.num_cells(),
         grid.datasets.len(),
         grid.scenarios.len(),
-        grid.allocators.len()
+        grid.allocators.len() + usize::from(grid.pretrained.is_some())
     );
     let report = grid.run(&scenarios_dir, threads).unwrap_or_else(|e| {
         eprintln!("[coedge] eval: {e}");
@@ -291,6 +330,104 @@ fn cmd_eval(flags: std::collections::HashMap<String, String>) {
     std::fs::write(&results, report.render_markdown())
         .unwrap_or_else(|e| fail(&format!("write {}", results.display()), &e));
     eprintln!("[coedge] wrote {} and {}", json_path.display(), results.display());
+}
+
+/// `train`: run the vectorized PPO rollout farm over the scenario
+/// fixtures, print the learning curve, and persist `BENCH_train.json` +
+/// a versioned policy checkpoint. Byte-deterministic across runs and
+/// thread counts (CI double-runs at `--threads 4` vs `--threads 1` and
+/// byte-diffs both artifacts).
+fn cmd_train(flags: std::collections::HashMap<String, String>) {
+    fn numeric<T: std::str::FromStr>(
+        flags: &std::collections::HashMap<String, String>,
+        key: &str,
+        default: T,
+    ) -> T {
+        match flags.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("[coedge] --{key}: expected a number, got {v:?}");
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
+    let scenarios_dir = resolve_scenarios_dir(flags.get("scenarios").map(String::as_str))
+        .unwrap_or_else(|e| {
+            eprintln!("[coedge] --scenarios: {e}");
+            std::process::exit(2);
+        });
+    let defaults = TrainConfig::default();
+    let tcfg = TrainConfig {
+        replicas: numeric(&flags, "replicas", defaults.replicas),
+        epochs: numeric(&flags, "epochs", defaults.epochs),
+        seed: numeric(&flags, "seed", defaults.seed),
+        threads: numeric(&flags, "threads", defaults.threads),
+        ..defaults
+    };
+    let farm = TrainFarm::from_dir(&scenarios_dir, tcfg.clone()).unwrap_or_else(|e| {
+        eprintln!("[coedge] train: {e}");
+        std::process::exit(2);
+    });
+    eprintln!(
+        "[coedge] train: {} cells/epoch ({} fixtures × {} replicas) × {} epochs, seed {}",
+        farm.num_cells(),
+        farm.num_cells() / tcfg.replicas,
+        tcfg.replicas,
+        tcfg.epochs,
+        tcfg.seed
+    );
+    let report = farm.run().unwrap_or_else(|e| {
+        eprintln!("[coedge] train: {e}");
+        std::process::exit(2);
+    });
+
+    let mut table = Table::new(&[
+        "epoch", "transitions", "updates", "reward", "R-L", "drop%", "loss", "entropy",
+    ]);
+    for e in &report.curve {
+        table.row(vec![
+            format!("{}", e.epoch),
+            format!("{}", e.transitions),
+            format!("{}", e.updates),
+            format!("{:.4}", e.mean_reward),
+            format!("{:.4}", e.rouge_l),
+            format!("{:.2}", e.drop_rate * 100.0),
+            format!("{:.4}", e.loss),
+            format!("{:.4}", e.entropy),
+        ]);
+    }
+    table.print();
+
+    // default artifact locations mirror `coedge eval`: the repository root
+    // (the parent of the fixture directory)
+    let root = scenarios_dir.parent().map(std::path::Path::to_path_buf).unwrap_or_default();
+    let bench_dir = flags.get("bench-dir").map(std::path::PathBuf::from).unwrap_or_else(|| {
+        if root.as_os_str().is_empty() { std::path::PathBuf::from(".") } else { root.clone() }
+    });
+    let ckpt = flags
+        .get("checkpoint-out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| bench_dir.join("policy.ckpt"));
+    let json_path = coedge_rag::bench_harness::write_bench_json(
+        &bench_dir,
+        "train",
+        &report.to_bench_cases(),
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("[coedge] write BENCH_train.json: {e}");
+        std::process::exit(2);
+    });
+    report.save_checkpoint(&ckpt).unwrap_or_else(|e| {
+        eprintln!("[coedge] write {}: {e}", ckpt.display());
+        std::process::exit(2);
+    });
+    eprintln!(
+        "[coedge] wrote {} and {} (deploy with: coedge run --allocator {} --checkpoint {})",
+        json_path.display(),
+        ckpt.display(),
+        PPO_PRETRAINED_KEY,
+        ckpt.display()
+    );
 }
 
 fn cmd_profile(flags: std::collections::HashMap<String, String>) {
@@ -358,16 +495,18 @@ fn main() {
     match cmd {
         "run" => cmd_run(flags),
         "eval" => cmd_eval(flags),
+        "train" => cmd_train(flags),
         "profile" => cmd_profile(flags),
         "serve" => cmd_serve(flags),
         "info" => cmd_info(),
         _ => {
             println!("coedge — CoEdge-RAG launcher");
-            println!("usage: coedge <run|eval|serve|profile|info> [--config FILE] [--slots N]");
+            println!("usage: coedge <run|eval|train|serve|profile|info> [--config FILE] [--slots N]");
             println!(
                 "              [--queries N] [--slo S] [--allocator {}]",
                 AllocatorRegistry::with_builtins().kinds().join("|")
             );
+            println!("              [--checkpoint FILE]   (with --allocator ppo-pretrained)");
             println!(
                 "              [--index {}] [--shards N]",
                 IndexKind::ALL.map(|k| k.as_str()).join("|")
@@ -378,7 +517,9 @@ fn main() {
             );
             println!("              [--scenario FILE] [--transcript FILE]");
             println!("       coedge eval [--grid paper|smoke] [--threads N] [--scenarios DIR]");
-            println!("              [--bench-dir DIR] [--results FILE]");
+            println!("              [--bench-dir DIR] [--results FILE] [--checkpoint FILE]");
+            println!("       coedge train [--scenarios DIR] [--replicas N] [--epochs N] [--seed S]");
+            println!("              [--threads N] [--checkpoint-out FILE] [--bench-dir DIR]");
         }
     }
 }

@@ -15,12 +15,19 @@ use super::params::{PolicyParams, EMBED_DIM, HIDDEN, NUM_TENSORS};
 use crate::runtime::{UpdateBatch, UpdateStats};
 
 // Hyper-parameters — keep in sync with python/compile/model.py.
+/// Adam learning rate.
 pub const LEARNING_RATE: f32 = 3e-4;
+/// PPO surrogate clip range ε (Eq. 11).
 pub const CLIP_EPS: f32 = 0.02;
+/// Entropy-bonus coefficient β (Eq. 11).
 pub const ENTROPY_BETA: f32 = 0.01;
+/// Adam first-moment decay β₁.
 pub const ADAM_B1: f32 = 0.9;
+/// Adam second-moment decay β₂.
 pub const ADAM_B2: f32 = 0.999;
+/// Adam denominator stabilizer.
 pub const ADAM_EPS: f32 = 1e-8;
+/// LayerNorm variance stabilizer.
 pub const LN_EPS: f32 = 1e-5;
 
 /// Dense forward into `out`, returning pre-activation copy if `relu`.

@@ -16,4 +16,4 @@ pub mod ppo;
 pub mod grad;
 
 pub use params::PolicyParams;
-pub use ppo::{OnlinePolicy, PpoConfig};
+pub use ppo::{OnlinePolicy, PpoConfig, Transition};

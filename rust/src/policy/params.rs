@@ -33,10 +33,13 @@ pub fn param_shapes(n_actions: usize) -> [(usize, usize); NUM_TENSORS] {
 /// Policy parameters + Adam optimizer state.
 #[derive(Clone, Debug)]
 pub struct PolicyParams {
+    /// Output width of the final layer (= number of cluster nodes).
     pub n_actions: usize,
     /// Flat tensors in PARAM_NAMES order (row-major).
     pub tensors: Vec<Vec<f32>>,
+    /// Adam first-moment state, one entry per tensor.
     pub adam_m: Vec<Vec<f32>>,
+    /// Adam second-moment state, one entry per tensor.
     pub adam_v: Vec<Vec<f32>>,
     /// 1-based Adam timestep (incremented per update call).
     pub step: u64,

@@ -47,12 +47,14 @@ pub struct PpoConfig {
     /// Optimization epochs per triggered batch (re-uses the batch with
     /// fixed behavior policy — standard PPO batch reuse).
     pub epochs: usize,
-    /// Feedback weights α₁ (ROUGE/LCS term) and α₂ (BERTScore term), Eq. 9.
+    /// Feedback weight α₁ (ROUGE/LCS term), Eq. 9.
     pub alpha1: f64,
+    /// Feedback weight α₂ (BERTScore term), Eq. 9.
     pub alpha2: f64,
     /// Exploration floor: actions are sampled from
     /// `(1−ε)·π + ε·uniform` to guarantee continued data collection.
     pub explore_eps: f64,
+    /// Seed for parameter init and the action-sampling RNG stream.
     pub seed: u64,
 }
 
@@ -69,21 +71,28 @@ impl Default for PpoConfig {
     }
 }
 
-/// One buffered experience.
+/// One `(state, action, reward)` sample: the unit both the online buffer
+/// and the offline rollout farm (`crate::train`) feed to PPO updates.
 #[derive(Clone, Debug)]
-struct Experience {
-    x: Vec<f32>,
-    action: usize,
-    old_logp: f32,
-    feedback: f64,
+pub struct Transition {
+    /// Query embedding (`EMBED_DIM` floats).
+    pub x: Vec<f32>,
+    /// Node the query was routed to.
+    pub action: usize,
+    /// Behavior log-probability of `action` at decision time.
+    pub old_logp: f32,
+    /// Composite feedback score (Eq. 9) the evaluator assigned.
+    pub feedback: f64,
 }
 
 /// The online policy: parameters + buffer + backend.
 pub struct OnlinePolicy {
+    /// Policy-network parameters + Adam state (host-owned).
     pub params: PolicyParams,
+    /// Learner configuration.
     pub cfg: PpoConfig,
     backend: Backend,
-    buffer: Vec<Experience>,
+    buffer: Vec<Transition>,
     rng: Rng,
     /// Number of completed update rounds (each = cfg.epochs PPO steps).
     pub updates: usize,
@@ -92,10 +101,19 @@ pub struct OnlinePolicy {
 }
 
 impl OnlinePolicy {
+    /// Fresh policy: parameters seeded from `cfg.seed`, empty buffer.
     pub fn new(n_actions: usize, cfg: PpoConfig, backend: Backend) -> Self {
+        let params = PolicyParams::init(n_actions, cfg.seed ^ 0x9E37);
+        Self::with_params(params, cfg, backend)
+    }
+
+    /// Wrap existing parameters (checkpoint restore, rollout snapshots)
+    /// without re-initializing the weights; only the RNG stream and the
+    /// empty buffer are fresh.
+    pub fn with_params(params: PolicyParams, cfg: PpoConfig, backend: Backend) -> Self {
         let rng = Rng::new(cfg.seed);
         OnlinePolicy {
-            params: PolicyParams::init(n_actions, cfg.seed ^ 0x9E37),
+            params,
             cfg,
             backend,
             buffer: Vec::new(),
@@ -105,6 +123,7 @@ impl OnlinePolicy {
         }
     }
 
+    /// Number of routing actions (= cluster nodes) the network outputs.
     pub fn n_actions(&self) -> usize {
         self.params.n_actions
     }
@@ -145,7 +164,7 @@ impl OnlinePolicy {
         feedback: f64,
     ) -> Result<Option<UpdateStats>> {
         debug_assert_eq!(x.len(), EMBED_DIM);
-        self.buffer.push(Experience { x: x.to_vec(), action, old_logp, feedback });
+        self.buffer.push(Transition { x: x.to_vec(), action, old_logp, feedback });
         if self.buffer.len() >= self.cfg.buffer_threshold {
             let stats = self.flush()?;
             return Ok(stats);
@@ -159,17 +178,31 @@ impl OnlinePolicy {
             return Ok(None);
         }
         let exps = std::mem::take(&mut self.buffer);
+        self.update_on(&exps)
+    }
+
+    /// Run one update round (`cfg.epochs` PPO steps) on an explicit batch
+    /// of transitions, bypassing the online buffer — the rollout farm
+    /// (`crate::train`) merges replica transitions and steps the shared
+    /// learner through this. Applies the same Eq. 10 batch
+    /// standardization as the buffered path; batches of fewer than two
+    /// transitions are skipped (`None`) because the reward std is
+    /// undefined.
+    pub fn update_on(&mut self, transitions: &[Transition]) -> Result<Option<UpdateStats>> {
+        if transitions.len() < 2 {
+            return Ok(None);
+        }
         // Eq. 10: batch standardization of the feedback signal.
-        let raw: Vec<f64> = exps.iter().map(|e| e.feedback).collect();
+        let raw: Vec<f64> = transitions.iter().map(|e| e.feedback).collect();
         let std_rewards = standardize(&raw);
-        let rows = exps.len();
+        let rows = transitions.len();
         let mut batch = UpdateBatch {
             x: Vec::with_capacity(rows * EMBED_DIM),
             actions: Vec::with_capacity(rows),
             rewards: std_rewards.iter().map(|&r| r as f32).collect(),
-            old_logp: exps.iter().map(|e| e.old_logp).collect(),
+            old_logp: transitions.iter().map(|e| e.old_logp).collect(),
         };
-        for e in &exps {
+        for e in transitions {
             batch.x.extend_from_slice(&e.x);
             batch.actions.push(e.action);
         }

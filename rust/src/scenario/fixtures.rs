@@ -1,0 +1,87 @@
+//! Scenario-fixture discovery shared by `coedge eval` and `coedge train`.
+//!
+//! Both subcommands consume the committed `scenarios/*.toml` fixtures.
+//! This module is the single resolution path: the same directory
+//! auto-detection (repository root or `rust/` working directory), the
+//! same `--scenarios DIR` override semantics, and a deterministic
+//! filename-sorted loader so a curriculum never depends on directory
+//! iteration order.
+
+use std::path::{Path, PathBuf};
+
+use super::event::Scenario;
+use crate::Result;
+
+/// Resolve the `scenarios/` fixture directory: the current directory, its
+/// parent (CI runs with `rust/` as working directory), then the source
+/// checkout the binary was built from. `None` when no fixture directory
+/// can be found — callers should suggest `--scenarios DIR`.
+pub fn find_scenarios_dir() -> Option<PathBuf> {
+    for base in ["scenarios", "../scenarios"] {
+        let p = PathBuf::from(base);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    let built = Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    if built.is_dir() {
+        Some(built)
+    } else {
+        None
+    }
+}
+
+/// Apply a `--scenarios DIR` override, falling back to
+/// [`find_scenarios_dir`] auto-detection; errors name the remedy.
+pub fn resolve_scenarios_dir(flag: Option<&str>) -> Result<PathBuf> {
+    match flag {
+        Some(dir) => {
+            let p = PathBuf::from(dir);
+            anyhow::ensure!(p.is_dir(), "--scenarios {}: not a directory", p.display());
+            Ok(p)
+        }
+        None => find_scenarios_dir().ok_or_else(|| {
+            anyhow::anyhow!(
+                "no scenarios/ directory found near the working directory; pass --scenarios DIR"
+            )
+        }),
+    }
+}
+
+/// One parsed fixture, tagged with its file stem (`burst_storm`, …).
+#[derive(Clone, Debug)]
+pub struct NamedScenario {
+    /// Fixture name: the file stem of the `.toml` it was parsed from.
+    pub name: String,
+    /// The parsed scenario timeline.
+    pub scenario: Scenario,
+}
+
+/// Load every `*.toml` fixture in `dir`, sorted by filename so the
+/// resulting curriculum order is deterministic across platforms. Errors
+/// name the offending file; an empty directory is an error (a silent
+/// empty curriculum would train nothing).
+pub fn load_fixtures(dir: &Path) -> Result<Vec<NamedScenario>> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read scenario directory {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("toml"))
+        .collect();
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for path in paths {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read scenario fixture {}: {e}", path.display()))?;
+        let scenario = Scenario::from_toml(&text)
+            .map_err(|e| anyhow::anyhow!("parse scenario fixture {}: {e}", path.display()))?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("scenario")
+            .to_string();
+        out.push(NamedScenario { name, scenario });
+    }
+    anyhow::ensure!(!out.is_empty(), "no scenario fixtures (*.toml) in {}", dir.display());
+    Ok(out)
+}

@@ -24,9 +24,11 @@
 //! that touch one).
 
 pub mod event;
+pub mod fixtures;
 pub mod runner;
 pub mod transcript;
 
 pub use event::{Scenario, ScenarioEvent, TimedEvent};
+pub use fixtures::{find_scenarios_dir, load_fixtures, resolve_scenarios_dir, NamedScenario};
 pub use runner::{ScenarioRun, ScenarioRunner};
 pub use transcript::{RunTranscript, TranscriptRecorder};

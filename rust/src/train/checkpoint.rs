@@ -1,0 +1,297 @@
+//! Versioned binary persistence for policy parameters + Adam state.
+//!
+//! The format is a fixed little-endian layout: an 8-byte magic, a version
+//! word, a header pinning the network dimensions (`EMBED_DIM`, `HIDDEN`,
+//! `n_actions`) and the training provenance (dataset key + domain count),
+//! the Adam timestep, and an FNV-1a checksum of the tensor payload;
+//! then the 10 parameter tensors followed by both Adam moment groups as
+//! length-prefixed `f32` arrays. Every quantity is written with
+//! `to_le_bytes`, so `save → load → save` round-trips **bitwise** — the
+//! property CI's `train-smoke` step byte-diffs — and every load failure
+//! names the offending file and field instead of producing garbage
+//! inference from a mismatched network.
+
+use std::path::Path;
+
+use crate::policy::params::{param_shapes, PolicyParams, EMBED_DIM, HIDDEN, NUM_TENSORS};
+use crate::Result;
+
+/// File magic: the first 8 bytes of every checkpoint.
+pub const MAGIC: [u8; 8] = *b"COEDGPPO";
+/// Format version this build writes and reads.
+pub const VERSION: u32 = 1;
+
+/// Training provenance stored in the checkpoint header.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointMeta {
+    /// Dataset key the policy was trained on (`domainqa` / `ppc`).
+    pub dataset: String,
+    /// Number of query domains in that dataset — deploying onto a
+    /// cluster with a different domain count is a clear error.
+    pub num_domains: usize,
+}
+
+/// A fully parsed checkpoint: parameters + provenance.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Policy parameters + Adam state, exactly as saved.
+    pub params: PolicyParams,
+    /// Training provenance from the header.
+    pub meta: CheckpointMeta,
+}
+
+/// FNV-1a 64-bit hash (dependency-free payload checksum).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize parameters + provenance to the versioned binary format.
+pub fn to_bytes(params: &PolicyParams, meta: &CheckpointMeta) -> Vec<u8> {
+    let mut payload = Vec::new();
+    for group in [&params.tensors, &params.adam_m, &params.adam_v] {
+        for t in group.iter() {
+            payload.extend_from_slice(&(t.len() as u32).to_le_bytes());
+            for &v in t {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    let ds = meta.dataset.as_bytes();
+    let mut out = Vec::with_capacity(64 + ds.len() + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(EMBED_DIM as u32).to_le_bytes());
+    for h in HIDDEN {
+        out.extend_from_slice(&(h as u32).to_le_bytes());
+    }
+    out.extend_from_slice(&(params.n_actions as u32).to_le_bytes());
+    out.extend_from_slice(&(meta.num_domains as u32).to_le_bytes());
+    out.extend_from_slice(&(ds.len() as u32).to_le_bytes());
+    out.extend_from_slice(ds);
+    out.extend_from_slice(&params.step.to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Cursor over the raw bytes; every read names the field it was after,
+/// so truncation errors say exactly what is missing.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    src: &'a str,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "checkpoint {}: truncated while reading {what} (need {n} bytes at offset {}, \
+             file has {})",
+            self.src,
+            self.pos,
+            self.buf.len()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+/// Read one tensor group (`NUM_TENSORS` length-prefixed f32 arrays),
+/// validating each array's length against the expected shape.
+fn read_group(
+    r: &mut Reader,
+    group: &str,
+    shapes: &[(usize, usize); NUM_TENSORS],
+) -> Result<Vec<Vec<f32>>> {
+    const NAMES: [&str; NUM_TENSORS] =
+        ["w1", "b1", "ln_g", "ln_b", "w2", "b2", "w3", "b3", "w4", "b4"];
+    let mut out = Vec::with_capacity(NUM_TENSORS);
+    for (name, &(rows, cols)) in NAMES.iter().zip(shapes.iter()) {
+        let what = format!("{group}.{name}");
+        let len = r.u32(&what)? as usize;
+        anyhow::ensure!(
+            len == rows * cols,
+            "checkpoint {}: field {what} has {len} values, expected {rows}×{cols} for the \
+             stored n_actions",
+            r.src
+        );
+        let raw = r.take(len * 4, &what)?;
+        out.push(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        );
+    }
+    Ok(out)
+}
+
+/// Parse a checkpoint from raw bytes. `source` names the origin (usually
+/// a file path) in every error message.
+pub fn from_bytes(bytes: &[u8], source: &str) -> Result<Checkpoint> {
+    let mut r = Reader { buf: bytes, pos: 0, src: source };
+    let magic = r.take(MAGIC.len(), "magic")?;
+    anyhow::ensure!(
+        magic == MAGIC,
+        "checkpoint {source}: bad magic — not a CoEdge policy checkpoint"
+    );
+    let version = r.u32("version")?;
+    anyhow::ensure!(
+        version == VERSION,
+        "checkpoint {source}: unsupported version {version} (this build reads version \
+         {VERSION})"
+    );
+    let embed = r.u32("embed_dim")? as usize;
+    anyhow::ensure!(
+        embed == EMBED_DIM,
+        "checkpoint {source}: embed_dim {embed} does not match this build's {EMBED_DIM}"
+    );
+    let mut hidden = [0usize; 3];
+    for h in hidden.iter_mut() {
+        *h = r.u32("hidden")? as usize;
+    }
+    anyhow::ensure!(
+        hidden == HIDDEN,
+        "checkpoint {source}: hidden dims {hidden:?} do not match this build's {HIDDEN:?}"
+    );
+    let n_actions = r.u32("n_actions")? as usize;
+    anyhow::ensure!(
+        (1..=65_536).contains(&n_actions),
+        "checkpoint {source}: n_actions {n_actions} out of range"
+    );
+    let num_domains = r.u32("num_domains")? as usize;
+    let ds_len = r.u32("dataset")? as usize;
+    anyhow::ensure!(
+        ds_len <= 256,
+        "checkpoint {source}: dataset key length {ds_len} out of range"
+    );
+    let dataset = std::str::from_utf8(r.take(ds_len, "dataset")?)
+        .map_err(|_| anyhow::anyhow!("checkpoint {source}: dataset key is not valid UTF-8"))?
+        .to_string();
+    let step = r.u64("step")?;
+    let stored = r.u64("checksum")?;
+    let computed = fnv1a64(&bytes[r.pos..]);
+    anyhow::ensure!(
+        stored == computed,
+        "checkpoint {source}: checksum mismatch (stored {stored:016x}, computed \
+         {computed:016x}) — file is corrupt"
+    );
+    let shapes = param_shapes(n_actions);
+    let tensors = read_group(&mut r, "tensors", &shapes)?;
+    let adam_m = read_group(&mut r, "adam_m", &shapes)?;
+    let adam_v = read_group(&mut r, "adam_v", &shapes)?;
+    anyhow::ensure!(
+        r.pos == bytes.len(),
+        "checkpoint {source}: {} trailing bytes after the parameter payload",
+        bytes.len() - r.pos
+    );
+    Ok(Checkpoint {
+        params: PolicyParams { n_actions, tensors, adam_m, adam_v, step },
+        meta: CheckpointMeta { dataset, num_domains },
+    })
+}
+
+/// Write a checkpoint file (parent directories are created).
+pub fn save(path: &Path, params: &PolicyParams, meta: &CheckpointMeta) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| {
+                anyhow::anyhow!("checkpoint {}: create parent directory: {e}", path.display())
+            })?;
+        }
+    }
+    std::fs::write(path, to_bytes(params, meta))
+        .map_err(|e| anyhow::anyhow!("checkpoint {}: write failed: {e}", path.display()))
+}
+
+/// Read and parse a checkpoint file.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("checkpoint {}: read failed: {e}", path.display()))?;
+    from_bytes(&bytes, &path.display().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_params() -> PolicyParams {
+        let mut p = PolicyParams::init(4, 9);
+        p.step = 17;
+        p.adam_m[0][0] = 0.25;
+        p.adam_v[3][1] = -1.5;
+        p
+    }
+
+    fn demo_meta() -> CheckpointMeta {
+        CheckpointMeta { dataset: "domainqa".into(), num_domains: 6 }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let bytes = to_bytes(&demo_params(), &demo_meta());
+        let ck = from_bytes(&bytes, "<memory>").unwrap();
+        assert_eq!(ck.params.n_actions, 4);
+        assert_eq!(ck.params.step, 17);
+        assert_eq!(ck.meta, demo_meta());
+        assert_eq!(to_bytes(&ck.params, &ck.meta), bytes, "save → load → save must be byte-equal");
+    }
+
+    #[test]
+    fn truncated_bytes_name_the_missing_field() {
+        let bytes = to_bytes(&demo_params(), &demo_meta());
+        let err = from_bytes(&bytes[..bytes.len() - 7], "demo.ckpt").unwrap_err().to_string();
+        assert!(err.contains("demo.ckpt") && err.contains("truncated"), "{err}");
+        let err = from_bytes(&bytes[..6], "demo.ckpt").unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_payload_fails_the_checksum() {
+        let mut bytes = to_bytes(&demo_params(), &demo_meta());
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        let err = from_bytes(&bytes, "demo.ckpt").unwrap_err().to_string();
+        assert!(err.contains("checksum") && err.contains("demo.ckpt"), "{err}");
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_descriptive() {
+        let mut bytes = to_bytes(&demo_params(), &demo_meta());
+        bytes[0] = b'X';
+        let err = from_bytes(&bytes, "demo.ckpt").unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        let mut bytes = to_bytes(&demo_params(), &demo_meta());
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = from_bytes(&bytes, "demo.ckpt").unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn file_save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("coedge-ckpt-{}", std::process::id()));
+        let path = dir.join("p.ckpt");
+        save(&path, &demo_params(), &demo_meta()).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.params.tensors, demo_params().tensors);
+        let err = load(&dir.join("missing.ckpt")).unwrap_err().to_string();
+        assert!(err.contains("missing.ckpt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

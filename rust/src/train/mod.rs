@@ -1,0 +1,312 @@
+//! Vectorized PPO training farm + policy persistence (`coedge train`).
+//!
+//! The paper trains its query-identification policy *online*, inside the
+//! serving loop (§IV-A) — which couples learning progress to a single
+//! trajectory. This tier decouples them: a [`TrainFarm`] runs N seeded
+//! [`ScenarioRunner`](crate::scenario::ScenarioRunner) replicas in
+//! parallel on the crate thread pool — one replica per (scenario fixture
+//! × seed) cell, a curriculum over every committed fixture in
+//! `scenarios/` — collects each replica's `(state, action, reward)`
+//! [`Transition`](crate::policy::Transition)s through a shared rollout
+//! sink, and steps ONE shared PPO learner on the merged batches.
+//!
+//! **Determinism contract (ADR-001).** Each epoch snapshots the learner
+//! parameters; every replica routes with that frozen snapshot (on-policy
+//! rollouts), so replicas are independent and their transition lists can
+//! be collected in cell-index order via
+//! [`parallel_map`](crate::util::threadpool::parallel_map). The learner
+//! then consumes the merged list in that order — the thread count can
+//! never change a byte of the learning curve, the checkpoint, or
+//! `BENCH_train.json`. CI double-runs `coedge train` at `--threads 4`
+//! vs `--threads 1` and byte-diffs both artifacts.
+//!
+//! The other half of the tier is persistence: [`checkpoint`] defines a
+//! versioned binary format (dimension-pinning header + checksum) and
+//! [`PretrainedPpoAllocator`] deploys a saved policy through the existing
+//! allocator registry (`--allocator ppo-pretrained --checkpoint FILE`)
+//! as a permanently frozen allocator — the coordinator skips its feedback
+//! phase entirely, so replays are byte-identical across runs.
+
+pub mod checkpoint;
+mod pretrained;
+mod rollout;
+
+use std::sync::Arc;
+
+use crate::bench_harness::BenchCase;
+use crate::config::{DatasetKind, ExperimentConfig};
+use crate::coordinator::CoordinatorBuilder;
+use crate::experiments::{aggregate, dataset_key, eval_capacities, CellMetrics, EvalProfile};
+use crate::policy::ppo::{Backend, PpoConfig};
+use crate::policy::{OnlinePolicy, PolicyParams, Transition};
+use crate::scenario::{NamedScenario, ScenarioRunner};
+use crate::util::threadpool::parallel_map;
+use crate::Result;
+
+pub use checkpoint::{Checkpoint, CheckpointMeta};
+pub use pretrained::PretrainedPpoAllocator;
+
+use rollout::{RolloutAllocator, TransitionSink};
+
+/// Farm configuration (`coedge train` flags map 1:1 onto these fields).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Seeded replicas per scenario fixture (the farm runs
+    /// `fixtures × replicas` cells per epoch).
+    pub replicas: usize,
+    /// Training epochs: one epoch = rollouts from the current snapshot
+    /// across every cell, then learner updates on the merged transitions.
+    pub epochs: usize,
+    /// Base seed; every cell and the learner derive their streams from it.
+    pub seed: u64,
+    /// Worker threads for the rollout fan-out (`0` ⇒ one per core).
+    /// Never affects output bytes (ADR-001).
+    pub threads: usize,
+    /// Learner minibatch size: merged transitions are chunked into
+    /// batches of this many rows, each stepped independently.
+    pub minibatch: usize,
+    /// PPO optimization epochs per minibatch (batch reuse).
+    pub ppo_epochs: usize,
+    /// Exploration floor for rollout action sampling.
+    pub explore_eps: f64,
+    /// Workload scale each replica's cluster runs at.
+    pub profile: EvalProfile,
+    /// Dataset the curriculum trains on (pinned into the checkpoint).
+    pub dataset: DatasetKind,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            replicas: 2,
+            epochs: 3,
+            seed: 42,
+            threads: 0,
+            minibatch: 128,
+            ppo_epochs: 4,
+            explore_eps: 0.05,
+            profile: EvalProfile::smoke(),
+            dataset: DatasetKind::DomainQa,
+        }
+    }
+}
+
+/// Learning-curve sample for one epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStats {
+    /// Epoch index (0-based).
+    pub epoch: usize,
+    /// Transitions collected across all cells this epoch.
+    pub transitions: usize,
+    /// Learner update rounds run on those transitions.
+    pub updates: usize,
+    /// Mean raw feedback (Eq. 9 composite) across the epoch's
+    /// transitions — the reward curve.
+    pub mean_reward: f64,
+    /// Query-weighted mean ROUGE-L across the epoch's cells.
+    pub rouge_l: f64,
+    /// Query-weighted drop rate across the epoch's cells.
+    pub drop_rate: f64,
+    /// Loss from the epoch's final PPO step.
+    pub loss: f32,
+    /// Policy entropy from the epoch's final PPO step.
+    pub entropy: f32,
+}
+
+/// Everything one farm run produced: the learning curve, the trained
+/// parameters, and the provenance metadata a checkpoint pins.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Fixture names of the curriculum, in cell order.
+    pub scenarios: Vec<String>,
+    /// Replicas per fixture.
+    pub replicas: usize,
+    /// Base seed the run derived from.
+    pub seed: u64,
+    /// Per-epoch learning-curve samples.
+    pub curve: Vec<EpochStats>,
+    /// The trained policy parameters (+ Adam state).
+    pub params: PolicyParams,
+    /// Provenance the checkpoint header pins (dataset, domain count).
+    pub meta: CheckpointMeta,
+}
+
+impl TrainReport {
+    /// The learning curve as [`BenchCase`]s for
+    /// [`write_bench_json`](crate::bench_harness::write_bench_json)
+    /// (`BENCH_train.json`): one case per epoch.
+    pub fn to_bench_cases(&self) -> Vec<BenchCase> {
+        self.curve
+            .iter()
+            .map(|e| {
+                BenchCase::new(format!("epoch/{:03}", e.epoch))
+                    .field("transitions", e.transitions as f64)
+                    .field("updates", e.updates as f64)
+                    .field("mean_reward", e.mean_reward)
+                    .field("rouge_l", e.rouge_l)
+                    .field("drop_rate", e.drop_rate)
+                    .field("loss", e.loss as f64)
+                    .field("entropy", e.entropy as f64)
+            })
+            .collect()
+    }
+
+    /// Save the trained parameters as a versioned checkpoint file.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        checkpoint::save(path, &self.params, &self.meta)
+    }
+}
+
+/// One replica's harvest, collected in cell-index order.
+struct ReplicaRun {
+    transitions: Vec<Transition>,
+    metrics: CellMetrics,
+    num_domains: usize,
+}
+
+/// The vectorized rollout farm: a curriculum of scenario fixtures, N
+/// seeded replicas each, one shared PPO learner.
+pub struct TrainFarm {
+    cfg: TrainConfig,
+    fixtures: Vec<NamedScenario>,
+}
+
+impl TrainFarm {
+    /// A farm over an explicit curriculum (custom fixture lists; the CLI
+    /// uses [`TrainFarm::from_dir`]). Errors on an empty curriculum or a
+    /// zero replica/epoch budget.
+    pub fn new(cfg: TrainConfig, fixtures: Vec<NamedScenario>) -> Result<Self> {
+        anyhow::ensure!(!fixtures.is_empty(), "training curriculum is empty — no scenario fixtures");
+        anyhow::ensure!(cfg.replicas >= 1, "--replicas must be at least 1");
+        anyhow::ensure!(cfg.epochs >= 1, "--epochs must be at least 1");
+        Ok(TrainFarm { cfg, fixtures })
+    }
+
+    /// A farm over every `*.toml` fixture in `dir` (filename-sorted, the
+    /// same resolution `coedge eval` uses — see
+    /// [`crate::scenario::fixtures`]).
+    pub fn from_dir(dir: &std::path::Path, cfg: TrainConfig) -> Result<Self> {
+        let fixtures = crate::scenario::load_fixtures(dir)?;
+        Self::new(cfg, fixtures)
+    }
+
+    /// Rollout cells per epoch (`fixtures × replicas`).
+    pub fn num_cells(&self) -> usize {
+        self.fixtures.len() * self.cfg.replicas
+    }
+
+    /// The cluster configuration cell `i` rolls out on: the paper cluster
+    /// at the farm's workload scale, seeded per-cell so replicas of the
+    /// same fixture see distinct workloads.
+    fn cell_cfg(&self, cell: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_cluster(self.cfg.dataset);
+        cfg.seed = self.cfg.seed ^ ((cell as u64 + 1).wrapping_mul(0x9E37_79B9));
+        cfg.qa_per_domain = self.cfg.profile.qa_per_domain;
+        cfg.docs_per_domain = self.cfg.profile.docs_per_domain;
+        cfg.queries_per_slot = self.cfg.profile.queries_per_slot;
+        for n in cfg.nodes.iter_mut() {
+            n.corpus_docs = self.cfg.profile.corpus_docs;
+        }
+        cfg
+    }
+
+    /// Run one rollout cell with the epoch's parameter snapshot: build a
+    /// fresh seeded coordinator around a [`RolloutAllocator`], replay the
+    /// cell's fixture, harvest the sink.
+    fn run_replica(&self, cell: usize, snapshot: &PolicyParams) -> Result<ReplicaRun> {
+        let fixture = &self.fixtures[cell / self.cfg.replicas];
+        let cfg = self.cell_cfg(cell);
+        let caps = eval_capacities(&cfg);
+        let sink: TransitionSink = Arc::default();
+        let pcfg = PpoConfig {
+            explore_eps: self.cfg.explore_eps,
+            seed: cfg.seed ^ 0x9090,
+            ..Default::default()
+        };
+        let alloc =
+            RolloutAllocator::new(snapshot.clone(), pcfg, cfg.seed ^ 0x707E, Arc::clone(&sink));
+        let mut co =
+            CoordinatorBuilder::new(cfg).capacities(caps).allocator(Box::new(alloc)).build()?;
+        let num_domains = co.ds.num_domains();
+        let run = ScenarioRunner::new(fixture.scenario.clone()).run(&mut co)?;
+        drop(co);
+        let transitions = std::mem::take(&mut *sink.lock().unwrap());
+        Ok(ReplicaRun { transitions, metrics: aggregate(&run.reports), num_domains })
+    }
+
+    /// Train: per epoch, snapshot the learner, fan the cells out on the
+    /// thread pool, merge transitions in cell-index order, and step the
+    /// shared learner per minibatch chunk. Byte-deterministic for a given
+    /// [`TrainConfig`] regardless of `threads`.
+    pub fn run(&self) -> Result<TrainReport> {
+        let n_nodes = ExperimentConfig::paper_cluster(self.cfg.dataset).num_nodes();
+        let lcfg = PpoConfig {
+            epochs: self.cfg.ppo_epochs,
+            seed: self.cfg.seed ^ 0x1EA2,
+            ..Default::default()
+        };
+        let mut learner = OnlinePolicy::new(n_nodes, lcfg, Backend::Reference);
+        let threads = if self.cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.cfg.threads
+        };
+        let cells = self.num_cells();
+        let mut curve = Vec::with_capacity(self.cfg.epochs);
+        let mut num_domains = 0usize;
+        for epoch in 0..self.cfg.epochs {
+            // on-policy: every cell rolls out with this epoch's snapshot
+            let snapshot = learner.params.clone();
+            let runs: Vec<Result<ReplicaRun>> =
+                parallel_map(cells, threads, |i| self.run_replica(i, &snapshot));
+            let runs = runs.into_iter().collect::<Result<Vec<_>>>()?;
+            num_domains = runs.first().map(|r| r.num_domains).unwrap_or(0);
+            let total_q: usize = runs.iter().map(|r| r.metrics.queries).sum();
+            let wmean = |f: &dyn Fn(&CellMetrics) -> f64| {
+                if total_q == 0 {
+                    0.0
+                } else {
+                    runs.iter().map(|r| f(&r.metrics) * r.metrics.queries as f64).sum::<f64>()
+                        / total_q as f64
+                }
+            };
+            let rouge_l = wmean(&|m: &CellMetrics| m.rouge_l);
+            let drop_rate = wmean(&|m: &CellMetrics| m.drop_rate);
+            // merge in cell-index order — the determinism anchor
+            let merged: Vec<Transition> =
+                runs.into_iter().flat_map(|r| r.transitions).collect();
+            let updates_before = learner.updates;
+            for chunk in merged.chunks(self.cfg.minibatch.max(2)) {
+                learner.update_on(chunk)?;
+            }
+            let mean_reward = if merged.is_empty() {
+                0.0
+            } else {
+                merged.iter().map(|t| t.feedback).sum::<f64>() / merged.len() as f64
+            };
+            let (loss, entropy) =
+                learner.last_stats.map(|s| (s.loss, s.entropy)).unwrap_or((0.0, 0.0));
+            curve.push(EpochStats {
+                epoch,
+                transitions: merged.len(),
+                updates: learner.updates - updates_before,
+                mean_reward,
+                rouge_l,
+                drop_rate,
+                loss,
+                entropy,
+            });
+        }
+        Ok(TrainReport {
+            scenarios: self.fixtures.iter().map(|f| f.name.clone()).collect(),
+            replicas: self.cfg.replicas,
+            seed: self.cfg.seed,
+            curve,
+            params: learner.params.clone(),
+            meta: CheckpointMeta {
+                dataset: dataset_key(self.cfg.dataset).to_string(),
+                num_domains,
+            },
+        })
+    }
+}

@@ -1,0 +1,106 @@
+//! The `ppo-pretrained` allocator: frozen checkpoint weights deployed
+//! through the existing [`AllocatorRegistry`] — train once offline, then
+//! replay the policy with zero exploration and zero learning, so two runs
+//! over the same fixture are byte-identical.
+//!
+//! [`AllocatorRegistry`]: crate::coordinator::AllocatorRegistry
+
+use std::path::Path;
+
+use crate::cluster::node::QueryOutcome;
+use crate::config::PPO_PRETRAINED_KEY;
+use crate::coordinator::allocator::{
+    Allocator, Assignment, FeedbackStats, PpoAllocator, SlotContext,
+};
+use crate::policy::ppo::{Backend, PpoConfig};
+use crate::policy::{OnlinePolicy, PolicyParams};
+use crate::train::checkpoint;
+use crate::Result;
+
+/// A frozen PPO allocator serving checkpoint weights.
+///
+/// Routing is [`PpoAllocator`]'s (masked matching probabilities through
+/// Algorithm-1 scheduling) with the exploration floor pinned to 0;
+/// `observe` never touches the parameters and [`Allocator::is_frozen`]
+/// reports `true`, so the coordinator skips the feedback phase entirely.
+pub struct PretrainedPpoAllocator {
+    inner: PpoAllocator,
+}
+
+impl PretrainedPpoAllocator {
+    /// Wrap already-loaded parameters (`route_seed` drives the
+    /// Algorithm-1 routing-noise stream).
+    pub fn from_params(params: PolicyParams, route_seed: u64) -> Self {
+        let n = params.n_actions;
+        let pcfg = PpoConfig { explore_eps: 0.0, ..Default::default() };
+        let mut inner = PpoAllocator::new(n, pcfg, Backend::Reference, route_seed);
+        inner.policy.params = params;
+        inner.freeze();
+        PretrainedPpoAllocator { inner }
+    }
+
+    /// Load a checkpoint and validate it against the deployment target:
+    /// the stored `n_actions` must equal the cluster's node count and the
+    /// stored `num_domains` the dataset's domain count — a mismatched
+    /// checkpoint is a clear error naming the file and field, never
+    /// garbage inference.
+    pub fn load(
+        path: &Path,
+        expected_nodes: usize,
+        expected_domains: usize,
+        route_seed: u64,
+    ) -> Result<Self> {
+        let ck = checkpoint::load(path)?;
+        anyhow::ensure!(
+            ck.params.n_actions == expected_nodes,
+            "checkpoint {}: field n_actions = {} does not match the cluster's {} nodes",
+            path.display(),
+            ck.params.n_actions,
+            expected_nodes
+        );
+        anyhow::ensure!(
+            ck.meta.num_domains == expected_domains,
+            "checkpoint {}: field num_domains = {} does not match the dataset's {} domains \
+             (trained on {:?})",
+            path.display(),
+            ck.meta.num_domains,
+            expected_domains,
+            ck.meta.dataset
+        );
+        Ok(Self::from_params(ck.params, route_seed))
+    }
+
+    /// The frozen policy (diagnostics; e.g. `params.step` provenance).
+    pub fn policy(&self) -> &OnlinePolicy {
+        &self.inner.policy
+    }
+}
+
+impl Allocator for PretrainedPpoAllocator {
+    fn name(&self) -> &str {
+        PPO_PRETRAINED_KEY
+    }
+
+    fn assign(&mut self, ctx: &SlotContext) -> Result<Assignment> {
+        self.inner.assign(ctx)
+    }
+
+    fn observe(
+        &mut self,
+        _ctx: &SlotContext,
+        _assignment: &Assignment,
+        _outcomes: &[QueryOutcome],
+    ) -> Result<FeedbackStats> {
+        // defensive: the coordinator already skips observe for frozen
+        // allocators, but a direct caller must not mutate anything either
+        Ok(FeedbackStats::default())
+    }
+
+    fn freeze(&mut self) {
+        // already permanently frozen
+    }
+
+    fn is_frozen(&self) -> bool {
+        true
+    }
+}

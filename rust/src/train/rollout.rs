@@ -1,0 +1,78 @@
+//! The per-replica rollout actor: a frozen-parameter PPO allocator whose
+//! `observe` phase writes `(state, action, reward)` transitions into a
+//! shared sink instead of mutating any learner state.
+//!
+//! Each farm replica owns one of these, built from the epoch's parameter
+//! snapshot: routing behavior is exactly [`PpoAllocator`]'s (masked
+//! matching probabilities feeding Algorithm-1 inter-node scheduling), but
+//! learning is centralized — the farm merges every replica's sink in
+//! cell-index order and steps the single shared learner, which is what
+//! keeps training byte-deterministic under any thread count (ADR-001).
+
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::node::QueryOutcome;
+use crate::coordinator::allocator::{
+    Allocator, Assignment, FeedbackStats, PpoAllocator, SlotContext,
+};
+use crate::policy::ppo::{Backend, PpoConfig, Transition};
+use crate::policy::PolicyParams;
+use crate::Result;
+
+/// Shared transition buffer one replica appends to.
+pub(crate) type TransitionSink = Arc<Mutex<Vec<Transition>>>;
+
+/// A PPO allocator routing with snapshot parameters and exporting
+/// transitions instead of learning from them.
+pub(crate) struct RolloutAllocator {
+    inner: PpoAllocator,
+    sink: TransitionSink,
+}
+
+impl RolloutAllocator {
+    /// Wrap an epoch snapshot for one replica. `pcfg.seed` drives the
+    /// replica's action-sampling stream and `route_seed` its Algorithm-1
+    /// routing noise, so replicas explore distinct trajectories.
+    pub(crate) fn new(
+        snapshot: PolicyParams,
+        pcfg: PpoConfig,
+        route_seed: u64,
+        sink: TransitionSink,
+    ) -> Self {
+        let n = snapshot.n_actions;
+        let mut inner = PpoAllocator::new(n, pcfg, Backend::Reference, route_seed);
+        inner.policy.params = snapshot;
+        RolloutAllocator { inner, sink }
+    }
+}
+
+impl Allocator for RolloutAllocator {
+    fn name(&self) -> &str {
+        "ppo-rollout"
+    }
+
+    fn assign(&mut self, ctx: &SlotContext) -> Result<Assignment> {
+        self.inner.assign(ctx)
+    }
+
+    fn observe(
+        &mut self,
+        ctx: &SlotContext,
+        assignment: &Assignment,
+        outcomes: &[QueryOutcome],
+    ) -> Result<FeedbackStats> {
+        if assignment.logps.len() != outcomes.len() {
+            return Ok(FeedbackStats::default());
+        }
+        let mut sink = self.sink.lock().unwrap();
+        for (i, out) in outcomes.iter().enumerate() {
+            sink.push(Transition {
+                x: ctx.embs[i].clone(),
+                action: assignment.node_of[i],
+                old_logp: assignment.logps[i],
+                feedback: out.feedback,
+            });
+        }
+        Ok(FeedbackStats { observed: outcomes.len(), updates: 0 })
+    }
+}

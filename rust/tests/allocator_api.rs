@@ -173,6 +173,42 @@ fn freeze_learning_stops_observation_for_learning_allocators() {
 }
 
 #[test]
+fn coordinator_never_calls_observe_on_a_frozen_allocator() {
+    /// `is_frozen` from construction; any `observe` call is a bug.
+    struct FrozenPanics;
+    impl Allocator for FrozenPanics {
+        fn name(&self) -> &str {
+            "frozen-panics"
+        }
+        fn assign(&mut self, ctx: &SlotContext) -> coedge_rag::Result<Assignment> {
+            let n = ctx.n_nodes();
+            Ok(Assignment::from_nodes((0..ctx.batch()).map(|i| i % n).collect()))
+        }
+        fn observe(
+            &mut self,
+            _ctx: &SlotContext,
+            _assignment: &Assignment,
+            _outcomes: &[QueryOutcome],
+        ) -> coedge_rag::Result<FeedbackStats> {
+            panic!("feedback phase must be skipped for frozen allocators");
+        }
+        fn is_frozen(&self) -> bool {
+            true
+        }
+    }
+    let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Random))
+        .allocator(Box::new(FrozenPanics))
+        .capacities(stub_caps(4))
+        .build()
+        .unwrap();
+    for _ in 0..2 {
+        let qids = co.sample_queries(12).unwrap();
+        let r = co.run_slot(&qids).unwrap();
+        assert_eq!(r.feedback, FeedbackStats::default(), "no FeedbackStats drift");
+    }
+}
+
+#[test]
 fn custom_allocator_registers_without_touching_the_coordinator() {
     struct AlwaysZero;
     impl Allocator for AlwaysZero {

@@ -1,0 +1,215 @@
+//! Integration tests for the training tier: farm determinism across
+//! thread counts, learning-curve sanity, checkpoint persistence, the
+//! `ppo-pretrained` eval-grid column, and frozen-deploy replays.
+
+use std::path::{Path, PathBuf};
+
+use coedge_rag::bench_harness::bench_json;
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig, PPO_PRETRAINED_KEY};
+use coedge_rag::coordinator::allocator::FeedbackStats;
+use coedge_rag::coordinator::CoordinatorBuilder;
+use coedge_rag::experiments::{eval_capacities, EvalGrid, EvalProfile};
+use coedge_rag::policy::PolicyParams;
+use coedge_rag::scenario::{load_fixtures, NamedScenario, ScenarioRunner};
+use coedge_rag::train::{
+    checkpoint, CheckpointMeta, PretrainedPpoAllocator, TrainConfig, TrainFarm,
+};
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+/// Unique temp path per test process so parallel test runs never collide.
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("coedge-train-test-{}-{name}", std::process::id()))
+}
+
+/// A hand-picked curriculum out of the committed fixture set.
+fn curriculum(names: &[&str]) -> Vec<NamedScenario> {
+    let all = load_fixtures(&scenarios_dir()).unwrap();
+    names
+        .iter()
+        .map(|n| {
+            all.iter()
+                .find(|f| &f.name == n)
+                .unwrap_or_else(|| panic!("no committed fixture named {n}"))
+                .clone()
+        })
+        .collect()
+}
+
+#[test]
+fn train_is_byte_deterministic_across_thread_counts() {
+    let fixtures = curriculum(&["burst_storm", "node_churn"]);
+    let cfg =
+        |threads| TrainConfig { replicas: 2, epochs: 2, threads, ..TrainConfig::default() };
+    let a = TrainFarm::new(cfg(4), fixtures.clone()).unwrap().run().unwrap();
+    let b = TrainFarm::new(cfg(1), fixtures).unwrap().run().unwrap();
+    assert_eq!(
+        bench_json("train", &a.to_bench_cases()),
+        bench_json("train", &b.to_bench_cases()),
+        "BENCH_train.json must be byte-identical at --threads 4 vs --threads 1"
+    );
+    assert_eq!(
+        checkpoint::to_bytes(&a.params, &a.meta),
+        checkpoint::to_bytes(&b.params, &b.meta),
+        "the trained checkpoint must be byte-identical at --threads 4 vs --threads 1"
+    );
+}
+
+#[test]
+fn reward_does_not_regress_over_a_smoke_budget() {
+    let farm = TrainFarm::from_dir(
+        &scenarios_dir(),
+        TrainConfig { replicas: 1, epochs: 3, ..TrainConfig::default() },
+    )
+    .unwrap();
+    let report = farm.run().unwrap();
+    assert_eq!(report.curve.len(), 3);
+    assert!(
+        report.curve.iter().all(|e| e.transitions > 0 && e.updates > 0),
+        "every epoch must collect transitions and step the learner: {:?}",
+        report.curve
+    );
+    let first = report.curve.first().unwrap().mean_reward;
+    let last = report.curve.last().unwrap().mean_reward;
+    assert!(
+        last >= first - 0.02,
+        "reward regressed over the smoke budget: {first:.4} -> {last:.4}"
+    );
+}
+
+#[test]
+fn smoke_checkpoint_grows_the_eval_grid_and_beats_random() {
+    let farm = TrainFarm::from_dir(
+        &scenarios_dir(),
+        TrainConfig { replicas: 1, epochs: 3, ..TrainConfig::default() },
+    )
+    .unwrap();
+    let ckpt = tmp_path("grid.ckpt");
+    farm.run().unwrap().save_checkpoint(&ckpt).unwrap();
+
+    let mut grid = EvalGrid::smoke();
+    grid.pretrained = Some(ckpt.clone());
+    let report = grid.run(&scenarios_dir(), 0).unwrap();
+    std::fs::remove_file(&ckpt).ok();
+
+    assert_eq!(report.cells.len(), grid.num_cells(), "pretrained column adds one allocator");
+    let mean_rouge = |key: &str| {
+        let rows: Vec<f64> = report
+            .cells
+            .iter()
+            .filter(|c| c.allocator == key)
+            .map(|c| c.metrics.rouge_l)
+            .collect();
+        assert_eq!(
+            rows.len(),
+            grid.datasets.len() * grid.scenarios.len(),
+            "one {key} cell per (dataset, scenario) row"
+        );
+        rows.iter().sum::<f64>() / rows.len() as f64
+    };
+    let pretrained = mean_rouge(PPO_PRETRAINED_KEY);
+    let random = mean_rouge(AllocatorKind::Random.as_str());
+    assert!(
+        pretrained >= random,
+        "pretrained policy (R-L {pretrained:.4}) must beat random routing (R-L {random:.4})"
+    );
+}
+
+#[test]
+fn checkpoints_round_trip_bitwise_through_files() {
+    let mut params = PolicyParams::init(4, 7);
+    params.step = 5;
+    params.adam_m[0][0] = 0.25;
+    params.adam_v[3][1] = 1.5;
+    let meta = CheckpointMeta { dataset: "domainqa".into(), num_domains: 6 };
+    let p1 = tmp_path("rt1.ckpt");
+    let p2 = tmp_path("rt2.ckpt");
+    checkpoint::save(&p1, &params, &meta).unwrap();
+    let ck = checkpoint::load(&p1).unwrap();
+    assert_eq!(ck.meta, meta);
+    checkpoint::save(&p2, &ck.params, &ck.meta).unwrap();
+    let (a, b) = (std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+    assert_eq!(a, b, "save → load → save must reproduce the file bitwise");
+}
+
+#[test]
+fn corrupt_and_mismatched_checkpoints_error_descriptively() {
+    let params = PolicyParams::init(3, 9);
+    let meta = CheckpointMeta { dataset: "domainqa".into(), num_domains: 6 };
+    let path = tmp_path("bad.ckpt");
+    checkpoint::save(&path, &params, &meta).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // truncation names the file and the field being read
+    std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+    let err = checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+    assert!(err.contains("bad.ckpt"), "{err}");
+
+    // a flipped payload byte trips the checksum
+    let mut corrupt = good.clone();
+    *corrupt.last_mut().unwrap() ^= 0xFF;
+    std::fs::write(&path, &corrupt).unwrap();
+    let err = checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+
+    // a foreign file is rejected at the magic, not parsed as garbage
+    let mut wrong = good.clone();
+    wrong[0] ^= 0xFF;
+    std::fs::write(&path, &wrong).unwrap();
+    let err = checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // dimension pinning: a 3-action policy cannot drive a 4-node cluster,
+    // and a 6-domain policy cannot serve an 8-domain dataset
+    std::fs::write(&path, &good).unwrap();
+    let err = PretrainedPpoAllocator::load(&path, 4, 6, 1).unwrap_err().to_string();
+    assert!(err.contains("n_actions"), "{err}");
+    let err = PretrainedPpoAllocator::load(&path, 3, 8, 1).unwrap_err().to_string();
+    assert!(err.contains("num_domains"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn frozen_pretrained_allocator_replays_byte_identically() {
+    let fixtures = curriculum(&["node_churn"]);
+    let farm = TrainFarm::new(
+        TrainConfig { replicas: 1, epochs: 1, ..TrainConfig::default() },
+        fixtures.clone(),
+    )
+    .unwrap();
+    let ckpt = tmp_path("frozen.ckpt");
+    farm.run().unwrap().save_checkpoint(&ckpt).unwrap();
+
+    let replay = || {
+        let p = EvalProfile::smoke();
+        let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+        cfg.qa_per_domain = p.qa_per_domain;
+        cfg.docs_per_domain = p.docs_per_domain;
+        cfg.queries_per_slot = p.queries_per_slot;
+        for n in cfg.nodes.iter_mut() {
+            n.corpus_docs = p.corpus_docs;
+        }
+        cfg.allocator_override = Some(PPO_PRETRAINED_KEY.to_string());
+        cfg.checkpoint = Some(ckpt.clone());
+        let caps = eval_capacities(&cfg);
+        let mut co = CoordinatorBuilder::new(cfg).capacities(caps).build().unwrap();
+        ScenarioRunner::new(fixtures[0].scenario.clone()).run(&mut co).unwrap()
+    };
+    let a = replay();
+    let b = replay();
+    std::fs::remove_file(&ckpt).ok();
+    assert_eq!(
+        a.transcript.to_jsonl(),
+        b.transcript.to_jsonl(),
+        "a frozen policy must replay a fixture byte-identically"
+    );
+    assert!(
+        a.reports.iter().all(|r| r.feedback == FeedbackStats::default()),
+        "the coordinator must skip the feedback phase for a frozen allocator"
+    );
+}
