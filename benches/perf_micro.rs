@@ -2,6 +2,14 @@
 //! request loop, with items/s so regressions are obvious.
 //!
 //!     cargo bench --bench perf_micro
+//!
+//! Flags (after `--`):
+//! - `--smoke`: run only the quantized-retrieval sweep at reduced tiers
+//!   (CI's `retrieval-perf-smoke` double-runs this and byte-diffs the
+//!   modeled fields of `BENCH_retrieval.json`; wall-clock fields are
+//!   excluded per ADR-001).
+//! - `--bench-dir DIR`: directory for the `BENCH_*.json` dumps
+//!   (default `.`).
 
 use std::sync::Arc;
 
@@ -16,9 +24,153 @@ use coedge_rag::policy::params::{PolicyParams, EMBED_DIM};
 use coedge_rag::runtime::{PolicyRuntime, UpdateBatch};
 use coedge_rag::text::embed::{l2_normalize, Embedder};
 use coedge_rag::util::rng::Rng;
-use coedge_rag::vecdb::{FlatIndex, HnswIndex, IvfIndex, ShardedIndex, VectorIndex};
+use coedge_rag::vecdb::{
+    FlatIndex, Hit, HnswIndex, IvfIndex, QuantizedFlatIndex, ShardedIndex, VectorIndex,
+};
+
+/// Random unit vector in the embedding space (shared across sweeps).
+fn random_unit(rng: &mut Rng) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..EMBED_DIM).map(|_| rng.normal() as f32).collect();
+    l2_normalize(&mut v);
+    v
+}
+
+/// Stream the seeded corpus for one tier into an index. Each engine in the
+/// retrieval sweep re-derives the identical vectors from the same seed, so
+/// indexes are built (and dropped) one at a time — peak memory stays at
+/// ~one engine even at the 1.2M-chunk tier.
+fn fill_index(index: &mut dyn VectorIndex, n: usize, seed: u64) -> f64 {
+    let (_, build_s) = coedge_rag::util::timer::timed(|| {
+        let mut rng = Rng::new(seed);
+        for i in 0..n {
+            let v = random_unit(&mut rng);
+            index.add(i, &v);
+        }
+        index.finalize(7);
+    });
+    build_s
+}
+
+/// Recall@k of batched hits against the flat ground-truth id sets.
+fn recall_vs(truth: &[Vec<usize>], hits: &[Vec<Hit>]) -> f64 {
+    let mut got = 0usize;
+    let mut want = 0usize;
+    for (hs, t) in hits.iter().zip(truth) {
+        want += t.len();
+        got += hs.iter().filter(|h| t.contains(&h.id)).count();
+    }
+    got as f64 / want.max(1) as f64
+}
+
+/// Quantized retrieval hot-path sweep: flat vs quantized-flat (exact
+/// rescore_factor=4 and approximate rescore_factor=1) vs sharded-quantized,
+/// with recall@5 against flat as a modeled (deterministic) field. Full mode
+/// tops out at a 1.2M-chunk tier; smoke mode runs the two small tiers.
+/// Emits `BENCH_retrieval.json` into `bench_dir`.
+fn retrieval_sweep(smoke: bool, bench_dir: &std::path::Path) {
+    const K: usize = 5;
+    let tiers: &[usize] =
+        if smoke { &[1_200, 12_000] } else { &[12_000, 120_000, 1_200_000] };
+    let mut cases: Vec<BenchCase> = Vec::new();
+    for &n in tiers {
+        let iters = if smoke {
+            2
+        } else if n >= 1_000_000 {
+            2
+        } else if n >= 100_000 {
+            3
+        } else {
+            10
+        };
+        let seed = 0xC0ED ^ (n as u64);
+        let queries: Vec<Vec<f32>> = {
+            let mut qrng = Rng::new(seed ^ 0x51_u64);
+            (0..64).map(|_| random_unit(&mut qrng)).collect()
+        };
+
+        // flat: the exactness + speed baseline, and the recall ground truth
+        let mut flat = FlatIndex::new(EMBED_DIM);
+        let build_s = fill_index(&mut flat, n, seed);
+        println!("  [{n} chunks] flat ingest {build_s:.1}s");
+        let truth: Vec<Vec<usize>> =
+            flat.search_batch(&queries, K).iter().map(|hs| hs.iter().map(|h| h.id).collect()).collect();
+        let r = bench(&format!("flat               top-{K} {n} chunks x64"), 1, iters, || {
+            std::hint::black_box(flat.search_batch(&queries, K));
+        });
+        println!("{}", r.throughput_line(64.0));
+        cases.push(
+            BenchCase::new(format!("flat n={n}"))
+                .field("corpus", n as f64)
+                .field("k", K as f64)
+                .field("recall_at5", 1.0)
+                .field("items_per_s", 64.0 / r.mean_s)
+                .timing(&r),
+        );
+        drop(flat);
+
+        // quantized-flat at the exact (default) and approximate settings
+        for rf in [4usize, 1] {
+            let mut quant = QuantizedFlatIndex::new(EMBED_DIM, rf);
+            let build_s = fill_index(&mut quant, n, seed);
+            println!("  [{n} chunks] quantized rf={rf} ingest {build_s:.1}s");
+            let recall = recall_vs(&truth, &quant.search_batch(&queries, K));
+            let r = bench(&format!("quantized rf={rf}     top-{K} {n} chunks x64"), 1, iters, || {
+                std::hint::black_box(quant.search_batch(&queries, K));
+            });
+            println!("{}  (recall@{K} {recall:.3})", r.throughput_line(64.0));
+            cases.push(
+                BenchCase::new(format!("quantized rf={rf} n={n}"))
+                    .field("corpus", n as f64)
+                    .field("k", K as f64)
+                    .field("rescore_factor", rf as f64)
+                    .field("recall_at5", recall)
+                    .field("items_per_s", 64.0 / r.mean_s)
+                    .timing(&r),
+            );
+        }
+
+        // sharded-quantized: 8 shards of the exact engine, batched fan-out
+        let mut sharded = ShardedIndex::from_fn(8, |_| QuantizedFlatIndex::new(EMBED_DIM, 4));
+        let build_s = fill_index(&mut sharded, n, seed);
+        println!("  [{n} chunks] sharded-quantized8 ingest {build_s:.1}s");
+        let recall = recall_vs(&truth, &sharded.search_batch(&queries, K));
+        let r = bench(&format!("sharded-quantized8 top-{K} {n} chunks x64"), 1, iters, || {
+            std::hint::black_box(sharded.search_batch(&queries, K));
+        });
+        println!("{}  (recall@{K} {recall:.3})", r.throughput_line(64.0));
+        cases.push(
+            BenchCase::new(format!("sharded-quantized8 n={n}"))
+                .field("corpus", n as f64)
+                .field("k", K as f64)
+                .field("rescore_factor", 4.0)
+                .field("shards", 8.0)
+                .field("recall_at5", recall)
+                .field("items_per_s", 64.0 / r.mean_s)
+                .timing(&r),
+        );
+    }
+    match write_bench_json(bench_dir, "retrieval", &cases) {
+        Ok(path) => println!("  retrieval sweep written to {}", path.display()),
+        Err(e) => println!("  (BENCH_retrieval.json not written: {e})"),
+    }
+}
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let bench_dir = args
+        .iter()
+        .position(|a| a == "--bench-dir")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| ".".to_string());
+    let bench_dir = std::path::PathBuf::from(bench_dir);
+
+    // --- quantized retrieval hot path ---
+    retrieval_sweep(smoke, &bench_dir);
+    if smoke {
+        return;
+    }
+
     let mut rng = Rng::new(1);
     let embedder = Embedder::default();
     let ds = build_dataset(&domainqa_spec(60, 200), 3);
@@ -37,11 +189,6 @@ fn main() {
     // sharded-flat}: quantifies the IVF crossover claimed in vecdb/ivf.rs
     // and the sharded batched speedup over single-threaded flat at the
     // 120k tier. Per-query items/s on every line.
-    let random_unit = |rng: &mut Rng| {
-        let mut v: Vec<f32> = (0..EMBED_DIM).map(|_| rng.normal() as f32).collect();
-        l2_normalize(&mut v);
-        v
-    };
     let queries: Vec<Vec<f32>> = (0..64).map(|_| random_unit(&mut rng)).collect();
     for &n in &[1_200usize, 12_000, 120_000] {
         let iters = if n >= 100_000 { 3 } else { 10 };
@@ -169,7 +316,7 @@ fn main() {
             );
         }
     }
-    match write_bench_json(std::path::Path::new("."), "cache", &cache_cases) {
+    match write_bench_json(&bench_dir, "cache", &cache_cases) {
         Ok(path) => println!("  cache sweep written to {}", path.display()),
         Err(e) => println!("  (BENCH_cache.json not written: {e})"),
     }

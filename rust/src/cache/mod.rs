@@ -99,13 +99,13 @@ pub fn entry_bytes(key: &[i8], entry: &CacheEntry) -> usize {
     key.len() + payload + OVERHEAD
 }
 
-/// Deterministically quantize a (unit-norm) embedding into the cache key
-/// space: one signed byte per dimension. Exact duplicate queries embed
-/// identically and therefore key identically; quantization only widens
-/// near-duplicate matching, never splits exact duplicates.
-pub fn quantize_embedding(emb: &[f32]) -> Vec<i8> {
-    emb.iter().map(|&x| (x * 127.0).round().clamp(-127.0, 127.0) as i8).collect()
-}
+// The i8 key codec is the retrieval tier's shared fixed-scale codec
+// (`vecdb/quant.rs`) — re-exported so existing callers keep their paths.
+// Byte-identity with the historical private implementation is pinned by
+// `shared_codec_is_byte_identical_to_cache_keys` below: cache keys (and
+// therefore the committed cache goldens, e.g. `repeat_storm_lru`) must
+// not move.
+pub use crate::vecdb::quant::{quantize_embedding, quantized_cosine};
 
 /// 64-bit identity guard of the *full-precision* embedding (FNV-1a over
 /// the raw f32 bit patterns). Quantized keys can in principle merge two
@@ -122,24 +122,6 @@ pub fn embedding_guard(emb: &[f32]) -> u64 {
         }
     }
     h
-}
-
-/// Cosine similarity between two quantized keys (integer dot product,
-/// fully deterministic across platforms).
-pub fn quantized_cosine(a: &[i8], b: &[i8]) -> f64 {
-    if a.len() != b.len() || a.is_empty() {
-        return 0.0;
-    }
-    let (mut dot, mut na, mut nb) = (0i64, 0i64, 0i64);
-    for (&x, &y) in a.iter().zip(b) {
-        dot += x as i64 * y as i64;
-        na += x as i64 * x as i64;
-        nb += y as i64 * y as i64;
-    }
-    if na == 0 || nb == 0 {
-        return 0.0;
-    }
-    dot as f64 / ((na as f64).sqrt() * (nb as f64).sqrt())
 }
 
 /// The pluggable cache interface both cache levels run behind.
@@ -488,6 +470,35 @@ impl CacheSlotStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The cache keys were originally produced by a private codec in this
+    /// module; they are now the shared `vecdb/quant.rs` one. This pins the
+    /// exact historical bytes (multiplier form `round(x * 127.0)`, clamped)
+    /// so every committed cache golden (e.g. `repeat_storm_lru`) keys
+    /// identically forever.
+    #[test]
+    fn shared_codec_is_byte_identical_to_cache_keys() {
+        let mut rng = crate::util::rng::Rng::new(97);
+        let mut emb: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        crate::text::embed::l2_normalize(&mut emb);
+        let legacy: Vec<i8> =
+            emb.iter().map(|&x| (x * 127.0).round().clamp(-127.0, 127.0) as i8).collect();
+        assert_eq!(quantize_embedding(&emb), legacy);
+        // edge values incl. out-of-range magnitudes (clamp) and signed zero
+        let edges = [0.0f32, -0.0, 1.0, -1.0, 0.00394, -0.00394, 1.5, -1.5];
+        let legacy_edges: Vec<i8> =
+            edges.iter().map(|&x| (x * 127.0).round().clamp(-127.0, 127.0) as i8).collect();
+        assert_eq!(quantize_embedding(&edges), legacy_edges);
+        // and the similarity metric is still the i64-accumulator cosine
+        let a = quantize_embedding(&emb);
+        let (mut dot, mut na) = (0i64, 0i64);
+        for &x in &a {
+            dot += x as i64 * x as i64;
+            na += x as i64 * x as i64;
+        }
+        let legacy_cos = dot as f64 / ((na as f64).sqrt() * (na as f64).sqrt());
+        assert_eq!(quantized_cosine(&a, &a), legacy_cos);
+    }
 
     fn hits_entry(node: usize, domain: usize, n_hits: usize) -> CacheEntry {
         CacheEntry {

@@ -424,6 +424,7 @@ fn index_spec_from(t: &Table, prefix: &str, base: IndexSpec) -> IndexSpec {
         ("hnsw_m", &mut spec.hnsw_m),
         ("hnsw_ef_construction", &mut spec.hnsw_ef_construction),
         ("hnsw_ef_search", &mut spec.hnsw_ef_search),
+        ("rescore_factor", &mut spec.rescore_factor),
     ] {
         if let Some(v) = get(key).and_then(|v| v.as_usize()) {
             *field = v;
@@ -541,6 +542,33 @@ shards = 8
         assert_eq!(cfg.nodes[1].index.kind, "sharded-flat");
         assert_eq!(cfg.nodes[1].index.shards, 8);
         assert_eq!(cfg.nodes[1].index.nlist, 48);
+    }
+
+    #[test]
+    fn from_toml_quantized_index_rescore_factor() {
+        let text = r#"
+[index]
+kind = "quantized-flat"
+rescore_factor = 8
+
+[[nodes]]
+name = "n0"
+
+[[nodes]]
+name = "n1"
+
+[nodes.index]
+kind = "sharded-quantized"
+rescore_factor = 1
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.nodes[0].index.kind, "quantized-flat");
+        assert_eq!(cfg.nodes[0].index.rescore_factor, 8);
+        assert_eq!(cfg.nodes[1].index.kind, "sharded-quantized");
+        assert_eq!(cfg.nodes[1].index.rescore_factor, 1);
+        // absent key keeps the default
+        let d = ExperimentConfig::from_toml("[index]\nkind = \"quantized-flat\"\n").unwrap();
+        assert!(d.nodes.iter().all(|n| n.index.rescore_factor == 4));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   run      [--config FILE] [--slots N] [--allocator KIND] [--slo S]
 //!            [--checkpoint FILE] [--index KIND] [--shards N]
-//!            [--cache KIND] [--cache-mb N]
+//!            [--rescore-factor N] [--cache KIND] [--cache-mb N]
 //!            [--scenario FILE] [--transcript FILE]
 //!            run a full experiment and print per-slot results; with
 //!            --scenario, replay a cluster-dynamics timeline (node churn,
@@ -122,6 +122,12 @@ fn load_config(flags: &std::collections::HashMap<String, String>) -> ExperimentC
         let shards: usize = v.parse().expect("--shards");
         for n in cfg.nodes.iter_mut() {
             n.index.shards = shards;
+        }
+    }
+    if let Some(v) = flags.get("rescore-factor") {
+        let rf: usize = v.parse().expect("--rescore-factor");
+        for n in cfg.nodes.iter_mut() {
+            n.index.rescore_factor = rf;
         }
     }
     if let Some(v) = flags.get("cache") {
@@ -508,7 +514,7 @@ fn main() {
             );
             println!("              [--checkpoint FILE]   (with --allocator ppo-pretrained)");
             println!(
-                "              [--index {}] [--shards N]",
+                "              [--index {}] [--shards N] [--rescore-factor N]",
                 IndexKind::ALL.map(|k| k.as_str()).join("|")
             );
             println!(

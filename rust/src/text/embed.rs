@@ -51,6 +51,8 @@ impl Default for Embedder {
 }
 
 impl Embedder {
+    /// An embedder with the given hash seed (the default seed is what the
+    /// whole stack — corpora, queries, policy features — embeds with).
     pub fn new(seed: u64) -> Self {
         Embedder { seed }
     }

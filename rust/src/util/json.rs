@@ -11,52 +11,67 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object; keys sorted (BTreeMap) for deterministic serialization.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Numeric array from an f64 slice.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
+    /// String array from a string slice.
     pub fn arr_str(xs: &[String]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Str(x.clone())).collect())
     }
 
+    /// The number, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
             _ => None,
         }
     }
+    /// The number truncated to usize, if this is a [`Json::Num`].
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
+    /// The string, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The boolean, if this is a [`Json::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is a [`Json::Arr`].
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key→value map, if this is a [`Json::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),

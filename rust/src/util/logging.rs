@@ -6,13 +6,19 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
+/// Log severity, ordered most- to least-severe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable or surprising failures.
     Error = 0,
+    /// Degraded-but-continuing conditions.
     Warn = 1,
+    /// High-level progress (the default).
     Info = 2,
+    /// Per-step diagnostic detail.
     Debug = 3,
+    /// Fire-hose tracing.
     Trace = 4,
 }
 
@@ -37,10 +43,12 @@ pub fn init_from_env() {
     let _ = start();
 }
 
+/// Set the global log level (process-wide).
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// The current global log level.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
@@ -51,10 +59,14 @@ pub fn level() -> Level {
     }
 }
 
+/// Whether messages at `l` currently pass the level filter.
 pub fn enabled(l: Level) -> bool {
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one line to stderr (no-op when `l` is filtered out). Prefer the
+/// [`log_info!`](macro@crate::log_info)-family macros, which fill in the
+/// module path.
 pub fn log(l: Level, module: &str, msg: &str) {
     if !enabled(l) {
         return;
@@ -70,24 +82,28 @@ pub fn log(l: Level, module: &str, msg: &str) {
     eprintln!("[{t:9.3}s {tag} {module}] {msg}");
 }
 
+/// Log a `format!`-style message at [`Level::Info`].
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), &format!($($arg)*))
     };
 }
+/// Log a `format!`-style message at [`Level::Warn`].
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), &format!($($arg)*))
     };
 }
+/// Log a `format!`-style message at [`Level::Error`].
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), &format!($($arg)*))
     };
 }
+/// Log a `format!`-style message at [`Level::Debug`].
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => {

@@ -175,9 +175,12 @@ pub struct Ema {
 }
 
 impl Ema {
+    /// A fresh smoother with weight `alpha` on each new observation.
     pub fn new(alpha: f64) -> Self {
         Ema { alpha, value: None }
     }
+    /// Fold in an observation and return the updated average (the first
+    /// observation seeds the average directly).
     pub fn update(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -186,6 +189,7 @@ impl Ema {
         self.value = Some(v);
         v
     }
+    /// Current average, `None` before the first [`update`](Ema::update).
     pub fn get(&self) -> Option<f64> {
         self.value
     }

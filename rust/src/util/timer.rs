@@ -8,6 +8,7 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Timer {
         Timer { start: Instant::now() }
     }

@@ -15,20 +15,27 @@ use std::collections::BTreeMap;
 /// A parsed TOML value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A homogeneous inline array.
     Arr(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// The string, if this is a [`TomlValue::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Numeric value as f64 (floats directly, ints widened).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             TomlValue::Float(x) => Some(*x),
@@ -36,31 +43,37 @@ impl TomlValue {
             _ => None,
         }
     }
+    /// The integer, if this is a [`TomlValue::Int`].
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             TomlValue::Int(x) => Some(*x),
             _ => None,
         }
     }
+    /// The integer cast to usize, if this is a [`TomlValue::Int`].
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().map(|x| x as usize)
     }
+    /// The boolean, if this is a [`TomlValue::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is a [`TomlValue::Arr`].
     pub fn as_arr(&self) -> Option<&[TomlValue]> {
         match self {
             TomlValue::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Array coerced element-wise to f64 (non-numeric elements dropped).
     pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
     }
+    /// Array coerced element-wise to strings (non-strings dropped).
     pub fn as_str_vec(&self) -> Option<Vec<String>> {
         self.as_arr().map(|a| {
             a.iter()
@@ -85,6 +98,7 @@ pub struct TomlDoc {
 }
 
 impl TomlDoc {
+    /// Parse a TOML-subset document (see module docs for the grammar).
     pub fn parse(text: &str) -> Result<TomlDoc, String> {
         let mut doc = TomlDoc::default();
         // Where new key/values currently land.

@@ -2,6 +2,8 @@
 //! matrix. This is the paper's retrieval configuration ("Faiss-based vector
 //! database with a flat index for exact similarity search, top-5").
 
+use std::collections::HashMap;
+
 use super::{Hit, TopK, VectorIndex};
 use crate::text::embed::dot;
 
@@ -11,12 +13,16 @@ pub struct FlatIndex {
     dim: usize,
     ids: Vec<usize>,
     data: Vec<f32>, // row-major [len x dim]
+    /// id → row of its *first* insertion (kept in `add`, so `score_of`
+    /// is O(1) instead of a linear id scan; first-occurrence semantics
+    /// match the previous `Vec::position` lookup for duplicate ids).
+    row_of: HashMap<usize, usize>,
 }
 
 impl FlatIndex {
     /// An empty index for `dim`-dimensional vectors.
     pub fn new(dim: usize) -> Self {
-        FlatIndex { dim, ids: Vec::new(), data: Vec::new() }
+        FlatIndex { dim, ids: Vec::new(), data: Vec::new(), row_of: HashMap::new() }
     }
 
     /// Embedding dimensionality.
@@ -30,10 +36,11 @@ impl FlatIndex {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Similarity of the query against a *stored id* (linear scan for the
-    /// id — used by tests/oracle paths, not the hot path).
+    /// Similarity of the query against a *stored id* (O(1) map lookup;
+    /// used by tests/oracle paths). For ids added more than once, scores
+    /// the first-inserted row, like the linear scan it replaced.
     pub fn score_of(&self, query: &[f32], id: usize) -> Option<f32> {
-        let i = self.ids.iter().position(|&x| x == id)?;
+        let i = *self.row_of.get(&id)?;
         Some(dot(query, self.row(i)))
     }
 }
@@ -41,6 +48,7 @@ impl FlatIndex {
 impl VectorIndex for FlatIndex {
     fn add(&mut self, id: usize, vector: &[f32]) {
         assert_eq!(vector.len(), self.dim, "dim mismatch");
+        self.row_of.entry(id).or_insert(self.ids.len());
         self.ids.push(id);
         self.data.extend_from_slice(vector);
     }
@@ -160,6 +168,26 @@ mod tests {
         assert!(idx.is_empty());
         assert!(idx.search(&[0.0; 8], 3).is_empty());
         assert!(idx.search_batch(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn score_of_finds_ids_and_keeps_first_duplicate() {
+        let dim = 4;
+        let mut idx = FlatIndex::new(dim);
+        idx.add(7, &[1.0, 0.0, 0.0, 0.0]);
+        idx.add(9, &[0.0, 1.0, 0.0, 0.0]);
+        // duplicate add: id 7 again with a different vector — lookups must
+        // keep scoring the first-inserted row (the old linear scan's
+        // semantics), while search still sees both rows
+        idx.add(7, &[0.0, 0.0, 1.0, 0.0]);
+        let q = [1.0f32, 0.0, 0.0, 0.0];
+        assert_eq!(idx.score_of(&q, 7), Some(1.0));
+        assert_eq!(idx.score_of(&q, 9), Some(0.0));
+        assert_eq!(idx.score_of(&q, 8), None);
+        assert_eq!(idx.len(), 3);
+        let qz = [0.0f32, 0.0, 1.0, 0.0];
+        assert_eq!(idx.score_of(&qz, 7), Some(0.0)); // first row, not the dup
+        assert_eq!(idx.search(&qz, 1)[0].id, 7); // ...but search finds the dup
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Vector database: the retrieval tier behind every edge node.
 //!
-//! Index kinds: exact [`FlatIndex`] (the paper's Faiss flat setup), IVF
-//! ([`IvfIndex`]) and HNSW ([`HnswIndex`]) approximate indexes, and a
+//! Index kinds: exact [`FlatIndex`] (the paper's Faiss flat setup), exact
+//! [`QuantizedFlatIndex`] (i8 SoA candidate scan + f32 rescore, bitwise
+//! flat-identical at the default `rescore_factor`), IVF ([`IvfIndex`]) and
+//! HNSW ([`HnswIndex`]) approximate indexes, and a
 //! generic [`ShardedIndex`] that segments any inner index across N shards
 //! and fans batched searches out on the crate thread pool. Kinds are
 //! string-keyed in [`IndexRegistry`] (mirroring the scheduling tier's
@@ -14,12 +16,15 @@
 pub mod flat;
 pub mod hnsw;
 pub mod ivf;
+pub mod quant;
+pub mod quantized;
 pub mod registry;
 pub mod sharded;
 
 pub use flat::FlatIndex;
 pub use hnsw::HnswIndex;
 pub use ivf::IvfIndex;
+pub use quantized::QuantizedFlatIndex;
 pub use registry::{IndexBuildCtx, IndexKind, IndexRegistry, IndexSpec};
 pub use sharded::ShardedIndex;
 

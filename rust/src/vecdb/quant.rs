@@ -1,0 +1,289 @@
+//! Shared i8 quantization codec + integer dot-product kernels.
+//!
+//! Two codecs live here, one per consumer:
+//!
+//! * **Fixed-scale codec** ([`quantize_embedding`] / [`quantized_cosine`]) —
+//!   the cache tier's key codec, moved here verbatim so the retrieval and
+//!   cache tiers share one implementation. The formula is byte-for-byte the
+//!   one the committed cache goldens were recorded with (multiplier form,
+//!   `x * 127.0`, i64 cosine accumulators) and must never drift.
+//! * **Per-vector-scale codec** ([`quantize_vector`]) — the retrieval hot
+//!   path's codec: each vector gets its own scale `max|x| / 127`, so short
+//!   and long vectors both use the full i8 range. The reconstruction error
+//!   per component is at most `scale / 2`, which is what lets
+//!   `QuantizedFlatIndex` bound its score error and rescore *provably
+//!   exactly* (see `vecdb/quantized.rs`).
+//!
+//! The integer kernels ([`dot_i8`], [`scan_block`]) accumulate `i8×i8`
+//! products in `i32`. Each product is ≤ 127² = 16 129, so the accumulator
+//! is overflow-safe for any `dim < i32::MAX / 16 129 ≈ 133 000` — far above
+//! the crate's `EMBED_DIM = 256` (debug-asserted at the call sites).
+//!
+//! # SIMD
+//!
+//! The scalar kernels are the always-on reference: written as straight
+//! index loops over `i32` lanes so LLVM autovectorizes them. An explicit
+//! AVX2 path compiles behind the `simd` cargo feature
+//! (`cargo test --features simd`) with runtime detection — integer
+//! arithmetic has one right answer, so the intrinsic path is bitwise
+//! identical to the scalar one (parity-tested below and in CI).
+
+/// Rows per SoA block in [`scan_block`] and `QuantizedFlatIndex` storage:
+/// codes are laid out `block[d * BLOCK_ROWS + r]` so one dimension of 32
+/// adjacent rows is contiguous — a full 256-bit vector register of i8.
+pub const BLOCK_ROWS: usize = 32;
+
+/// Deterministically quantize a (unit-norm) embedding into the cache key
+/// space: one signed byte per dimension at a *fixed* scale of 127.
+///
+/// Exact duplicate queries embed identically and therefore key
+/// identically; quantization only widens near-duplicate matching, never
+/// splits exact duplicates. The cache tier re-exports this function — the
+/// multiplier form (`x * 127.0`) is pinned by the committed cache goldens
+/// and a byte-identity regression test in `cache/mod.rs`.
+pub fn quantize_embedding(emb: &[f32]) -> Vec<i8> {
+    emb.iter().map(|&x| (x * 127.0).round().clamp(-127.0, 127.0) as i8).collect()
+}
+
+/// Cosine similarity between two fixed-scale quantized keys (integer dot
+/// product, fully deterministic across platforms). Kept on i64
+/// accumulators — the exact arithmetic the cache goldens were recorded
+/// with — rather than rebuilt on the i32 retrieval kernels.
+pub fn quantized_cosine(a: &[i8], b: &[i8]) -> f64 {
+    if a.len() != b.len() || a.is_empty() {
+        return 0.0;
+    }
+    let (mut dot, mut na, mut nb) = (0i64, 0i64, 0i64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as i64 * y as i64;
+        na += x as i64 * x as i64;
+        nb += y as i64 * y as i64;
+    }
+    if na == 0 || nb == 0 {
+        return 0.0;
+    }
+    dot as f64 / ((na as f64).sqrt() * (nb as f64).sqrt())
+}
+
+/// Per-vector-scale quantization: `codes[i] = round(v[i] * 127 / max|v|)`,
+/// returned with `scale = max|v| / 127` so `v[i] ≈ scale * codes[i]` with
+/// per-component error ≤ `scale / 2`.
+///
+/// Degenerate inputs (all-zero, or any non-finite component) return
+/// all-zero codes with `scale = 0.0`; callers treat a zero scale as "no
+/// usable approximation" and fall back to exact scoring.
+pub fn quantize_vector(v: &[f32]) -> (Vec<i8>, f32) {
+    let max_abs = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    if max_abs <= 0.0 || !max_abs.is_finite() {
+        return (vec![0i8; v.len()], 0.0);
+    }
+    let inv = 127.0 / max_abs;
+    let codes =
+        v.iter().map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8).collect();
+    (codes, max_abs / 127.0)
+}
+
+/// Integer dot product of two i8 code vectors, i32 accumulate.
+///
+/// Four independent i32 lanes so LLVM autovectorizes the loop; the tail
+/// is handled scalar. Overflow-safe for `dim < ~133k` (see module docs).
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(a.len() < (i32::MAX / (127 * 127)) as usize);
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    for i in 0..chunks {
+        let k = i * 4;
+        s0 += a[k] as i32 * b[k] as i32;
+        s1 += a[k + 1] as i32 * b[k + 1] as i32;
+        s2 += a[k + 2] as i32 * b[k + 2] as i32;
+        s3 += a[k + 3] as i32 * b[k + 3] as i32;
+    }
+    let mut acc = 0i32;
+    for k in chunks * 4..a.len() {
+        acc += a[k] as i32 * b[k] as i32;
+    }
+    acc + s0 + s1 + s2 + s3
+}
+
+/// Score one SoA block against a quantized query: for every dimension `d`,
+/// `block[d * BLOCK_ROWS + r]` holds row `r`'s code, and `acc[r]`
+/// accumulates `Σ_d query[d] * block[d * BLOCK_ROWS + r]` in i32.
+///
+/// `block.len()` must be `query.len() * BLOCK_ROWS` (tail rows of a
+/// partially-filled block are zero-padded by the index, contributing 0).
+/// Dispatches to the AVX2 kernel when the `simd` feature is enabled and
+/// the CPU supports it; the scalar kernel is the always-on reference and
+/// both produce bitwise-identical accumulators (integer arithmetic).
+#[inline]
+pub fn scan_block(query: &[i8], block: &[i8], acc: &mut [i32; BLOCK_ROWS]) {
+    debug_assert_eq!(block.len(), query.len() * BLOCK_ROWS);
+    debug_assert!(query.len() < (i32::MAX / (127 * 127)) as usize);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: avx2 support was just verified at runtime.
+            unsafe { scan_block_avx2(query, block, acc) };
+            return;
+        }
+    }
+    scan_block_scalar(query, block, acc);
+}
+
+/// Scalar reference kernel for [`scan_block`] — always compiled, used for
+/// SIMD parity tests, and written so the inner 32-lane loop autovectorizes.
+pub fn scan_block_scalar(query: &[i8], block: &[i8], acc: &mut [i32; BLOCK_ROWS]) {
+    for (d, &q) in query.iter().enumerate() {
+        let q = q as i32;
+        let lane = &block[d * BLOCK_ROWS..(d + 1) * BLOCK_ROWS];
+        for (a, &c) in acc.iter_mut().zip(lane) {
+            *a += q * c as i32;
+        }
+    }
+}
+
+/// AVX2 kernel for [`scan_block`]: per dimension, the 32 row codes are one
+/// 256-bit load, widened i8→i16, multiplied by the broadcast query code
+/// (products ≤ 127² fit i16), widened i16→i32 and accumulated in four
+/// 8-lane i32 registers. Integer arithmetic ⇒ bitwise-identical to
+/// [`scan_block_scalar`].
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn scan_block_avx2(query: &[i8], block: &[i8], acc: &mut [i32; BLOCK_ROWS]) {
+    use std::arch::x86_64::*;
+    let mut a0 = _mm256_loadu_si256(acc.as_ptr() as *const __m256i);
+    let mut a1 = _mm256_loadu_si256(acc.as_ptr().add(8) as *const __m256i);
+    let mut a2 = _mm256_loadu_si256(acc.as_ptr().add(16) as *const __m256i);
+    let mut a3 = _mm256_loadu_si256(acc.as_ptr().add(24) as *const __m256i);
+    for (d, &q) in query.iter().enumerate() {
+        let qv = _mm256_set1_epi16(q as i16);
+        let codes =
+            _mm256_loadu_si256(block.as_ptr().add(d * BLOCK_ROWS) as *const __m256i);
+        // rows 0..16 and 16..32 as i16
+        let lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(codes));
+        let hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256(codes, 1));
+        let plo = _mm256_mullo_epi16(lo, qv); // exact: |q*c| ≤ 127² < 2^15
+        let phi = _mm256_mullo_epi16(hi, qv);
+        a0 = _mm256_add_epi32(a0, _mm256_cvtepi16_epi32(_mm256_castsi256_si128(plo)));
+        a1 = _mm256_add_epi32(a1, _mm256_cvtepi16_epi32(_mm256_extracti128_si256(plo, 1)));
+        a2 = _mm256_add_epi32(a2, _mm256_cvtepi16_epi32(_mm256_castsi256_si128(phi)));
+        a3 = _mm256_add_epi32(a3, _mm256_cvtepi16_epi32(_mm256_extracti128_si256(phi, 1)));
+    }
+    _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, a0);
+    _mm256_storeu_si256(acc.as_mut_ptr().add(8) as *mut __m256i, a1);
+    _mm256_storeu_si256(acc.as_mut_ptr().add(16) as *mut __m256i, a2);
+    _mm256_storeu_si256(acc.as_mut_ptr().add(24) as *mut __m256i, a3);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::embed::l2_normalize;
+    use crate::util::rng::Rng;
+
+    fn random_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn fixed_scale_codec_formula_is_pinned() {
+        // the exact cache-key formula: round(x*127), clamped
+        let v = [0.0f32, 1.0, -1.0, 0.5, 0.004, -0.004, 2.0, -2.0];
+        assert_eq!(quantize_embedding(&v), vec![0, 127, -127, 64, 1, -1, 127, -127]);
+    }
+
+    #[test]
+    fn quantized_cosine_basics() {
+        let a = vec![10i8, 0, 0];
+        let b = vec![0i8, 10, 0];
+        assert_eq!(quantized_cosine(&a, &a), 1.0);
+        assert_eq!(quantized_cosine(&a, &b), 0.0);
+        assert_eq!(quantized_cosine(&a, &[0i8, 0, 0]), 0.0); // zero norm
+        assert_eq!(quantized_cosine(&a, &b[..2]), 0.0); // length mismatch
+    }
+
+    #[test]
+    fn per_vector_scale_bounds_reconstruction_error() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let v = random_unit(&mut rng, 37);
+            let (codes, scale) = quantize_vector(&v);
+            assert!(scale > 0.0);
+            for (&x, &c) in v.iter().zip(&codes) {
+                let err = (x - scale * c as f32).abs();
+                assert!(err <= scale * 0.5 + 1e-7, "err={err} scale={scale}");
+            }
+            // the largest-magnitude component saturates the code range
+            assert_eq!(codes.iter().map(|c| c.unsigned_abs()).max(), Some(127));
+        }
+    }
+
+    #[test]
+    fn degenerate_vectors_get_zero_scale() {
+        assert_eq!(quantize_vector(&[0.0; 4]), (vec![0i8; 4], 0.0));
+        assert_eq!(quantize_vector(&[]), (vec![], 0.0));
+        let (codes, scale) = quantize_vector(&[1.0, f32::NAN]);
+        assert_eq!((codes, scale), (vec![0i8, 0], 0.0));
+        let (codes, scale) = quantize_vector(&[f32::INFINITY, 0.0]);
+        assert_eq!((codes, scale), (vec![0i8, 0], 0.0));
+    }
+
+    #[test]
+    fn dot_i8_matches_naive_i64() {
+        let mut rng = Rng::new(13);
+        for n in [0usize, 1, 3, 4, 7, 64, 103, 256] {
+            let a: Vec<i8> = (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let b: Vec<i8> = (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let naive: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            assert_eq!(dot_i8(&a, &b) as i64, naive, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scan_block_matches_per_row_dot() {
+        let mut rng = Rng::new(17);
+        let dim = 48;
+        // build a block from 32 row code vectors
+        let rows: Vec<Vec<i8>> = (0..BLOCK_ROWS)
+            .map(|_| (0..dim).map(|_| (rng.below(255) as i64 - 127) as i8).collect())
+            .collect();
+        let mut block = vec![0i8; dim * BLOCK_ROWS];
+        for (r, row) in rows.iter().enumerate() {
+            for (d, &c) in row.iter().enumerate() {
+                block[d * BLOCK_ROWS + r] = c;
+            }
+        }
+        let q: Vec<i8> = (0..dim).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+        let mut acc = [0i32; BLOCK_ROWS];
+        scan_block(&q, &block, &mut acc);
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(acc[r], dot_i8(&q, row), "row {r}");
+        }
+        // the dispatching kernel and the scalar reference agree bitwise
+        let mut acc_ref = [0i32; BLOCK_ROWS];
+        scan_block_scalar(&q, &block, &mut acc_ref);
+        assert_eq!(acc, acc_ref);
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn avx2_kernel_is_bitwise_identical_to_scalar() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return; // nothing to compare on this host
+        }
+        let mut rng = Rng::new(19);
+        for dim in [1usize, 7, 64, 256] {
+            let q: Vec<i8> = (0..dim).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let block: Vec<i8> =
+                (0..dim * BLOCK_ROWS).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let mut a = [3i32; BLOCK_ROWS]; // non-zero init: kernels must accumulate
+            let mut b = [3i32; BLOCK_ROWS];
+            unsafe { scan_block_avx2(&q, &block, &mut a) };
+            scan_block_scalar(&q, &block, &mut b);
+            assert_eq!(a, b, "dim={dim}");
+        }
+    }
+}

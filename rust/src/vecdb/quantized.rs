@@ -1,0 +1,340 @@
+//! Quantized flat index: i8 SoA candidate scan + exact f32 rescore.
+//!
+//! The hot loop never touches f32 rows: queries and stored vectors are
+//! quantized with the per-vector-scale codec (`vecdb/quant.rs`) and
+//! candidates are scored with the integer [`scan_block`] kernel over
+//! 32-row structure-of-arrays blocks — a quarter of the memory traffic of
+//! the f32 scan. The top candidates are then *rescored* with the exact
+//! same f32 [`dot`] kernel [`FlatIndex`](super::FlatIndex) uses, on
+//! bit-identical stored rows, so the final `Hit` list is byte-equal to
+//! the flat scan's.
+//!
+//! # Why the default configuration is provably exact
+//!
+//! Write a query `x` as `s_x·a + e_x` (codes `a`, scale `s_x`, rounding
+//! error `|e_x| ≤ s_x/2` per component) and row `r` as `s_r·b_r + e_r`
+//! likewise. The integer score `A_r = s_x·s_r·(a·b_r)` then satisfies
+//!
+//! ```text
+//! |dot(x, y_r) − A_r| ≤ (s_x/2)·(‖a‖₁·max_r s_r + max_r ‖y_r‖₁) = ε
+//! ```
+//!
+//! a *uniform* bound over rows, computable per query from stored
+//! bookkeeping. If `T` is the true k-th best f32 score and `A_(k)` the
+//! k-th best integer score, every true top-k row has `A_r ≥ T − ε` and
+//! `A_(k) ≤ T + ε`, so rescoring every row with `A_r ≥ A_(k) − 2ε`
+//! provably covers the exact top-k — including rows flat keeps on score
+//! ties, because candidates are rescored in storage order through the
+//! same [`TopK`] and ties resolve by push order. ε is additionally
+//! inflated to cover f32 summation error in the reference `dot` itself,
+//! so the guarantee holds against the *computed* flat scores, not just
+//! the real-valued ones.
+//!
+//! `rescore_factor` (default 4) additionally floors the candidate set at
+//! `k × rescore_factor` rows, keeping the scan robust when ε is loose;
+//! `rescore_factor = 1` drops the ε margin entirely and rescores exactly
+//! the integer top-k — the fast *approximate* mode (recall@5 ≥ 0.9 on
+//! unit-norm corpora, property-tested in `tests/index_api.rs`).
+
+use super::quant::{quantize_vector, scan_block, BLOCK_ROWS};
+use super::{Hit, TopK, VectorIndex};
+use crate::text::embed::dot;
+
+/// Flat index with i8 SoA candidate generation and exact f32 rescore.
+#[derive(Clone, Debug, Default)]
+pub struct QuantizedFlatIndex {
+    dim: usize,
+    rescore_factor: usize,
+    ids: Vec<usize>,
+    /// Full-precision rows (row-major), the rescore ground truth — stored
+    /// bit-identical to `FlatIndex` so rescored scores match bitwise.
+    rows: Vec<f32>,
+    /// i8 codes in blocked SoA layout: block `b` spans rows
+    /// `b*BLOCK_ROWS..`, holding `codes[b*dim*32 + d*32 + r]`; tail rows
+    /// of the last block are zero-padded (score 0, never selected ahead
+    /// of real candidates — they are sliced off before thresholding).
+    codes: Vec<i8>,
+    /// Per-row quantization scale (`max|y|/127`).
+    scales: Vec<f32>,
+    /// Running maxima feeding the uniform error bound ε.
+    max_scale: f64,
+    max_norm1: f64,
+    /// Any stored row with a NaN/∞ component voids the error bound; the
+    /// index then falls back to the exact full scan (still flat-identical).
+    has_nonfinite: bool,
+}
+
+impl QuantizedFlatIndex {
+    /// An empty index for `dim`-dimensional vectors. `rescore_factor`
+    /// (clamped ≥ 1) floors the rescore set at `k × rescore_factor`
+    /// candidates; values ≥ 2 keep the ε-margin exactness guarantee,
+    /// `1` switches to approximate integer-top-k mode.
+    pub fn new(dim: usize, rescore_factor: usize) -> Self {
+        QuantizedFlatIndex { dim, rescore_factor: rescore_factor.max(1), ..Default::default() }
+    }
+
+    /// Embedding dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The configured rescore factor (≥ 1).
+    pub fn rescore_factor(&self) -> usize {
+        self.rescore_factor
+    }
+
+    /// Full-precision row view (rescore path).
+    #[inline]
+    fn row(&self, i: usize) -> &[f32] {
+        &self.rows[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Integer candidate scores for every stored row, in storage order.
+    fn approx_scores(&self, qcodes: &[i8], qscale: f32) -> Vec<f64> {
+        let n = self.ids.len();
+        let mut approx = Vec::with_capacity(n);
+        let block_len = self.dim * BLOCK_ROWS;
+        for (b, block) in self.codes.chunks_exact(block_len).enumerate() {
+            let mut acc = [0i32; BLOCK_ROWS];
+            scan_block(qcodes, block, &mut acc);
+            let rows_here = (n - b * BLOCK_ROWS).min(BLOCK_ROWS);
+            for (r, &a) in acc.iter().enumerate().take(rows_here) {
+                let row = b * BLOCK_ROWS + r;
+                approx.push(a as f64 * qscale as f64 * self.scales[row] as f64);
+            }
+        }
+        approx
+    }
+
+    /// Uniform score-error bound ε for this query (see module docs):
+    /// quantization error of both sides plus an allowance for f32
+    /// summation error in the reference `dot`, inflated 5 % for slack.
+    fn score_epsilon(&self, qcodes: &[i8], qscale: f32, qmax_abs: f64) -> f64 {
+        let qnorm1: f64 = qcodes.iter().map(|&c| (c as i64).abs() as f64).sum();
+        let quant = (qscale as f64 / 2.0) * (qnorm1 * self.max_scale + self.max_norm1);
+        let f32_sum = 2.0 * self.dim as f64 * f32::EPSILON as f64 * qmax_abs * self.max_norm1;
+        (quant + f32_sum) * 1.05 + 1e-12
+    }
+
+    /// Exact rescore of `candidates` (storage-order row indexes) through
+    /// the same f32 kernel + [`TopK`] a [`FlatIndex`](super::FlatIndex)
+    /// scan uses — identical scores, identical tie-breaking.
+    fn rescore(&self, query: &[f32], candidates: impl Iterator<Item = usize>, k: usize) -> Vec<Hit> {
+        let mut top = TopK::new(k);
+        for i in candidates {
+            top.push(Hit { id: self.ids[i], score: dot(query, self.row(i)) });
+        }
+        top.into_vec()
+    }
+}
+
+impl VectorIndex for QuantizedFlatIndex {
+    fn add(&mut self, id: usize, vector: &[f32]) {
+        assert_eq!(vector.len(), self.dim, "dim mismatch");
+        let lane = self.ids.len() % BLOCK_ROWS;
+        if lane == 0 {
+            // open a fresh zero-padded block (incremental: corpus-ingest
+            // events keep adding rows after finalize)
+            self.codes.resize(self.codes.len() + self.dim * BLOCK_ROWS, 0);
+        }
+        let (codes, scale) = quantize_vector(vector);
+        let block_start = (self.ids.len() / BLOCK_ROWS) * self.dim * BLOCK_ROWS;
+        for (d, &c) in codes.iter().enumerate() {
+            self.codes[block_start + d * BLOCK_ROWS + lane] = c;
+        }
+        let norm1: f64 = vector.iter().map(|&x| x.abs() as f64).sum();
+        self.has_nonfinite |= !norm1.is_finite();
+        self.max_scale = self.max_scale.max(scale as f64);
+        self.max_norm1 = self.max_norm1.max(norm1);
+        self.scales.push(scale);
+        self.ids.push(id);
+        self.rows.extend_from_slice(vector);
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim, "dim mismatch");
+        let n = self.ids.len();
+        if n == 0 || k == 0 {
+            return Vec::new();
+        }
+        let (qcodes, qscale) = quantize_vector(query);
+        let qmax = query.iter().fold(0f32, |m, &x| m.max(x.abs())) as f64;
+        let eps = self.score_epsilon(&qcodes, qscale, qmax);
+        // Degenerate query (zero / non-finite → zero scale), non-finite
+        // stored rows, unusable bound, or k covering the whole corpus:
+        // fall back to the exact full scan — still flat-identical.
+        if qscale == 0.0 || self.has_nonfinite || !eps.is_finite() || k >= n {
+            return self.rescore(query, 0..n, k);
+        }
+        // All rows and the query are finite here, so every integer
+        // candidate score is finite and totally ordered.
+        let approx = self.approx_scores(&qcodes, qscale);
+        let m = k.saturating_mul(self.rescore_factor).min(n);
+        let desc = |a: &f64, b: &f64| b.partial_cmp(a).unwrap();
+        let mut ranked = approx.clone();
+        // m-th best integer score; the partition's lead then yields the
+        // k-th best without a full sort.
+        let (lead, &mut a_m, _) = ranked.select_nth_unstable_by(m - 1, desc);
+        let a_k = if lead.len() >= k {
+            let (_, &mut v, _) = lead.select_nth_unstable_by(k - 1, desc);
+            v
+        } else {
+            a_m // m == k (rescore_factor 1 or clamped by n)
+        };
+        // ε-margin threshold: every row whose integer score could still be
+        // the true f32 top-k survives; a_m floors the set at m candidates.
+        let threshold = if self.rescore_factor <= 1 { a_k } else { a_m.min(a_k - 2.0 * eps) };
+        let cands = (0..n).filter(|&i| approx[i] >= threshold);
+        self.rescore(query, cands, k)
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::embed::l2_normalize;
+    use crate::util::rng::Rng;
+    use crate::vecdb::FlatIndex;
+
+    fn random_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    fn paired(seed: u64, dim: usize, n: usize, rf: usize) -> (FlatIndex, QuantizedFlatIndex) {
+        let mut rng = Rng::new(seed);
+        let mut flat = FlatIndex::new(dim);
+        let mut quant = QuantizedFlatIndex::new(dim, rf);
+        for i in 0..n {
+            let v = random_unit(&mut rng, dim);
+            flat.add(i + 100, &v);
+            quant.add(i + 100, &v);
+        }
+        (flat, quant)
+    }
+
+    #[test]
+    fn default_rescore_is_bitwise_flat_identical() {
+        let (flat, quant) = paired(41, 32, 500, 4);
+        let mut rng = Rng::new(42);
+        for _ in 0..40 {
+            let q = random_unit(&mut rng, 32);
+            for k in [1usize, 3, 5, 17] {
+                assert_eq!(quant.search(&q, k), flat.search(&q, k), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_query_and_flat() {
+        let (flat, quant) = paired(43, 24, 300, 4);
+        let mut rng = Rng::new(44);
+        let queries: Vec<Vec<f32>> = (0..21).map(|_| random_unit(&mut rng, 24)).collect();
+        let batched = quant.search_batch(&queries, 5);
+        assert_eq!(batched, flat.search_batch(&queries, 5));
+    }
+
+    #[test]
+    fn ties_resolve_like_flat() {
+        let dim = 8;
+        let mut a = vec![0f32; dim];
+        a[0] = 1.0;
+        let mut b = vec![0f32; dim];
+        b[1] = 1.0;
+        let mut flat = FlatIndex::new(dim);
+        let mut quant = QuantizedFlatIndex::new(dim, 4);
+        // ids 0..5 duplicate `a`, 5..8 duplicate `b`: heavy score ties
+        for i in 0..8 {
+            let v = if i < 5 { &a } else { &b };
+            flat.add(i, v);
+            quant.add(i, v);
+        }
+        for k in 1..=8 {
+            assert_eq!(quant.search(&a, k), flat.search(&a, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn degenerate_queries_and_shapes_match_flat() {
+        let (flat, quant) = paired(47, 16, 60, 4);
+        let zero = vec![0f32; 16];
+        assert_eq!(quant.search(&zero, 5), flat.search(&zero, 5));
+        let mut rng = Rng::new(48);
+        let q = random_unit(&mut rng, 16);
+        assert_eq!(quant.search(&q, 0), flat.search(&q, 0)); // k = 0
+        assert_eq!(quant.search(&q, 60), flat.search(&q, 60)); // k = n
+        assert_eq!(quant.search(&q, 100), flat.search(&q, 100)); // k > n
+        let empty = QuantizedFlatIndex::new(16, 4);
+        assert!(empty.is_empty());
+        assert!(empty.search(&q, 5).is_empty());
+    }
+
+    #[test]
+    fn incremental_add_crosses_block_boundaries() {
+        // corpus sizes straddling BLOCK_ROWS multiples, grown between
+        // searches (post-finalize ingest path)
+        let dim = 12;
+        let mut rng = Rng::new(49);
+        let mut flat = FlatIndex::new(dim);
+        let mut quant = QuantizedFlatIndex::new(dim, 4);
+        let q = random_unit(&mut rng, dim);
+        for i in 0..(BLOCK_ROWS * 3 + 7) {
+            let v = random_unit(&mut rng, dim);
+            flat.add(i, &v);
+            quant.add(i, &v);
+            if i % 13 == 0 {
+                assert_eq!(quant.search(&q, 5), flat.search(&q, 5), "n={}", i + 1);
+            }
+        }
+        assert_eq!(quant.search(&q, 5), flat.search(&q, 5));
+    }
+
+    #[test]
+    fn nonfinite_rows_fall_back_to_exact_scan() {
+        let dim = 8;
+        let mut rng = Rng::new(50);
+        let mut flat = FlatIndex::new(dim);
+        let mut quant = QuantizedFlatIndex::new(dim, 4);
+        for i in 0..40 {
+            let v = random_unit(&mut rng, dim);
+            flat.add(i, &v);
+            quant.add(i, &v);
+        }
+        let mut bad = vec![0f32; dim];
+        bad[0] = f32::NAN;
+        flat.add(999, &bad);
+        quant.add(999, &bad);
+        let q = random_unit(&mut rng, dim);
+        assert_eq!(quant.search(&q, 5), flat.search(&q, 5));
+    }
+
+    #[test]
+    fn rescore_factor_one_is_decent_approximation() {
+        let (flat, quant) = paired(51, 32, 400, 1);
+        let mut rng = Rng::new(52);
+        let (mut hit, mut total) = (0usize, 0usize);
+        for _ in 0..30 {
+            let q = random_unit(&mut rng, 32);
+            let exact: Vec<usize> = flat.search(&q, 5).iter().map(|h| h.id).collect();
+            let approx = quant.search(&q, 5);
+            assert_eq!(approx.len(), 5);
+            hit += approx.iter().filter(|h| exact.contains(&h.id)).count();
+            total += 5;
+        }
+        let recall = hit as f64 / total as f64;
+        assert!(recall >= 0.9, "recall@5 = {recall}");
+    }
+
+    #[test]
+    fn accessors() {
+        let q = QuantizedFlatIndex::new(16, 0); // clamps to 1
+        assert_eq!(q.dim(), 16);
+        assert_eq!(q.rescore_factor(), 1);
+        assert_eq!(QuantizedFlatIndex::new(16, 4).rescore_factor(), 4);
+    }
+}

@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use super::{FlatIndex, HnswIndex, IvfIndex, ShardedIndex, VectorIndex};
+use super::{FlatIndex, HnswIndex, IvfIndex, QuantizedFlatIndex, ShardedIndex, VectorIndex};
 use anyhow::{anyhow, Result};
 
 /// Built-in index kinds (also the registry's built-in keys).
@@ -15,23 +15,30 @@ use anyhow::{anyhow, Result};
 pub enum IndexKind {
     /// Exact brute-force search (the paper's configuration, the default).
     Flat,
+    /// Exact search via i8 SoA candidate scan + f32 rescore — bitwise
+    /// flat-identical at the default `rescore_factor`.
+    QuantizedFlat,
     /// IVF approximate search (k-means coarse quantizer).
     Ivf,
     /// HNSW graph-based approximate search.
     Hnsw,
     /// Flat segments fanned out across N shards on the thread pool.
     ShardedFlat,
+    /// Quantized-flat segments fanned out across N shards.
+    ShardedQuantized,
     /// IVF segments fanned out across N shards.
     ShardedIvf,
 }
 
 impl IndexKind {
     /// Every built-in kind.
-    pub const ALL: [IndexKind; 5] = [
+    pub const ALL: [IndexKind; 7] = [
         IndexKind::Flat,
+        IndexKind::QuantizedFlat,
         IndexKind::Ivf,
         IndexKind::Hnsw,
         IndexKind::ShardedFlat,
+        IndexKind::ShardedQuantized,
         IndexKind::ShardedIvf,
     ];
 
@@ -39,9 +46,11 @@ impl IndexKind {
     pub fn as_str(&self) -> &'static str {
         match self {
             IndexKind::Flat => "flat",
+            IndexKind::QuantizedFlat => "quantized-flat",
             IndexKind::Ivf => "ivf",
             IndexKind::Hnsw => "hnsw",
             IndexKind::ShardedFlat => "sharded-flat",
+            IndexKind::ShardedQuantized => "sharded-quantized",
             IndexKind::ShardedIvf => "sharded-ivf",
         }
     }
@@ -77,8 +86,9 @@ impl std::str::FromStr for IndexKind {
 /// selected kind are ignored.
 #[derive(Clone, Debug, PartialEq)]
 pub struct IndexSpec {
-    /// Registry key (`flat`, `ivf`, `hnsw`, `sharded-flat`, `sharded-ivf`,
-    /// or a custom registration).
+    /// Registry key (`flat`, `quantized-flat`, `ivf`, `hnsw`,
+    /// `sharded-flat`, `sharded-quantized`, `sharded-ivf`, or a custom
+    /// registration).
     pub kind: String,
     /// IVF: number of k-means lists.
     pub nlist: usize,
@@ -92,6 +102,10 @@ pub struct IndexSpec {
     pub hnsw_ef_construction: usize,
     /// HNSW: search beam width.
     pub hnsw_ef_search: usize,
+    /// Quantized kinds: rescore-set floor multiplier (`k × rescore_factor`
+    /// candidates rescored in f32). Values ≥ 2 keep the exactness margin
+    /// (bitwise flat-identical hits); `1` is the fast approximate mode.
+    pub rescore_factor: usize,
 }
 
 impl Default for IndexSpec {
@@ -104,6 +118,7 @@ impl Default for IndexSpec {
             hnsw_m: 16,
             hnsw_ef_construction: 100,
             hnsw_ef_search: 64,
+            rescore_factor: 4,
         }
     }
 }
@@ -144,6 +159,9 @@ impl IndexRegistry {
         r.register(IndexKind::Flat.as_str(), |ctx| {
             Ok(Box::new(FlatIndex::new(ctx.dim)))
         });
+        r.register(IndexKind::QuantizedFlat.as_str(), |ctx| {
+            Ok(Box::new(QuantizedFlatIndex::new(ctx.dim, ctx.spec.rescore_factor)))
+        });
         r.register(IndexKind::Ivf.as_str(), |ctx| {
             Ok(Box::new(IvfIndex::new(ctx.dim, ctx.spec.nlist, ctx.spec.nprobe)))
         });
@@ -159,6 +177,12 @@ impl IndexRegistry {
         r.register(IndexKind::ShardedFlat.as_str(), |ctx| {
             let dim = ctx.dim;
             Ok(Box::new(ShardedIndex::from_fn(ctx.spec.shards, |_| FlatIndex::new(dim))))
+        });
+        r.register(IndexKind::ShardedQuantized.as_str(), |ctx| {
+            let (dim, rf) = (ctx.dim, ctx.spec.rescore_factor);
+            Ok(Box::new(ShardedIndex::from_fn(ctx.spec.shards, |_| {
+                QuantizedFlatIndex::new(dim, rf)
+            })))
         });
         r.register(IndexKind::ShardedIvf.as_str(), |ctx| {
             let (dim, nlist, nprobe) = (ctx.dim, ctx.spec.nlist, ctx.spec.nprobe);

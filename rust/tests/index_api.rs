@@ -8,7 +8,9 @@ use coedge_rag::coordinator::CoordinatorBuilder;
 use coedge_rag::router::capacity::CapacityModel;
 use coedge_rag::text::embed::l2_normalize;
 use coedge_rag::util::rng::Rng;
-use coedge_rag::vecdb::{FlatIndex, Hit, HnswIndex, IvfIndex, ShardedIndex, VectorIndex};
+use coedge_rag::vecdb::{
+    FlatIndex, Hit, HnswIndex, IvfIndex, QuantizedFlatIndex, ShardedIndex, VectorIndex,
+};
 
 fn random_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
     let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
@@ -198,5 +200,134 @@ fn measured_search_time_is_reported() {
     for (nid, &(modeled, measured)) in r.node_search_s.iter().enumerate() {
         assert!(modeled > 0.0, "node {nid}: modeled TS must be positive");
         assert!(measured > 0.0, "node {nid}: measured wall-clock must be recorded");
+    }
+}
+
+/// Property: `quantized-flat` at the default `rescore_factor` returns hit
+/// lists *byte-identical* to `flat` over random dims / corpus sizes / k —
+/// and the sharded composition keeps the parity across thread counts.
+#[test]
+fn prop_quantized_flat_equals_flat_bitwise() {
+    let mut rng = Rng::new(0x0DDB17);
+    for case in 0..25 {
+        let dim = 4 + rng.below(28);
+        let n = 20 + rng.below(400);
+        let k = 1 + rng.below(10);
+        let shards = 1 + rng.below(6);
+        let mut flat = FlatIndex::new(dim);
+        let mut quant = QuantizedFlatIndex::new(dim, 4);
+        let mut sharded_1 = ShardedIndex::from_fn(shards, |_| QuantizedFlatIndex::new(dim, 4))
+            .with_threads(1);
+        let mut sharded_4 = ShardedIndex::from_fn(shards, |_| QuantizedFlatIndex::new(dim, 4))
+            .with_threads(4);
+        for i in 0..n {
+            let v = random_unit(&mut rng, dim);
+            flat.add(i, &v);
+            quant.add(i, &v);
+            sharded_1.add(i, &v);
+            sharded_4.add(i, &v);
+        }
+        let queries: Vec<Vec<f32>> = (0..8).map(|_| random_unit(&mut rng, dim)).collect();
+        let expect: Vec<Vec<Hit>> = queries.iter().map(|q| flat.search(q, k)).collect();
+        let ctx = format!("case {case}: dim={dim} n={n} k={k} shards={shards}");
+        assert_eq!(quant.search_batch(&queries, k), expect, "{ctx}");
+        for (q, e) in queries.iter().zip(&expect) {
+            assert_eq!(quant.search(q, k), *e, "{ctx} (single-query)");
+        }
+        assert_eq!(sharded_1.search_batch(&queries, k), expect, "{ctx} (threads=1)");
+        assert_eq!(sharded_4.search_batch(&queries, k), expect, "{ctx} (threads=4)");
+    }
+}
+
+/// Property: at `rescore_factor = 1` (approximate integer-top-k mode)
+/// recall@5 vs the exact flat scan stays ≥ 0.9 in aggregate — for both the
+/// unsharded index and the sharded composition at 1 and 4 threads.
+#[test]
+fn prop_quantized_rescore_one_recall() {
+    let mut rng = Rng::new(0x5EED);
+    let (mut hit, mut total) = ([0usize; 3], 0usize);
+    for _ in 0..12 {
+        let dim = 8 + rng.below(32);
+        let n = 50 + rng.below(300);
+        let mut flat = FlatIndex::new(dim);
+        let mut quant = QuantizedFlatIndex::new(dim, 1);
+        let mut sharded_1 =
+            ShardedIndex::from_fn(3, |_| QuantizedFlatIndex::new(dim, 1)).with_threads(1);
+        let mut sharded_4 =
+            ShardedIndex::from_fn(3, |_| QuantizedFlatIndex::new(dim, 1)).with_threads(4);
+        for i in 0..n {
+            let v = random_unit(&mut rng, dim);
+            flat.add(i, &v);
+            quant.add(i, &v);
+            sharded_1.add(i, &v);
+            sharded_4.add(i, &v);
+        }
+        for _ in 0..10 {
+            let q = random_unit(&mut rng, dim);
+            let k = 5.min(n);
+            let exact: Vec<usize> = flat.search(&q, k).iter().map(|h| h.id).collect();
+            let indexes: [&dyn VectorIndex; 3] = [&quant, &sharded_1, &sharded_4];
+            for (slot, idx) in indexes.into_iter().enumerate() {
+                let approx = idx.search(&q, k);
+                assert_eq!(approx.len(), exact.len());
+                hit[slot] += approx.iter().filter(|h| exact.contains(&h.id)).count();
+            }
+            total += exact.len();
+        }
+    }
+    for (slot, name) in ["quantized-flat", "sharded(t=1)", "sharded(t=4)"].iter().enumerate() {
+        let recall = hit[slot] as f64 / total as f64;
+        assert!(recall >= 0.9, "{name}: recall@5 = {recall:.3}");
+    }
+}
+
+/// The registry builds both quantized kinds, honors `rescore_factor`, and
+/// the built index round-trips an end-to-end search.
+#[test]
+fn quantized_kinds_build_through_registry() {
+    use coedge_rag::vecdb::{IndexBuildCtx, IndexRegistry};
+    let reg = IndexRegistry::with_builtins();
+    let mut spec = IndexSpec::of_kind("quantized-flat");
+    spec.rescore_factor = 2;
+    let mut rng = Rng::new(3);
+    for kind in ["quantized-flat", "sharded-quantized"] {
+        spec.kind = kind.into();
+        let mut idx = reg.build(kind, &IndexBuildCtx { dim: 16, seed: 1, spec: &spec }).unwrap();
+        let mut flat = FlatIndex::new(16);
+        for i in 0..120 {
+            let v = random_unit(&mut rng, 16);
+            idx.add(i, &v);
+            flat.add(i, &v);
+        }
+        idx.finalize(1);
+        let q = random_unit(&mut rng, 16);
+        assert_eq!(idx.search(&q, 5), flat.search(&q, 5), "{kind}");
+    }
+}
+
+/// End-to-end parity: swapping every node's index for `quantized-flat` (or
+/// `sharded-quantized`) leaves each query's retrieval relevance
+/// byte-for-byte identical to `flat` across the whole serve path.
+#[test]
+fn e2e_quantized_matches_flat_outcomes() {
+    let run = |kind: &str| {
+        let mut cfg = tiny_cfg(AllocatorKind::Oracle);
+        for n in cfg.nodes.iter_mut() {
+            n.index = IndexSpec::of_kind(kind);
+            n.index.shards = 3;
+        }
+        let mut co = CoordinatorBuilder::new(cfg).capacities(stub_caps(4)).build().unwrap();
+        let qids = co.sample_queries(60).unwrap();
+        (qids.clone(), co.run_slot(&qids).unwrap())
+    };
+    let (q_flat, r_flat) = run("flat");
+    for kind in ["quantized-flat", "sharded-quantized"] {
+        let (q_kind, r_kind) = run(kind);
+        assert_eq!(q_flat, q_kind, "same seed → same sampled queries");
+        for (a, b) in r_flat.outcomes.iter().zip(&r_kind.outcomes) {
+            assert_eq!(a.qa_id, b.qa_id, "{kind}");
+            assert_eq!(a.rel, b.rel, "{kind} qa {}", a.qa_id);
+            assert_eq!(a.dropped, b.dropped, "{kind}");
+        }
     }
 }
