@@ -218,7 +218,7 @@ impl Coordinator {
     /// primary domain injected by a SkewShift event).
     pub fn sample_queries(&mut self, count: usize) -> Result<Vec<usize>> {
         let mix = domain_mix(&self.cfg.skew, self.ds.num_domains(), &mut self.rng)?;
-        Ok(sample_slot_queries(&self.ds, &mix, count, &mut self.rng))
+        sample_slot_queries(&self.ds, &mix, count, &mut self.rng)
     }
 
     /// Phase ①: embed the slot's queries.
@@ -267,8 +267,10 @@ impl Coordinator {
             self.nodes.len()
         );
         anyhow::ensure!(
-            factor.is_finite() && factor >= 0.0,
-            "capacity factor must be finite and >= 0, got {factor}"
+            factor.is_finite() && factor > 0.0,
+            "capacity factor must be finite and > 0 (a factor of 0 would brick the node \
+             permanently — node-up cannot undo a zeroed scale; use node-down for outages), \
+             got {factor}"
         );
         self.cap_scale[node] *= factor;
         Ok(())

@@ -1,0 +1,159 @@
+//! Seeded scenario generator: random-but-valid [`Scenario`] timelines.
+//!
+//! The grammar covers every event kind the scenario engine defines —
+//! node churn (`node-down`/`node-up`), capacity scaling, SLO changes,
+//! bursts (including the `queries = 0` empty-slot edge), skew shifts
+//! (including the boundary `frac` values 0 and 1), and corpus ingest —
+//! plus optional arrival traces with varied base/amplitude/burst
+//! parameters. Every generated scenario passes [`Scenario::validate`]
+//! against the fuzz cluster (asserted by `tests/fuzz.rs` over many
+//! seeds), so a failing replay always indicts the engine, not the input.
+
+use crate::config::{AllocatorKind, CacheSpec, DatasetKind, ExperimentConfig};
+use crate::scenario::{Scenario, ScenarioEvent, TimedEvent};
+use crate::util::rng::Rng;
+use crate::workload::{SkewPattern, TraceConfig};
+
+/// Generator bounds: the cluster shape events index into and the size of
+/// the timelines produced. The defaults match the paper cluster's shape
+/// (4 nodes, 6 domains) at a reduced corpus scale so a thousand-case
+/// sweep stays cheap.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    /// Nodes the cluster has (event `node` indices stay below this).
+    pub n_nodes: usize,
+    /// Dataset domains (skew / ingest `domain` indices stay below this).
+    pub n_domains: usize,
+    /// Upper bound on the slot count (timelines run 2..=max_slots slots).
+    pub max_slots: usize,
+    /// Upper bound on events per timeline.
+    pub max_events: usize,
+    /// QA pairs per domain in the fuzz dataset.
+    pub qa_per_domain: usize,
+    /// Documents per domain in the fuzz dataset.
+    pub docs_per_domain: usize,
+    /// Per-node corpus size.
+    pub corpus_docs: usize,
+    /// Upper bound on the arrival-trace base load (queries per slot).
+    pub max_base_load: usize,
+    /// Probability that a generated skew-shift carries an out-of-range
+    /// `frac` (> 1). Always 0 in production sweeps; tests raise it as the
+    /// injected-bug hook to prove the oracle + shrinker find and minimize
+    /// the exact class of bug the `frac` validation fix closed.
+    pub bug_rate: f64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            n_nodes: 4,
+            n_domains: 6,
+            max_slots: 8,
+            max_events: 10,
+            qa_per_domain: 8,
+            docs_per_domain: 12,
+            corpus_docs: 16,
+            max_base_load: 60,
+            bug_rate: 0.0,
+        }
+    }
+}
+
+fn random_pattern(rng: &mut Rng, gc: &GenConfig) -> SkewPattern {
+    match rng.below(3) {
+        0 => SkewPattern::Balanced,
+        1 => {
+            let frac = if rng.chance(gc.bug_rate) {
+                // injected bug: out-of-range frac the validation fix rejects
+                1.0 + rng.range_f64(0.1, 1.0)
+            } else if rng.chance(0.2) {
+                // boundary values are part of the valid grammar
+                if rng.chance(0.5) {
+                    0.0
+                } else {
+                    1.0
+                }
+            } else {
+                rng.range_f64(0.0, 1.0)
+            };
+            SkewPattern::Primary { domain: rng.below(gc.n_domains), frac }
+        }
+        _ => SkewPattern::Dirichlet { alpha: rng.range_f64(0.05, 5.0) },
+    }
+}
+
+/// Generate one random-but-valid scenario from `seed`. Deterministic:
+/// the same `(seed, config)` always yields the same timeline.
+pub fn generate_scenario(seed: u64, gc: &GenConfig) -> Scenario {
+    let mut rng = Rng::new(seed);
+    let slots = 2 + rng.below(gc.max_slots.saturating_sub(1).max(1));
+    let trace = if rng.chance(0.7) {
+        Some(TraceConfig {
+            slots,
+            base: 5 + rng.below(gc.max_base_load.max(6) - 5),
+            diurnal_amp: rng.range_f64(0.0, 0.6),
+            period: 2 + rng.below(slots),
+            burst_prob: rng.range_f64(0.0, 0.3),
+            burst_mult: rng.range_f64(1.0, 2.5),
+            // kept within i64 range so emitted fixture TOML reparses
+            seed: rng.below(1 << 31) as u64,
+        })
+    } else {
+        None
+    };
+    let n_events = rng.below(gc.max_events + 1);
+    let mut events = Vec::with_capacity(n_events);
+    for _ in 0..n_events {
+        let slot = rng.below(slots);
+        let node = rng.below(gc.n_nodes);
+        let event = match rng.below(7) {
+            0 => ScenarioEvent::NodeDown { node },
+            1 => ScenarioEvent::NodeUp { node },
+            2 => ScenarioEvent::CapacityScale { node, factor: rng.range_f64(0.05, 4.0) },
+            3 => ScenarioEvent::SloChange { slo_s: rng.range_f64(1.0, 30.0) },
+            4 => ScenarioEvent::CorpusIngest {
+                node,
+                docs: rng.below(20),
+                domain: rng.below(gc.n_domains),
+            },
+            5 => ScenarioEvent::BurstOverride {
+                // zero-query bursts (an empty live slot) are a first-class
+                // part of the grammar — run_slot(&[]) must stay finite
+                queries: if rng.chance(0.25) { 0 } else { rng.below(200) },
+            },
+            _ => ScenarioEvent::SkewShift { pattern: random_pattern(&mut rng, gc) },
+        };
+        events.push(TimedEvent { slot, event });
+    }
+    // stable sort: same-slot events keep generation order, matching the
+    // parser's same-slot file-order semantics
+    events.sort_by_key(|e| e.slot);
+    Scenario { name: format!("fuzz-{seed:016x}"), slots: Some(slots), trace, events }
+}
+
+/// The experiment config one fuzz case replays under: the paper cluster
+/// shape at the generator's reduced corpus scale, with the case's
+/// allocator and (optionally) the LRU answer/retrieval cache enabled so
+/// the staleness invariant is exercised.
+pub fn fuzz_experiment_config(
+    gc: &GenConfig,
+    seed: u64,
+    allocator: AllocatorKind,
+    cached: bool,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.seed = seed;
+    cfg.qa_per_domain = gc.qa_per_domain;
+    cfg.docs_per_domain = gc.docs_per_domain;
+    cfg.allocator = allocator;
+    if cached {
+        cfg.cache = CacheSpec { kind: "lru".into(), capacity_mb: 4, ..CacheSpec::default() };
+    }
+    for n in cfg.nodes.iter_mut() {
+        n.corpus_docs = gc.corpus_docs;
+        if cached {
+            n.cache = cfg.cache.clone();
+        }
+    }
+    cfg
+}

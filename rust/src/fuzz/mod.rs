@@ -1,0 +1,269 @@
+//! Scenario fuzzing engine: seeded timeline generator + invariant
+//! oracle + failure shrinker (`coedge fuzz`).
+//!
+//! The paper's whole premise is scheduling under *fluctuating,
+//! unpredictable* conditions (§III dynamics, §IV-B/C adaptation under
+//! churn and load shifts), yet hand-written fixtures only ever exercise
+//! the timelines someone thought to write down. This tier closes the
+//! gap ("as many scenarios as you can imagine", per the roadmap's
+//! north-star):
+//!
+//! - [`generator`] produces random-but-valid [`Scenario`] timelines from
+//!   a seed — node churn, capacity scaling, SLO changes, zero-query
+//!   bursts, boundary-`frac` skew shifts, corpus ingest, varied arrival
+//!   traces;
+//! - [`oracle`] replays each timeline on a fresh seeded coordinator and
+//!   checks the engine's property invariants (conservation,
+//!   proportions, routing, finiteness, cache staleness) plus run-to-run
+//!   transcript byte-equality;
+//! - [`shrinker`] minimizes any failing timeline by event deletion and
+//!   slot/parameter reduction, emitting the minimal case as committable
+//!   fixture TOML + a repro command.
+//!
+//! [`run_fuzz`] fans the sweep out on
+//! [`parallel_map`](crate::util::threadpool::parallel_map) with
+//! index-ordered collection, so `BENCH_fuzz.json` and the failure
+//! report are byte-identical across runs and thread counts (ADR-001:
+//! modeled quantities only, never wall-clock). CI runs the sweep twice
+//! and byte-diffs both artifacts.
+//!
+//! Every case is self-describing: case `i` of a sweep with base seed
+//! `S` uses seed `S + i`, and derives its allocator and cache flag from
+//! that seed — so `coedge fuzz --count 1 --seed S+i` replays exactly
+//! the case a larger sweep flagged.
+
+pub mod generator;
+pub mod oracle;
+pub mod shrinker;
+
+use std::path::{Path, PathBuf};
+
+use crate::bench_harness::{write_bench_json, BenchCase};
+use crate::config::AllocatorKind;
+use crate::scenario::Scenario;
+use crate::util::threadpool::parallel_map;
+use crate::Result;
+pub use generator::{generate_scenario, GenConfig};
+pub use oracle::{OracleConfig, Violation};
+pub use shrinker::{shrink, ShrinkOutcome};
+
+/// One fuzz sweep's parameters.
+#[derive(Clone, Debug)]
+pub struct FuzzConfig {
+    /// Timelines to generate and check.
+    pub count: usize,
+    /// Base seed; case `i` uses seed `base + i`.
+    pub seed: u64,
+    /// Pin every case to one allocator; `None` derives the allocator
+    /// from each case's seed, cycling all built-in kinds.
+    pub allocator: Option<AllocatorKind>,
+    /// Fan-out width; 0 = one worker per core. Never changes output
+    /// bytes (index-ordered collection).
+    pub threads: usize,
+    /// Generator bounds (cluster shape, timeline size, bug injection).
+    pub gen: GenConfig,
+    /// Skip scenario validation before replay — the injected-bug hook
+    /// for tests; production sweeps keep this `false`.
+    pub skip_validation: bool,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        FuzzConfig {
+            count: 100,
+            seed: 1,
+            allocator: None,
+            threads: 0,
+            gen: GenConfig::default(),
+            skip_validation: false,
+        }
+    }
+}
+
+/// Seed of case `i` in a sweep with base seed `base`. Additive on
+/// purpose: the repro command for a flagged case is just
+/// `coedge fuzz --count 1 --seed <case_seed>`.
+pub fn case_seed(base: u64, index: usize) -> u64 {
+    base.wrapping_add(index as u64)
+}
+
+/// Allocator a case runs under when none is pinned: derived from the
+/// case seed (not the sweep index), so a single-case repro picks the
+/// same allocator the sweep did.
+pub fn case_allocator(seed: u64) -> AllocatorKind {
+    AllocatorKind::ALL[(seed % AllocatorKind::ALL.len() as u64) as usize]
+}
+
+/// Whether a case runs with the cache tier enabled (every third seed,
+/// derived from the seed for the same repro-stability reason).
+pub fn case_cached(seed: u64) -> bool {
+    seed % 3 == 2
+}
+
+/// Outcome of one fuzz case.
+pub struct CaseOutcome {
+    /// Sweep index of the case.
+    pub index: usize,
+    /// The case's seed (`base + index`; drives generator and replay).
+    pub seed: u64,
+    /// Allocator the case ran under.
+    pub allocator: AllocatorKind,
+    /// Whether the cache tier was enabled.
+    pub cached: bool,
+    /// Slots the generated timeline ran.
+    pub slots: usize,
+    /// Events in the generated timeline.
+    pub events: usize,
+    /// Total queries replayed.
+    pub queries: usize,
+    /// Invariant violations (empty = passed).
+    pub violations: Vec<Violation>,
+    /// Minimized repro, present iff the case failed.
+    pub shrunk: Option<ShrinkOutcome>,
+}
+
+/// Everything one sweep produced, in case order.
+pub struct FuzzReport {
+    /// Base seed of the sweep.
+    pub seed: u64,
+    /// Per-case outcomes, index-ordered.
+    pub cases: Vec<CaseOutcome>,
+}
+
+/// Run one fuzz case end to end: generate, replay under the oracle,
+/// and shrink on failure.
+pub fn run_case(cfg: &FuzzConfig, index: usize) -> CaseOutcome {
+    let seed = case_seed(cfg.seed, index);
+    let allocator = cfg.allocator.unwrap_or_else(|| case_allocator(seed));
+    let cached = case_cached(seed);
+    let oc = OracleConfig { seed, allocator, cached, skip_validation: cfg.skip_validation };
+    let sc = generate_scenario(seed, &cfg.gen);
+    let checked = oracle::check_scenario(&sc, &cfg.gen, &oc);
+    let shrunk = if checked.violations.is_empty() {
+        None
+    } else {
+        let fails = |cand: &Scenario| !oracle::check_scenario(cand, &cfg.gen, &oc).violations.is_empty();
+        Some(shrink(&sc, fails))
+    };
+    CaseOutcome {
+        index,
+        seed,
+        allocator,
+        cached,
+        slots: checked.slots,
+        events: sc.events.len(),
+        queries: checked.queries,
+        violations: checked.violations,
+        shrunk,
+    }
+}
+
+/// Run the sweep: `cfg.count` cases fanned out on `parallel_map` with
+/// index-ordered collection — the report is byte-deterministic across
+/// runs and thread counts.
+pub fn run_fuzz(cfg: &FuzzConfig) -> FuzzReport {
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.threads
+    };
+    let cases = parallel_map(cfg.count, threads, |i| run_case(cfg, i));
+    FuzzReport { seed: cfg.seed, cases }
+}
+
+impl FuzzReport {
+    /// The failing cases, in sweep order.
+    pub fn failures(&self) -> Vec<&CaseOutcome> {
+        self.cases.iter().filter(|c| !c.violations.is_empty()).collect()
+    }
+
+    /// Paper-bench cases for `BENCH_fuzz.json`: a sweep summary plus one
+    /// row per allocator. Modeled quantities only (counts — never
+    /// wall-clock), per ADR-001.
+    pub fn to_bench_cases(&self) -> Vec<BenchCase> {
+        let sum = |f: fn(&CaseOutcome) -> usize| -> f64 {
+            self.cases.iter().map(|c| f(c) as f64).sum()
+        };
+        let mut out = vec![BenchCase::new("fuzz/summary")
+            .field("cases", self.cases.len() as f64)
+            .field("failures", self.failures().len() as f64)
+            .field("violations", sum(|c| c.violations.len()))
+            .field("events", sum(|c| c.events))
+            .field("slots", sum(|c| c.slots))
+            .field("queries", sum(|c| c.queries))];
+        for kind in AllocatorKind::ALL {
+            let cases: Vec<&CaseOutcome> =
+                self.cases.iter().filter(|c| c.allocator == kind).collect();
+            if cases.is_empty() {
+                continue;
+            }
+            out.push(
+                BenchCase::new(format!("fuzz/{kind}"))
+                    .field("cases", cases.len() as f64)
+                    .field("failures", cases.iter().filter(|c| !c.violations.is_empty()).count() as f64)
+                    .field("events", cases.iter().map(|c| c.events as f64).sum())
+                    .field("slots", cases.iter().map(|c| c.slots as f64).sum())
+                    .field("queries", cases.iter().map(|c| c.queries as f64).sum()),
+            );
+        }
+        out
+    }
+
+    /// Deterministic failure report: empty string when the sweep is
+    /// clean, else one block per failing case with its violations, the
+    /// minimized fixture TOML, and the repro command.
+    pub fn failure_report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for c in self.failures() {
+            let _ = writeln!(
+                out,
+                "case {} seed {} allocator {} cache {}",
+                c.index,
+                c.seed,
+                c.allocator,
+                if c.cached { "lru" } else { "none" }
+            );
+            for v in &c.violations {
+                let _ = writeln!(out, "  {v}");
+            }
+            if let Some(s) = &c.shrunk {
+                let _ = writeln!(
+                    out,
+                    "  minimized to {} event(s) in {} steps:",
+                    s.scenario.events.len(),
+                    s.steps
+                );
+                for line in s.toml.lines() {
+                    let _ = writeln!(out, "    {line}");
+                }
+            }
+            let _ = writeln!(
+                out,
+                "  repro: coedge fuzz --count 1 --seed {} --allocator {}",
+                c.seed, c.allocator
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `BENCH_fuzz.json`, the failure report, and one minimized
+    /// fixture TOML per failing case into `dir`. Returns the written
+    /// paths (bench json first).
+    pub fn write_artifacts(&self, dir: &Path) -> Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let mut paths = vec![write_bench_json(dir, "fuzz", &self.to_bench_cases())?];
+        let report_path = dir.join("FUZZ_failures.txt");
+        std::fs::write(&report_path, self.failure_report())?;
+        paths.push(report_path);
+        for c in self.failures() {
+            if let Some(s) = &c.shrunk {
+                let p = dir.join(format!("fuzz_min_seed{}.toml", c.seed));
+                std::fs::write(&p, &s.toml)?;
+                paths.push(p);
+            }
+        }
+        Ok(paths)
+    }
+}

@@ -1,0 +1,497 @@
+//! Invariant oracle: replay a scenario and check every property the
+//! engine guarantees.
+//!
+//! The invariants are the same ones `tests/property_invariants.rs`
+//! asserts, factored into reusable functions that return [`Violation`]s
+//! instead of panicking — the fuzzer needs failures as data (to count,
+//! render, and hand to the shrinker), and the property tests consume the
+//! same functions so the two suites can never drift apart:
+//!
+//! - **conservation** — every sampled query id appears exactly once, in
+//!   order, in the slot's outcomes;
+//! - **proportions** — the routing proportions sum to 1 iff the slot is
+//!   nonempty and any node is live, and are all-zero otherwise;
+//! - **routing** — no query is ever routed to a down node; a shed
+//!   (never-routed) outcome only occurs when every node is down;
+//! - **finiteness** — every numeric quantity in the report and in the
+//!   serialized transcript is finite (the JSON writer would emit a
+//!   literal `NaN`, which is not JSON, so this is load-bearing);
+//! - **cache staleness** — a cached answer is never served for a
+//!   `(node, domain)` whose corpus changed after the entry was written,
+//!   is bitwise-equal to the serve that wrote it, and never survives a
+//!   skew-shift flush;
+//! - **determinism** — an independent replay of the same timeline on a
+//!   freshly built coordinator produces a byte-identical transcript.
+
+use std::collections::HashMap;
+
+use super::generator::{fuzz_experiment_config, GenConfig};
+use crate::config::AllocatorKind;
+use crate::coordinator::{Coordinator, CoordinatorBuilder, SlotReport};
+use crate::corpus::synth::SyntheticDataset;
+use crate::metrics::QualityScores;
+use crate::router::capacity::CapacityModel;
+use crate::scenario::transcript::RunTranscript;
+use crate::scenario::{Scenario, ScenarioEvent, ScenarioRunner};
+use crate::util::json::Json;
+
+/// One invariant violation: which invariant, where, and what happened.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Stable invariant key (`conservation`, `proportions`, `routing`,
+    /// `finiteness`, `cache-staleness`, `determinism`, `run-error`).
+    pub invariant: &'static str,
+    /// Slot the violation occurred in, when it is slot-local.
+    pub slot: Option<usize>,
+    /// Human-readable description of the observed breakage.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.slot {
+            Some(s) => write!(f, "[{} @ slot {s}] {}", self.invariant, self.detail),
+            None => write!(f, "[{}] {}", self.invariant, self.detail),
+        }
+    }
+}
+
+/// Conservation: the report accounts every sampled query exactly once,
+/// in sampling order.
+pub fn check_conservation(slot: usize, qids: &[usize], r: &SlotReport) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if r.queries != qids.len() || r.outcomes.len() != qids.len() {
+        out.push(Violation {
+            invariant: "conservation",
+            slot: Some(slot),
+            detail: format!(
+                "sampled {} queries but report has queries={} outcomes={}",
+                qids.len(),
+                r.queries,
+                r.outcomes.len()
+            ),
+        });
+        return out;
+    }
+    for (i, (o, &q)) in r.outcomes.iter().zip(qids).enumerate() {
+        if o.qa_id != q {
+            out.push(Violation {
+                invariant: "conservation",
+                slot: Some(slot),
+                detail: format!("outcome {i} is qa {} but qa {q} was sampled there", o.qa_id),
+            });
+            return out;
+        }
+    }
+    out
+}
+
+/// Proportions: a distribution iff anything could run (nonempty slot,
+/// some node live); all-zero otherwise.
+pub fn check_proportions(slot: usize, r: &SlotReport) -> Vec<Violation> {
+    let any_live = r.active.iter().any(|&a| a);
+    let psum: f64 = r.proportions.iter().sum();
+    let ok = if r.queries > 0 && any_live { (psum - 1.0).abs() < 1e-9 } else { psum == 0.0 };
+    if ok {
+        Vec::new()
+    } else {
+        vec![Violation {
+            invariant: "proportions",
+            slot: Some(slot),
+            detail: format!(
+                "proportions sum to {psum} with {} queries and any_live={any_live}",
+                r.queries
+            ),
+        }]
+    }
+}
+
+/// Routing: never to a down or out-of-range node; a shed (never-routed)
+/// outcome only when every node is down, and always dropped.
+pub fn check_routing(slot: usize, r: &SlotReport) -> Vec<Violation> {
+    let any_live = r.active.iter().any(|&a| a);
+    let mut out = Vec::new();
+    for o in &r.outcomes {
+        if o.node == usize::MAX {
+            if any_live || !o.dropped {
+                out.push(Violation {
+                    invariant: "routing",
+                    slot: Some(slot),
+                    detail: format!(
+                        "qa {} shed (never routed) with any_live={any_live} dropped={}",
+                        o.qa_id, o.dropped
+                    ),
+                });
+            }
+        } else if o.node >= r.active.len() || !r.active[o.node] {
+            out.push(Violation {
+                invariant: "routing",
+                slot: Some(slot),
+                detail: format!("qa {} routed to down/out-of-range node {}", o.qa_id, o.node),
+            });
+        }
+    }
+    out
+}
+
+fn finite_scores(s: &QualityScores) -> bool {
+    [s.rouge1, s.rouge2, s.rouge_l, s.bleu4, s.meteor, s.bert_score]
+        .iter()
+        .all(|x| x.is_finite())
+}
+
+/// Finiteness of the slot report: every modeled numeric quantity that
+/// feeds the transcript, the allocator feedback, or downstream
+/// aggregation must be finite.
+pub fn check_report_finite(slot: usize, r: &SlotReport) -> Vec<Violation> {
+    let mut bad: Vec<String> = Vec::new();
+    if !r.drop_rate.is_finite() {
+        bad.push(format!("drop_rate={}", r.drop_rate));
+    }
+    if !r.latency_s.is_finite() {
+        bad.push(format!("latency_s={}", r.latency_s));
+    }
+    if !r.slo_s.is_finite() {
+        bad.push(format!("slo_s={}", r.slo_s));
+    }
+    if r.proportions.iter().any(|p| !p.is_finite()) {
+        bad.push(format!("proportions={:?}", r.proportions));
+    }
+    if !finite_scores(&r.mean_scores) {
+        bad.push(format!("mean_scores={:?}", r.mean_scores));
+    }
+    for o in &r.outcomes {
+        if !o.feedback.is_finite() || !o.latency_s.is_finite() || !finite_scores(&o.scores) {
+            bad.push(format!("outcome qa {} has non-finite feedback/latency/scores", o.qa_id));
+            break;
+        }
+    }
+    bad.into_iter()
+        .map(|detail| Violation { invariant: "finiteness", slot: Some(slot), detail })
+        .collect()
+}
+
+fn scan_json_finite(v: &Json, path: &str, out: &mut Vec<Violation>) {
+    match v {
+        Json::Num(x) if !x.is_finite() => out.push(Violation {
+            invariant: "finiteness",
+            slot: None,
+            detail: format!("transcript field {path} is {x}"),
+        }),
+        Json::Arr(xs) => {
+            for (i, x) in xs.iter().enumerate() {
+                scan_json_finite(x, &format!("{path}[{i}]"), out);
+            }
+        }
+        Json::Obj(m) => {
+            for (k, x) in m {
+                scan_json_finite(x, &format!("{path}.{k}"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Every transcript line parses as JSON and contains only finite
+/// numbers. Load-bearing: the JSON writer would serialize an f64 NaN as
+/// a literal `NaN`, which no parser accepts — so a NaN anywhere in the
+/// pipeline surfaces here even if the report-level check missed it.
+pub fn check_transcript_finite(jsonl: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (i, line) in jsonl.lines().enumerate() {
+        match Json::parse(line) {
+            Ok(v) => scan_json_finite(&v, &format!("line {i}"), &mut out),
+            Err(e) => out.push(Violation {
+                invariant: "finiteness",
+                slot: None,
+                detail: format!("transcript line {i} is not valid JSON ({e}): {line}"),
+            }),
+        }
+    }
+    out
+}
+
+/// Tracks cache-staleness state across a replay: the last uncached serve
+/// per QA id, the last slot each `(node, domain)` corpus actually
+/// changed, and the last skew-shift flush. Mirrors the bookkeeping of
+/// `prop_cache_never_serves_stale_answers` exactly.
+#[derive(Default)]
+pub struct StaleTracker {
+    written: HashMap<usize, (usize, QualityScores)>,
+    changed: HashMap<(usize, usize), usize>,
+    last_skew_flush: usize,
+}
+
+impl StaleTracker {
+    /// Fresh tracker for one replay.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A corpus ingest landed at `slot`; `added` is how many documents
+    /// were actually new on the node (0 changes nothing).
+    pub fn note_ingest(&mut self, node: usize, domain: usize, slot: usize, added: usize) {
+        if added > 0 {
+            self.changed.insert((node, domain), slot);
+        }
+    }
+
+    /// A skew-shift at `slot` flushes the answer cache.
+    pub fn note_skew_flush(&mut self, slot: usize) {
+        self.last_skew_flush = slot;
+    }
+
+    /// Check one slot's outcomes and absorb its uncached serves.
+    pub fn check_slot(
+        &mut self,
+        slot: usize,
+        r: &SlotReport,
+        ds: &SyntheticDataset,
+    ) -> Vec<Violation> {
+        let mut out = Vec::new();
+        for o in &r.outcomes {
+            if o.cached {
+                let mk = |detail: String| Violation {
+                    invariant: "cache-staleness",
+                    slot: Some(slot),
+                    detail,
+                };
+                let Some(&(wslot, wscores)) = self.written.get(&o.qa_id) else {
+                    out.push(mk(format!("qa {} served from cache before any serve", o.qa_id)));
+                    continue;
+                };
+                if o.scores != wscores {
+                    out.push(mk(format!(
+                        "qa {} cached quality diverged from the serve that wrote it",
+                        o.qa_id
+                    )));
+                }
+                if o.dropped {
+                    out.push(mk(format!("qa {} is both cached and dropped", o.qa_id)));
+                }
+                let domain = ds.qa_pairs[o.qa_id].domain;
+                if let Some(&chg) = self.changed.get(&(o.node, domain)) {
+                    if wslot < chg {
+                        out.push(mk(format!(
+                            "qa {} cached at slot {wslot} but (node {}, domain {domain}) \
+                             corpus changed at slot {chg}",
+                            o.qa_id, o.node
+                        )));
+                    }
+                }
+                if wslot < self.last_skew_flush {
+                    out.push(mk(format!(
+                        "qa {} entry written at slot {wslot} survived the skew flush at {}",
+                        o.qa_id, self.last_skew_flush
+                    )));
+                }
+            } else if !o.dropped {
+                self.written.insert(o.qa_id, (slot, o.scores));
+            }
+        }
+        out
+    }
+}
+
+/// Per-case oracle parameters: which coordinator the timeline replays on.
+#[derive(Clone, Debug)]
+pub struct OracleConfig {
+    /// Experiment seed for the coordinator (dataset + sampling streams).
+    pub seed: u64,
+    /// Allocator under test.
+    pub allocator: AllocatorKind,
+    /// Enable the LRU cache tier (exercises the staleness invariant).
+    pub cached: bool,
+    /// Skip `Scenario::validate` before the replay. Production sweeps
+    /// keep this `false`; tests set it to drive deliberately-invalid
+    /// timelines (the injected-bug hook) into the engine and prove the
+    /// oracle catches what the validation fixes now reject.
+    pub skip_validation: bool,
+}
+
+/// Everything one checked replay produced.
+pub struct CheckedCase {
+    /// All violations, in slot order (empty = the case passed).
+    pub violations: Vec<Violation>,
+    /// The replay transcript (JSONL); partial if the run errored.
+    pub transcript: String,
+    /// Slots the replay ran.
+    pub slots: usize,
+    /// Total queries across all slots.
+    pub queries: usize,
+}
+
+fn build_coordinator(
+    gc: &GenConfig,
+    oc: &OracleConfig,
+) -> crate::Result<Coordinator> {
+    let cfg = fuzz_experiment_config(gc, oc.seed, oc.allocator, oc.cached);
+    let caps = vec![CapacityModel { k: 6.0, b: 0.0 }; cfg.nodes.len()];
+    CoordinatorBuilder::new(cfg).capacities(caps).build()
+}
+
+/// Replay `sc` on a fresh coordinator, checking every invariant per
+/// slot, then verify determinism: an independent replay through
+/// [`ScenarioRunner::run_observed`] on a second freshly built coordinator
+/// must produce a byte-identical transcript. Never panics — every
+/// failure (including a mid-run error) comes back as a [`Violation`].
+pub fn check_scenario(sc: &Scenario, gc: &GenConfig, oc: &OracleConfig) -> CheckedCase {
+    let mut violations = Vec::new();
+    let mut co = match build_coordinator(gc, oc) {
+        Ok(co) => co,
+        Err(e) => {
+            return CheckedCase {
+                violations: vec![Violation {
+                    invariant: "run-error",
+                    slot: None,
+                    detail: format!("coordinator build failed: {e:#}"),
+                }],
+                transcript: String::new(),
+                slots: 0,
+                queries: 0,
+            }
+        }
+    };
+    let (transcript, slots, queries, completed) =
+        replay_checked(sc, &mut co, oc, &mut violations);
+    violations.extend(check_transcript_finite(&transcript));
+    if completed {
+        // determinism: fresh coordinator, independent replay through the
+        // public ScenarioRunner path, conservation re-checked in the hook
+        match build_coordinator(gc, oc) {
+            Ok(mut co2) => {
+                let runner = ScenarioRunner::new(sc.clone());
+                let mut hook_violations = Vec::new();
+                match runner.run_observed(&mut co2, |t, qids, r| {
+                    hook_violations.extend(check_conservation(t, qids, r));
+                }) {
+                    Ok(run) => {
+                        violations.extend(hook_violations);
+                        let second = run.transcript.to_jsonl();
+                        if second != transcript {
+                            violations.push(Violation {
+                                invariant: "determinism",
+                                slot: None,
+                                detail: format!(
+                                    "independent replay diverged ({} vs {} bytes)",
+                                    transcript.len(),
+                                    second.len()
+                                ),
+                            });
+                        }
+                    }
+                    Err(e) => violations.push(Violation {
+                        invariant: "determinism",
+                        slot: None,
+                        detail: format!(
+                            "checked replay completed but the reference replay errored: {e:#}"
+                        ),
+                    }),
+                }
+            }
+            Err(e) => violations.push(Violation {
+                invariant: "run-error",
+                slot: None,
+                detail: format!("reference coordinator build failed: {e:#}"),
+            }),
+        }
+    }
+    CheckedCase { violations, transcript, slots, queries }
+}
+
+/// The checked replay loop. Mirrors [`ScenarioRunner::run`] exactly
+/// (same validation, same event order, same sampling calls — the
+/// determinism check above would flag any drift between the two), but
+/// captures what the oracle needs along the way: the sampled query ids
+/// per slot, corpus-ingest added counts, and skew-flush slots.
+fn replay_checked(
+    sc: &Scenario,
+    co: &mut Coordinator,
+    oc: &OracleConfig,
+    violations: &mut Vec<Violation>,
+) -> (String, usize, usize, bool) {
+    let run_error = |slot: Option<usize>, e: anyhow::Error| Violation {
+        invariant: "run-error",
+        slot,
+        detail: format!("{e:#}"),
+    };
+    if !oc.skip_validation {
+        if let Err(e) = sc.validate(co.nodes.len(), co.ds.num_domains()) {
+            violations.push(run_error(None, e));
+            return (String::new(), 0, 0, false);
+        }
+    }
+    let runner = ScenarioRunner::new(sc.clone());
+    let loads = runner.loads(co);
+    for te in &sc.events {
+        if te.slot >= loads.len() {
+            violations.push(run_error(
+                Some(te.slot),
+                anyhow::anyhow!(
+                    "event {} at slot {} beyond the run's {} slots",
+                    te.event.kind(),
+                    te.slot,
+                    loads.len()
+                ),
+            ));
+            return (String::new(), 0, 0, false);
+        }
+    }
+    let mut transcript = RunTranscript::new(
+        &sc.name,
+        co.cfg.seed,
+        co.nodes.len(),
+        co.allocator().name(),
+        loads.len(),
+    );
+    let mut tracker = StaleTracker::new();
+    let mut total_queries = 0usize;
+    for (t, &load) in loads.iter().enumerate() {
+        let mut burst = None;
+        let mut labels = Vec::new();
+        for te in sc.events_at(t) {
+            labels.push(te.event.label());
+            let applied = match &te.event {
+                ScenarioEvent::BurstOverride { queries } => {
+                    burst = Some(*queries);
+                    Ok(())
+                }
+                ScenarioEvent::CorpusIngest { node, docs, domain } => {
+                    co.ingest_corpus(*node, *domain, *docs).map(|added| {
+                        tracker.note_ingest(*node, *domain, t, added);
+                    })
+                }
+                ScenarioEvent::SkewShift { .. } => co.apply_event(&te.event).map(|()| {
+                    tracker.note_skew_flush(t);
+                }),
+                other => co.apply_event(other),
+            };
+            if let Err(e) = applied {
+                violations.push(run_error(Some(t), e));
+                return (transcript.to_jsonl(), t, total_queries, false);
+            }
+        }
+        let qids = match co.sample_queries(burst.unwrap_or(load)) {
+            Ok(q) => q,
+            Err(e) => {
+                violations.push(run_error(Some(t), e));
+                return (transcript.to_jsonl(), t, total_queries, false);
+            }
+        };
+        let report = match co.run_slot(&qids) {
+            Ok(r) => r,
+            Err(e) => {
+                violations.push(run_error(Some(t), e));
+                return (transcript.to_jsonl(), t, total_queries, false);
+            }
+        };
+        transcript.record(t, &labels, &report);
+        total_queries += qids.len();
+        violations.extend(check_conservation(t, &qids, &report));
+        violations.extend(check_proportions(t, &report));
+        violations.extend(check_routing(t, &report));
+        violations.extend(check_report_finite(t, &report));
+        violations.extend(tracker.check_slot(t, &report, &co.ds));
+    }
+    (transcript.to_jsonl(), loads.len(), total_queries, true)
+}

@@ -1,0 +1,106 @@
+//! Failure shrinker: minimize a violating timeline while it still fails.
+//!
+//! Classic greedy delta-debugging over the scenario grammar: delete
+//! events one at a time, drop the arrival trace, cut the slot count down
+//! to just past the last event, and reduce numeric parameters (burst
+//! queries, ingest docs) toward zero — accepting every candidate that
+//! still fails, looping until a fixpoint. The result is the minimal
+//! repro the engine still breaks on, emitted as committable fixture TOML
+//! plus the `coedge fuzz` command that replays it.
+
+use crate::scenario::{Scenario, ScenarioEvent};
+
+/// The minimized failing case.
+pub struct ShrinkOutcome {
+    /// The minimal scenario that still fails.
+    pub scenario: Scenario,
+    /// Fixture TOML of the minimal scenario (committable; reparses and
+    /// re-serializes byte-identically).
+    pub toml: String,
+    /// Candidate evaluations the shrink spent.
+    pub steps: usize,
+}
+
+/// Upper bound on candidate evaluations — shrinking is O(events²) in the
+/// worst case and each evaluation replays the scenario twice.
+const MAX_STEPS: usize = 300;
+
+/// Minimize `sc` under `still_fails` (which must return `true` for `sc`
+/// itself). Deterministic: candidates are tried in a fixed order, so the
+/// same failing input always shrinks to the same minimal repro.
+pub fn shrink(sc: &Scenario, mut still_fails: impl FnMut(&Scenario) -> bool) -> ShrinkOutcome {
+    let mut cur = sc.clone();
+    let mut steps = 0usize;
+    let mut try_candidate = |cur: &mut Scenario, cand: Scenario, steps: &mut usize| -> bool {
+        if *steps >= MAX_STEPS {
+            return false;
+        }
+        *steps += 1;
+        if still_fails(&cand) {
+            *cur = cand;
+            true
+        } else {
+            false
+        }
+    };
+    loop {
+        let mut progressed = false;
+
+        // 1. event deletion, one at a time (front to back; on success the
+        //    same index now holds the next event)
+        let mut i = 0;
+        while i < cur.events.len() {
+            let mut cand = cur.clone();
+            cand.events.remove(i);
+            if try_candidate(&mut cur, cand, &mut steps) {
+                progressed = true;
+            } else {
+                i += 1;
+            }
+        }
+
+        // 2. drop the arrival trace (fixed per-slot load is simpler)
+        if cur.trace.is_some() {
+            let cand = Scenario { trace: None, ..cur.clone() };
+            progressed |= try_candidate(&mut cur, cand, &mut steps);
+        }
+
+        // 3. cut slots down to just past the last event
+        let min_slots = cur.events.iter().map(|e| e.slot + 1).max().unwrap_or(1);
+        let slots_reducible = match cur.slots {
+            Some(s) => s > min_slots,
+            None => true,
+        };
+        if slots_reducible {
+            let cand = Scenario { slots: Some(min_slots), ..cur.clone() };
+            progressed |= try_candidate(&mut cur, cand, &mut steps);
+        }
+
+        // 4. numeric parameter reduction toward zero
+        for idx in 0..cur.events.len() {
+            let reduced = match &cur.events[idx].event {
+                ScenarioEvent::BurstOverride { queries } if *queries > 0 => {
+                    Some(ScenarioEvent::BurstOverride { queries: queries / 2 })
+                }
+                ScenarioEvent::CorpusIngest { node, docs, domain } if *docs > 0 => {
+                    Some(ScenarioEvent::CorpusIngest {
+                        node: *node,
+                        docs: docs / 2,
+                        domain: *domain,
+                    })
+                }
+                _ => None,
+            };
+            if let Some(event) = reduced {
+                let mut cand = cur.clone();
+                cand.events[idx].event = event;
+                progressed |= try_candidate(&mut cur, cand, &mut steps);
+            }
+        }
+
+        if !progressed || steps >= MAX_STEPS {
+            break;
+        }
+    }
+    ShrinkOutcome { toml: cur.to_toml(), scenario: cur, steps }
+}

@@ -24,6 +24,13 @@
 //!            fixtures, write the learning curve to BENCH_train.json and
 //!            the trained policy to a versioned checkpoint —
 //!            byte-deterministic across runs and thread counts
+//!   fuzz     [--count N] [--seed S] [--allocator KIND|all] [--threads N]
+//!            [--out-dir DIR]
+//!            generate N random-but-valid scenario timelines, replay each
+//!            under the invariant oracle on a fresh seeded coordinator,
+//!            shrink any failure to a minimal repro, and write
+//!            BENCH_fuzz.json + FUZZ_failures.txt (byte-deterministic
+//!            across runs and thread counts); exits 1 on violations
 //!   serve    [--addr A] [--config FILE] [--transcript FILE]
 //!            start the TCP serving front-end
 //!   profile  [--config FILE]                 print per-node capacity models
@@ -38,6 +45,7 @@ use coedge_rag::config::{
 };
 use coedge_rag::coordinator::{AllocatorRegistry, CoordinatorBuilder};
 use coedge_rag::experiments::EvalGrid;
+use coedge_rag::fuzz::{run_fuzz, FuzzConfig};
 use coedge_rag::policy::ppo::Backend;
 use coedge_rag::runtime::PolicyRuntime;
 use coedge_rag::scenario::{resolve_scenarios_dir, Scenario, ScenarioRunner};
@@ -436,6 +444,87 @@ fn cmd_train(flags: std::collections::HashMap<String, String>) {
     );
 }
 
+/// `fuzz`: run the scenario fuzzing sweep — seeded timeline generator →
+/// invariant oracle → failure shrinker — and write `BENCH_fuzz.json` +
+/// `FUZZ_failures.txt` (plus one minimized fixture TOML per failing
+/// case). Byte-deterministic across runs and thread counts (CI runs the
+/// sweep twice and diffs both artifacts). Exits 1 if any case fails.
+fn cmd_fuzz(flags: std::collections::HashMap<String, String>) {
+    fn numeric<T: std::str::FromStr>(
+        flags: &std::collections::HashMap<String, String>,
+        key: &str,
+        default: T,
+    ) -> T {
+        match flags.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("[coedge] --{key}: expected a number, got {v:?}");
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
+    let defaults = FuzzConfig::default();
+    let allocator = match flags.get("allocator").map(String::as_str) {
+        None | Some("all") => None,
+        Some(v) => match v.parse::<AllocatorKind>() {
+            Ok(kind) => Some(kind),
+            Err(e) => {
+                eprintln!("[coedge] --allocator: {e} (or \"all\" to cycle every kind)");
+                std::process::exit(2);
+            }
+        },
+    };
+    let fcfg = FuzzConfig {
+        count: numeric(&flags, "count", defaults.count),
+        seed: numeric(&flags, "seed", defaults.seed),
+        allocator,
+        threads: numeric(&flags, "threads", defaults.threads),
+        ..defaults
+    };
+    let out_dir = std::path::PathBuf::from(
+        flags.get("out-dir").map(String::as_str).unwrap_or("."),
+    );
+    eprintln!(
+        "[coedge] fuzz: {} cases from seed {}, allocator {}",
+        fcfg.count,
+        fcfg.seed,
+        fcfg.allocator.map(|k| k.to_string()).unwrap_or_else(|| "all (seed-cycled)".into())
+    );
+    let report = run_fuzz(&fcfg);
+
+    let mut table = Table::new(&["allocator", "cases", "failures", "events", "queries"]);
+    for kind in AllocatorKind::ALL {
+        let cases: Vec<_> = report.cases.iter().filter(|c| c.allocator == kind).collect();
+        if cases.is_empty() {
+            continue;
+        }
+        table.row(vec![
+            kind.to_string(),
+            format!("{}", cases.len()),
+            format!("{}", cases.iter().filter(|c| !c.violations.is_empty()).count()),
+            format!("{}", cases.iter().map(|c| c.events).sum::<usize>()),
+            format!("{}", cases.iter().map(|c| c.queries).sum::<usize>()),
+        ]);
+    }
+    table.print();
+
+    let paths = report.write_artifacts(&out_dir).unwrap_or_else(|e| {
+        eprintln!("[coedge] write fuzz artifacts: {e}");
+        std::process::exit(2);
+    });
+    eprintln!(
+        "[coedge] wrote {}",
+        paths.iter().map(|p| p.display().to_string()).collect::<Vec<_>>().join(", ")
+    );
+    let failures = report.failures();
+    if !failures.is_empty() {
+        eprintln!("[coedge] {} of {} cases violated invariants:", failures.len(), fcfg.count);
+        eprint!("{}", report.failure_report());
+        std::process::exit(1);
+    }
+    eprintln!("[coedge] all {} cases passed", fcfg.count);
+}
+
 fn cmd_profile(flags: std::collections::HashMap<String, String>) {
     let cfg = load_config(&flags);
     let co = CoordinatorBuilder::new(cfg).backend(Backend::Reference).build().expect("build");
@@ -502,12 +591,13 @@ fn main() {
         "run" => cmd_run(flags),
         "eval" => cmd_eval(flags),
         "train" => cmd_train(flags),
+        "fuzz" => cmd_fuzz(flags),
         "profile" => cmd_profile(flags),
         "serve" => cmd_serve(flags),
         "info" => cmd_info(),
         _ => {
             println!("coedge — CoEdge-RAG launcher");
-            println!("usage: coedge <run|eval|train|serve|profile|info> [--config FILE] [--slots N]");
+            println!("usage: coedge <run|eval|train|fuzz|serve|profile|info> [--config FILE] [--slots N]");
             println!(
                 "              [--queries N] [--slo S] [--allocator {}]",
                 AllocatorRegistry::with_builtins().kinds().join("|")
@@ -526,6 +616,8 @@ fn main() {
             println!("              [--bench-dir DIR] [--results FILE] [--checkpoint FILE]");
             println!("       coedge train [--scenarios DIR] [--replicas N] [--epochs N] [--seed S]");
             println!("              [--threads N] [--checkpoint-out FILE] [--bench-dir DIR]");
+            println!("       coedge fuzz [--count N] [--seed S] [--allocator KIND|all]");
+            println!("              [--threads N] [--out-dir DIR]");
         }
     }
 }

@@ -80,6 +80,20 @@ impl ScenarioEvent {
     }
 }
 
+/// Reject keys outside `valid` — a typo'd key (`diurnal_anp`, a stray
+/// `factor` on a `burst`, …) would otherwise silently keep its default
+/// with no diagnostic.
+fn reject_unknown_keys(t: &Table, ctx: &str, valid: &[&str]) -> Result<()> {
+    for key in t.keys() {
+        anyhow::ensure!(
+            valid.contains(&key.as_str()),
+            "unknown key {key:?} in {ctx}; valid keys: {}",
+            valid.join(", ")
+        );
+    }
+    Ok(())
+}
+
 /// An event scheduled for a specific slot.
 #[derive(Clone, Debug)]
 pub struct TimedEvent {
@@ -116,6 +130,19 @@ impl TimedEvent {
                 .and_then(|v| v.as_usize())
                 .ok_or_else(|| anyhow!("{kind} at slot {slot}: missing '{key}'"))
         };
+        let valid: &[&str] = match kind {
+            "node-down" | "node-up" => &["slot", "kind", "node"],
+            "capacity-scale" => &["slot", "kind", "node", "factor"],
+            "slo-change" => &["slot", "kind", "slo_s"],
+            "corpus-ingest" => &["slot", "kind", "node", "docs", "domain"],
+            "burst" => &["slot", "kind", "queries"],
+            "skew-shift" => &["slot", "kind", "skew", "domain", "frac", "alpha"],
+            other => anyhow::bail!(
+                "unknown scenario event kind {other:?} at slot {slot}; valid kinds: {}",
+                ScenarioEvent::KINDS.join(", ")
+            ),
+        };
+        reject_unknown_keys(t, &format!("{kind} event at slot {slot}"), valid)?;
         let event = match kind {
             "node-down" => ScenarioEvent::NodeDown { node: node()? },
             "node-up" => ScenarioEvent::NodeUp { node: node()? },
@@ -133,10 +160,7 @@ impl TimedEvent {
                 pattern: SkewPattern::from_table(t, "skew")?
                     .ok_or_else(|| anyhow!("skew-shift at slot {slot}: missing 'skew'"))?,
             },
-            other => anyhow::bail!(
-                "unknown scenario event kind {other:?} at slot {slot}; valid kinds: {}",
-                ScenarioEvent::KINDS.join(", ")
-            ),
+            _ => unreachable!("kind was matched against the same set above"),
         };
         Ok(TimedEvent { slot, event })
     }
@@ -170,6 +194,7 @@ impl Scenario {
     pub fn from_doc(doc: &TomlDoc) -> Result<Scenario> {
         let mut sc = Scenario::default();
         if let Some(t) = doc.tables.get("scenario") {
+            reject_unknown_keys(t, "[scenario]", &["name", "slots"])?;
             if let Some(v) = t.get("name").and_then(|v| v.as_str()) {
                 sc.name = v.to_string();
             }
@@ -178,6 +203,11 @@ impl Scenario {
             }
         }
         if let Some(t) = doc.tables.get("scenario.trace") {
+            reject_unknown_keys(
+                t,
+                "[scenario.trace]",
+                &["base", "period", "diurnal_amp", "burst_prob", "burst_mult", "seed"],
+            )?;
             let mut tc = TraceConfig::default();
             if let Some(v) = t.get("base").and_then(|v| v.as_usize()) {
                 tc.base = v;
@@ -195,6 +225,9 @@ impl Scenario {
                 tc.burst_mult = v;
             }
             if let Some(v) = t.get("seed").and_then(|v| v.as_i64()) {
+                // a negative seed used to wrap via `as u64` into a huge
+                // unrelated stream — reject it instead
+                anyhow::ensure!(v >= 0, "[scenario.trace] seed must be non-negative, got {v}");
                 tc.seed = v as u64;
             }
             sc.trace = Some(tc);
@@ -210,6 +243,70 @@ impl Scenario {
     /// Events scheduled for `slot`, in file order.
     pub fn events_at(&self, slot: usize) -> impl Iterator<Item = &TimedEvent> {
         self.events.iter().filter(move |e| e.slot == slot)
+    }
+
+    /// Serialize back to the `[scenario]` TOML shape [`Scenario::from_toml`]
+    /// parses — byte-deterministic (events in slot order, fixed key
+    /// order), so `parse(s.to_toml()).to_toml() == s.to_toml()`. Used by
+    /// the fuzzer's shrinker to emit a minimized failing timeline as a
+    /// committable fixture.
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        out.push_str("[scenario]\n");
+        let _ = writeln!(out, "name = {:?}", self.name);
+        if let Some(slots) = self.slots {
+            let _ = writeln!(out, "slots = {slots}");
+        }
+        if let Some(tc) = &self.trace {
+            out.push_str("\n[scenario.trace]\n");
+            let _ = writeln!(out, "base = {}", tc.base);
+            let _ = writeln!(out, "period = {}", tc.period);
+            let _ = writeln!(out, "diurnal_amp = {}", tc.diurnal_amp);
+            let _ = writeln!(out, "burst_prob = {}", tc.burst_prob);
+            let _ = writeln!(out, "burst_mult = {}", tc.burst_mult);
+            let _ = writeln!(out, "seed = {}", tc.seed);
+        }
+        for te in &self.events {
+            out.push_str("\n[[scenario.events]]\n");
+            let _ = writeln!(out, "slot = {}", te.slot);
+            let _ = writeln!(out, "kind = {:?}", te.event.kind());
+            match &te.event {
+                ScenarioEvent::NodeDown { node } | ScenarioEvent::NodeUp { node } => {
+                    let _ = writeln!(out, "node = {node}");
+                }
+                ScenarioEvent::CapacityScale { node, factor } => {
+                    let _ = writeln!(out, "node = {node}");
+                    let _ = writeln!(out, "factor = {factor}");
+                }
+                ScenarioEvent::SloChange { slo_s } => {
+                    let _ = writeln!(out, "slo_s = {slo_s}");
+                }
+                ScenarioEvent::CorpusIngest { node, docs, domain } => {
+                    let _ = writeln!(out, "node = {node}");
+                    let _ = writeln!(out, "docs = {docs}");
+                    let _ = writeln!(out, "domain = {domain}");
+                }
+                ScenarioEvent::BurstOverride { queries } => {
+                    let _ = writeln!(out, "queries = {queries}");
+                }
+                ScenarioEvent::SkewShift { pattern } => match pattern {
+                    SkewPattern::Balanced => {
+                        let _ = writeln!(out, "skew = \"balanced\"");
+                    }
+                    SkewPattern::Primary { domain, frac } => {
+                        let _ = writeln!(out, "skew = \"primary\"");
+                        let _ = writeln!(out, "domain = {domain}");
+                        let _ = writeln!(out, "frac = {frac}");
+                    }
+                    SkewPattern::Dirichlet { alpha } => {
+                        let _ = writeln!(out, "skew = \"dirichlet\"");
+                        let _ = writeln!(out, "alpha = {alpha}");
+                    }
+                },
+            }
+        }
+        out
     }
 
     /// Bounds-check every event against a built cluster — typo'd node or
@@ -231,8 +328,9 @@ impl Scenario {
                 ScenarioEvent::CapacityScale { node, factor } => {
                     check_node(*node, kind, slot)?;
                     anyhow::ensure!(
-                        factor.is_finite() && *factor >= 0.0,
-                        "{kind} at slot {slot}: factor must be finite and >= 0, got {factor}"
+                        factor.is_finite() && *factor > 0.0,
+                        "{kind} at slot {slot}: factor must be finite and > 0 (a factor of 0 \
+                         bricks the node permanently — use node-down for outages), got {factor}"
                     );
                 }
                 ScenarioEvent::SloChange { slo_s } => {
@@ -372,5 +470,96 @@ frac = 0.8
         assert!(sc.events.is_empty());
         assert!(sc.trace.is_none());
         assert_eq!(sc.slots, None);
+    }
+
+    /// Regression: unknown keys used to be silently ignored — a typo'd
+    /// `diurnal_anp` kept the default amplitude with no diagnostic.
+    #[test]
+    fn unknown_keys_are_rejected_naming_the_valid_ones() {
+        let err = Scenario::from_toml("[scenario.trace]\nbase = 40\ndiurnal_anp = 0.5\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("diurnal_anp") && err.contains("diurnal_amp"), "{err}");
+        let err = Scenario::from_toml("[scenario]\nname = \"x\"\nslot = 6\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("slot") && err.contains("slots"), "{err}");
+        // a stray `factor` on a burst event (valid only on capacity-scale)
+        let err = Scenario::from_toml(
+            "[[scenario.events]]\nslot = 1\nkind = \"burst\"\nqueries = 10\nfactor = 2.0\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("factor") && err.contains("queries"), "{err}");
+        // all documented keys on every table parse cleanly
+        assert!(Scenario::from_toml(SAMPLE).is_ok());
+    }
+
+    /// Regression: a negative trace seed used to wrap via `as u64` into a
+    /// huge unrelated stream.
+    #[test]
+    fn negative_trace_seed_is_rejected() {
+        let err = Scenario::from_toml("[scenario.trace]\nseed = -5\n").unwrap_err().to_string();
+        assert!(err.contains("non-negative") && err.contains("-5"), "{err}");
+    }
+
+    /// Regression: `capacity-scale` with `factor = 0` bricks a node
+    /// permanently (`cap_scale` sticks at 0; `node-up` cannot recover
+    /// it) — the error points at `node-down` for outages.
+    #[test]
+    fn capacity_scale_factor_zero_is_rejected() {
+        let mk = |factor: f64| Scenario {
+            events: vec![TimedEvent {
+                slot: 0,
+                event: ScenarioEvent::CapacityScale { node: 0, factor },
+            }],
+            ..Scenario::default()
+        };
+        let err = mk(0.0).validate(4, 6).unwrap_err().to_string();
+        assert!(err.contains("node-down"), "{err}");
+        assert!(mk(f64::NAN).validate(4, 6).is_err());
+        assert!(mk(0.01).validate(4, 6).is_ok());
+    }
+
+    /// `to_toml` round-trips: parsing the serialization and serializing
+    /// again is byte-identical, and the reparse validates.
+    #[test]
+    fn to_toml_round_trips_byte_identically() {
+        let sc = Scenario::from_toml(SAMPLE).unwrap();
+        let toml = sc.to_toml();
+        let re = Scenario::from_toml(&toml).unwrap();
+        assert_eq!(re.to_toml(), toml, "round-trip must be a fixpoint");
+        assert_eq!(re.events.len(), sc.events.len());
+        assert!(re.validate(4, 6).is_ok());
+        // every event kind serializes
+        let all = Scenario {
+            name: "all-kinds".into(),
+            slots: Some(3),
+            trace: Some(TraceConfig { slots: 3, base: 20, ..TraceConfig::default() }),
+            events: vec![
+                TimedEvent { slot: 0, event: ScenarioEvent::NodeDown { node: 1 } },
+                TimedEvent { slot: 0, event: ScenarioEvent::NodeUp { node: 1 } },
+                TimedEvent {
+                    slot: 1,
+                    event: ScenarioEvent::CapacityScale { node: 0, factor: 0.5 },
+                },
+                TimedEvent { slot: 1, event: ScenarioEvent::SloChange { slo_s: 7.5 } },
+                TimedEvent {
+                    slot: 1,
+                    event: ScenarioEvent::CorpusIngest { node: 2, docs: 8, domain: 3 },
+                },
+                TimedEvent { slot: 2, event: ScenarioEvent::BurstOverride { queries: 0 } },
+                TimedEvent {
+                    slot: 2,
+                    event: ScenarioEvent::SkewShift {
+                        pattern: SkewPattern::Dirichlet { alpha: 0.3 },
+                    },
+                },
+            ],
+        };
+        let toml = all.to_toml();
+        let re = Scenario::from_toml(&toml).unwrap();
+        assert_eq!(re.to_toml(), toml);
+        assert_eq!(re.events.len(), 7);
     }
 }

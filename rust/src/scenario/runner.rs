@@ -50,6 +50,19 @@ impl ScenarioRunner {
     /// events scheduled beyond the resolved slot count (a typo'd `slot`
     /// would otherwise just silently never fire).
     pub fn run(&self, co: &mut Coordinator) -> Result<ScenarioRun> {
+        self.run_observed(co, |_, _, _| {})
+    }
+
+    /// [`ScenarioRunner::run`] with a per-slot observation hook: after
+    /// each slot the hook sees `(slot, sampled query ids, report)`. This
+    /// is how the fuzzer's invariant oracle checks outcome conservation
+    /// against the exact ids the slot was asked to serve — information
+    /// the transcript alone does not carry.
+    pub fn run_observed(
+        &self,
+        co: &mut Coordinator,
+        mut observe: impl FnMut(usize, &[usize], &SlotReport),
+    ) -> Result<ScenarioRun> {
         self.scenario.validate(co.nodes.len(), co.ds.num_domains())?;
         let loads = self.loads(co);
         for te in &self.scenario.events {
@@ -83,6 +96,7 @@ impl ScenarioRunner {
             let qids = co.sample_queries(burst.unwrap_or(load))?;
             let report = co.run_slot(&qids)?;
             transcript.record(t, &labels, &report);
+            observe(t, &qids, &report);
             reports.push(report);
         }
         Ok(ScenarioRun { reports, transcript })

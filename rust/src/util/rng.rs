@@ -69,10 +69,16 @@ impl Rng {
         (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
     }
 
-    /// Uniform integer in [0, n). n must be > 0.
+    /// Uniform integer in [0, n).
+    ///
+    /// `n` must be > 0: in release builds `below(0)` returns 0, which is
+    /// **out of range** for an empty collection — a caller that indexes
+    /// with the result panics (`pool[0]` on an empty slice). Debug builds
+    /// assert so the misuse is caught in tests; release callers must
+    /// guard emptiness themselves (see `workload::sample_slot_queries`).
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
+        debug_assert!(n > 0, "Rng::below(0): empty range has no elements to sample");
         // Lemire's multiply-shift; bias is negligible for our n << 2^64.
         ((self.next_u64() as u128 * n as u128) >> 64) as usize
     }
@@ -168,8 +174,11 @@ impl Rng {
         }
     }
 
-    /// Choose one element uniformly.
+    /// Choose one element uniformly. `xs` must be non-empty: an empty
+    /// slice panics (via the index) — debug builds assert first with a
+    /// clearer message.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        debug_assert!(!xs.is_empty(), "Rng::choose on an empty slice");
         &xs[self.below(xs.len())]
     }
 }

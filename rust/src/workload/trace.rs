@@ -68,10 +68,33 @@ impl SkewPattern {
     /// Valid kind strings for TOML / scenario parsing.
     pub const KINDS: [&'static str; 3] = ["balanced", "primary", "dirichlet"];
 
+    /// Check the pattern's parameters alone (no dataset needed): `frac`
+    /// must be finite and in `[0, 1]` — out-of-range values used to flow
+    /// straight into [`domain_mix`] as negative or NaN weights, which
+    /// `Rng::sample_weighted` consumes silently (a NaN total always
+    /// returns the last index, corrupting the mix with no error).
+    /// `alpha` must be finite and > 0 for the same reason.
+    pub fn validate_params(&self) -> Result<()> {
+        match self {
+            SkewPattern::Balanced => {}
+            SkewPattern::Primary { frac, .. } => anyhow::ensure!(
+                frac.is_finite() && (0.0..=1.0).contains(frac),
+                "skew primary frac must be finite and in [0, 1], got {frac}"
+            ),
+            SkewPattern::Dirichlet { alpha } => anyhow::ensure!(
+                alpha.is_finite() && *alpha > 0.0,
+                "skew dirichlet alpha must be finite and > 0, got {alpha}"
+            ),
+        }
+        Ok(())
+    }
+
     /// Check the pattern against a dataset's domain count — the error a
     /// typo'd `domain` gets instead of an index panic deep in sampling.
+    /// Also enforces [`SkewPattern::validate_params`].
     pub fn validate(&self, nd: usize) -> Result<()> {
         anyhow::ensure!(nd > 0, "domain mix over a dataset with no domains");
+        self.validate_params()?;
         if let SkewPattern::Primary { domain, .. } = self {
             anyhow::ensure!(
                 *domain < nd,
@@ -103,6 +126,9 @@ impl SkewPattern {
                 SkewPattern::KINDS.join(", ")
             ),
         };
+        // reject out-of-range frac / alpha at parse time, where the error
+        // can still name the offending table
+        pattern.validate_params()?;
         Ok(Some(pattern))
     }
 }
@@ -133,20 +159,41 @@ pub fn domain_mix(pattern: &SkewPattern, nd: usize, rng: &mut Rng) -> Result<Vec
 }
 
 /// Sample `count` QA ids for one slot according to a domain mixture.
+///
+/// Domains with no QA pairs are dropped from the mixture (their weight
+/// redistributed over the populated domains by renormalization) — an
+/// empty pool used to reach `pool[Rng::below(0)]`, a release-mode index
+/// panic. If every domain with positive weight is empty, this is a clear
+/// error rather than a panic or a silently wrong sample.
 pub fn sample_slot_queries(
     ds: &SyntheticDataset,
     mix: &[f64],
     count: usize,
     rng: &mut Rng,
-) -> Vec<usize> {
+) -> Result<Vec<usize>> {
     let by_domain: Vec<Vec<usize>> = (0..ds.num_domains()).map(|d| ds.qa_of_domain(d)).collect();
-    (0..count)
+    // restrict the mixture to populated domains with positive finite
+    // weight; `idx` maps positions in the reduced weight vector back to
+    // domain ids (identical sampling stream to the unreduced vector,
+    // since `sample_weighted` draws exactly one value either way)
+    let idx: Vec<usize> = (0..by_domain.len())
+        .filter(|&d| !by_domain[d].is_empty() && mix.get(d).is_some_and(|&w| w > 0.0))
+        .collect();
+    let weights: Vec<f64> = idx.iter().map(|&d| mix[d]).collect();
+    let total: f64 = weights.iter().sum();
+    anyhow::ensure!(
+        total.is_finite() && total > 0.0,
+        "cannot sample queries: every domain with positive weight has no QA pairs \
+         (mix {mix:?} over {} domains)",
+        by_domain.len()
+    );
+    Ok((0..count)
         .map(|_| {
-            let d = rng.sample_weighted(mix);
+            let d = idx[rng.sample_weighted(&weights)];
             let pool = &by_domain[d];
             pool[rng.below(pool.len())]
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]
@@ -191,7 +238,7 @@ mod tests {
         let ds = build_dataset(&domainqa_spec(50, 20), 3);
         let mut rng = Rng::new(2);
         let mix = domain_mix(&SkewPattern::Primary { domain: 1, frac: 0.8 }, 6, &mut rng).unwrap();
-        let qs = sample_slot_queries(&ds, &mix, 2000, &mut rng);
+        let qs = sample_slot_queries(&ds, &mix, 2000, &mut rng).unwrap();
         assert_eq!(qs.len(), 2000);
         let d1 = qs.iter().filter(|&&q| ds.qa_pairs[q].domain == 1).count();
         let f = d1 as f64 / 2000.0;
@@ -233,6 +280,80 @@ mod tests {
         assert!(err.contains("domain 6") && err.contains("6 domains"), "{err}");
         let err = domain_mix(&SkewPattern::Balanced, 0, &mut rng).unwrap_err().to_string();
         assert!(err.contains("no domains"), "{err}");
+    }
+
+    /// Regression: `frac` outside `[0, 1]` (or NaN) used to pass
+    /// validation and produce negative/NaN weights in `domain_mix` —
+    /// `sample_weighted` then corrupted the mix silently (a NaN total
+    /// always picked the last index). Must be a clear error instead.
+    #[test]
+    fn primary_frac_out_of_range_errors() {
+        let mut rng = Rng::new(6);
+        for frac in [1.3, -0.2, f64::NAN, f64::INFINITY] {
+            let err = domain_mix(&SkewPattern::Primary { domain: 0, frac }, 6, &mut rng)
+                .expect_err(&format!("frac={frac} must be rejected"))
+                .to_string();
+            assert!(err.contains("[0, 1]"), "frac={frac}: {err}");
+        }
+        // boundary values are explicitly allowed
+        for frac in [0.0, 1.0] {
+            let w = domain_mix(&SkewPattern::Primary { domain: 2, frac }, 6, &mut rng).unwrap();
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12, "frac={frac}: {w:?}");
+            assert!(w.iter().all(|x| x.is_finite() && *x >= 0.0), "frac={frac}: {w:?}");
+        }
+    }
+
+    /// Regression: non-finite or non-positive dirichlet `alpha` must be
+    /// rejected rather than fed to `Rng::gamma` (0 and negatives hang or
+    /// NaN inside Marsaglia–Tsang).
+    #[test]
+    fn dirichlet_alpha_invalid_errors() {
+        let mut rng = Rng::new(7);
+        for alpha in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = domain_mix(&SkewPattern::Dirichlet { alpha }, 6, &mut rng)
+                .expect_err(&format!("alpha={alpha} must be rejected"))
+                .to_string();
+            assert!(err.contains("> 0"), "alpha={alpha}: {err}");
+        }
+    }
+
+    /// Regression: out-of-range parameters are rejected at TOML parse
+    /// time too, where the error can still name the offending table.
+    #[test]
+    fn skew_pattern_from_table_rejects_bad_params() {
+        use crate::util::toml::TomlDoc;
+        let doc = TomlDoc::parse("kind = \"primary\"\ndomain = 1\nfrac = 1.3\n").unwrap();
+        let err = SkewPattern::from_table(&doc.root, "kind").unwrap_err().to_string();
+        assert!(err.contains("[0, 1]"), "{err}");
+        let doc = TomlDoc::parse("kind = \"dirichlet\"\nalpha = -0.5\n").unwrap();
+        let err = SkewPattern::from_table(&doc.root, "kind").unwrap_err().to_string();
+        assert!(err.contains("> 0"), "{err}");
+    }
+
+    /// Regression: a domain with zero QA pairs used to reach
+    /// `pool[Rng::below(0)]` — an index panic in release builds (and a
+    /// debug assert in tests). Empty domains must be dropped from the
+    /// mixture, and an all-empty mixture must be a clear error.
+    #[test]
+    fn empty_domain_is_excluded_from_sampling() {
+        let mut ds = build_dataset(&domainqa_spec(20, 10), 3);
+        ds.qa_pairs.retain(|q| q.domain != 1); // empty out domain 1
+        assert!(ds.qa_of_domain(1).is_empty());
+        let mut rng = Rng::new(8);
+        // a mix that puts most of its mass on the empty domain still samples
+        let mix = domain_mix(&SkewPattern::Primary { domain: 1, frac: 0.8 }, 6, &mut rng).unwrap();
+        let qs = sample_slot_queries(&ds, &mix, 500, &mut rng).unwrap();
+        assert_eq!(qs.len(), 500);
+        let domain_of: std::collections::HashMap<usize, usize> =
+            ds.qa_pairs.iter().map(|q| (q.id, q.domain)).collect();
+        assert!(
+            qs.iter().all(|q| domain_of[q] != 1),
+            "sampled ids must never come from the empty domain"
+        );
+        // every weighted domain empty -> error, not a panic
+        ds.qa_pairs.clear();
+        let err = sample_slot_queries(&ds, &mix, 10, &mut rng).unwrap_err().to_string();
+        assert!(err.contains("no QA pairs"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Integration tests for the scenario fuzzing engine (`coedge fuzz`):
+//! generator validity, sweep determinism, the injected-bug
+//! find-and-shrink loop, and regressions for the fuzz-reachable bugs the
+//! engine fixes pinned (zero-query bursts, capacity factor 0, NaN
+//! leakage into transcripts).
+
+use coedge_rag::config::AllocatorKind;
+use coedge_rag::fuzz::oracle::{self, check_transcript_finite, OracleConfig};
+use coedge_rag::fuzz::{
+    case_allocator, case_cached, case_seed, generate_scenario, run_case, run_fuzz, shrink,
+    FuzzConfig, GenConfig,
+};
+use coedge_rag::scenario::{Scenario, ScenarioEvent, TimedEvent};
+use coedge_rag::workload::SkewPattern;
+
+/// Every generated timeline is valid against the fuzz cluster shape —
+/// a failing replay therefore always indicts the engine, not the input.
+#[test]
+fn generated_scenarios_are_valid_over_many_seeds() {
+    let gc = GenConfig::default();
+    for seed in 0..300 {
+        let sc = generate_scenario(seed, &gc);
+        sc.validate(gc.n_nodes, gc.n_domains)
+            .unwrap_or_else(|e| panic!("seed {seed} generated an invalid scenario: {e:#}"));
+        let slots = sc.slots.expect("generator always pins slots");
+        assert!(slots >= 2, "seed {seed}: degenerate slot count {slots}");
+        for te in &sc.events {
+            assert!(te.slot < slots, "seed {seed}: event beyond the timeline");
+        }
+        // events arrive sorted by slot (parser same-slot file-order semantics)
+        assert!(
+            sc.events.windows(2).all(|w| w[0].slot <= w[1].slot),
+            "seed {seed}: events out of slot order"
+        );
+    }
+}
+
+/// Same seed → same timeline, byte-for-byte; different seeds diverge.
+#[test]
+fn generator_is_seed_deterministic() {
+    let gc = GenConfig::default();
+    let a = generate_scenario(42, &gc).to_toml();
+    let b = generate_scenario(42, &gc).to_toml();
+    assert_eq!(a, b, "same seed must generate identical timelines");
+    let distinct: std::collections::HashSet<String> =
+        (0..20).map(|s| generate_scenario(s, &gc).to_toml()).collect();
+    assert!(distinct.len() > 15, "20 seeds produced only {} distinct timelines", distinct.len());
+}
+
+/// Generated timelines survive the TOML round trip byte-identically —
+/// what the shrinker emits as a fixture is exactly what replays.
+#[test]
+fn generated_scenarios_round_trip_through_toml() {
+    let gc = GenConfig::default();
+    for seed in 0..50 {
+        let sc = generate_scenario(seed, &gc);
+        let toml = sc.to_toml();
+        let reparsed = Scenario::from_toml(&toml)
+            .unwrap_or_else(|e| panic!("seed {seed}: emitted TOML does not reparse: {e:#}\n{toml}"));
+        assert_eq!(toml, reparsed.to_toml(), "seed {seed}: round trip not a fixpoint");
+    }
+}
+
+/// A production sweep is clean (zero violations) and byte-deterministic:
+/// two runs write identical artifacts, and thread count never changes
+/// output bytes (index-ordered collection per ADR-001).
+#[test]
+fn small_sweep_is_clean_and_byte_deterministic() {
+    let cfg = FuzzConfig { count: 12, seed: 1, threads: 4, ..FuzzConfig::default() };
+    let report = run_fuzz(&cfg);
+    assert!(
+        report.failures().is_empty(),
+        "production sweep found violations:\n{}",
+        report.failure_report()
+    );
+    assert_eq!(report.failure_report(), "", "clean sweep must render an empty report");
+
+    let rerun = run_fuzz(&cfg);
+    let single = run_fuzz(&FuzzConfig { threads: 1, ..cfg.clone() });
+    let dir_a = temp_dir("fuzz_det_a");
+    let dir_b = temp_dir("fuzz_det_b");
+    let dir_c = temp_dir("fuzz_det_c");
+    report.write_artifacts(&dir_a).unwrap();
+    rerun.write_artifacts(&dir_b).unwrap();
+    single.write_artifacts(&dir_c).unwrap();
+    for name in ["BENCH_fuzz.json", "FUZZ_failures.txt"] {
+        let a = std::fs::read_to_string(dir_a.join(name)).unwrap();
+        let b = std::fs::read_to_string(dir_b.join(name)).unwrap();
+        let c = std::fs::read_to_string(dir_c.join(name)).unwrap();
+        assert_eq!(a, b, "{name}: two identical sweeps diverged");
+        assert_eq!(a, c, "{name}: thread count changed output bytes");
+    }
+    assert!(std::fs::read_to_string(dir_a.join("FUZZ_failures.txt")).unwrap().is_empty());
+}
+
+/// A case flagged by a sweep replays identically as a single-case sweep
+/// seeded with the flagged case's seed — the repro command in the
+/// failure report is faithful because allocator and cache flag derive
+/// from the case seed, not the sweep index.
+#[test]
+fn single_case_repro_matches_the_sweep() {
+    let sweep = FuzzConfig { count: 6, seed: 40, threads: 1, ..FuzzConfig::default() };
+    for index in 0..sweep.count {
+        let from_sweep = run_case(&sweep, index);
+        let seed = case_seed(sweep.seed, index);
+        let repro_cfg = FuzzConfig { count: 1, seed, threads: 1, ..FuzzConfig::default() };
+        let repro = run_case(&repro_cfg, 0);
+        assert_eq!(from_sweep.seed, repro.seed);
+        assert_eq!(from_sweep.allocator, repro.allocator, "seed {seed}");
+        assert_eq!(from_sweep.cached, repro.cached, "seed {seed}");
+        assert_eq!(from_sweep.allocator, case_allocator(seed));
+        assert_eq!(from_sweep.cached, case_cached(seed));
+        assert_eq!(from_sweep.slots, repro.slots, "seed {seed}");
+        assert_eq!(from_sweep.events, repro.events, "seed {seed}");
+        assert_eq!(from_sweep.queries, repro.queries, "seed {seed}");
+        assert_eq!(from_sweep.violations.len(), repro.violations.len(), "seed {seed}");
+    }
+}
+
+/// The injected-bug hook, end to end: raise `bug_rate` so skew-shifts
+/// carry the out-of-range `frac` the validation fixes now reject, skip
+/// up-front validation so the timeline reaches the engine, and prove the
+/// oracle flags it and the shrinker minimizes it to a ≤3-event repro
+/// whose emitted TOML is itself rejected at parse time by the fix.
+#[test]
+fn injected_bug_is_found_and_shrunk_to_a_tiny_repro() {
+    let gc = GenConfig { bug_rate: 1.0, ..GenConfig::default() };
+    let (seed, sc) = (0..500)
+        .map(|s| (s, generate_scenario(s, &gc)))
+        .find(|(_, sc)| {
+            sc.events.iter().any(|te| {
+                matches!(
+                    &te.event,
+                    ScenarioEvent::SkewShift { pattern: SkewPattern::Primary { frac, .. } }
+                        if *frac > 1.0
+                )
+            })
+        })
+        .expect("bug_rate 1.0 must produce an out-of-range skew-shift within 500 seeds");
+    let oc = OracleConfig {
+        seed,
+        allocator: case_allocator(seed),
+        cached: case_cached(seed),
+        skip_validation: true,
+    };
+    let checked = oracle::check_scenario(&sc, &gc, &oc);
+    assert!(
+        !checked.violations.is_empty(),
+        "seed {seed}: the oracle missed the injected out-of-range frac"
+    );
+    assert!(
+        checked.violations.iter().any(|v| v.invariant == "run-error"),
+        "seed {seed}: expected a run-error violation, got {:?}",
+        checked.violations
+    );
+
+    let outcome = shrink(&sc, |cand| {
+        !oracle::check_scenario(cand, &gc, &oc).violations.is_empty()
+    });
+    assert!(
+        outcome.scenario.events.len() <= 3,
+        "seed {seed}: shrink left {} events (steps {})\n{}",
+        outcome.scenario.events.len(),
+        outcome.steps,
+        outcome.toml
+    );
+    // the minimal repro still fails, and its TOML is exactly the class of
+    // input the frac validation fix now rejects at parse time
+    assert!(!oracle::check_scenario(&outcome.scenario, &gc, &oc).violations.is_empty());
+    let err = Scenario::from_toml(&outcome.toml).unwrap_err().to_string();
+    assert!(err.contains("frac"), "parse error should indict frac: {err}");
+}
+
+/// Regression: a `burst queries = 0` slot (an empty live slot) replays
+/// with every invariant intact — finite report, valid transcript, no
+/// violations. Before the fix class this PR pins, empty slots were never
+/// exercised by any fixture.
+#[test]
+fn zero_query_burst_slot_replays_clean() {
+    let gc = GenConfig::default();
+    let sc = Scenario {
+        name: "zero-burst".into(),
+        slots: Some(3),
+        trace: None,
+        events: vec![
+            TimedEvent { slot: 1, event: ScenarioEvent::BurstOverride { queries: 0 } },
+        ],
+    };
+    sc.validate(gc.n_nodes, gc.n_domains).unwrap();
+    for (allocator, cached) in
+        [(AllocatorKind::Mab, false), (AllocatorKind::Oracle, true), (AllocatorKind::Ppo, false)]
+    {
+        let oc = OracleConfig { seed: 7, allocator, cached, skip_validation: false };
+        let checked = oracle::check_scenario(&sc, &gc, &oc);
+        assert!(
+            checked.violations.is_empty(),
+            "{allocator}: zero-query burst violated invariants: {:?}",
+            checked.violations
+        );
+        assert_eq!(checked.slots, 3);
+        assert!(!checked.transcript.is_empty());
+    }
+}
+
+/// Regression: `capacity-scale` with factor 0 (or a non-finite factor)
+/// is rejected — it would brick the node permanently, since `node-up`
+/// cannot undo a zeroed multiplicative scale.
+#[test]
+fn capacity_factor_zero_is_rejected_by_a_live_coordinator() {
+    use coedge_rag::coordinator::CoordinatorBuilder;
+    use coedge_rag::router::capacity::CapacityModel;
+    let gc = GenConfig::default();
+    let cfg = coedge_rag::fuzz::generator::fuzz_experiment_config(
+        &gc,
+        3,
+        AllocatorKind::Domain,
+        false,
+    );
+    let caps = vec![CapacityModel { k: 6.0, b: 0.0 }; cfg.nodes.len()];
+    let mut co = CoordinatorBuilder::new(cfg).capacities(caps).build().unwrap();
+    let err = co.scale_capacity(0, 0.0).unwrap_err().to_string();
+    assert!(err.contains("node-down"), "error should suggest node-down: {err}");
+    assert!(co.scale_capacity(0, f64::NAN).is_err());
+    assert!(co.scale_capacity(0, f64::INFINITY).is_err());
+    co.scale_capacity(0, 0.5).unwrap();
+}
+
+/// The transcript finiteness check actually catches what it claims to:
+/// the JSON writer serializes an f64 NaN as a literal `NaN`, which is
+/// not JSON — crafted lines with non-finite numbers must be flagged.
+#[test]
+fn transcript_finiteness_check_catches_crafted_nan() {
+    assert!(check_transcript_finite("{\"drop_rate\": 0.5}\n{\"lat\": [1.0, 2.0]}").is_empty());
+    let bad = check_transcript_finite("{\"drop_rate\": NaN}");
+    assert_eq!(bad.len(), 1, "literal NaN must fail to parse: {bad:?}");
+    assert_eq!(bad[0].invariant, "finiteness");
+}
+
+/// Scratch directory for artifact byte-comparisons; unique per call so
+/// parallel tests never collide.
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("coedge_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}

@@ -8,6 +8,7 @@ use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
 use coedge_rag::coordinator::CoordinatorBuilder;
 use coedge_rag::corpus::partition::{partition_corpus, NodeCorpusSpec};
 use coedge_rag::corpus::{build_dataset, domainqa_spec};
+use coedge_rag::fuzz::oracle;
 use coedge_rag::router::capacity::CapacityModel;
 use coedge_rag::scenario::ScenarioEvent;
 use coedge_rag::workload::SkewPattern;
@@ -82,6 +83,10 @@ fn prop_inter_node_conservation_and_capacity() {
 /// exactly once and in slot order, (b) emit proportions that sum to 1
 /// whenever any node is live and the slot is nonempty (all-zero
 /// otherwise), and (c) never route a query to a down node.
+///
+/// The checks themselves live in `coedge_rag::fuzz::oracle` — this test
+/// and the fuzzer consume the same functions, so the two suites cannot
+/// drift apart.
 #[test]
 fn prop_scheduling_conservation_under_random_churn() {
     let kinds = [
@@ -128,32 +133,13 @@ fn prop_scheduling_conservation_under_random_churn() {
             let r = co.run_slot(&qids).unwrap();
             let tag = format!("{allocator} slot {slot}");
 
-            // (a) conservation, in slot order
-            assert_eq!(r.queries, qids.len(), "{tag}");
-            assert_eq!(r.outcomes.len(), qids.len(), "{tag}");
-            for (o, &q) in r.outcomes.iter().zip(&qids) {
-                assert_eq!(o.qa_id, q, "{tag}: outcome order broken");
-            }
-
-            // (b) proportions form a distribution iff anything could run
-            let any_live = r.active.iter().any(|&a| a);
-            let psum: f64 = r.proportions.iter().sum();
-            if b > 0 && any_live {
-                assert!((psum - 1.0).abs() < 1e-9, "{tag}: psum={psum}");
-            } else {
-                assert_eq!(psum, 0.0, "{tag}");
-            }
-
-            // (c) no query on a down node; coordinator-shed queries are
-            // marked never-routed and only occur when everything is down
-            for o in &r.outcomes {
-                if o.node == usize::MAX {
-                    assert!(!any_live && o.dropped, "{tag}: shed outcome with live nodes");
-                } else {
-                    assert!(o.node < 4, "{tag}");
-                    assert!(r.active[o.node], "{tag}: query routed to down node {}", o.node);
-                }
-            }
+            // (a) conservation + order, (b) proportions distribution,
+            // (c) routing — plus finiteness of every reported number
+            let mut violations = oracle::check_conservation(slot, &qids, &r);
+            violations.extend(oracle::check_proportions(slot, &r));
+            violations.extend(oracle::check_routing(slot, &r));
+            violations.extend(oracle::check_report_finite(slot, &r));
+            assert!(violations.is_empty(), "{tag}: {violations:?}");
         }
     }
 }
@@ -164,11 +150,12 @@ fn prop_scheduling_conservation_under_random_churn() {
 /// (b) every cached answer's quality is bitwise equal to the serve that
 /// wrote the entry (threshold = 1.0 ⇒ exact duplicates only), and (c) no
 /// entry written before a skew-shift survives its flush.
+///
+/// The bookkeeping and checks live in `fuzz::oracle::StaleTracker` — the
+/// fuzzer replays the same logic against generated timelines.
 #[test]
 fn prop_cache_never_serves_stale_answers() {
     use coedge_rag::config::CacheSpec;
-    use coedge_rag::metrics::QualityScores;
-    use std::collections::HashMap;
 
     let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
     cfg.seed = 0xCACE;
@@ -185,21 +172,14 @@ fn prop_cache_never_serves_stale_answers() {
         .build()
         .unwrap();
     let mut rng = Rng::new(0x57A1E);
-    // last non-dropped uncached serve per qa: (slot, scores) — mirrors
-    // the answer cache's overwrite order exactly
-    let mut written: HashMap<usize, (usize, QualityScores)> = HashMap::new();
-    // last slot each (node, domain) corpus actually changed
-    let mut changed: HashMap<(usize, usize), usize> = HashMap::new();
-    let mut last_skew_flush = 0usize;
+    let mut tracker = oracle::StaleTracker::new();
     let mut hits = 0usize;
     for slot in 0..24 {
         if rng.chance(0.35) {
             if rng.chance(0.5) {
                 let (node, domain) = (rng.below(4), rng.below(6));
                 let added = co.ingest_corpus(node, domain, 1 + rng.below(6)).unwrap();
-                if added > 0 {
-                    changed.insert((node, domain), slot);
-                }
+                tracker.note_ingest(node, domain, slot, added);
             } else {
                 co.apply_event(&ScenarioEvent::SkewShift {
                     pattern: SkewPattern::Primary {
@@ -208,45 +188,15 @@ fn prop_cache_never_serves_stale_answers() {
                     },
                 })
                 .unwrap();
-                last_skew_flush = slot;
+                tracker.note_skew_flush(slot);
             }
         }
         let qids = co.sample_queries(20 + rng.below(30)).unwrap();
         let r = co.run_slot(&qids).unwrap();
-        assert_eq!(r.outcomes.len(), qids.len(), "slot {slot}: conservation");
-        for o in &r.outcomes {
-            if o.cached {
-                hits += 1;
-                let (wslot, wscores) =
-                    *written.get(&o.qa_id).expect("cache hit before any serve");
-                // (b) bitwise-equal quality at threshold = 1.0
-                assert_eq!(
-                    o.scores, wscores,
-                    "slot {slot}: qa {} cached quality diverged from the stored serve",
-                    o.qa_id
-                );
-                assert!(!o.dropped, "slot {slot}: a cached answer cannot be a drop");
-                // (a) never stale w.r.t. the serving node's corpus
-                let domain = co.ds.qa_pairs[o.qa_id].domain;
-                if let Some(&chg) = changed.get(&(o.node, domain)) {
-                    assert!(
-                        wslot >= chg,
-                        "slot {slot}: qa {} served from cache (node {}, domain {domain}) \
-                         written at slot {wslot}, but that corpus changed at slot {chg}",
-                        o.qa_id,
-                        o.node
-                    );
-                }
-                // (c) skew-shift flushes the answer cache
-                assert!(
-                    wslot >= last_skew_flush,
-                    "slot {slot}: entry written at {wslot} survived the skew flush at \
-                     {last_skew_flush}"
-                );
-            } else if !o.dropped {
-                written.insert(o.qa_id, (slot, o.scores));
-            }
-        }
+        let mut violations = oracle::check_conservation(slot, &qids, &r);
+        violations.extend(tracker.check_slot(slot, &r, &co.ds));
+        assert!(violations.is_empty(), "slot {slot}: {violations:?}");
+        hits += r.outcomes.iter().filter(|o| o.cached).count();
     }
     assert!(hits > 0, "property vacuous: the run never hit the answer cache");
 }

@@ -304,6 +304,55 @@ fn repeat_storm_replays_with_lru_hits() {
     );
 }
 
+/// Fuzz-minimized regression fixture: boundary skew fractions
+/// (`frac = 1.0` concentrates the whole mix on one domain, `frac = 0.0`
+/// excludes it). Lives under `scenarios/fuzz/` so the training
+/// curriculum and eval grids (which load the parent directory,
+/// non-recursively) never pick it up.
+#[test]
+fn fuzz_boundary_frac_replays_byte_identical() {
+    let run = replay_golden_cfg(
+        "fuzz/boundary_frac",
+        "fuzz_boundary_frac",
+        &harness_cfg(AllocatorKind::Mab),
+    );
+    assert_eq!(run.reports.len(), 6);
+    let text = run.transcript.to_jsonl();
+    assert!(text.contains("skew-shift(primary:d2@1)"), "{text}");
+    assert!(text.contains("skew-shift(primary:d2@0)"), "{text}");
+    assert!(text.contains("skew-shift(balanced)"), "{text}");
+    for (t, r) in run.reports.iter().enumerate() {
+        assert_eq!(r.outcomes.len(), r.queries, "slot {t}");
+        assert!(r.drop_rate.is_finite() && r.mean_scores.rouge_l.is_finite(), "slot {t}");
+    }
+}
+
+/// Fuzz-minimized regression fixture: the empty live slot. Zero-query
+/// bursts must leave `run_slot(&[])` finite — all-zero proportions, no
+/// outcomes, no NaN from a division by the query count.
+#[test]
+fn fuzz_zero_burst_replays_byte_identical() {
+    let run = replay_golden_cfg(
+        "fuzz/zero_burst",
+        "fuzz_zero_burst",
+        &harness_cfg(AllocatorKind::Oracle),
+    );
+    assert_eq!(run.reports.len(), 5);
+    for t in [2, 3] {
+        let r = &run.reports[t];
+        assert_eq!(r.queries, 0, "slot {t}: burst override must zero the load");
+        assert!(r.outcomes.is_empty(), "slot {t}");
+        assert_eq!(r.proportions.iter().sum::<f64>(), 0.0, "slot {t}: {:?}", r.proportions);
+        assert!(r.drop_rate.is_finite(), "slot {t}: drop_rate={}", r.drop_rate);
+        assert!(r.latency_s.is_finite(), "slot {t}: latency={}", r.latency_s);
+        assert!(r.mean_scores.rouge_l.is_finite(), "slot {t}");
+    }
+    // the non-empty slots around the gap still serve
+    assert!(run.reports[0].queries > 0);
+    assert!(run.reports[4].queries > 0);
+    assert!(run.transcript.to_jsonl().contains("capacity-scale(1,x0.25)"));
+}
+
 /// Scenario files with out-of-range targets fail fast with clear errors —
 /// before any slot runs.
 #[test]
