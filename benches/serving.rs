@@ -1,0 +1,184 @@
+//! Serving-engine scaling sweep: synchronous vs pipelined slot execution
+//! across cluster sizes far beyond the paper's 4-node testbed.
+//!
+//!     cargo bench --bench serving
+//!
+//! Sweeps 5 → 50 → 500 nodes × growing queries/slot under the paper's
+//! PPO allocator and the random floor, running every case through both
+//! the synchronous loop and the [`PipelinedExecutor`] — and asserting
+//! their reports are bitwise identical, the same invariant
+//! `tests/scenarios.rs` pins on the committed goldens. Emits
+//! `BENCH_serving.json` whose committed comparison surface is modeled
+//! only (drop rate, modeled latency, modeled pipeline occupancy);
+//! wall-clock fields (`*_wall_s`, `speedup`) are present for local
+//! reading but stripped by CI's double-run diff per ADR-001.
+//!
+//! Flags (after `--`):
+//! - `--smoke`: reduced tiers (5/50 nodes) for CI's `serving-smoke`.
+//! - `--bench-dir DIR`: directory for `BENCH_serving.json` (default `.`).
+
+use coedge_rag::bench_harness::{write_bench_json, BenchCase, Table};
+use coedge_rag::config::{
+    AllocatorKind, CacheSpec, DatasetKind, ExperimentConfig, IndexSpec, IntraStrategy, NodeConfig,
+};
+use coedge_rag::coordinator::pipeline::{modeled_pipeline_occupancy, PipelineConfig};
+use coedge_rag::coordinator::{Coordinator, CoordinatorBuilder, PipelinedExecutor, SlotReport};
+use coedge_rag::llmsim::model::ModelSize;
+use coedge_rag::router::capacity::CapacityModel;
+use coedge_rag::util::rng::Rng;
+use coedge_rag::util::timer::Timer;
+
+const SLOTS: usize = 4;
+const DOMAINS: usize = 6;
+
+/// Synthetic N-node cluster grown from the paper testbed's shape:
+/// round-robin primary domains, small per-node corpora so the 500-node
+/// tier stays index-build-bound on routing rather than on ingest.
+fn cluster_cfg(n_nodes: usize, queries_per_slot: usize, allocator: AllocatorKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.seed = 7;
+    cfg.qa_per_domain = 40;
+    cfg.docs_per_domain = 60;
+    cfg.queries_per_slot = queries_per_slot;
+    cfg.slots = SLOTS;
+    cfg.allocator = allocator;
+    // fixed small intra plan: the sweep isolates the scheduling and
+    // serving fan-out, not the per-node convex solver
+    cfg.intra = IntraStrategy::small_param(1);
+    cfg.nodes = (0..n_nodes)
+        .map(|i| NodeConfig {
+            name: format!("edge-{i:03}"),
+            gpu_speeds: vec![1.0],
+            pool: vec![ModelSize::Small],
+            primary_domains: vec![i % DOMAINS],
+            corpus_docs: 24,
+            index: IndexSpec::default(),
+            cache: CacheSpec::default(),
+        })
+        .collect();
+    cfg
+}
+
+fn build(cfg: &ExperimentConfig) -> Coordinator {
+    CoordinatorBuilder::new(cfg.clone())
+        .capacities(vec![CapacityModel { k: 2.0, b: 0.0 }; cfg.nodes.len()])
+        .build()
+        .expect("build coordinator")
+}
+
+/// Pre-sample the sweep's slot loads outside the coordinator so the sync
+/// and pipelined runs consume identical query sequences.
+fn sample_slots(cfg: &ExperimentConfig, qa_count: usize) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(cfg.seed ^ 0x5e71);
+    (0..cfg.slots)
+        .map(|_| (0..cfg.queries_per_slot).map(|_| rng.below(qa_count)).collect())
+        .collect()
+}
+
+fn run_sync(co: &mut Coordinator, slots: &[Vec<usize>]) -> Vec<SlotReport> {
+    slots.iter().map(|qids| co.run_slot(qids).expect("slot")).collect()
+}
+
+/// Bitwise comparison of everything modeled the two executors produced —
+/// the bench-level version of the golden-replay invariant.
+fn assert_bitwise_equal(sync: &[SlotReport], piped: &[SlotReport]) {
+    assert_eq!(sync.len(), piped.len());
+    for (t, (a, b)) in sync.iter().zip(piped).enumerate() {
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "latency slot {t}");
+        assert_eq!(a.drop_rate.to_bits(), b.drop_rate.to_bits(), "drop slot {t}");
+        assert_eq!(
+            a.mean_scores.rouge_l.to_bits(),
+            b.mean_scores.rouge_l.to_bits(),
+            "rouge slot {t}"
+        );
+        let nodes_a: Vec<usize> = a.outcomes.iter().map(|o| o.node).collect();
+        let nodes_b: Vec<usize> = b.outcomes.iter().map(|o| o.node).collect();
+        assert_eq!(nodes_a, nodes_b, "routing slot {t}");
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let bench_dir = args
+        .iter()
+        .position(|a| a == "--bench-dir")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| ".".to_string());
+    let bench_dir = std::path::PathBuf::from(bench_dir);
+
+    let tiers: &[usize] = if smoke { &[5, 50] } else { &[5, 50, 500] };
+    let loads: &[usize] = if smoke { &[20, 60] } else { &[100, 1000] };
+    let allocators = [AllocatorKind::Random, AllocatorKind::Ppo];
+
+    let mut cases: Vec<BenchCase> = Vec::new();
+    let mut table = Table::new(&[
+        "case", "nodes", "q/slot", "drop %", "lat(s)", "occup", "sync s", "pipe s", "speedup",
+    ]);
+    for &alloc in &allocators {
+        for &n_nodes in tiers {
+            for &qps in loads {
+                let cfg = cluster_cfg(n_nodes, qps, alloc);
+                let mut co = build(&cfg);
+                let slots = sample_slots(&cfg, co.ds.qa_pairs.len());
+
+                let t = Timer::start();
+                let sync_reports = run_sync(&mut co, &slots);
+                let sync_s = t.secs();
+
+                let mut co2 = build(&cfg);
+                let pcfg = PipelineConfig { depth: 2, encode_threads: 2 };
+                let t = Timer::start();
+                let pipe_reports = PipelinedExecutor::new(pcfg)
+                    .run(&mut co2, &slots)
+                    .expect("pipelined run");
+                let pipe_s = t.secs();
+
+                assert_bitwise_equal(&sync_reports, &pipe_reports);
+
+                // modeled comparison surface (deterministic, committed)
+                let drop_rate = sync_reports.iter().map(|r| r.drop_rate).sum::<f64>()
+                    / sync_reports.len() as f64;
+                let latency = sync_reports.iter().map(|r| r.latency_s).sum::<f64>()
+                    / sync_reports.len() as f64;
+                let slot_queries: Vec<usize> = slots.iter().map(|s| s.len()).collect();
+                let serve_s: Vec<f64> =
+                    sync_reports.iter().map(|r| r.latency_s).collect();
+                let occupancy = modeled_pipeline_occupancy(&slot_queries, &serve_s);
+
+                let name = format!("serve/{}/n{n_nodes}/q{qps}", alloc.as_str());
+                let speedup = if pipe_s > 0.0 { sync_s / pipe_s } else { 0.0 };
+                table.row(vec![
+                    name.clone(),
+                    n_nodes.to_string(),
+                    qps.to_string(),
+                    format!("{:.1}", drop_rate * 100.0),
+                    format!("{latency:.3}"),
+                    format!("{occupancy:.4}"),
+                    format!("{sync_s:.3}"),
+                    format!("{pipe_s:.3}"),
+                    format!("{speedup:.2}"),
+                ]);
+                cases.push(
+                    BenchCase::new(name)
+                        .field("nodes", n_nodes as f64)
+                        .field("queries_per_slot", qps as f64)
+                        .field("slots", SLOTS as f64)
+                        .field("drop_rate", drop_rate)
+                        .field("modeled_latency_s", latency)
+                        .field("pipeline_occupancy", occupancy)
+                        // wall-clock fields below: stripped by CI's
+                        // determinism diff per ADR-001
+                        .field("sync_wall_s", sync_s)
+                        .field("pipe_wall_s", pipe_s)
+                        .field("speedup", speedup),
+                );
+            }
+        }
+    }
+    table.print();
+    match write_bench_json(&bench_dir, "serving", &cases) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("BENCH_serving.json write failed: {e}"),
+    }
+}

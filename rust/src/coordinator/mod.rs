@@ -16,6 +16,13 @@
 //! emitted to the optional [`SlotObserver`](observer::SlotObserver) —
 //! live metrics without scraping [`SlotReport`]s.
 //!
+//! The encode phase is pure (`&self`, a deterministic stateless
+//! embedder), which opens a pipelining seam:
+//! [`run_slot_encoded`](Coordinator::run_slot_encoded) accepts
+//! pre-computed embeddings so a prefetch thread can encode slot `t+1`
+//! while slot `t` routes and serves — see [`pipeline`] for the executor
+//! that exploits it without changing a single output byte.
+//!
 //! Construction goes through [`CoordinatorBuilder`], whose stages
 //! (dataset → partition → nodes → capacity → allocator) are individually
 //! overridable. Routing policies implement the [`Allocator`] trait
@@ -26,9 +33,11 @@ pub mod allocator;
 pub mod baselines;
 mod builder;
 pub mod observer;
+pub mod pipeline;
 
 pub use allocator::{Allocator, AllocatorRegistry, Assignment, FeedbackStats, SlotContext};
 pub use builder::CoordinatorBuilder;
+pub use pipeline::{PipelineConfig, PipelinedExecutor};
 
 use crate::cache::{
     embedding_guard, quantize_embedding, CacheEntry, CachePayload, CacheSlotStats, CachedAnswer,
@@ -593,6 +602,34 @@ impl Coordinator {
 
     /// Run one complete slot for the given QA ids.
     pub fn run_slot(&mut self, qa_ids: &[usize]) -> Result<SlotReport> {
+        let t = Timer::start();
+        let embs = self.encode(qa_ids);
+        self.run_slot_encoded(qa_ids, embs, t.secs())
+    }
+
+    /// [`run_slot`](Self::run_slot) with the encode phase hoisted out: the
+    /// caller supplies the slot's embeddings (plus the wall-clock the
+    /// encode took, carried into the `Encoded` observer event). This is
+    /// the seam the pipelined executor ([`pipeline`]) drives — encode of
+    /// slot `t+1` runs on a prefetch thread while slot `t` routes and
+    /// serves here. `embs` must equal `self.encode(qa_ids)` (the embedder
+    /// is deterministic and stateless, so a clone computes identical
+    /// vectors); anything else would change routing and break transcript
+    /// byte-stability. On the all-nodes-down shed path the embeddings are
+    /// discarded and — exactly as in the synchronous path — no `Encoded`
+    /// event is emitted.
+    pub fn run_slot_encoded(
+        &mut self,
+        qa_ids: &[usize],
+        embs: Vec<Vec<f32>>,
+        encode_elapsed_s: f64,
+    ) -> Result<SlotReport> {
+        anyhow::ensure!(
+            embs.len() == qa_ids.len(),
+            "run_slot_encoded: {} embeddings for {} queries",
+            embs.len(),
+            qa_ids.len()
+        );
         let slot = self.slot_idx;
         self.slot_idx += 1;
         if !self.active.iter().any(|&a| a) {
@@ -601,9 +638,7 @@ impl Coordinator {
         let b = qa_ids.len();
         let n_nodes = self.nodes.len();
 
-        let t = Timer::start();
-        let embs = self.encode(qa_ids);
-        self.emit(&SlotEvent::Encoded { slot, queries: b, elapsed_s: t.secs() });
+        self.emit(&SlotEvent::Encoded { slot, queries: b, elapsed_s: encode_elapsed_s });
 
         // semantic answer-cache pre-pass: a hit replays the stored answer
         // (bitwise-equal scores at threshold 1.0) without ever routing the

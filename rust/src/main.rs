@@ -31,8 +31,13 @@
 //!            shrink any failure to a minimal repro, and write
 //!            BENCH_fuzz.json + FUZZ_failures.txt (byte-deterministic
 //!            across runs and thread counts); exits 1 on violations
-//!   serve    [--addr A] [--config FILE] [--transcript FILE]
-//!            start the TCP serving front-end
+//!   serve    [--addr A] [--config FILE] [--transcript FILE] [--pipeline]
+//!            [--queue-depth N] [--max-batch N] [--batch-window-ms MS]
+//!            start the TCP serving front-end: bounded admission queue
+//!            with explicit overload responses, dynamic batching, and —
+//!            with --pipeline — encode/serve overlap on the
+//!            coordinator's phase seam (wall-clock only; responses and
+//!            transcripts are byte-identical either way)
 //!   profile  [--config FILE]                 print per-node capacity models
 //!   info                                     artifact/runtime diagnostics
 
@@ -548,16 +553,47 @@ fn cmd_profile(flags: std::collections::HashMap<String, String>) {
     t.print();
 }
 
+/// `serve`: expose the coordinator over the line-JSON TCP protocol.
+/// `--pipeline` turns on the two-stage engine (encode batch k+1 while
+/// batch k serves — wall-clock only, responses identical); the admission
+/// queue is bounded by `--queue-depth` and answers overload explicitly.
 fn cmd_serve(flags: std::collections::HashMap<String, String>) {
+    fn numeric<T: std::str::FromStr>(
+        flags: &std::collections::HashMap<String, String>,
+        key: &str,
+        default: T,
+    ) -> T {
+        match flags.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("[coedge] --{key}: expected a number, got {v:?}");
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
     let cfg = load_config(&flags);
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7717".into());
     let transcript_path = flags.get("transcript").map(std::path::PathBuf::from);
+    let defaults = ServerConfig::default();
+    let scfg = ServerConfig {
+        addr,
+        transcript_path,
+        pipeline: flags.contains_key("pipeline"),
+        queue_depth: numeric(&flags, "queue-depth", defaults.queue_depth),
+        max_batch: numeric(&flags, "max-batch", defaults.max_batch),
+        batch_window_ms: numeric(&flags, "batch-window-ms", defaults.batch_window_ms),
+        ..defaults
+    };
     let co =
         CoordinatorBuilder::new(cfg).backend(backend()).build().expect("build coordinator");
     let shutdown = Arc::new(AtomicBool::new(false));
-    eprintln!("[coedge] serving on {addr} (line-JSON; send {{\"id\":1,\"qa_id\":0}})");
-    serve(co, ServerConfig { addr, transcript_path, ..Default::default() }, shutdown)
-        .expect("serve");
+    eprintln!(
+        "[coedge] serving on {} ({}, queue depth {}; line-JSON; send {{\"id\":1,\"qa_id\":0}})",
+        scfg.addr,
+        if scfg.pipeline { "pipelined" } else { "synchronous" },
+        scfg.queue_depth
+    );
+    serve(co, scfg, shutdown).expect("serve");
 }
 
 fn cmd_info() {
@@ -618,6 +654,8 @@ fn main() {
             println!("              [--threads N] [--checkpoint-out FILE] [--bench-dir DIR]");
             println!("       coedge fuzz [--count N] [--seed S] [--allocator KIND|all]");
             println!("              [--threads N] [--out-dir DIR]");
+            println!("       coedge serve [--addr A] [--pipeline] [--queue-depth N]");
+            println!("              [--max-batch N] [--batch-window-ms MS] [--transcript FILE]");
         }
     }
 }

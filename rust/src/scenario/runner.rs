@@ -3,6 +3,7 @@
 
 use super::event::{Scenario, ScenarioEvent};
 use super::transcript::RunTranscript;
+use crate::coordinator::pipeline::{PipelineConfig, PipelinedExecutor};
 use crate::coordinator::{Coordinator, SlotReport};
 use crate::workload::{arrival_trace, TraceConfig};
 use crate::Result;
@@ -99,6 +100,97 @@ impl ScenarioRunner {
             observe(t, &qids, &report);
             reports.push(report);
         }
+        Ok(ScenarioRun { reports, transcript })
+    }
+
+    /// [`ScenarioRunner::run`] through the pipelined slot executor:
+    /// encode of slot `t+1` overlaps route/serve/feedback of slot `t`.
+    ///
+    /// Query sampling is hoisted into a pre-pass. This is sound because
+    /// the coordinator's rng is consumed by sampling alone, and the only
+    /// timeline inputs that influence sampling are `skew-shift` (whose
+    /// schedule is statically known, so the pre-pass walks it) and
+    /// `burst` (resolved against the arrival trace either way). The
+    /// pre-pass draws from the rng in exactly the order the synchronous
+    /// loop would, so the sampled ids — and therefore every slot's
+    /// behavior, observer event, and transcript byte — are identical to
+    /// [`run`](Self::run); `tests/scenarios.rs` pins this for every
+    /// committed fixture at several encode-thread counts.
+    pub fn run_pipelined(
+        &self,
+        co: &mut Coordinator,
+        pcfg: &PipelineConfig,
+    ) -> Result<ScenarioRun> {
+        self.scenario.validate(co.nodes.len(), co.ds.num_domains())?;
+        let loads = self.loads(co);
+        for te in &self.scenario.events {
+            anyhow::ensure!(
+                te.slot < loads.len(),
+                "scenario event {} at slot {} is beyond the run's {} slots",
+                te.event.kind(),
+                te.slot,
+                loads.len()
+            );
+        }
+
+        // pre-sample every slot's query ids, tracking the skew-shift
+        // timeline exactly as the synchronous loop would. Crucially this
+        // sets `cfg.skew` directly instead of going through
+        // `apply_event`, which would also count cache invalidations and
+        // perturb the transcript's cache columns; the saved skew is
+        // restored before the execute pass re-applies events for real.
+        let saved_skew = co.cfg.skew.clone();
+        let mut slots: Vec<Vec<usize>> = Vec::with_capacity(loads.len());
+        let mut sample_err = None;
+        'sample: for (t, &load) in loads.iter().enumerate() {
+            let mut burst = None;
+            for te in self.scenario.events_at(t) {
+                match &te.event {
+                    ScenarioEvent::BurstOverride { queries } => burst = Some(*queries),
+                    ScenarioEvent::SkewShift { pattern } => co.cfg.skew = pattern.clone(),
+                    _ => {}
+                }
+            }
+            match co.sample_queries(burst.unwrap_or(load)) {
+                Ok(qids) => slots.push(qids),
+                Err(e) => {
+                    sample_err = Some(e);
+                    break 'sample;
+                }
+            }
+        }
+        co.cfg.skew = saved_skew;
+        if let Some(e) = sample_err {
+            return Err(e);
+        }
+
+        // event labels are static per slot; precompute so the transcript
+        // hook needs no mutable state shared with the event hook
+        let labels: Vec<Vec<String>> = (0..loads.len())
+            .map(|t| self.scenario.events_at(t).map(|te| te.event.label()).collect())
+            .collect();
+
+        let mut transcript = RunTranscript::new(
+            &self.scenario.name,
+            co.cfg.seed,
+            co.nodes.len(),
+            co.allocator().name(),
+            loads.len(),
+        );
+        let scenario = &self.scenario;
+        let reports = PipelinedExecutor::new(pcfg.clone()).run_with(
+            co,
+            &slots,
+            |co, t| {
+                for te in scenario.events_at(t) {
+                    if !matches!(te.event, ScenarioEvent::BurstOverride { .. }) {
+                        co.apply_event(&te.event)?;
+                    }
+                }
+                Ok(())
+            },
+            |t, report| transcript.record(t, &labels[t], report),
+        )?;
         Ok(ScenarioRun { reports, transcript })
     }
 }

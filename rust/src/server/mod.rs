@@ -1,28 +1,66 @@
-//! TCP serving front-end: line-delimited JSON protocol + dynamic batcher.
+//! TCP serving front-end: line-delimited JSON protocol, bounded admission
+//! queue with explicit backpressure, a dynamic batcher, and an optionally
+//! pipelined execution engine.
 //!
-//! The paper serves through vLLM; offline we expose the coordinator over a
-//! minimal wire protocol (std::net + the crate's own thread pool — tokio
-//! is unavailable in this build environment, DESIGN.md §5).
+//! The paper serves through vLLM; offline we expose the coordinator over
+//! a minimal wire protocol (std::net + the crate's own threads — tokio is
+//! unavailable in this build environment, DESIGN.md §5).
 //!
-//! Protocol (one JSON object per line):
-//!   → {"id": 7, "qa_id": 123}
-//!   ← {"id": 7, "node": 2, "dropped": false, "rouge_l": 0.61,
-//!      "latency_s": 3.2, "answer": "…"}
+//! # Wire protocol (one JSON object per line)
 //!
-//! Requests are collected by the dynamic batcher until either the batch
-//! window elapses or `max_batch` requests are pending, then dispatched as
-//! one coordinator slot — the batching policy every modern LLM server
-//! (vLLM/Orca) applies at its front door.
+//! Request: `{"id": 7, "qa_id": 123}` — `id` is an opaque client-chosen
+//! correlation number echoed back verbatim; `qa_id` indexes the loaded
+//! dataset's QA pairs.
+//!
+//! Success response:
+//! `{"id": 7, "node": 2, "dropped": false, "rouge_l": 0.61,
+//!   "bert_score": 0.74, "sim_latency_s": 3.2, "wall_s": 0.004}`
+//!
+//! - `node` — the edge node that served (or admitted then dropped) the
+//!   query. `null` when the query was **shed at the coordinator** and
+//!   never routed to any node (every node down); internally that state is
+//!   `usize::MAX`, which older builds leaked onto the wire as a
+//!   meaningless ~1.8e19 float.
+//! - `dropped` — the query missed its SLO (or was shed; shed responses
+//!   always pair `dropped: true` with `node: null`).
+//! - `sim_latency_s` — modeled latency (deterministic, ADR-001);
+//!   `wall_s` is the measured batch wall-clock and is the only
+//!   machine-dependent field.
+//!
+//! Error response: `{"id": 7, "error": "..."}`, plus
+//! `"retriable": true` when the admission queue was full — the explicit
+//! backpressure signal (the queue is bounded by
+//! [`ServerConfig::queue_depth`]; an overloaded server answers
+//! immediately instead of buffering without limit).
+//!
+//! # Engine
+//!
+//! Connections are handled by shutdown-aware reader threads that admit
+//! requests without waiting for their responses, so one connection can
+//! pipeline any number of requests (responses stream back from a
+//! per-connection writer thread and are matched by `id`; ordering across
+//! in-flight requests is not guaranteed — error responses in particular
+//! can overtake batched successes). Admitted requests are collected by
+//! the dynamic batcher until the batch window elapses or `max_batch`
+//! requests are pending — the policy every modern LLM server (vLLM/Orca)
+//! applies at its front door — then dispatched as one coordinator slot.
+//! With [`ServerConfig::pipeline`] enabled, batches flow through a
+//! two-stage engine on the coordinator's phase seam: a dedicated encode
+//! stage embeds batch `k+1` while the execute stage routes/serves batch
+//! `k` ([`Coordinator::run_slot_encoded`]). Pipelining changes wall-clock
+//! only, never responses or transcripts.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, sync_channel, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::cluster::node::QueryOutcome;
 use crate::coordinator::observer::{SlotEvent, SlotObserver};
-use crate::coordinator::Coordinator;
+use crate::coordinator::pipeline::encode_batch;
+use crate::coordinator::{Coordinator, SlotReport};
 use crate::log_info;
 use crate::util::json::Json;
 use crate::Result;
@@ -30,11 +68,29 @@ use crate::Result;
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// TCP listen address (`host:port`; port 0 binds an ephemeral port).
     pub addr: String,
-    /// Dynamic batching window.
+    /// Dynamic batching window: from the first pending request, further
+    /// requests are collected this long before the batch dispatches.
     pub batch_window_ms: u64,
-    /// Dispatch immediately once this many requests are pending.
+    /// Dispatch immediately once this many requests are pending, without
+    /// waiting out the batch window.
     pub max_batch: usize,
+    /// Bound of the admission queue (clamped to ≥ 1). When the queue is
+    /// full, new requests are answered immediately with
+    /// `{"error": "overloaded...", "retriable": true}` instead of being
+    /// buffered without limit — explicit backpressure the client can act
+    /// on (back off and retry).
+    pub queue_depth: usize,
+    /// Overlap encoding of batch `k+1` with serving of batch `k` through
+    /// the coordinator's pipelined phase seam. Affects wall-clock only;
+    /// responses and transcripts are byte-identical either way.
+    pub pipeline: bool,
+    /// Socket read timeout for connection handler threads: how often an
+    /// idle connection's reader wakes to re-check the shutdown flag.
+    /// Bounds the server's shutdown latency (idle connections used to
+    /// block `serve` forever on join).
+    pub read_timeout_ms: u64,
     /// When set, record a byte-stable [`RunTranscript`](crate::scenario::RunTranscript)
     /// of every dispatched batch and write it here at shutdown — the same
     /// JSONL format the scenario replay harness asserts on.
@@ -47,15 +103,29 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7717".into(),
             batch_window_ms: 20,
             max_batch: 256,
+            queue_depth: 1024,
+            pipeline: false,
+            read_timeout_ms: 50,
             transcript_path: None,
         }
     }
 }
 
+/// One admitted request waiting for its slot: the reply sender is a clone
+/// of its connection's writer channel, so responses stream back the
+/// moment the batch completes.
 struct Pending {
     request_id: f64,
     qa_id: usize,
     reply: Sender<String>,
+}
+
+/// A batch travelling through the execution engine: the pending requests
+/// plus, once the encode stage has run, their embeddings and the encode
+/// wall-clock.
+struct EngineBatch {
+    pending: Vec<Pending>,
+    encoded: Option<(Vec<Vec<f32>>, f64)>,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -139,7 +209,139 @@ impl SlotObserver for ServerMetrics {
     }
 }
 
-/// Run the server until `shutdown` is set. Returns the bound address.
+/// Wire response for one served outcome. A query shed at the coordinator
+/// was never routed anywhere (internally `node == usize::MAX`): its
+/// `node` field is `null` on the wire, never a cast-to-float sentinel.
+fn outcome_response(request_id: f64, out: &QueryOutcome, wall_s: f64) -> String {
+    let node =
+        if out.node == usize::MAX { Json::Null } else { Json::Num(out.node as f64) };
+    Json::obj(vec![
+        ("id", Json::Num(request_id)),
+        ("node", node),
+        ("dropped", Json::Bool(out.dropped)),
+        ("rouge_l", Json::Num(out.scores.rouge_l)),
+        ("bert_score", Json::Num(out.scores.bert_score)),
+        ("sim_latency_s", Json::Num(out.latency_s)),
+        ("wall_s", Json::Num(wall_s)),
+    ])
+    .to_string()
+}
+
+fn error_response(request_id: f64, error: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(request_id)),
+        ("error", Json::Str(error.to_string())),
+    ])
+    .to_string()
+}
+
+fn overload_response(request_id: f64, queue_depth: usize) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(request_id)),
+        (
+            "error",
+            Json::Str(format!("overloaded: admission queue full ({queue_depth} pending)")),
+        ),
+        ("retriable", Json::Bool(true)),
+    ])
+    .to_string()
+}
+
+/// Answer every pending request of one dispatched batch — each exactly
+/// once, no matter what the slot produced. A length mismatch between
+/// requests and outcomes is an internal invariant violation; it used to
+/// truncate the zip silently, dropping the unmatched requests' reply
+/// senders so their connections died mid-protocol with no response. Now
+/// the whole batch gets an explicit error response instead.
+fn respond_batch(pending: Vec<Pending>, result: Result<SlotReport>, wall_s: f64) {
+    match result {
+        Ok(report) if report.outcomes.len() == pending.len() => {
+            for (p, out) in pending.into_iter().zip(&report.outcomes) {
+                let _ = p.reply.send(outcome_response(p.request_id, out, wall_s));
+            }
+        }
+        Ok(report) => {
+            let msg = format!(
+                "internal error: slot produced {} outcomes for {} requests",
+                report.outcomes.len(),
+                pending.len()
+            );
+            for p in pending {
+                let _ = p.reply.send(error_response(p.request_id, &msg));
+            }
+        }
+        Err(e) => {
+            for p in pending {
+                let _ = p.reply.send(error_response(p.request_id, &format!("{e}")));
+            }
+        }
+    }
+}
+
+/// What became of an admission attempt.
+enum Admit {
+    /// Queued; the response will arrive via the request's reply channel.
+    Accepted,
+    /// Not queued; send this response to the client instead.
+    Rejected(String),
+}
+
+/// Admit one parsed request into the bounded queue, or produce the
+/// response to send instead: the backpressure overload response when the
+/// queue is full, a shutdown notice once the engine has gone away.
+fn admit(p: Pending, tx: &SyncSender<Pending>, queue_depth: usize) -> Admit {
+    match tx.try_send(p) {
+        Ok(()) => Admit::Accepted,
+        Err(TrySendError::Full(p)) => {
+            Admit::Rejected(overload_response(p.request_id, queue_depth))
+        }
+        Err(TrySendError::Disconnected(p)) => {
+            Admit::Rejected(error_response(p.request_id, "server shutting down"))
+        }
+    }
+}
+
+/// Parse one request line and either admit it (its response will flow
+/// through `resp`) or return the immediate response to write back
+/// (malformed request, unknown `qa_id`, backpressure, shutdown).
+fn handle_line(
+    line: &str,
+    tx: &SyncSender<Pending>,
+    resp: &Sender<String>,
+    qa_count: usize,
+    queue_depth: usize,
+) -> Option<String> {
+    let v = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return Some(
+                Json::obj(vec![("error", Json::Str(format!("parse: {e}")))]).to_string(),
+            )
+        }
+    };
+    let request_id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(-1.0);
+    let qa_id = match v.get("qa_id").and_then(|x| x.as_usize()) {
+        Some(q) => q,
+        None => return Some(error_response(request_id, "missing qa_id")),
+    };
+    if qa_id >= qa_count {
+        // validated at admission: an out-of-range id would otherwise
+        // panic the execution engine when the slot indexes the dataset
+        return Some(error_response(
+            request_id,
+            &format!("qa_id {qa_id} out of range (dataset has {qa_count} QA pairs)"),
+        ));
+    }
+    match admit(Pending { request_id, qa_id, reply: resp.clone() }, tx, queue_depth) {
+        Admit::Accepted => None,
+        Admit::Rejected(r) => Some(r),
+    }
+}
+
+/// Run the server until `shutdown` is set. Returns the bound address
+/// after a clean drain: handlers join (bounded by the read timeout), the
+/// batcher flushes its pending batch, the engine finishes in-flight
+/// slots, and the optional transcript is written.
 pub fn serve(
     mut coordinator: Coordinator,
     cfg: ServerConfig,
@@ -148,7 +350,8 @@ pub fn serve(
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     listener.set_nonblocking(true)?;
-    let (req_tx, req_rx): (Sender<Pending>, Receiver<Pending>) = channel();
+    let queue_depth = cfg.queue_depth.max(1);
+    let (req_tx, req_rx) = sync_channel::<Pending>(queue_depth);
 
     // live metrics through the coordinator's observer hook (chained after
     // any observers the caller attached)
@@ -167,10 +370,18 @@ pub fn serve(
         rec
     });
 
-    // batcher thread: owns the coordinator
+    // the encode stage needs the embedder and query texts without
+    // holding the coordinator, which the execute stage owns
+    let embedder = coordinator.embedder.clone();
+    let query_texts: Vec<String> =
+        coordinator.ds.qa_pairs.iter().map(|p| p.query.clone()).collect();
+    let qa_count = query_texts.len();
+
+    // batcher: admission queue → batches (window / max_batch policy)
+    let (batch_tx, batch_rx) = sync_channel::<EngineBatch>(1);
     let batch_shutdown = Arc::clone(&shutdown);
     let window = Duration::from_millis(cfg.batch_window_ms);
-    let max_batch = cfg.max_batch;
+    let max_batch = cfg.max_batch.max(1);
     let batcher = std::thread::Builder::new()
         .name("coedge-batcher".into())
         .spawn(move || {
@@ -206,47 +417,76 @@ pub fn serve(
                         }
                     }
                 }
-                // dispatch the batch as one coordinator slot
-                let qa_ids: Vec<usize> = pending.iter().map(|p| p.qa_id).collect();
-                let wall = Instant::now();
-                match coordinator.run_slot(&qa_ids) {
-                    Ok(report) => {
-                        let wall_s = wall.elapsed().as_secs_f64();
-                        for (p, out) in pending.drain(..).zip(report.outcomes) {
-                            let resp = Json::obj(vec![
-                                ("id", Json::Num(p.request_id)),
-                                ("node", Json::Num(out.node as f64)),
-                                ("dropped", Json::Bool(out.dropped)),
-                                ("rouge_l", Json::Num(out.scores.rouge_l)),
-                                ("bert_score", Json::Num(out.scores.bert_score)),
-                                ("sim_latency_s", Json::Num(out.latency_s)),
-                                ("wall_s", Json::Num(wall_s)),
-                            ]);
-                            let _ = p.reply.send(resp.to_string());
-                        }
-                    }
-                    Err(e) => {
-                        for p in pending.drain(..) {
-                            let resp = Json::obj(vec![
-                                ("id", Json::Num(p.request_id)),
-                                ("error", Json::Str(format!("{e}"))),
-                            ]);
-                            let _ = p.reply.send(resp.to_string());
-                        }
-                    }
+                let batch = EngineBatch { pending: std::mem::take(&mut pending), encoded: None };
+                if batch_tx.send(batch).is_err() {
+                    break; // engine gone; nothing left to dispatch to
                 }
                 deadline = None;
             }
         })
         .expect("spawn batcher");
 
+    // optional encode stage: embeds batch k+1 while the execute stage
+    // serves batch k (the coordinator's pipelined phase seam)
+    let (exec_rx, encoder) = if cfg.pipeline {
+        let (exec_tx, exec_rx) = sync_channel::<EngineBatch>(1);
+        let handle = std::thread::Builder::new()
+            .name("coedge-encoder".into())
+            .spawn(move || {
+                while let Ok(mut batch) = batch_rx.recv() {
+                    let qa_ids: Vec<usize> =
+                        batch.pending.iter().map(|p| p.qa_id).collect();
+                    let t = Instant::now();
+                    let embs = encode_batch(&embedder, &query_texts, &qa_ids, 1);
+                    batch.encoded = Some((embs, t.elapsed().as_secs_f64()));
+                    if exec_tx.send(batch).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn encoder");
+        (exec_rx, Some(handle))
+    } else {
+        (batch_rx, None)
+    };
+
+    // execute stage: owns the coordinator, runs one slot per batch, and
+    // answers every request of the batch exactly once
+    let executor = std::thread::Builder::new()
+        .name("coedge-executor".into())
+        .spawn(move || {
+            let mut co = coordinator;
+            while let Ok(batch) = exec_rx.recv() {
+                let qa_ids: Vec<usize> = batch.pending.iter().map(|p| p.qa_id).collect();
+                let wall = Instant::now();
+                let result = match batch.encoded {
+                    Some((embs, enc_s)) => co.run_slot_encoded(&qa_ids, embs, enc_s),
+                    None => co.run_slot(&qa_ids),
+                };
+                respond_batch(batch.pending, result, wall.elapsed().as_secs_f64());
+            }
+        })
+        .expect("spawn executor");
+
     // accept loop (non-blocking poll so shutdown is honored)
-    let mut handlers = Vec::new();
+    let read_timeout = Duration::from_millis(cfg.read_timeout_ms.max(1));
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !shutdown.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let tx = req_tx.clone();
-                handlers.push(std::thread::spawn(move || handle_client(stream, tx)));
+                let sd = Arc::clone(&shutdown);
+                handlers.push(
+                    std::thread::Builder::new()
+                        .name("coedge-conn".into())
+                        .spawn(move || {
+                            handle_client(stream, tx, sd, qa_count, queue_depth, read_timeout)
+                        })
+                        .expect("spawn handler"),
+                );
+                // reap handlers whose connections already closed so a
+                // long-lived server doesn't accumulate dead join handles
+                handlers.retain(|h| !h.is_finished());
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
@@ -254,11 +494,19 @@ pub fn serve(
             Err(_) => break,
         }
     }
+    // drain order matters: releasing the main admission sender and
+    // joining the handlers (each drops its clone) disconnects the
+    // batcher, whose exit drops the batch channel, which winds down the
+    // encode and execute stages in turn
     drop(req_tx);
     for h in handlers {
         let _ = h.join();
     }
     let _ = batcher.join();
+    if let Some(h) = encoder {
+        let _ = h.join();
+    }
+    let _ = executor.join();
     if let (Some(path), Some(rec)) = (&cfg.transcript_path, &recorder) {
         match rec.snapshot().write_to(path) {
             Ok(()) => log_info!("transcript written to {}", path.display()),
@@ -269,74 +517,122 @@ pub fn serve(
     Ok(addr)
 }
 
-fn handle_client(stream: TcpStream, tx: Sender<Pending>) {
-    let peer = stream.peer_addr().ok();
-    let reader = BufReader::new(match stream.try_clone() {
+/// Per-connection handler: a reader loop that admits requests without
+/// waiting for their responses (true request pipelining — a client may
+/// keep any number of requests in flight) and a writer thread that
+/// streams responses back as their batches complete. The socket read
+/// timeout makes the loop shutdown-aware: an idle connection wakes every
+/// `read_timeout` to re-check the flag instead of blocking in `read`
+/// forever — the old handler hung `serve`'s join on any idle client.
+fn handle_client(
+    stream: TcpStream,
+    tx: SyncSender<Pending>,
+    shutdown: Arc<AtomicBool>,
+    qa_count: usize,
+    queue_depth: usize,
+    read_timeout: Duration,
+) {
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
     let mut writer = stream;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match Json::parse(&line) {
-            Ok(v) => {
-                let request_id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(-1.0);
-                match v.get("qa_id").and_then(|x| x.as_usize()) {
-                    Some(qa_id) => {
-                        let (rtx, rrx) = channel();
-                        if tx.send(Pending { request_id, qa_id, reply: rtx }).is_err() {
-                            break;
-                        }
-                        match rrx.recv() {
-                            Ok(resp) => resp,
-                            Err(_) => break,
-                        }
-                    }
-                    None => Json::obj(vec![
-                        ("id", Json::Num(request_id)),
-                        ("error", Json::Str("missing qa_id".into())),
-                    ])
-                    .to_string(),
+    let (resp_tx, resp_rx) = channel::<String>();
+    let writer_thread = std::thread::Builder::new()
+        .name("coedge-conn-writer".into())
+        .spawn(move || {
+            while let Ok(resp) = resp_rx.recv() {
+                if writer.write_all(resp.as_bytes()).is_err()
+                    || writer.write_all(b"\n").is_err()
+                {
+                    break;
                 }
             }
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("parse: {e}")))]).to_string(),
-        };
-        if writer.write_all(reply.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-        {
+        })
+        .expect("spawn connection writer");
+
+    let mut buf = String::new();
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
             break;
         }
+        match reader.read_line(&mut buf) {
+            Ok(0) => break, // EOF: client closed its write side
+            Ok(_) => {
+                let line = std::mem::take(&mut buf);
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                if let Some(resp) = handle_line(line, &tx, &resp_tx, qa_count, queue_depth)
+                {
+                    if resp_tx.send(resp).is_err() {
+                        break;
+                    }
+                }
+            }
+            // timed out waiting for a newline: loop to re-check shutdown.
+            // Any partially read line stays accumulated in `buf` —
+            // read_line only returns Ok at a newline or EOF.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
     }
-    let _ = peer;
+    // release our admission sender first — the batcher only drains once
+    // every sender is gone — then let the writer flush responses still in
+    // flight before closing the connection
+    drop(tx);
+    drop(resp_tx);
+    let _ = writer_thread.join();
 }
 
-/// Minimal blocking client for examples/tests.
+/// Minimal blocking client for examples/tests, with support for request
+/// pipelining: [`send`](Client::send) any number of requests, then
+/// [`recv`](Client::recv) the responses and match them by `id` (the
+/// server does not guarantee response order across in-flight requests).
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
 }
 
 impl Client {
+    /// Connect to a running server.
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(Client { stream, reader })
     }
 
-    /// Send one request and wait for its response.
-    pub fn request(&mut self, id: u64, qa_id: usize) -> Result<Json> {
+    /// Send one request without waiting for its response (pipelining).
+    pub fn send(&mut self, id: u64, qa_id: usize) -> Result<()> {
         let req = Json::obj(vec![
             ("id", Json::Num(id as f64)),
             ("qa_id", Json::Num(qa_id as f64)),
         ]);
         self.stream.write_all(req.to_string().as_bytes())?;
         self.stream.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Block for the next response line.
+    pub fn recv(&mut self) -> Result<Json> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Json::parse(&line).map_err(|e| anyhow::anyhow!("client parse: {e}"))
+    }
+
+    /// Send one request and wait for its response.
+    pub fn request(&mut self, id: u64, qa_id: usize) -> Result<Json> {
+        self.send(id, qa_id)?;
+        self.recv()
     }
 }
 
@@ -345,6 +641,124 @@ mod tests {
     use super::*;
     use crate::config::{AllocatorKind, DatasetKind, ExperimentConfig};
     use crate::coordinator::CoordinatorBuilder;
+    use crate::metrics::QualityScores;
+    use std::sync::mpsc::Receiver;
+
+    fn pending(request_id: f64) -> (Pending, Receiver<String>) {
+        let (rtx, rrx) = channel();
+        (Pending { request_id, qa_id: 0, reply: rtx }, rrx)
+    }
+
+    fn outcome(node: usize) -> QueryOutcome {
+        QueryOutcome {
+            qa_id: 0,
+            node,
+            model_idx: None,
+            dropped: node == usize::MAX,
+            rel: 0.0,
+            scores: QualityScores::zeros(),
+            feedback: 0.0,
+            latency_s: 1.0,
+            cached: false,
+        }
+    }
+
+    fn report_with(outcomes: Vec<QueryOutcome>) -> SlotReport {
+        SlotReport {
+            queries: outcomes.len(),
+            mean_scores: QualityScores::default(),
+            drop_rate: 0.0,
+            latency_s: 1.0,
+            proportions: vec![],
+            node_search_s: vec![],
+            size_query_share: [0.0; 3],
+            size_mem_share: [0.0; 3],
+            outcomes,
+            feedback: Default::default(),
+            ppo_updates: 0,
+            active: vec![true],
+            slo_s: 15.0,
+            cache: None,
+        }
+    }
+
+    /// Regression (silent client drop): a batch whose slot produced fewer
+    /// outcomes than requests must still answer *every* request. The old
+    /// `zip` truncated, dropping the extra reply senders unanswered.
+    #[test]
+    fn respond_batch_answers_every_request_on_length_mismatch() {
+        let (pendings, receivers): (Vec<_>, Vec<_>) =
+            (0..3).map(|i| pending(i as f64)).unzip();
+        // 3 requests, but the slot only produced 2 outcomes
+        let report = report_with(vec![outcome(0), outcome(1)]);
+        respond_batch(pendings, Ok(report), 0.1);
+        for (i, rrx) in receivers.iter().enumerate() {
+            let resp = rrx.try_recv().unwrap_or_else(|_| {
+                panic!("request {i} got no response on outcome mismatch")
+            });
+            let v = Json::parse(&resp).unwrap();
+            assert_eq!(v.get("id").unwrap().as_f64().unwrap() as usize, i);
+            assert!(
+                v.get("error").is_some(),
+                "mismatched batch must surface an error: {resp}"
+            );
+        }
+    }
+
+    #[test]
+    fn respond_batch_happy_path_zips_in_order() {
+        let (pendings, receivers): (Vec<_>, Vec<_>) =
+            (0..2).map(|i| pending(i as f64)).unzip();
+        let report = report_with(vec![outcome(0), outcome(1)]);
+        respond_batch(pendings, Ok(report), 0.1);
+        for (i, rrx) in receivers.iter().enumerate() {
+            let v = Json::parse(&rrx.try_recv().unwrap()).unwrap();
+            assert_eq!(v.get("id").unwrap().as_f64().unwrap() as usize, i);
+            assert_eq!(v.get("node").unwrap().as_usize().unwrap(), i);
+            assert!(v.get("error").is_none());
+        }
+    }
+
+    /// Regression (shed-query wire encoding): `node == usize::MAX` means
+    /// "never routed" and must serialize as `null`, not as the sentinel
+    /// cast to a ~1.8e19 float.
+    #[test]
+    fn shed_outcome_serializes_node_as_null() {
+        let resp = outcome_response(7.0, &outcome(usize::MAX), 0.0);
+        let v = Json::parse(&resp).unwrap();
+        assert!(
+            matches!(v.get("node"), Some(Json::Null)),
+            "shed query must put node:null on the wire: {resp}"
+        );
+        assert_eq!(v.get("dropped").unwrap().as_bool(), Some(true));
+        // and a genuinely routed query keeps its numeric node id
+        let v = Json::parse(&outcome_response(8.0, &outcome(2), 0.0)).unwrap();
+        assert_eq!(v.get("node").unwrap().as_usize(), Some(2));
+    }
+
+    /// Backpressure: a full admission queue rejects with a retriable
+    /// overload response instead of buffering without bound.
+    #[test]
+    fn admit_rejects_with_overload_when_queue_full() {
+        let (tx, rx) = sync_channel::<Pending>(1);
+        let (first, _keep) = pending(1.0);
+        assert!(matches!(admit(first, &tx, 1), Admit::Accepted));
+        let (second, _keep2) = pending(2.0);
+        match admit(second, &tx, 1) {
+            Admit::Rejected(resp) => {
+                let v = Json::parse(&resp).unwrap();
+                assert!(v.get("error").unwrap().as_str().unwrap().contains("overloaded"));
+                assert_eq!(v.get("retriable").unwrap().as_bool(), Some(true));
+            }
+            Admit::Accepted => panic!("full queue must reject"),
+        }
+        drop(rx);
+        let (third, _keep3) = pending(3.0);
+        match admit(third, &tx, 1) {
+            Admit::Rejected(resp) => assert!(resp.contains("shutting down")),
+            Admit::Accepted => panic!("disconnected queue must reject"),
+        }
+    }
 
     #[test]
     fn server_roundtrip() {

@@ -19,7 +19,7 @@
 use std::path::{Path, PathBuf};
 
 use coedge_rag::config::{AllocatorKind, CacheSpec, DatasetKind, ExperimentConfig, IndexSpec};
-use coedge_rag::coordinator::CoordinatorBuilder;
+use coedge_rag::coordinator::{CoordinatorBuilder, PipelineConfig};
 use coedge_rag::router::capacity::CapacityModel;
 use coedge_rag::scenario::{Scenario, ScenarioRun, ScenarioRunner};
 use coedge_rag::vecdb::{FlatIndex, ShardedIndex};
@@ -351,6 +351,53 @@ fn fuzz_zero_burst_replays_byte_identical() {
     assert!(run.reports[0].queries > 0);
     assert!(run.reports[4].queries > 0);
     assert!(run.transcript.to_jsonl().contains("capacity-scale(1,x0.25)"));
+}
+
+/// The pipelined executor must be invisible in every committed byte: all
+/// golden fixtures — timeline events, arrival traces, bursts, skew
+/// shifts, node churn, live ingest, LRU caches, empty slots — replay
+/// through `ScenarioRunner::run_pipelined` with transcripts identical to
+/// the synchronous path, at encode_threads 1 and 4 (prefetch alone, and
+/// prefetch + parallel embedding). This is the ADR-001 gate for the
+/// serving engine's encode/serve overlap.
+#[test]
+fn fixtures_replay_byte_identical_under_pipelined_executor() {
+    let lru_cfg = || {
+        let mut cfg = harness_cfg(AllocatorKind::Mab);
+        cfg.cache = CacheSpec { kind: "lru".into(), capacity_mb: 8, ..CacheSpec::default() };
+        for n in cfg.nodes.iter_mut() {
+            n.cache = cfg.cache.clone();
+        }
+        cfg
+    };
+    let fixtures: Vec<(&str, ExperimentConfig)> = vec![
+        ("burst_storm", harness_cfg(AllocatorKind::Mab)),
+        ("node_churn", harness_cfg(AllocatorKind::Oracle)),
+        ("corpus_drift", harness_cfg(AllocatorKind::Domain)),
+        ("repeat_storm", lru_cfg()),
+        // fuzz/boundary_frac pins the pre-sampling skew walk: its
+        // skew-shift events must steer sampling exactly as apply_event
+        // would, without perturbing the cache-invalidation counters
+        ("fuzz/boundary_frac", harness_cfg(AllocatorKind::Mab)),
+        ("fuzz/zero_burst", harness_cfg(AllocatorKind::Oracle)),
+    ];
+    for (name, cfg) in fixtures {
+        let sync = run_fixture_cfg(name, cfg.clone()).transcript.to_jsonl();
+        for encode_threads in [1, 4] {
+            let mut co =
+                CoordinatorBuilder::new(cfg.clone()).capacities(stub_caps()).build().unwrap();
+            let pcfg = PipelineConfig { depth: 2, encode_threads };
+            let run = ScenarioRunner::new(load_scenario(name))
+                .run_pipelined(&mut co, &pcfg)
+                .expect("pipelined scenario run");
+            assert_same_transcript(
+                name,
+                &run.transcript.to_jsonl(),
+                &sync,
+                &format!("pipelined (encode_threads={encode_threads}) vs synchronous"),
+            );
+        }
+    }
 }
 
 /// Scenario files with out-of-range targets fail fast with clear errors —

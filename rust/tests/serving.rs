@@ -1,0 +1,230 @@
+//! Integration tests for the TCP serving engine: shutdown with idle
+//! connections, shed-slot wire encoding, concurrent multi-connection
+//! request pipelining, batching boundaries, and sync-vs-pipelined
+//! response parity.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use coedge_rag::config::{AllocatorKind, DatasetKind, ExperimentConfig};
+use coedge_rag::coordinator::{Coordinator, CoordinatorBuilder};
+use coedge_rag::router::capacity::CapacityModel;
+use coedge_rag::server::{serve, Client, ServerConfig};
+use coedge_rag::util::json::Json;
+
+/// The shrunk paper cluster the server tests run against (stubbed
+/// capacities: no profiling noise, no drops at these loads).
+fn test_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.qa_per_domain = 20;
+    cfg.docs_per_domain = 40;
+    cfg.allocator = AllocatorKind::Oracle;
+    for n in cfg.nodes.iter_mut() {
+        n.corpus_docs = 60;
+    }
+    cfg
+}
+
+fn build_coordinator() -> Coordinator {
+    CoordinatorBuilder::new(test_cfg())
+        .capacities(vec![CapacityModel { k: 6.0, b: 0.0 }; 4])
+        .build()
+        .unwrap()
+}
+
+/// Start `serve` on an ephemeral port in a background thread. Returns the
+/// address, the shutdown flag, and the server's join handle.
+fn start_server(
+    co: Coordinator,
+    scfg: ServerConfig,
+) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = Arc::clone(&shutdown);
+    let (addr_tx, addr_rx) = channel();
+    let handle = std::thread::spawn(move || {
+        // probe an ephemeral port, then serve on it
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        addr_tx.send(addr).unwrap();
+        let cfg = ServerConfig { addr: addr.to_string(), ..scfg };
+        serve(co, cfg, sd).unwrap();
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+    std::thread::sleep(Duration::from_millis(100));
+    (addr, shutdown, handle)
+}
+
+/// Join a server handle under a watchdog: a hung shutdown fails the test
+/// instead of hanging the suite forever.
+fn join_within(handle: std::thread::JoinHandle<()>, timeout: Duration, what: &str) {
+    let (done_tx, done_rx) = channel();
+    std::thread::spawn(move || {
+        let r = handle.join();
+        let _ = done_tx.send(r);
+    });
+    match done_rx.recv_timeout(timeout) {
+        Ok(r) => r.unwrap(),
+        Err(_) => panic!("{what}: server did not shut down within {timeout:?}"),
+    }
+}
+
+/// Regression (shutdown hang): `serve` must terminate even with a client
+/// connected that never sends a byte. The old handler blocked forever in
+/// `reader.lines()` and the final join never returned.
+#[test]
+fn shutdown_terminates_with_idle_client_attached() {
+    let (addr, shutdown, handle) = start_server(
+        build_coordinator(),
+        ServerConfig { batch_window_ms: 5, read_timeout_ms: 20, ..Default::default() },
+    );
+    // connect and stay silent; keep the connection open across shutdown
+    let idle = Client::connect(&addr).unwrap();
+    std::thread::sleep(Duration::from_millis(150));
+    shutdown.store(true, Ordering::Relaxed);
+    join_within(handle, Duration::from_secs(10), "idle-client shutdown");
+    drop(idle);
+}
+
+/// Regression (shed-query wire encoding): with every node down the slot
+/// is shed at the coordinator and the response must carry `node: null`
+/// (not usize::MAX cast to a float) alongside `dropped: true`.
+#[test]
+fn all_down_slot_responds_with_null_node() {
+    let mut co = build_coordinator();
+    for n in 0..4 {
+        co.set_node_active(n, false).unwrap();
+    }
+    let (addr, shutdown, handle) = start_server(
+        co,
+        ServerConfig { batch_window_ms: 5, ..Default::default() },
+    );
+    let mut client = Client::connect(&addr).unwrap();
+    let resp = client.request(1, 0).unwrap();
+    assert_eq!(resp.get("id").unwrap().as_f64(), Some(1.0), "{resp:?}");
+    assert!(
+        matches!(resp.get("node"), Some(Json::Null)),
+        "shed query must put node:null on the wire: {resp:?}"
+    );
+    assert_eq!(resp.get("dropped").unwrap().as_bool(), Some(true), "{resp:?}");
+    shutdown.store(true, Ordering::Relaxed);
+    drop(client);
+    join_within(handle, Duration::from_secs(10), "all-down shutdown");
+}
+
+/// N concurrent connections, each pipelining M requests without waiting:
+/// every request is answered exactly once with its own id, none are lost
+/// to batching across connections. Runs with the pipelined engine on.
+#[test]
+fn concurrent_clients_pipelining_each_answered_exactly_once() {
+    const CLIENTS: usize = 4;
+    const REQS: u64 = 8;
+    let (addr, shutdown, handle) = start_server(
+        build_coordinator(),
+        ServerConfig {
+            batch_window_ms: 10,
+            max_batch: 16,
+            pipeline: true,
+            ..Default::default()
+        },
+    );
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                // fire all requests first (pipelining), then collect
+                for i in 0..REQS {
+                    let id = c as u64 * 100 + i;
+                    client.send(id, (c + i as usize) % 20).unwrap();
+                }
+                let mut ids: Vec<u64> = (0..REQS)
+                    .map(|_| {
+                        let resp = client.recv().unwrap();
+                        assert!(
+                            resp.get("error").is_none(),
+                            "client {c}: unexpected error: {resp:?}"
+                        );
+                        assert!(resp.get("rouge_l").is_some(), "client {c}: {resp:?}");
+                        resp.get("id").unwrap().as_f64().unwrap() as u64
+                    })
+                    .collect();
+                ids.sort_unstable();
+                let want: Vec<u64> = (0..REQS).map(|i| c as u64 * 100 + i).collect();
+                assert_eq!(ids, want, "client {c}: every id exactly once");
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    shutdown.store(true, Ordering::Relaxed);
+    join_within(handle, Duration::from_secs(10), "concurrent shutdown");
+}
+
+/// Batching boundary: with a batch window far longer than the test,
+/// exactly `max_batch` pending requests must dispatch immediately — the
+/// responses arrive long before the window could have expired.
+#[test]
+fn max_batch_pending_dispatches_without_waiting_for_window() {
+    const MAX_BATCH: usize = 6;
+    let (addr, shutdown, handle) = start_server(
+        build_coordinator(),
+        ServerConfig {
+            batch_window_ms: 30_000, // would time the test out if waited on
+            max_batch: MAX_BATCH,
+            ..Default::default()
+        },
+    );
+    let mut client = Client::connect(&addr).unwrap();
+    let t0 = Instant::now();
+    for i in 0..MAX_BATCH as u64 {
+        client.send(i, i as usize).unwrap();
+    }
+    for _ in 0..MAX_BATCH {
+        let resp = client.recv().unwrap();
+        assert!(resp.get("rouge_l").is_some(), "{resp:?}");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "max_batch-full batch waited on the window: {:?}",
+        t0.elapsed()
+    );
+    shutdown.store(true, Ordering::Relaxed);
+    drop(client);
+    join_within(handle, Duration::from_secs(10), "max-batch shutdown");
+}
+
+/// Pipelining is wall-clock-only: the same request sequence served with
+/// `pipeline: false` and `pipeline: true` produces identical responses
+/// (modeled fields; `wall_s` is machine noise and excluded).
+#[test]
+fn pipelined_server_matches_synchronous_responses() {
+    let run = |pipeline: bool| -> Vec<String> {
+        let (addr, shutdown, handle) = start_server(
+            build_coordinator(),
+            ServerConfig { batch_window_ms: 5, pipeline, ..Default::default() },
+        );
+        let mut client = Client::connect(&addr).unwrap();
+        let out: Vec<String> = (0..6u64)
+            .map(|i| {
+                // serial requests → one single-query batch each, so the
+                // slot sequence is identical across both engines
+                let resp = client.request(i, (3 * i as usize) % 20).unwrap();
+                let modeled: Vec<String> = ["id", "node", "dropped", "rouge_l", "sim_latency_s"]
+                    .iter()
+                    .map(|&k| format!("{k}={:?}", resp.get(k)))
+                    .collect();
+                modeled.join(",")
+            })
+            .collect();
+        shutdown.store(true, Ordering::Relaxed);
+        drop(client);
+        join_within(handle, Duration::from_secs(10), "parity shutdown");
+        out
+    };
+    assert_eq!(run(false), run(true), "pipelining changed a response");
+}
