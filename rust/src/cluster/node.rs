@@ -21,7 +21,9 @@ use crate::metrics::{Evaluator, QualityScores};
 use crate::text::embed::{cosine, Embedder};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
-use crate::vecdb::{Hit, IndexBuildCtx, IndexRegistry, VectorIndex};
+use crate::vecdb::{
+    Hit, IndexBuildCtx, IndexKind, IndexMigration, IndexRegistry, IndexSpec, VectorIndex,
+};
 use crate::Result;
 use std::sync::Arc;
 
@@ -72,6 +74,10 @@ pub struct NodeSlotReport {
     pub cache_misses: usize,
     /// Entries evicted from the retrieval cache this slot.
     pub cache_evictions: usize,
+    /// In-flight reindex migration state (`from->to:slots_remaining`);
+    /// `None` when no migration is building. Stamped at serve time, so
+    /// the slot that swaps still shows the old index serving with `:1`.
+    pub migration: Option<String>,
 }
 
 /// An edge node.
@@ -85,6 +91,15 @@ pub struct EdgeNode {
     pub index: Box<dyn VectorIndex>,
     /// Registry key the index was built from (diagnostics / CLI tables).
     pub index_kind: String,
+    /// The index parameterization currently serving (updated at reindex
+    /// swap so chained migrations inherit the latest overrides).
+    index_spec: IndexSpec,
+    /// Deterministic index-build seed (`node seed ^ 0x1D5EED`) — reused by
+    /// reindex migrations so a same-kind rebuild reproduces the serving
+    /// index bit-for-bit.
+    build_seed: u64,
+    /// In-flight reindex migration, if any (old index keeps serving).
+    migration: Option<IndexMigration>,
     /// Per-node retrieval cache (quantized-query-embedding key → top-k
     /// hits). `NoneCache` by default — zero overhead, zero behavior drift.
     pub cache: Box<dyn QueryCache>,
@@ -178,6 +193,9 @@ impl EdgeNode {
             doc_ids,
             index,
             index_kind: cfg.index.kind.clone(),
+            index_spec: cfg.index.clone(),
+            build_seed: seed ^ 0x1D5EED,
+            migration: None,
             cache,
             cache_kind: cfg.cache.kind.clone(),
             cache_active: cfg.cache.enabled(),
@@ -212,6 +230,78 @@ impl EdgeNode {
             self.doc_ids.push(d);
         }
         self.doc_ids.sort_unstable();
+        // mid-migration adds also go to the write-log so the new index
+        // picks them up before the swap — searchable now in the old
+        // index, present in the new one from its first serving slot
+        if let Some(m) = &mut self.migration {
+            m.log_ingest(doc_ids);
+        }
+    }
+
+    /// Start a live reindex migration toward `to` (scenario `reindex`
+    /// event): snapshot the corpus, kick off the background build, and
+    /// keep serving from the current index. `build_slots` is the modeled
+    /// swap countdown (see [`crate::vecdb::modeled_build_slots`]). A
+    /// second reindex while one is in flight *replaces* it — the
+    /// abandoned build's worker joins on drop and its write-log is
+    /// discarded (the fresh snapshot already contains those rows).
+    pub fn begin_reindex(
+        &mut self,
+        to: IndexKind,
+        shards: Option<usize>,
+        rescore_factor: Option<usize>,
+        registry: Arc<IndexRegistry>,
+        build_slots: usize,
+    ) {
+        let mut spec = IndexSpec { kind: to.as_str().into(), ..self.index_spec.clone() };
+        if let Some(s) = shards {
+            spec.shards = s;
+        }
+        if let Some(rf) = rescore_factor {
+            spec.rescore_factor = rf;
+        }
+        self.migration = Some(IndexMigration::start(
+            registry,
+            spec,
+            to,
+            &self.index_kind,
+            crate::text::embed::EMBED_DIM,
+            self.build_seed,
+            self.doc_ids.clone(),
+            Arc::clone(&self.doc_embs),
+            build_slots,
+        ));
+    }
+
+    /// Whether a reindex migration is in flight.
+    pub fn migrating(&self) -> bool {
+        self.migration.is_some()
+    }
+
+    /// Transcript label of the in-flight migration, if any.
+    pub fn migration_label(&self) -> Option<String> {
+        self.migration.as_ref().map(|m| m.label())
+    }
+
+    /// Advance the migration countdown by one slot boundary (coordinator
+    /// calls this after every slot's report is recorded). When the
+    /// countdown reaches zero: await the background build, drain the
+    /// write-log into it, and atomically swap the serving index. Returns
+    /// `true` iff the swap happened at this boundary — the caller must
+    /// then flush retrieval/answer caches for this node (a different
+    /// index may rank ties differently).
+    pub fn tick_migration(&mut self) -> Result<bool> {
+        match &mut self.migration {
+            Some(m) if m.tick() => {}
+            _ => return Ok(false),
+        }
+        let mig = self.migration.take().expect("migration checked above");
+        let to = mig.target();
+        let spec = mig.spec().clone();
+        self.index = mig.finish(&self.doc_embs)?;
+        self.index_kind = to.as_str().to_string();
+        self.index_spec = spec;
+        Ok(true)
     }
 
     /// Fraction of GPU memory left for generation models after charging
@@ -354,6 +444,7 @@ impl EdgeNode {
         let mut report = NodeSlotReport {
             per_model_queries: vec![0; self.pool.len()],
             per_model_mem: vec![0.0; self.pool.len()],
+            migration: self.migration_label(),
             ..Default::default()
         };
         if n == 0 {

@@ -17,13 +17,16 @@ pub use crate::vecdb::registry::{IndexKind, IndexSpec};
 /// Which dataset family an experiment uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DatasetKind {
+    /// BAAI-style industry corpora with generated QA (paper "DomainQA").
     DomainQa,
+    /// Personalized-Proactive-Conversations: shorter persona-flavored texts.
     Ppc,
 }
 
 /// Per-node static configuration.
 #[derive(Clone, Debug)]
 pub struct NodeConfig {
+    /// Display name (also used in logs and the TUI node panel).
     pub name: String,
     /// One entry per GPU: relative speed factor.
     pub gpu_speeds: Vec<f64>,
@@ -80,6 +83,7 @@ impl IntraStrategy {
 /// Query-allocation strategy at the coordinator (Table II rows + ablations).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AllocatorKind {
+    /// Uniform-random node choice (Table II lower bound).
     Random,
     /// Route by the query's true domain to the node owning it.
     Domain,
@@ -147,22 +151,32 @@ impl std::str::FromStr for AllocatorKind {
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Master seed: dataset synthesis, partitioning, workload and policy
+    /// RNGs all fork from it deterministically.
     pub seed: u64,
+    /// Dataset family to synthesize.
     pub dataset: DatasetKind,
+    /// QA pairs generated per domain.
     pub qa_per_domain: usize,
+    /// Documents generated per domain.
     pub docs_per_domain: usize,
     /// i.i.d. share s of the dual-distribution partition.
     pub s_iid: f64,
     /// Overlap factor scaling node corpora.
     pub overlap: f64,
+    /// Static per-node configuration (one entry per edge node).
     pub nodes: Vec<NodeConfig>,
     /// Latency SLO per slot (seconds).
     pub slo_s: f64,
+    /// Queries arriving per scheduling slot.
     pub queries_per_slot: usize,
+    /// Number of scheduling slots the experiment runs.
     pub slots: usize,
+    /// Per-slot query domain mix.
     pub skew: SkewPattern,
     /// Retrieval depth (paper: top-5).
     pub top_k: usize,
+    /// Query-allocation strategy at the coordinator.
     pub allocator: AllocatorKind,
     /// Registry-key allocator override (e.g. [`PPO_PRETRAINED_KEY`]):
     /// when set, the coordinator builder resolves this key through the
@@ -172,14 +186,16 @@ pub struct ExperimentConfig {
     /// Policy checkpoint the `ppo-pretrained` allocator loads
     /// (`--checkpoint FILE` / TOML `checkpoint = "..."`).
     pub checkpoint: Option<PathBuf>,
+    /// Intra-node scheduling strategy (Table III rows).
     pub intra: IntraStrategy,
     /// Cluster-level semantic answer cache (also the default every node's
     /// retrieval cache inherits unless `[nodes.cache]` overrides it).
     pub cache: CacheSpec,
     /// Enable Algorithm-1 capacity-aware reassignment (Fig. 5 ablation).
     pub inter_enabled: bool,
-    /// PPO buffer threshold / epochs.
+    /// PPO experience-buffer threshold triggering an update.
     pub ppo_buffer: usize,
+    /// PPO optimization epochs per update.
     pub ppo_epochs: usize,
 }
 
@@ -404,6 +420,7 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// Number of configured edge nodes.
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
     }

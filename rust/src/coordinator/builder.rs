@@ -330,6 +330,9 @@ impl CoordinatorBuilder {
             answer_cache_active,
             cache_enabled,
             pending_invalidations: 0,
+            index_registry: Arc::new(index_registry),
+            reindex_seen: false,
+            migration_swap_skew: 0,
         })
     }
 }

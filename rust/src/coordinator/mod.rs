@@ -52,9 +52,11 @@ use crate::scenario::ScenarioEvent;
 use crate::text::embed::Embedder;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
+use crate::vecdb::{modeled_build_slots, IndexKind, IndexRegistry};
 use crate::workload::trace::{domain_mix, sample_slot_queries};
 use crate::Result;
 use observer::{SlotEvent, SlotObserver};
+use std::sync::Arc;
 
 /// Aggregated result of one slot.
 #[derive(Clone, Debug, Default)]
@@ -89,6 +91,13 @@ pub struct SlotReport {
     /// Cache-tier activity this slot; `None` when no cache is configured
     /// anywhere (the default), keeping pre-cache transcripts byte-stable.
     pub cache: Option<CacheSlotStats>,
+    /// Per-node serving index kind — `Some` only once a `reindex` event
+    /// has fired (reindex-free runs stay byte-identical). The slot where
+    /// an entry changes pins the migration's swap boundary.
+    pub index_kinds: Option<Vec<String>>,
+    /// Per-node migration state (`from->to:slots_remaining`, `-` when
+    /// idle) — `Some` under the same gate as `index_kinds`.
+    pub migrations: Option<Vec<String>>,
 }
 
 /// Modeled coordinator-side latency of a semantic answer-cache hit: one
@@ -168,6 +177,16 @@ pub struct Coordinator {
     /// Entries dropped by event-driven invalidation since the last slot
     /// report (folded into the next `CacheSlotStats`).
     pending_invalidations: usize,
+    /// The index registry nodes were built from, kept for reindex
+    /// migrations (background builds need the factories).
+    pub(crate) index_registry: Arc<IndexRegistry>,
+    /// Whether any `reindex` event has fired — gates the migration
+    /// fields of [`SlotReport`] so reindex-free transcripts stay
+    /// byte-identical to the pre-migration system.
+    reindex_seen: bool,
+    /// Fault-injection offset on every reindex's modeled build-slot
+    /// countdown (fuzz-oracle swap-ordering test); 0 in production.
+    migration_swap_skew: i64,
 }
 
 /// Scope of a cache-invalidation request, the hook scenario events reach
@@ -378,7 +397,73 @@ impl Coordinator {
                 self.invalidate_caches(CacheInvalidate::QueryMix);
                 Ok(())
             }
+            ScenarioEvent::Reindex { node, to, shards, rescore_factor } => {
+                anyhow::ensure!(
+                    *node < self.nodes.len(),
+                    "node {node} out of range (cluster has {} nodes)",
+                    self.nodes.len()
+                );
+                anyhow::ensure!(
+                    self.active[*node],
+                    "reindex: node {node} is down — bring it back with node-up before \
+                     migrating its index"
+                );
+                let kind: IndexKind = to.parse()?;
+                let rows = self.nodes[*node].corpus_size();
+                let modeled = modeled_build_slots(rows, kind) as i64;
+                let build_slots = (modeled + self.migration_swap_skew).max(1) as usize;
+                self.nodes[*node].begin_reindex(
+                    kind,
+                    *shards,
+                    *rescore_factor,
+                    Arc::clone(&self.index_registry),
+                    build_slots,
+                );
+                self.reindex_seen = true;
+                Ok(())
+            }
         }
+    }
+
+    /// Fault-injection hook for the fuzz oracle's swap-ordering test:
+    /// offsets every subsequent reindex's modeled build-slot countdown
+    /// (clamped to ≥ 1), making the engine swap earlier/later than the
+    /// modeled contract. Zero (the default) is the production behavior.
+    #[doc(hidden)]
+    pub fn set_migration_swap_skew(&mut self, skew: i64) {
+        self.migration_swap_skew = skew;
+    }
+
+    /// Advance every in-flight reindex migration by one slot boundary
+    /// (called after each slot's report is assembled, on the shed path
+    /// too, so every executor swaps at the identical boundary). A node
+    /// whose countdown elapsed atomically swaps to the freshly built
+    /// index and has its caches flushed — retrieval cache plus answer
+    /// entries it produced, since a different index kind may rank ties
+    /// differently.
+    fn tick_migrations(&mut self) -> Result<()> {
+        for i in 0..self.nodes.len() {
+            if self.nodes[i].tick_migration()? {
+                self.invalidate_caches(CacheInvalidate::Corpus { node: i });
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-node serving index kinds for the slot report; `None` until the
+    /// first `reindex` event (keeps reindex-free transcripts byte-stable).
+    fn slot_index_kinds(&self) -> Option<Vec<String>> {
+        self.reindex_seen.then(|| self.nodes.iter().map(|n| n.index_kind.clone()).collect())
+    }
+
+    /// Per-node migration labels (`-` when idle), under the same gate.
+    fn slot_migrations(&self) -> Option<Vec<String>> {
+        self.reindex_seen.then(|| {
+            self.nodes
+                .iter()
+                .map(|n| n.migration_label().unwrap_or_else(|| "-".into()))
+                .collect()
+        })
     }
 
     /// Phase ②: identification + inter-node routing via the allocator.
@@ -569,8 +654,11 @@ impl Coordinator {
             active: self.active.clone(),
             slo_s: self.cfg.slo_s,
             cache,
+            index_kinds: self.slot_index_kinds(),
+            migrations: self.slot_migrations(),
         };
         self.emit(&SlotEvent::SlotEnd { slot, report: &report });
+        self.tick_migrations()?;
         Ok(report)
     }
 
@@ -801,8 +889,11 @@ impl Coordinator {
             active: self.active.clone(),
             slo_s: self.cfg.slo_s,
             cache,
+            index_kinds: self.slot_index_kinds(),
+            migrations: self.slot_migrations(),
         };
         self.emit(&SlotEvent::SlotEnd { slot, report: &report });
+        self.tick_migrations()?;
         Ok(report)
     }
 

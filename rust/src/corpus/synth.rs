@@ -10,13 +10,19 @@ use crate::util::rng::Rng;
 /// Specification for a synthetic dataset.
 #[derive(Clone, Debug)]
 pub struct DatasetSpec {
+    /// Dataset display name (e.g. "DomainQA", "PPC").
     pub name: String,
+    /// One name per topical domain; the count fixes the domain count.
     pub domain_names: Vec<String>,
+    /// Documents generated per domain.
     pub docs_per_domain: usize,
     /// Tokens per document (fixed-length chunks, as the paper assumes).
     pub doc_len: usize,
+    /// QA pairs generated per domain.
     pub qa_per_domain: usize,
+    /// Tokens per query (incl. the two leading question words).
     pub query_len: usize,
+    /// Tokens in the extractive reference answer span.
     pub answer_len: usize,
     /// Domain-specific vocabulary size.
     pub vocab_size: usize,
@@ -30,12 +36,16 @@ pub struct DatasetSpec {
 /// A fixed-length document chunk.
 #[derive(Clone, Debug)]
 pub struct Document {
+    /// Global document id (dense, equals the index into the dataset).
     pub id: usize,
+    /// Owning domain index.
     pub domain: usize,
+    /// Token sequence of length [`DatasetSpec::doc_len`].
     pub tokens: Vec<String>,
 }
 
 impl Document {
+    /// The document as a space-joined string (embedder / metric input).
     pub fn text(&self) -> String {
         self.tokens.join(" ")
     }
@@ -44,16 +54,20 @@ impl Document {
 /// A grounded question–answer pair.
 #[derive(Clone, Debug)]
 pub struct QaPair {
+    /// Global QA id (dense, equals the index into the dataset).
     pub id: usize,
+    /// Domain of the gold document (and hence of the query).
     pub domain: usize,
     /// The single gold document this query is answerable from.
     pub gold_doc: usize,
+    /// Query text: question words + salient gold-document tokens.
     pub query: String,
     /// Extractive reference answer (the "REF" in the paper's feedback).
     pub answer_tokens: Vec<String>,
 }
 
 impl QaPair {
+    /// The reference answer as a space-joined string.
     pub fn answer_text(&self) -> String {
         self.answer_tokens.join(" ")
     }
@@ -62,16 +76,22 @@ impl QaPair {
 /// A complete synthetic dataset.
 #[derive(Clone, Debug)]
 pub struct SyntheticDataset {
+    /// Dataset display name (copied from the spec).
     pub name: String,
+    /// One name per topical domain.
     pub domain_names: Vec<String>,
     /// Per-domain topical vocabularies.
     pub domain_vocab: Vec<Vec<String>>,
+    /// Vocabulary shared across all domains.
     pub common_vocab: Vec<String>,
+    /// All documents, indexable by [`Document::id`].
     pub documents: Vec<Document>,
+    /// All QA pairs, indexable by [`QaPair::id`].
     pub qa_pairs: Vec<QaPair>,
 }
 
 impl SyntheticDataset {
+    /// Number of topical domains.
     pub fn num_domains(&self) -> usize {
         self.domain_names.len()
     }

@@ -3,9 +3,11 @@
 //! The grammar covers every event kind the scenario engine defines —
 //! node churn (`node-down`/`node-up`), capacity scaling, SLO changes,
 //! bursts (including the `queries = 0` empty-slot edge), skew shifts
-//! (including the boundary `frac` values 0 and 1), and corpus ingest —
-//! plus optional arrival traces with varied base/amplitude/burst
-//! parameters. Every generated scenario passes [`Scenario::validate`]
+//! (including the boundary `frac` values 0 and 1), corpus ingest, and
+//! live reindex migrations toward every built-in index kind (including
+//! the redundant same-kind rebuild and reindexes landing on currently
+//! down nodes, which the engine must reject) — plus optional arrival
+//! traces with varied base/amplitude/burst parameters. Every generated scenario passes [`Scenario::validate`]
 //! against the fuzz cluster (asserted by `tests/fuzz.rs` over many
 //! seeds), so a failing replay always indicts the engine, not the input.
 
@@ -106,7 +108,7 @@ pub fn generate_scenario(seed: u64, gc: &GenConfig) -> Scenario {
     for _ in 0..n_events {
         let slot = rng.below(slots);
         let node = rng.below(gc.n_nodes);
-        let event = match rng.below(7) {
+        let event = match rng.below(8) {
             0 => ScenarioEvent::NodeDown { node },
             1 => ScenarioEvent::NodeUp { node },
             2 => ScenarioEvent::CapacityScale { node, factor: rng.range_f64(0.05, 4.0) },
@@ -121,7 +123,21 @@ pub fn generate_scenario(seed: u64, gc: &GenConfig) -> Scenario {
                 // part of the grammar — run_slot(&[]) must stay finite
                 queries: if rng.chance(0.25) { 0 } else { rng.below(200) },
             },
-            _ => ScenarioEvent::SkewShift { pattern: random_pattern(&mut rng, gc) },
+            6 => ScenarioEvent::SkewShift { pattern: random_pattern(&mut rng, gc) },
+            _ => {
+                // live reindex toward any built-in kind: same-kind
+                // rebuilds are a valid (vacuous) part of the grammar,
+                // and the node may be down when the event fires — the
+                // engine must reject that case, which the oracle treats
+                // as an expected rejection
+                let kinds = crate::vecdb::IndexKind::ALL;
+                ScenarioEvent::Reindex {
+                    node,
+                    to: kinds[rng.below(kinds.len())].as_str().to_string(),
+                    shards: None,
+                    rescore_factor: None,
+                }
+            }
         };
         events.push(TimedEvent { slot, event });
     }

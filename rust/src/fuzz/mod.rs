@@ -10,12 +10,12 @@
 //!
 //! - [`generator`] produces random-but-valid [`Scenario`] timelines from
 //!   a seed — node churn, capacity scaling, SLO changes, zero-query
-//!   bursts, boundary-`frac` skew shifts, corpus ingest, varied arrival
-//!   traces;
+//!   bursts, boundary-`frac` skew shifts, corpus ingest, live reindex
+//!   migrations toward every index kind, varied arrival traces;
 //! - [`oracle`] replays each timeline on a fresh seeded coordinator and
 //!   checks the engine's property invariants (conservation,
-//!   proportions, routing, finiteness, cache staleness) plus run-to-run
-//!   transcript byte-equality;
+//!   proportions, routing, finiteness, cache staleness, migration swap
+//!   timing) plus run-to-run transcript byte-equality;
 //! - [`shrinker`] minimizes any failing timeline by event deletion and
 //!   slot/parameter reduction, emitting the minimal case as committable
 //!   fixture TOML + a repro command.
@@ -136,7 +136,13 @@ pub fn run_case(cfg: &FuzzConfig, index: usize) -> CaseOutcome {
     let seed = case_seed(cfg.seed, index);
     let allocator = cfg.allocator.unwrap_or_else(|| case_allocator(seed));
     let cached = case_cached(seed);
-    let oc = OracleConfig { seed, allocator, cached, skip_validation: cfg.skip_validation };
+    let oc = OracleConfig {
+        seed,
+        allocator,
+        cached,
+        skip_validation: cfg.skip_validation,
+        swap_skew: 0,
+    };
     let sc = generate_scenario(seed, &cfg.gen);
     let checked = oracle::check_scenario(&sc, &cfg.gen, &oc);
     let shrunk = if checked.violations.is_empty() {

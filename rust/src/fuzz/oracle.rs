@@ -20,10 +20,16 @@
 //!   `(node, domain)` whose corpus changed after the entry was written,
 //!   is bitwise-equal to the serve that wrote it, and never survives a
 //!   skew-shift flush;
+//! - **migration** — a reindexing node serves its old index on every
+//!   slot strictly before the modeled swap boundary and the target kind
+//!   exactly from that boundary on (never an unfinalized index, never an
+//!   early or late swap — the tracker recomputes the expected swap slot
+//!   from [`modeled_build_slots`] independently of the engine); a
+//!   reindex targeting a down node must be rejected naming `node-up`;
 //! - **determinism** — an independent replay of the same timeline on a
 //!   freshly built coordinator produces a byte-identical transcript.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use super::generator::{fuzz_experiment_config, GenConfig};
 use crate::config::AllocatorKind;
@@ -34,12 +40,14 @@ use crate::router::capacity::CapacityModel;
 use crate::scenario::transcript::RunTranscript;
 use crate::scenario::{Scenario, ScenarioEvent, ScenarioRunner};
 use crate::util::json::Json;
+use crate::vecdb::{modeled_build_slots, IndexKind};
 
 /// One invariant violation: which invariant, where, and what happened.
 #[derive(Clone, Debug)]
 pub struct Violation {
     /// Stable invariant key (`conservation`, `proportions`, `routing`,
-    /// `finiteness`, `cache-staleness`, `determinism`, `run-error`).
+    /// `finiteness`, `cache-staleness`, `migration`, `determinism`,
+    /// `run-error`).
     pub invariant: &'static str,
     /// Slot the violation occurred in, when it is slot-local.
     pub slot: Option<usize>,
@@ -293,6 +301,108 @@ impl StaleTracker {
     }
 }
 
+/// One in-flight migration the oracle expects to complete.
+struct InflightMigration {
+    from: String,
+    to: String,
+    /// First slot the target kind must serve:
+    /// `begin_slot + modeled_build_slots(rows_at_begin, to)`.
+    swap_slot: usize,
+}
+
+/// Tracks reindex migrations across a replay and checks the modeled
+/// swap contract against the transcript-visible per-node state: before
+/// the swap boundary the node serves its old kind with an exact
+/// `from->to:remaining` countdown label; from the boundary on it serves
+/// the target kind with an idle label. The expected boundary is
+/// recomputed here from [`modeled_build_slots`] — independently of the
+/// engine — so any engine-side swap-ordering drift (early swap, late
+/// swap, skipped countdown) surfaces as a `migration` violation.
+#[derive(Default)]
+pub struct MigrationTracker {
+    inflight: BTreeMap<usize, InflightMigration>,
+    any_seen: bool,
+}
+
+impl MigrationTracker {
+    /// Fresh tracker for one replay.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A reindex was accepted before `slot`: `from` is the kind serving
+    /// at that moment, `rows` the node's corpus size when the snapshot
+    /// was taken. A second reindex on the same node replaces the
+    /// expectation, mirroring the engine's replace policy.
+    pub fn note_begin(&mut self, node: usize, from: &str, to: IndexKind, slot: usize, rows: usize) {
+        self.any_seen = true;
+        self.inflight.insert(
+            node,
+            InflightMigration {
+                from: from.to_string(),
+                to: to.as_str().to_string(),
+                swap_slot: slot + modeled_build_slots(rows, to),
+            },
+        );
+    }
+
+    /// Check one slot's report against every in-flight expectation.
+    pub fn check_slot(&mut self, slot: usize, r: &SlotReport) -> Vec<Violation> {
+        let mut out = Vec::new();
+        if !self.any_seen {
+            return out;
+        }
+        let mk = |detail: String| Violation { invariant: "migration", slot: Some(slot), detail };
+        let (Some(kinds), Some(migs)) = (&r.index_kinds, &r.migrations) else {
+            out.push(mk(
+                "report is missing index_kinds/migrations after a reindex event".to_string(),
+            ));
+            return out;
+        };
+        let mut swapped: Vec<usize> = Vec::new();
+        for (&node, m) in &self.inflight {
+            if slot < m.swap_slot {
+                let remaining = m.swap_slot - slot;
+                if kinds[node] != m.from {
+                    out.push(mk(format!(
+                        "node {node} serves {:?} {remaining} slot(s) before the modeled swap \
+                         to {:?} — expected the old {:?} (early swap / unfinalized index)",
+                        kinds[node], m.to, m.from
+                    )));
+                }
+                let want = format!("{}->{}:{}", m.from, m.to, remaining);
+                if migs[node] != want {
+                    out.push(mk(format!(
+                        "node {node} migration label is {:?}, expected {want:?}",
+                        migs[node]
+                    )));
+                }
+            } else {
+                // checked every slot, so this is exactly the swap slot:
+                // the first slot the target kind must serve
+                if kinds[node] != m.to {
+                    out.push(mk(format!(
+                        "node {node} serves {:?} at its modeled swap slot, expected {:?} \
+                         (late swap)",
+                        kinds[node], m.to
+                    )));
+                }
+                if migs[node] != "-" {
+                    out.push(mk(format!(
+                        "node {node} still shows migration {:?} at its modeled swap slot",
+                        migs[node]
+                    )));
+                }
+                swapped.push(node);
+            }
+        }
+        for n in swapped {
+            self.inflight.remove(&n);
+        }
+        out
+    }
+}
+
 /// Per-case oracle parameters: which coordinator the timeline replays on.
 #[derive(Clone, Debug)]
 pub struct OracleConfig {
@@ -307,6 +417,12 @@ pub struct OracleConfig {
     /// timelines (the injected-bug hook) into the engine and prove the
     /// oracle catches what the validation fixes now reject.
     pub skip_validation: bool,
+    /// Offset injected into the engine's reindex swap countdown (via
+    /// `Coordinator::set_migration_swap_skew`). Always 0 in production
+    /// sweeps; tests set ±1 to plant a swap-ordering bug and prove the
+    /// `migration` invariant catches it — the tracker's expectation
+    /// deliberately ignores this knob.
+    pub swap_skew: i64,
 }
 
 /// Everything one checked replay produced.
@@ -327,7 +443,11 @@ fn build_coordinator(
 ) -> crate::Result<Coordinator> {
     let cfg = fuzz_experiment_config(gc, oc.seed, oc.allocator, oc.cached);
     let caps = vec![CapacityModel { k: 6.0, b: 0.0 }; cfg.nodes.len()];
-    CoordinatorBuilder::new(cfg).capacities(caps).build()
+    let mut co = CoordinatorBuilder::new(cfg).capacities(caps).build()?;
+    if oc.swap_skew != 0 {
+        co.set_migration_swap_skew(oc.swap_skew);
+    }
+    Ok(co)
 }
 
 /// Replay `sc` on a fresh coordinator, checking every invariant per
@@ -352,41 +472,62 @@ pub fn check_scenario(sc: &Scenario, gc: &GenConfig, oc: &OracleConfig) -> Check
             }
         }
     };
-    let (transcript, slots, queries, completed) =
+    let (transcript, slots, queries, completed, had_rejection) =
         replay_checked(sc, &mut co, oc, &mut violations);
     violations.extend(check_transcript_finite(&transcript));
     if completed {
-        // determinism: fresh coordinator, independent replay through the
-        // public ScenarioRunner path, conservation re-checked in the hook
+        // determinism: fresh coordinator, independent replay,
+        // byte-compared. Normally through the public ScenarioRunner
+        // path (conservation re-checked in the hook); when the timeline
+        // contains an expected down-node reindex rejection the public
+        // runner would hard-error on it, so the double replay goes
+        // through the checked loop again (its duplicate violations are
+        // discarded — only the byte comparison matters).
         match build_coordinator(gc, oc) {
             Ok(mut co2) => {
-                let runner = ScenarioRunner::new(sc.clone());
-                let mut hook_violations = Vec::new();
-                match runner.run_observed(&mut co2, |t, qids, r| {
-                    hook_violations.extend(check_conservation(t, qids, r));
-                }) {
-                    Ok(run) => {
-                        violations.extend(hook_violations);
-                        let second = run.transcript.to_jsonl();
-                        if second != transcript {
-                            violations.push(Violation {
-                                invariant: "determinism",
-                                slot: None,
-                                detail: format!(
-                                    "independent replay diverged ({} vs {} bytes)",
-                                    transcript.len(),
-                                    second.len()
-                                ),
-                            });
-                        }
+                if had_rejection {
+                    let mut dup = Vec::new();
+                    let (second, _, _, _, _) = replay_checked(sc, &mut co2, oc, &mut dup);
+                    if second != transcript {
+                        violations.push(Violation {
+                            invariant: "determinism",
+                            slot: None,
+                            detail: format!(
+                                "independent replay diverged ({} vs {} bytes)",
+                                transcript.len(),
+                                second.len()
+                            ),
+                        });
                     }
-                    Err(e) => violations.push(Violation {
-                        invariant: "determinism",
-                        slot: None,
-                        detail: format!(
-                            "checked replay completed but the reference replay errored: {e:#}"
-                        ),
-                    }),
+                } else {
+                    let runner = ScenarioRunner::new(sc.clone());
+                    let mut hook_violations = Vec::new();
+                    match runner.run_observed(&mut co2, |t, qids, r| {
+                        hook_violations.extend(check_conservation(t, qids, r));
+                    }) {
+                        Ok(run) => {
+                            violations.extend(hook_violations);
+                            let second = run.transcript.to_jsonl();
+                            if second != transcript {
+                                violations.push(Violation {
+                                    invariant: "determinism",
+                                    slot: None,
+                                    detail: format!(
+                                        "independent replay diverged ({} vs {} bytes)",
+                                        transcript.len(),
+                                        second.len()
+                                    ),
+                                });
+                            }
+                        }
+                        Err(e) => violations.push(Violation {
+                            invariant: "determinism",
+                            slot: None,
+                            detail: format!(
+                                "checked replay completed but the reference replay errored: {e:#}"
+                            ),
+                        }),
+                    }
                 }
             }
             Err(e) => violations.push(Violation {
@@ -403,13 +544,19 @@ pub fn check_scenario(sc: &Scenario, gc: &GenConfig, oc: &OracleConfig) -> Check
 /// (same validation, same event order, same sampling calls — the
 /// determinism check above would flag any drift between the two), but
 /// captures what the oracle needs along the way: the sampled query ids
-/// per slot, corpus-ingest added counts, and skew-flush slots.
+/// per slot, corpus-ingest added counts, skew-flush slots, and reindex
+/// begin slots. The one deliberate departure: a reindex targeting a down
+/// node is an *expected* rejection (the generator emits them on
+/// purpose), so the loop skips the event and keeps replaying instead of
+/// aborting — the final `bool` in the tuple reports whether any such
+/// rejection occurred, which routes the determinism double replay
+/// through this loop instead of the rejection-intolerant public runner.
 fn replay_checked(
     sc: &Scenario,
     co: &mut Coordinator,
     oc: &OracleConfig,
     violations: &mut Vec<Violation>,
-) -> (String, usize, usize, bool) {
+) -> (String, usize, usize, bool, bool) {
     let run_error = |slot: Option<usize>, e: anyhow::Error| Violation {
         invariant: "run-error",
         slot,
@@ -418,7 +565,7 @@ fn replay_checked(
     if !oc.skip_validation {
         if let Err(e) = sc.validate(co.nodes.len(), co.ds.num_domains()) {
             violations.push(run_error(None, e));
-            return (String::new(), 0, 0, false);
+            return (String::new(), 0, 0, false, false);
         }
     }
     let runner = ScenarioRunner::new(sc.clone());
@@ -434,7 +581,7 @@ fn replay_checked(
                     loads.len()
                 ),
             ));
-            return (String::new(), 0, 0, false);
+            return (String::new(), 0, 0, false, false);
         }
     }
     let mut transcript = RunTranscript::new(
@@ -445,6 +592,8 @@ fn replay_checked(
         loads.len(),
     );
     let mut tracker = StaleTracker::new();
+    let mut mig_tracker = MigrationTracker::new();
+    let mut had_rejection = false;
     let mut total_queries = 0usize;
     for (t, &load) in loads.iter().enumerate() {
         let mut burst = None;
@@ -464,25 +613,58 @@ fn replay_checked(
                 ScenarioEvent::SkewShift { .. } => co.apply_event(&te.event).map(|()| {
                     tracker.note_skew_flush(t);
                 }),
+                ScenarioEvent::Reindex { node, to, .. } => {
+                    // snapshot the state the expectation derives from
+                    // BEFORE applying — apply mutates the node
+                    let node_down = !co.active[*node];
+                    let from = co.nodes[*node].index_kind.clone();
+                    let rows = co.nodes[*node].corpus_size();
+                    match co.apply_event(&te.event) {
+                        Ok(()) if node_down => {
+                            violations.push(Violation {
+                                invariant: "migration",
+                                slot: Some(t),
+                                detail: format!(
+                                    "reindex on down node {node} was accepted — must be \
+                                     rejected naming node-up"
+                                ),
+                            });
+                            Ok(())
+                        }
+                        Ok(()) => {
+                            if let Ok(kind) = to.parse::<IndexKind>() {
+                                mig_tracker.note_begin(*node, &from, kind, t, rows);
+                            }
+                            Ok(())
+                        }
+                        Err(e) if node_down && format!("{e:#}").contains("node-up") => {
+                            // expected rejection: the event is skipped
+                            // and the replay continues
+                            had_rejection = true;
+                            Ok(())
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
                 other => co.apply_event(other),
             };
             if let Err(e) = applied {
                 violations.push(run_error(Some(t), e));
-                return (transcript.to_jsonl(), t, total_queries, false);
+                return (transcript.to_jsonl(), t, total_queries, false, had_rejection);
             }
         }
         let qids = match co.sample_queries(burst.unwrap_or(load)) {
             Ok(q) => q,
             Err(e) => {
                 violations.push(run_error(Some(t), e));
-                return (transcript.to_jsonl(), t, total_queries, false);
+                return (transcript.to_jsonl(), t, total_queries, false, had_rejection);
             }
         };
         let report = match co.run_slot(&qids) {
             Ok(r) => r,
             Err(e) => {
                 violations.push(run_error(Some(t), e));
-                return (transcript.to_jsonl(), t, total_queries, false);
+                return (transcript.to_jsonl(), t, total_queries, false, had_rejection);
             }
         };
         transcript.record(t, &labels, &report);
@@ -492,6 +674,7 @@ fn replay_checked(
         violations.extend(check_routing(t, &report));
         violations.extend(check_report_finite(t, &report));
         violations.extend(tracker.check_slot(t, &report, &co.ds));
+        violations.extend(mig_tracker.check_slot(t, &report));
     }
-    (transcript.to_jsonl(), loads.len(), total_queries, true)
+    (transcript.to_jsonl(), loads.len(), total_queries, true, had_rejection)
 }

@@ -3,8 +3,9 @@
 //! Classic greedy delta-debugging over the scenario grammar: delete
 //! events one at a time, drop the arrival trace, cut the slot count down
 //! to just past the last event, and reduce numeric parameters (burst
-//! queries, ingest docs) toward zero — accepting every candidate that
-//! still fails, looping until a fixpoint. The result is the minimal
+//! queries, ingest docs; reindex targets retargeted to the simplest
+//! kind, `flat`) toward their simplest values — accepting every
+//! candidate that still fails, looping until a fixpoint. The result is the minimal
 //! repro the engine still breaks on, emitted as committable fixture TOML
 //! plus the `coedge fuzz` command that replays it.
 
@@ -87,6 +88,17 @@ pub fn shrink(sc: &Scenario, mut still_fails: impl FnMut(&Scenario) -> bool) -> 
                         node: *node,
                         docs: docs / 2,
                         domain: *domain,
+                    })
+                }
+                // retarget a reindex to the simplest kind — keeps the
+                // event (deletion already tried above) while removing
+                // target-specific machinery from the repro
+                ScenarioEvent::Reindex { node, to, shards, rescore_factor } if to != "flat" => {
+                    Some(ScenarioEvent::Reindex {
+                        node: *node,
+                        to: "flat".to_string(),
+                        shards: *shards,
+                        rescore_factor: *rescore_factor,
                     })
                 }
                 _ => None,

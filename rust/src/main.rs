@@ -7,8 +7,10 @@
 //!            [--scenario FILE] [--transcript FILE]
 //!            run a full experiment and print per-slot results; with
 //!            --scenario, replay a cluster-dynamics timeline (node churn,
-//!            bursts, SLO changes, live corpus ingest) under its arrival
-//!            trace and optionally dump the byte-stable run transcript;
+//!            bursts, SLO changes, live corpus ingest, live reindex
+//!            migration with background rebuild + atomic swap) under its
+//!            arrival trace and optionally dump the byte-stable run
+//!            transcript;
 //!            --allocator ppo-pretrained --checkpoint FILE deploys a
 //!            frozen trained policy
 //!   eval     [--grid paper|smoke] [--threads N] [--scenarios DIR]

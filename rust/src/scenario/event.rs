@@ -28,11 +28,26 @@ pub enum ScenarioEvent {
     BurstOverride { queries: usize },
     /// Switch the per-slot query domain mix.
     SkewShift { pattern: SkewPattern },
+    /// Live index migration: rebuild `node`'s index as kind `to` in the
+    /// background (snapshot + write-log) and atomically swap at the
+    /// modeled slot boundary — the node serves every slot meanwhile.
+    /// Optional `shards` / `rescore_factor` override the target spec's
+    /// parameters; other parameters keep the node's configured values.
+    Reindex {
+        /// Node whose index migrates (must be up when the event fires).
+        node: usize,
+        /// Target built-in [`crate::vecdb::IndexKind`] key.
+        to: String,
+        /// Sharded targets: shard-count override.
+        shards: Option<usize>,
+        /// Quantized targets: rescore-factor override.
+        rescore_factor: Option<usize>,
+    },
 }
 
 impl ScenarioEvent {
     /// Valid `kind` strings for `[[scenario.events]]` tables.
-    pub const KINDS: [&'static str; 7] = [
+    pub const KINDS: [&'static str; 8] = [
         "node-down",
         "node-up",
         "capacity-scale",
@@ -40,6 +55,7 @@ impl ScenarioEvent {
         "corpus-ingest",
         "burst",
         "skew-shift",
+        "reindex",
     ];
 
     /// Stable kind key (the TOML `kind` value).
@@ -52,6 +68,7 @@ impl ScenarioEvent {
             ScenarioEvent::CorpusIngest { .. } => "corpus-ingest",
             ScenarioEvent::BurstOverride { .. } => "burst",
             ScenarioEvent::SkewShift { .. } => "skew-shift",
+            ScenarioEvent::Reindex { .. } => "reindex",
         }
     }
 
@@ -76,6 +93,7 @@ impl ScenarioEvent {
                 };
                 format!("skew-shift({p})")
             }
+            ScenarioEvent::Reindex { node, to, .. } => format!("reindex({node},{to})"),
         }
     }
 }
@@ -137,6 +155,7 @@ impl TimedEvent {
             "corpus-ingest" => &["slot", "kind", "node", "docs", "domain"],
             "burst" => &["slot", "kind", "queries"],
             "skew-shift" => &["slot", "kind", "skew", "domain", "frac", "alpha"],
+            "reindex" => &["slot", "kind", "node", "to", "shards", "rescore_factor"],
             other => anyhow::bail!(
                 "unknown scenario event kind {other:?} at slot {slot}; valid kinds: {}",
                 ScenarioEvent::KINDS.join(", ")
@@ -159,6 +178,16 @@ impl TimedEvent {
             "skew-shift" => ScenarioEvent::SkewShift {
                 pattern: SkewPattern::from_table(t, "skew")?
                     .ok_or_else(|| anyhow!("skew-shift at slot {slot}: missing 'skew'"))?,
+            },
+            "reindex" => ScenarioEvent::Reindex {
+                node: node()?,
+                to: t
+                    .get("to")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("{kind} at slot {slot}: missing 'to'"))?
+                    .to_string(),
+                shards: t.get("shards").and_then(|v| v.as_usize()),
+                rescore_factor: t.get("rescore_factor").and_then(|v| v.as_usize()),
             },
             _ => unreachable!("kind was matched against the same set above"),
         };
@@ -304,6 +333,16 @@ impl Scenario {
                         let _ = writeln!(out, "alpha = {alpha}");
                     }
                 },
+                ScenarioEvent::Reindex { node, to, shards, rescore_factor } => {
+                    let _ = writeln!(out, "node = {node}");
+                    let _ = writeln!(out, "to = {to:?}");
+                    if let Some(s) = shards {
+                        let _ = writeln!(out, "shards = {s}");
+                    }
+                    if let Some(rf) = rescore_factor {
+                        let _ = writeln!(out, "rescore_factor = {rf}");
+                    }
+                }
             }
         }
         out
@@ -349,6 +388,23 @@ impl Scenario {
                 }
                 ScenarioEvent::BurstOverride { .. } => {}
                 ScenarioEvent::SkewShift { pattern } => pattern.validate(n_domains)?,
+                ScenarioEvent::Reindex { node, to, shards, rescore_factor } => {
+                    check_node(*node, kind, slot)?;
+                    // only built-in kinds are reindexable — the error
+                    // lists every valid kind (custom registrations have
+                    // no snapshot-build contract)
+                    to.parse::<crate::vecdb::IndexKind>()
+                        .map_err(|e| anyhow!("{kind} at slot {slot}: {e}"))?;
+                    if let Some(s) = shards {
+                        anyhow::ensure!(*s >= 1, "{kind} at slot {slot}: shards must be >= 1");
+                    }
+                    if let Some(rf) = rescore_factor {
+                        anyhow::ensure!(
+                            *rf >= 1,
+                            "{kind} at slot {slot}: rescore_factor must be >= 1"
+                        );
+                    }
+                }
             }
         }
         Ok(())
@@ -555,11 +611,60 @@ frac = 0.8
                         pattern: SkewPattern::Dirichlet { alpha: 0.3 },
                     },
                 },
+                TimedEvent {
+                    slot: 2,
+                    event: ScenarioEvent::Reindex {
+                        node: 1,
+                        to: "quantized-flat".into(),
+                        shards: None,
+                        rescore_factor: Some(4),
+                    },
+                },
             ],
         };
         let toml = all.to_toml();
         let re = Scenario::from_toml(&toml).unwrap();
         assert_eq!(re.to_toml(), toml);
-        assert_eq!(re.events.len(), 7);
+        assert_eq!(re.events.len(), 8);
+    }
+
+    #[test]
+    fn reindex_parses_validates_and_rejects_bad_targets() {
+        let sc = Scenario::from_toml(
+            "[[scenario.events]]\nslot = 1\nkind = \"reindex\"\nnode = 2\nto = \"hnsw\"\n",
+        )
+        .unwrap();
+        match &sc.events[0].event {
+            ScenarioEvent::Reindex { node, to, shards, rescore_factor } => {
+                assert_eq!((*node, to.as_str()), (2, "hnsw"));
+                assert_eq!((*shards, *rescore_factor), (None, None));
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        assert_eq!(sc.events[0].event.label(), "reindex(2,hnsw)");
+        assert!(sc.validate(4, 6).is_ok());
+        // missing 'to' is a clear error
+        let err = Scenario::from_toml("[[scenario.events]]\nslot = 0\nkind = \"reindex\"\nnode = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("'to'"), "{err}");
+        // an unknown target kind fails validation listing the valid kinds
+        let mk = |to: &str| Scenario {
+            events: vec![TimedEvent {
+                slot: 0,
+                event: ScenarioEvent::Reindex {
+                    node: 0,
+                    to: to.into(),
+                    shards: None,
+                    rescore_factor: None,
+                },
+            }],
+            ..Scenario::default()
+        };
+        let err = mk("bogus").validate(4, 6).unwrap_err().to_string();
+        assert!(err.contains("valid kinds") && err.contains("quantized-flat"), "{err}");
+        for k in crate::vecdb::IndexKind::ALL {
+            assert!(mk(k.as_str()).validate(4, 6).is_ok(), "{k}");
+        }
     }
 }

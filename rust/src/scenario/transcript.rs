@@ -63,6 +63,16 @@ impl RunTranscript {
             fields.push(("cache_invalidations", Json::Num(c.invalidations as f64)));
             fields.push(("cache_bytes", Json::Num(c.bytes as f64)));
         }
+        // migration fields appear only once a reindex event has fired
+        // (same gating pattern as the cache fields): per-node serving
+        // index kind — the slot where an entry changes IS the swap slot —
+        // and in-flight migration state
+        if let Some(kinds) = &report.index_kinds {
+            fields.push(("index_kinds", Json::arr_str(kinds)));
+        }
+        if let Some(migs) = &report.migrations {
+            fields.push(("migrations", Json::arr_str(migs)));
+        }
         let line = Json::obj(fields);
         self.lines.push(line.to_string());
     }
@@ -186,6 +196,23 @@ mod tests {
         assert!(text.contains("\"cache_evictions\":1"), "{text}");
         assert!(text.contains("\"cache_invalidations\":4"), "{text}");
         assert!(text.contains("\"cache_bytes\":1024"), "{text}");
+    }
+
+    #[test]
+    fn migration_fields_appear_only_after_reindex() {
+        let mut t = RunTranscript::new("demo", 42, 2, "oracle", 1);
+        let mut r = demo_report();
+        r.index_kinds = Some(vec!["flat".into(), "quantized-flat".into()]);
+        r.migrations = Some(vec!["flat->quantized-flat:2".into(), "-".into()]);
+        t.record(0, &[], &r);
+        let text = t.to_jsonl();
+        assert!(text.contains("\"index_kinds\":[\"flat\",\"quantized-flat\"]"), "{text}");
+        assert!(text.contains("\"migrations\":[\"flat->quantized-flat:2\",\"-\"]"), "{text}");
+        // absent by default — reindex-free transcripts keep the old format
+        let mut t2 = RunTranscript::new("demo", 42, 2, "oracle", 1);
+        t2.record(0, &[], &demo_report());
+        let text2 = t2.to_jsonl();
+        assert!(!text2.contains("index_kinds") && !text2.contains("migrations"), "{text2}");
     }
 
     #[test]

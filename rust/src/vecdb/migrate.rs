@@ -1,0 +1,264 @@
+//! Online reindex migration: background rebuild + atomic swap.
+//!
+//! A `reindex` scenario event asks a node to change its index *structure*
+//! (e.g. `flat` → `quantized-flat`) without a dead-stop: the node
+//! snapshots its corpus rows, a worker thread builds the target index
+//! (add every snapshot row in order, then [`VectorIndex::finalize`]) in
+//! the background, and every slot keeps serving from the old index until
+//! the swap. Corpus rows ingested while the build is in flight land in
+//! the old index immediately (they must stay searchable) *and* in a
+//! write-log that is drained into the new index just before the swap, so
+//! no row is reordered or dropped across the cutover.
+//!
+//! The swap slot is **modeled**, never wall-clock (ADR-001):
+//! [`modeled_build_slots`] maps `(snapshot rows, target kind)` to a
+//! deterministic slot count, the coordinator ticks the countdown once per
+//! slot boundary, and the real background build is awaited when the
+//! countdown reaches zero — transcripts pin the swap slot byte-for-byte
+//! across machines and thread counts while the actual construction still
+//! overlaps serving.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::registry::{IndexBuildCtx, IndexKind, IndexRegistry, IndexSpec};
+use super::VectorIndex;
+use crate::util::threadpool::ThreadPool;
+use crate::Result;
+
+/// Modeled rebuild throughput: corpus rows indexed per slot by the
+/// baseline (flat) builder. Only the *ratio* to corpus size matters —
+/// it scales the swap-slot countdown, never enters latency math.
+const MODELED_ROWS_PER_SLOT: f64 = 64.0;
+
+/// Upper bound on the countdown so a huge corpus still swaps within any
+/// realistic scenario horizon.
+const MAX_BUILD_SLOTS: usize = 16;
+
+/// Deterministic (modeled) number of slot boundaries a background build
+/// of `to` over `rows` snapshot rows occupies before the swap. Always
+/// ≥ 1: even a trivial rebuild serves at least one full slot from the
+/// old index. Per-kind cost factors reflect relative construction cost
+/// (graph/k-means builds are slower than flat copies); the fuzz oracle
+/// recomputes this independently to pin the engine's swap slot.
+pub fn modeled_build_slots(rows: usize, to: IndexKind) -> usize {
+    let per_row = match to {
+        IndexKind::Flat => 1.0,
+        IndexKind::QuantizedFlat => 1.5,
+        IndexKind::Ivf => 4.0,
+        IndexKind::Hnsw => 6.0,
+        IndexKind::ShardedFlat => 1.2,
+        IndexKind::ShardedQuantized => 1.7,
+        IndexKind::ShardedIvf => 4.2,
+    };
+    (1 + (rows as f64 * per_row / MODELED_ROWS_PER_SLOT) as usize).min(MAX_BUILD_SLOTS)
+}
+
+/// One in-flight reindex migration on a node: the background build, the
+/// modeled swap countdown, and the write-log of rows ingested since the
+/// snapshot. Owned by the node; dropped on swap (or when replaced by a
+/// newer `reindex` event, which abandons the old build — its worker pool
+/// joins on drop).
+pub struct IndexMigration {
+    to: IndexKind,
+    from: String,
+    spec: IndexSpec,
+    slots_remaining: usize,
+    write_log: Vec<usize>,
+    rx: mpsc::Receiver<Result<Box<dyn VectorIndex>>>,
+    // 1-worker pool the build runs on; Drop joins it, so an abandoned
+    // migration never leaks a thread
+    _pool: ThreadPool,
+}
+
+impl IndexMigration {
+    /// Start a background build of `to` from a corpus snapshot.
+    ///
+    /// `snapshot` is the node's doc-id list at event time (in index
+    /// ingestion order); `doc_embs[id]` holds each row's embedding.
+    /// `spec` is the target index parameterization (its `kind` names
+    /// `to`), `seed` the node's deterministic build seed, and
+    /// `build_slots` the modeled countdown (normally
+    /// [`modeled_build_slots`]; the fuzz oracle's fault-injection hook
+    /// passes skewed values to prove swap-slot drift is caught).
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        registry: Arc<IndexRegistry>,
+        spec: IndexSpec,
+        to: IndexKind,
+        from: &str,
+        dim: usize,
+        seed: u64,
+        snapshot: Vec<usize>,
+        doc_embs: Arc<Vec<Vec<f32>>>,
+        build_slots: usize,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel();
+        let pool = ThreadPool::new(1);
+        let build_spec = spec.clone();
+        pool.execute(move || {
+            let ctx = IndexBuildCtx { dim, seed, spec: &build_spec };
+            let built = registry.build_from_snapshot(
+                build_spec.kind.as_str(),
+                &ctx,
+                snapshot.iter().map(|&id| (id, doc_embs[id].as_slice())),
+            );
+            // a dropped receiver means the migration was abandoned
+            // (replaced by a newer reindex) — nothing to report to
+            let _ = tx.send(built);
+        });
+        IndexMigration {
+            to,
+            from: from.to_string(),
+            spec,
+            slots_remaining: build_slots.max(1),
+            write_log: Vec::new(),
+            rx,
+            _pool: pool,
+        }
+    }
+
+    /// The target kind this migration builds toward.
+    pub fn target(&self) -> IndexKind {
+        self.to
+    }
+
+    /// The target index parameterization (becomes the node's spec at swap).
+    pub fn spec(&self) -> &IndexSpec {
+        &self.spec
+    }
+
+    /// Modeled slots left before the swap.
+    pub fn slots_remaining(&self) -> usize {
+        self.slots_remaining
+    }
+
+    /// Record rows ingested while the build is in flight; drained into
+    /// the new index (in ingestion order) just before the swap.
+    pub fn log_ingest(&mut self, ids: &[usize]) {
+        self.write_log.extend_from_slice(ids);
+    }
+
+    /// Transcript label while in flight: `from->to:remaining`.
+    pub fn label(&self) -> String {
+        format!("{}->{}:{}", self.from, self.to, self.slots_remaining)
+    }
+
+    /// Advance the modeled countdown by one slot boundary. Returns
+    /// `true` when the countdown reaches zero — the caller must then
+    /// [`finish`](Self::finish) the migration and swap.
+    pub fn tick(&mut self) -> bool {
+        self.slots_remaining = self.slots_remaining.saturating_sub(1);
+        self.slots_remaining == 0
+    }
+
+    /// Await the background build (blocking — by the modeled contract
+    /// the countdown has elapsed, so normally the index is long done),
+    /// drain the write-log into it in ingestion order, and hand the
+    /// ready-to-swap index back.
+    pub fn finish(self, doc_embs: &[Vec<f32>]) -> Result<Box<dyn VectorIndex>> {
+        let built = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("reindex build worker died before delivering"))?;
+        let mut idx = built?;
+        for &id in &self.write_log {
+            idx.add(id, &doc_embs[id]);
+        }
+        Ok(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::embed::l2_normalize;
+    use crate::util::rng::Rng;
+    use crate::vecdb::FlatIndex;
+
+    fn rows(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                l2_normalize(&mut v);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn modeled_build_slots_is_monotone_capped_and_at_least_one() {
+        assert_eq!(modeled_build_slots(0, IndexKind::Flat), 1);
+        assert_eq!(modeled_build_slots(60, IndexKind::QuantizedFlat), 2);
+        let mut prev = 0;
+        for rows in [0, 16, 64, 256, 1024, 100_000] {
+            let s = modeled_build_slots(rows, IndexKind::Hnsw);
+            assert!(s >= prev, "rows={rows}");
+            assert!((1..=MAX_BUILD_SLOTS).contains(&s), "rows={rows} slots={s}");
+            prev = s;
+        }
+        assert_eq!(modeled_build_slots(100_000, IndexKind::Hnsw), MAX_BUILD_SLOTS);
+        // costlier kinds never need fewer slots than flat
+        for rows in [16, 64, 300] {
+            for k in IndexKind::ALL {
+                assert!(
+                    modeled_build_slots(rows, k) >= modeled_build_slots(rows, IndexKind::Flat),
+                    "{k} rows={rows}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn migration_builds_in_background_and_drains_write_log_in_order() {
+        let dim = 8;
+        let embs = Arc::new(rows(50, dim, 0xA1));
+        let snapshot: Vec<usize> = (0..40).collect();
+        let mut mig = IndexMigration::start(
+            Arc::new(IndexRegistry::with_builtins()),
+            IndexSpec::of_kind("quantized-flat"),
+            IndexKind::QuantizedFlat,
+            "flat",
+            dim,
+            7,
+            snapshot.clone(),
+            Arc::clone(&embs),
+            2,
+        );
+        assert_eq!(mig.label(), "flat->quantized-flat:2");
+        mig.log_ingest(&[40, 41]);
+        mig.log_ingest(&[42]);
+        assert!(!mig.tick());
+        assert_eq!(mig.label(), "flat->quantized-flat:1");
+        assert!(mig.tick());
+        let built = mig.finish(&embs).unwrap();
+        assert_eq!(built.len(), 43);
+        // parity with a fresh build over the same rows in the same order
+        let mut fresh = FlatIndex::new(dim);
+        for id in snapshot.iter().chain(&[40, 41, 42]) {
+            fresh.add(*id, &embs[*id]);
+        }
+        for q in embs.iter().take(6) {
+            assert_eq!(built.search(q, 5), fresh.search(q, 5));
+        }
+    }
+
+    #[test]
+    fn abandoned_migration_joins_cleanly() {
+        let dim = 4;
+        let embs = Arc::new(rows(20, dim, 3));
+        let mig = IndexMigration::start(
+            Arc::new(IndexRegistry::with_builtins()),
+            IndexSpec::of_kind("hnsw"),
+            IndexKind::Hnsw,
+            "flat",
+            dim,
+            1,
+            (0..20).collect(),
+            embs,
+            3,
+        );
+        drop(mig); // must not hang or leak the worker
+    }
+}

@@ -16,6 +16,7 @@
 pub mod flat;
 pub mod hnsw;
 pub mod ivf;
+pub mod migrate;
 pub mod quant;
 pub mod quantized;
 pub mod registry;
@@ -24,6 +25,7 @@ pub mod sharded;
 pub use flat::FlatIndex;
 pub use hnsw::HnswIndex;
 pub use ivf::IvfIndex;
+pub use migrate::{modeled_build_slots, IndexMigration};
 pub use quantized::QuantizedFlatIndex;
 pub use registry::{IndexBuildCtx, IndexKind, IndexRegistry, IndexSpec};
 pub use sharded::ShardedIndex;

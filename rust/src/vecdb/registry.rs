@@ -217,6 +217,26 @@ impl IndexRegistry {
             )),
         }
     }
+
+    /// Build an index of `kind` pre-populated from a corpus snapshot:
+    /// every `(id, vector)` row is added in iteration order, then the
+    /// index is finalized with `ctx.seed` — the same build-add-finalize
+    /// sequence the cluster layer runs at node construction, so a
+    /// snapshot rebuild of the same kind reproduces the node's index
+    /// bit-for-bit. This is the reindex-migration build hook.
+    pub fn build_from_snapshot<'a>(
+        &self,
+        kind: &str,
+        ctx: &IndexBuildCtx,
+        rows: impl IntoIterator<Item = (usize, &'a [f32])>,
+    ) -> Result<Box<dyn VectorIndex>> {
+        let mut idx = self.build(kind, ctx)?;
+        for (id, v) in rows {
+            idx.add(id, v);
+        }
+        idx.finalize(ctx.seed);
+        Ok(idx)
+    }
 }
 
 impl Default for IndexRegistry {
@@ -260,6 +280,36 @@ mod tests {
             .to_string();
         for k in IndexKind::ALL {
             assert!(err.contains(k.as_str()), "{err}");
+        }
+    }
+
+    #[test]
+    fn build_from_snapshot_matches_manual_build_add_finalize() {
+        use crate::text::embed::l2_normalize;
+        use crate::util::rng::Rng;
+        let reg = IndexRegistry::with_builtins();
+        let spec = IndexSpec::default();
+        let mut rng = Rng::new(0x5AAB);
+        let rows: Vec<(usize, Vec<f32>)> = (0..90)
+            .map(|i| {
+                let mut v: Vec<f32> = (0..12).map(|_| rng.normal() as f32).collect();
+                l2_normalize(&mut v);
+                (i, v)
+            })
+            .collect();
+        for k in IndexKind::ALL {
+            let ctx = IndexBuildCtx { dim: 12, seed: 7, spec: &spec };
+            let snap = reg
+                .build_from_snapshot(k.as_str(), &ctx, rows.iter().map(|(i, v)| (*i, v.as_slice())))
+                .unwrap();
+            let mut manual = reg.build(k.as_str(), &ctx).unwrap();
+            for (i, v) in &rows {
+                manual.add(*i, v);
+            }
+            manual.finalize(7);
+            assert_eq!(snap.len(), rows.len(), "{k}");
+            let q = &rows[17].1;
+            assert_eq!(snap.search(q, 5), manual.search(q, 5), "{k}");
         }
     }
 

@@ -142,6 +142,7 @@ fn injected_bug_is_found_and_shrunk_to_a_tiny_repro() {
         allocator: case_allocator(seed),
         cached: case_cached(seed),
         skip_validation: true,
+        swap_skew: 0,
     };
     let checked = oracle::check_scenario(&sc, &gc, &oc);
     assert!(
@@ -171,6 +172,69 @@ fn injected_bug_is_found_and_shrunk_to_a_tiny_repro() {
     assert!(err.contains("frac"), "parse error should indict frac: {err}");
 }
 
+/// The reindex grammar's injected-bug hook, end to end: plant a
+/// swap-ordering bug in the engine (`swap_skew = -1` shifts the atomic
+/// swap one slot early) and prove the oracle's `migration` invariant —
+/// whose expected swap slot is recomputed from `modeled_build_slots`
+/// independently of the engine — catches it, and the shrinker minimizes
+/// the failing timeline to a tiny repro that still contains the reindex.
+/// The same timeline replays clean with the bug unplanted.
+#[test]
+fn injected_swap_ordering_bug_is_found_and_shrunk() {
+    let gc = GenConfig::default();
+    // a one-slot skew only bites targets whose modeled build is ≥ 2
+    // slots (for the 16-row fuzz corpus: ivf, hnsw, sharded-ivf) — scan
+    // generated timelines for one where the planted bug actually fires
+    let heavy = |sc: &Scenario| {
+        sc.events.iter().any(|te| {
+            matches!(&te.event, ScenarioEvent::Reindex { to, .. }
+                if matches!(to.as_str(), "ivf" | "hnsw" | "sharded-ivf"))
+        })
+    };
+    let found = (0..500).map(|s| (s, generate_scenario(s, &gc))).filter(|(_, sc)| heavy(sc)).find_map(
+        |(seed, sc)| {
+            let oc = OracleConfig {
+                seed,
+                allocator: case_allocator(seed),
+                cached: case_cached(seed),
+                skip_validation: false,
+                swap_skew: -1,
+            };
+            let checked = oracle::check_scenario(&sc, &gc, &oc);
+            checked.violations.iter().any(|v| v.invariant == "migration").then_some((sc, oc))
+        },
+    );
+    let (sc, oc) = found.expect("500 seeds must yield a timeline where the planted swap bug fires");
+
+    let outcome = shrink(&sc, |cand| {
+        oracle::check_scenario(cand, &gc, &oc)
+            .violations
+            .iter()
+            .any(|v| v.invariant == "migration")
+    });
+    assert!(
+        outcome.scenario.events.len() <= 2,
+        "seed {}: shrink left {} events (steps {})\n{}",
+        oc.seed,
+        outcome.scenario.events.len(),
+        outcome.steps,
+        outcome.toml
+    );
+    assert!(
+        outcome.scenario.events.iter().any(|te| matches!(&te.event, ScenarioEvent::Reindex { .. })),
+        "the minimal repro must keep the reindex:\n{}",
+        outcome.toml
+    );
+    // unplant the bug: the exact same minimal timeline replays clean,
+    // so the violation indicts the planted skew, not the grammar
+    let clean = oracle::check_scenario(&outcome.scenario, &gc, &OracleConfig { swap_skew: 0, ..oc });
+    assert!(
+        clean.violations.is_empty(),
+        "skew-0 replay of the minimal repro must pass: {:?}",
+        clean.violations
+    );
+}
+
 /// Regression: a `burst queries = 0` slot (an empty live slot) replays
 /// with every invariant intact — finite report, valid transcript, no
 /// violations. Before the fix class this PR pins, empty slots were never
@@ -190,7 +254,7 @@ fn zero_query_burst_slot_replays_clean() {
     for (allocator, cached) in
         [(AllocatorKind::Mab, false), (AllocatorKind::Oracle, true), (AllocatorKind::Ppo, false)]
     {
-        let oc = OracleConfig { seed: 7, allocator, cached, skip_validation: false };
+        let oc = OracleConfig { seed: 7, allocator, cached, skip_validation: false, swap_skew: 0 };
         let checked = oracle::check_scenario(&sc, &gc, &oc);
         assert!(
             checked.violations.is_empty(),

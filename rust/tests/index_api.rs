@@ -9,7 +9,8 @@ use coedge_rag::router::capacity::CapacityModel;
 use coedge_rag::text::embed::l2_normalize;
 use coedge_rag::util::rng::Rng;
 use coedge_rag::vecdb::{
-    FlatIndex, Hit, HnswIndex, IvfIndex, QuantizedFlatIndex, ShardedIndex, VectorIndex,
+    FlatIndex, Hit, HnswIndex, IndexBuildCtx, IndexKind, IndexMigration, IndexRegistry, IvfIndex,
+    QuantizedFlatIndex, ShardedIndex, VectorIndex,
 };
 
 fn random_unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
@@ -302,6 +303,128 @@ fn quantized_kinds_build_through_registry() {
         idx.finalize(1);
         let q = random_unit(&mut rng, 16);
         assert_eq!(idx.search(&q, 5), flat.search(&q, 5), "{kind}");
+    }
+}
+
+/// Property: a reindex-migrated index is bitwise identical to a
+/// fresh-built target index over random dim / n / k and random
+/// mid-migration ingests, across every pair of exact kinds
+/// (flat ↔ quantized-flat rf=4 ↔ sharded-flat). The write-log drain must
+/// replay snapshot rows inside the finalized build and ingested rows
+/// after it, in ingestion order — any reorder or drop breaks tie
+/// resolution and shows up as a hit-list mismatch.
+#[test]
+fn prop_migrated_index_matches_fresh_build_bitwise() {
+    use std::sync::Arc;
+    let pairs = [
+        ("flat", "quantized-flat"),
+        ("quantized-flat", "sharded-flat"),
+        ("sharded-flat", "flat"),
+        ("quantized-flat", "flat"),
+        ("flat", "sharded-flat"),
+        ("sharded-flat", "quantized-flat"),
+    ];
+    let registry = Arc::new(IndexRegistry::with_builtins());
+    let mut rng = Rng::new(0x9E11DE);
+    for (case, &(from, to)) in pairs.iter().cycle().take(18).enumerate() {
+        let dim = 4 + rng.below(24);
+        let n = 20 + rng.below(200);
+        let extra = rng.below(30);
+        let k = 1 + rng.below(8);
+        let seed = rng.below(1 << 20) as u64;
+        let embs: Arc<Vec<Vec<f32>>> =
+            Arc::new((0..n + extra).map(|_| random_unit(&mut rng, dim)).collect());
+        let mut spec = IndexSpec::of_kind(to);
+        spec.rescore_factor = 4;
+        let to_kind: IndexKind = to.parse().unwrap();
+        let mut mig = IndexMigration::start(
+            Arc::clone(&registry),
+            spec.clone(),
+            to_kind,
+            from,
+            dim,
+            seed,
+            (0..n).collect(),
+            Arc::clone(&embs),
+            1,
+        );
+        let ingested: Vec<usize> = (n..n + extra).collect();
+        mig.log_ingest(&ingested);
+        assert!(mig.tick(), "a 1-slot countdown swaps on the first tick");
+        let migrated = mig.finish(&embs).unwrap();
+        // fresh-built target over the same rows, matching the live
+        // corpus-ingest semantics: snapshot rows inside the finalized
+        // build, ingested rows appended afterwards, same order
+        let mut fresh = registry.build(to, &IndexBuildCtx { dim, seed, spec: &spec }).unwrap();
+        for i in 0..n {
+            fresh.add(i, &embs[i]);
+        }
+        fresh.finalize(seed);
+        for &i in &ingested {
+            fresh.add(i, &embs[i]);
+        }
+        assert_eq!(migrated.len(), fresh.len());
+        let ctx = format!("case {case}: {from}->{to} dim={dim} n={n} extra={extra} k={k}");
+        for q in (0..6).map(|_| random_unit(&mut rng, dim)) {
+            assert_eq!(migrated.search(&q, k), fresh.search(&q, k), "{ctx}");
+        }
+    }
+}
+
+/// End-to-end migration parity, plus the block-edge ingest regression:
+/// a run that live-migrates node 0 flat → quantized-flat (exact at
+/// rf=4) and then ingests past the 96-row SoA block edge produces
+/// per-query outcomes bitwise identical to a run that never migrates —
+/// before the swap (the in-flight build must not perturb the serving
+/// old index), across the swap (exact target kind), and through the
+/// post-swap incremental `add` that opens a fresh i8 code block.
+#[test]
+fn e2e_migration_and_block_edge_ingest_match_unmigrated_run() {
+    use coedge_rag::scenario::ScenarioEvent;
+    let run = |reindex: bool| {
+        let mut co = CoordinatorBuilder::new(tiny_cfg(AllocatorKind::Oracle))
+            .capacities(stub_caps(4))
+            .build()
+            .unwrap();
+        if reindex {
+            co.apply_event(&ScenarioEvent::Reindex {
+                node: 0,
+                to: "quantized-flat".into(),
+                shards: None,
+                rescore_factor: Some(4),
+            })
+            .unwrap();
+        }
+        let mut outs = Vec::new();
+        for slot in 0..5 {
+            if slot == 3 {
+                // node 0 holds 69 rows (60 × 1.15 overlap): ingesting 30
+                // docs from non-primary domain 3 (38 un-held available)
+                // takes the live index 69 → 99, crossing the 96-row SoA
+                // block edge with incremental adds (post-swap: the
+                // 69-row build is a 2-slot modeled migration, so the
+                // quantized index is serving by now)
+                assert_eq!(co.ingest_corpus(0, 3, 30).unwrap(), 30);
+            }
+            let qids = co.sample_queries(40).unwrap();
+            let r = co.run_slot(&qids).unwrap();
+            outs.push((qids, r));
+        }
+        (co.nodes[0].index_kind.clone(), co.nodes[0].corpus_size(), outs)
+    };
+    let (kind_mig, size_mig, migrated) = run(true);
+    let (kind_ctl, size_ctl, control) = run(false);
+    assert_eq!(kind_mig, "quantized-flat", "the swap must have landed");
+    assert_eq!(kind_ctl, "flat");
+    assert_eq!(size_mig, size_ctl);
+    assert!(size_mig > 96, "ingest must cross the 96-row block edge (corpus = {size_mig})");
+    for (t, ((qa, ra), (qb, rb))) in migrated.iter().zip(&control).enumerate() {
+        assert_eq!(qa, qb, "slot {t}: same seed → same sampled queries");
+        for (a, b) in ra.outcomes.iter().zip(&rb.outcomes) {
+            assert_eq!(a.qa_id, b.qa_id, "slot {t}");
+            assert_eq!(a.rel, b.rel, "slot {t} qa {}", a.qa_id);
+            assert_eq!(a.dropped, b.dropped, "slot {t} qa {}", a.qa_id);
+        }
     }
 }
 

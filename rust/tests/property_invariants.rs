@@ -79,10 +79,15 @@ fn prop_inter_node_conservation_and_capacity() {
 
 /// Scheduling conservation under random scenario churn: across random
 /// seeds, allocators and random mid-run events (node down/up, capacity
-/// scaling, skew shifts), every slot must (a) account every sampled query
-/// exactly once and in slot order, (b) emit proportions that sum to 1
-/// whenever any node is live and the slot is nonempty (all-zero
-/// otherwise), and (c) never route a query to a down node.
+/// scaling, skew shifts, live reindex migrations), every slot must
+/// (a) account every sampled query exactly once and in slot order,
+/// (b) emit proportions that sum to 1 whenever any node is live and the
+/// slot is nonempty (all-zero otherwise), and (c) never route a query to
+/// a down node. Exactly-once conservation must hold *mid-migration* too
+/// — a node with a background rebuild in flight keeps serving — and the
+/// migration swap contract is checked per slot by the oracle's
+/// `MigrationTracker` (a reindex on a down node must be rejected naming
+/// `node-up`).
 ///
 /// The checks themselves live in `coedge_rag::fuzz::oracle` — this test
 /// and the fuzzer consume the same functions, so the two suites cannot
@@ -109,24 +114,53 @@ fn prop_scheduling_conservation_under_random_churn() {
             .build()
             .unwrap();
         let mut rng = Rng::new(0x5CE0 ^ case as u64);
-        for slot in 0..6 {
+        let mut mig = oracle::MigrationTracker::new();
+        for slot in 0..8 {
             if rng.chance(0.6) {
                 let node = rng.below(4);
-                let event = match rng.below(4) {
+                let event = match rng.below(5) {
                     0 => ScenarioEvent::NodeDown { node },
                     1 => ScenarioEvent::NodeUp { node },
                     2 => ScenarioEvent::CapacityScale {
                         node,
                         factor: rng.range_f64(0.2, 2.0),
                     },
-                    _ => ScenarioEvent::SkewShift {
+                    3 => ScenarioEvent::SkewShift {
                         pattern: SkewPattern::Primary {
                             domain: rng.below(6),
                             frac: rng.range_f64(0.3, 0.9),
                         },
                     },
+                    _ => {
+                        let all = coedge_rag::vecdb::IndexKind::ALL;
+                        ScenarioEvent::Reindex {
+                            node,
+                            to: all[rng.below(all.len())].as_str().to_string(),
+                            shards: None,
+                            rescore_factor: None,
+                        }
+                    }
                 };
-                co.apply_event(&event).unwrap();
+                if let ScenarioEvent::Reindex { node, to, .. } = &event {
+                    let from = co.nodes[*node].index_kind.clone();
+                    let rows = co.nodes[*node].corpus_size();
+                    let down = !co.active[*node];
+                    match co.apply_event(&event) {
+                        Ok(()) => {
+                            assert!(!down, "{allocator} slot {slot}: down-node reindex accepted");
+                            mig.note_begin(*node, &from, to.parse().unwrap(), slot, rows);
+                        }
+                        Err(e) => {
+                            assert!(down, "{allocator} slot {slot}: live reindex failed: {e:#}");
+                            assert!(
+                                format!("{e:#}").contains("node-up"),
+                                "{allocator} slot {slot}: rejection must name node-up: {e:#}"
+                            );
+                        }
+                    }
+                } else {
+                    co.apply_event(&event).unwrap();
+                }
             }
             let b = rng.below(80);
             let qids = co.sample_queries(b).unwrap();
@@ -134,14 +168,50 @@ fn prop_scheduling_conservation_under_random_churn() {
             let tag = format!("{allocator} slot {slot}");
 
             // (a) conservation + order, (b) proportions distribution,
-            // (c) routing — plus finiteness of every reported number
+            // (c) routing — plus finiteness of every reported number and
+            // the modeled migration-swap contract
             let mut violations = oracle::check_conservation(slot, &qids, &r);
             violations.extend(oracle::check_proportions(slot, &r));
             violations.extend(oracle::check_routing(slot, &r));
             violations.extend(oracle::check_report_finite(slot, &r));
+            violations.extend(mig.check_slot(slot, &r));
             assert!(violations.is_empty(), "{tag}: {violations:?}");
         }
     }
+}
+
+/// A `reindex` targeting a down node is rejected up front with an error
+/// naming the `node-up` recovery path, starts no migration, and the same
+/// event succeeds immediately once the node is brought back.
+#[test]
+fn reindex_on_down_node_is_rejected_naming_node_up() {
+    let mut cfg = ExperimentConfig::paper_cluster(DatasetKind::DomainQa);
+    cfg.seed = 77;
+    cfg.qa_per_domain = 10;
+    cfg.docs_per_domain = 15;
+    cfg.allocator = AllocatorKind::Oracle;
+    for n in cfg.nodes.iter_mut() {
+        n.corpus_docs = 20;
+    }
+    let mut co = CoordinatorBuilder::new(cfg)
+        .capacities(vec![CapacityModel { k: 3.0, b: 0.0 }; 4])
+        .build()
+        .unwrap();
+    let reindex = ScenarioEvent::Reindex {
+        node: 1,
+        to: "quantized-flat".into(),
+        shards: None,
+        rescore_factor: None,
+    };
+    co.apply_event(&ScenarioEvent::NodeDown { node: 1 }).unwrap();
+    let err = co.apply_event(&reindex).unwrap_err().to_string();
+    assert!(err.contains("node-up"), "rejection must name the recovery path: {err}");
+    assert!(err.contains("node 1"), "{err}");
+    assert!(!co.nodes[1].migrating(), "a rejected reindex must not start a migration");
+    co.apply_event(&ScenarioEvent::NodeUp { node: 1 }).unwrap();
+    co.apply_event(&reindex).unwrap();
+    assert!(co.nodes[1].migrating());
+    assert_eq!(co.nodes[1].migration_label().unwrap(), "flat->quantized-flat:1");
 }
 
 /// Cache-safety property: under random interleavings of queries and

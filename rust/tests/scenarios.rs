@@ -176,6 +176,51 @@ fn corpus_drift_replays_with_live_ingest() {
     }
 }
 
+/// Live reindex migration fixture: node 0 migrates flat →
+/// quantized-flat while serving, with a mid-migration ingest and a
+/// post-swap skew shift. The golden transcript pins the modeled swap
+/// boundary byte-for-byte: the 69-row corpus (60 docs × 1.15 overlap)
+/// is a 2-slot quantized build, so slots 2–3 serve the old index with a
+/// counting-down migration label and slot 4 is the first slot the
+/// target kind serves.
+#[test]
+fn reindex_drift_replays_byte_identical_with_visible_swap() {
+    let run = replay_golden("reindex_drift", AllocatorKind::Domain);
+    assert_eq!(run.reports.len(), 8);
+    let text = run.transcript.to_jsonl();
+    assert!(text.contains("reindex(0,quantized-flat)"), "{text}");
+    assert!(text.contains("corpus-ingest(0,20@d1)"), "{text}");
+    // migration columns appear only once the reindex has fired —
+    // the slots before it keep the reindex-free record format
+    for t in 0..2 {
+        assert!(run.reports[t].index_kinds.is_none(), "slot {t}: premature index_kinds");
+        assert!(run.reports[t].migrations.is_none(), "slot {t}: premature migrations");
+    }
+    let kind = |t: usize, n: usize| run.reports[t].index_kinds.as_ref().unwrap()[n].as_str();
+    let mig = |t: usize, n: usize| run.reports[t].migrations.as_ref().unwrap()[n].as_str();
+    // slots 2–3: old index serves, countdown is visible in the golden
+    assert_eq!(kind(2, 0), "flat");
+    assert_eq!(mig(2, 0), "flat->quantized-flat:2");
+    assert_eq!(kind(3, 0), "flat");
+    assert_eq!(mig(3, 0), "flat->quantized-flat:1");
+    // slot 4: the atomic swap — target kind serves from here on
+    for t in 4..8 {
+        assert_eq!(kind(t, 0), "quantized-flat", "slot {t}");
+        assert_eq!(mig(t, 0), "-", "slot {t}");
+    }
+    // the other nodes never migrate
+    for t in 2..8 {
+        for n in 1..4 {
+            assert_eq!(kind(t, n), "flat", "slot {t} node {n}");
+            assert_eq!(mig(t, n), "-", "slot {t} node {n}");
+        }
+    }
+    // no query is ever lost across the migration
+    for r in &run.reports {
+        assert_eq!(r.outcomes.len(), r.queries);
+    }
+}
+
 /// PR 2 claimed the sharded fan-out merge is ordering-deterministic; pin
 /// it: the same seed + scenario under parallel shard fan-out vs a
 /// single-threaded fan-out must produce byte-identical transcripts. The
@@ -374,6 +419,11 @@ fn fixtures_replay_byte_identical_under_pipelined_executor() {
         ("burst_storm", harness_cfg(AllocatorKind::Mab)),
         ("node_churn", harness_cfg(AllocatorKind::Oracle)),
         ("corpus_drift", harness_cfg(AllocatorKind::Domain)),
+        // reindex_drift pins the migration tick under the pipelined
+        // executor: the atomic swap must land on the same modeled slot
+        // boundary (and the write-log drain in the same order) whether
+        // slots are encoded ahead or synchronously
+        ("reindex_drift", harness_cfg(AllocatorKind::Domain)),
         ("repeat_storm", lru_cfg()),
         // fuzz/boundary_frac pins the pre-sampling skew walk: its
         // skew-shift events must steer sampling exactly as apply_event
